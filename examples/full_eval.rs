@@ -1,0 +1,96 @@
+//! End-to-end validation driver (the EXPERIMENTS.md §E2E run): exercises
+//! every layer of the system on a real workload —
+//!
+//!   synthetic KTH-SP2 twin (workload substrate)
+//!   -> Dragonfly platform + fluid I/O contention (simulator substrate)
+//!   -> all seven policies, including plan-based SA whose candidate
+//!      scoring runs through the AOT-compiled XLA artifact via PJRT
+//!      (L1 Pallas kernel + L2 JAX scorer + L3 runtime bridge)
+//!   -> metrics + figure summaries.
+//!
+//! Uses a ~2800-job slice (10% of the paper trace) so it completes in
+//! minutes; `repro eval` runs the full 28,453-job version.
+//!
+//! Run: make artifacts && cargo run --release --example full_eval
+
+use bbsched::coordinator::{run_eval, EvalParams, PlanBackendKind};
+use bbsched::report::{fmt_f, render_table};
+use bbsched::sched::Policy;
+use bbsched::sim::simulator::SimConfig;
+use bbsched::workload::synth::{generate, SynthConfig};
+
+fn main() {
+    let wl = SynthConfig::scaled(1, 0.10);
+    let jobs = generate(&wl);
+    let sim_cfg = SimConfig { bb_capacity: wl.bb_capacity, ..SimConfig::default() };
+
+    // plan-* policies score SA candidates through the XLA artifact when
+    // artifacts/ is present (falls back to the native mirror otherwise).
+    let plan_backend = if std::path::Path::new("artifacts").exists() {
+        PlanBackendKind::Xla { t_slots: 256 }
+    } else {
+        eprintln!("note: artifacts/ missing; SA will use the native discrete scorer");
+        PlanBackendKind::Discrete { t_slots: 256 }
+    };
+
+    let params = EvalParams {
+        policies: Policy::ALL.to_vec(),
+        tail_k: 300,
+        parts: Some((4, 0.5)), // scaled-down Figs 11-12 pass
+        plan_backend,
+        ..EvalParams::default()
+    };
+    eprintln!(
+        "end-to-end: {} jobs, 7 policies, I/O contention on, plan backend {:?}",
+        jobs.len(),
+        params.plan_backend
+    );
+    let t0 = std::time::Instant::now();
+    let out = run_eval(&jobs, &sim_cfg, &params);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let rows: Vec<Vec<String>> = out
+        .summaries
+        .iter()
+        .map(|s| {
+            vec![
+                s.policy.clone(),
+                fmt_f(s.mean_wait_h),
+                fmt_f(s.mean_bsld),
+                fmt_f(s.median_wait_h),
+                fmt_f(s.max_wait_h),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "full_eval: 10% KTH twin, all policies",
+            &["policy", "mean wait [h]", "mean bsld", "median [h]", "max [h]"],
+            &rows,
+        )
+    );
+
+    // The paper's qualitative ordering must hold end-to-end.
+    let m = |n: &str| {
+        out.summaries
+            .iter()
+            .find(|s| s.policy == n)
+            .unwrap_or_else(|| panic!("missing {n}"))
+            .mean_wait_h
+    };
+    assert!(m("fcfs") > m("sjf-bb"), "fcfs must be far worse than sjf-bb");
+    assert!(
+        m("fcfs-easy") >= m("fcfs-bb") * 0.95,
+        "bb reservations must not hurt: easy {} vs bb {}",
+        m("fcfs-easy"),
+        m("fcfs-bb")
+    );
+    let plan_best = m("plan-1").min(m("plan-2"));
+    assert!(
+        plan_best <= m("sjf-bb") * 1.05,
+        "plan-based ({plan_best}) must be competitive with sjf-bb ({})",
+        m("sjf-bb")
+    );
+    println!("end-to-end OK in {wall:.0}s: ordering fcfs >> queue-based >= plan-based holds");
+}

@@ -1,0 +1,74 @@
+"""AOT lowering: jax -> HLO text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``); the Rust binary is then
+self-contained. HLO *text* (not ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+xla_extension 0.5.1 (behind the published `xla` crate) rejects; the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Artifacts:
+  plan_score_q{Q}_t{T}_k{K}.hlo.txt   one per (Q, T, K) variant
+
+The variant list balances coverage (queue length Q) against compile time
+and is parsed from the filename by rust/src/runtime/scorer.rs.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import example_args, plan_score_batch
+
+# (Q jobs, T slots, K batch) variants to ship. K = 8 >= the 9-candidate
+# seeding batch is deliberately not required: the Rust side chunks
+# arbitrary batch sizes over K-sized executions.
+VARIANTS = [
+    (16, 128, 4),
+    (16, 256, 8),
+    (32, 256, 8),
+    (64, 256, 8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(q: int, t: int, k: int) -> str:
+    lowered = jax.jit(plan_score_batch).lower(*example_args(q, t, k))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=None,
+        help="comma list like 16x128x4,64x256x8 (default: built-ins)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    variants = VARIANTS
+    if args.variants:
+        variants = [tuple(int(x) for x in v.split("x")) for v in args.variants.split(",")]
+
+    for q, t, k in variants:
+        text = lower_variant(q, t, k)
+        path = os.path.join(args.out_dir, f"plan_score_q{q}_t{t}_k{k}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

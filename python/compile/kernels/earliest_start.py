@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: batched earliest-feasible-start search.
+
+For each batch row k (one SA candidate permutation's partially-built
+plan), find the first slot ``s`` such that the job fits for ``d``
+consecutive slots in both resource dimensions:
+
+    ok[t]   = free_cpu[t] >= c  and  free_bb[t] >= b
+    fits[s] = all(ok[s : s+d])            (and s + d <= T)
+    out[k]  = min { s : fits[s] }  or  T  (no feasible window)
+
+The all-of-window test is computed without a scan: with prefix sums
+``P`` of ``ok``, ``all(ok[s:s+d])  <=>  P[s+d] - P[s] == d`` — a
+cumulative sum, one gather, and an argmax, all VPU-friendly primitives.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over the
+batch dimension; each grid step pulls one (1, T) profile row pair into
+VMEM (T <= 512 keeps the working set a few KiB) and writes a single i32.
+On CPU we run interpret=True — real-TPU lowering would emit a Mosaic
+custom-call the CPU PJRT client cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(fc_ref, fb_ref, c_ref, b_ref, d_ref, out_ref):
+    fc = fc_ref[0, :]  # [T]
+    fb = fb_ref[0, :]
+    c = c_ref[0]
+    b = b_ref[0]
+    d = d_ref[0]
+    t = fc.shape[0]
+
+    ok = ((fc >= c) & (fb >= b)).astype(jnp.int32)  # [T]
+    prefix = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(ok)])  # [T+1]
+    t_idx = jnp.arange(t, dtype=jnp.int32)
+    end_idx = jnp.minimum(t_idx + d, t)
+    wsum = jnp.take(prefix, end_idx) - jnp.take(prefix, t_idx)
+    fits = (wsum == d) & (t_idx + d <= t) & (d > 0)
+    s = jnp.where(jnp.any(fits), jnp.argmax(fits).astype(jnp.int32), jnp.int32(t))
+    out_ref[0] = s
+
+
+@functools.partial(jax.jit, static_argnames=())
+def earliest_start(free_cpu, free_bb, cpu, bb, dur):
+    """Batched earliest-start: shapes [K,T],[K,T],[K],[K],[K] -> [K] i32.
+
+    ``dur == 0`` rows report slot T (callers mask inactive jobs anyway).
+    """
+    k, t = free_cpu.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.int32),
+        interpret=True,  # CPU-PJRT target; see module docstring
+    )(free_cpu, free_bb, cpu, bb, dur)

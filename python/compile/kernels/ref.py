@@ -1,0 +1,74 @@
+"""Pure-jnp (and pure-python) oracles for the L1 kernel and the L2 model.
+
+These are the correctness ground truth: ``test_kernel.py`` asserts the
+Pallas kernel against ``earliest_start_ref`` over hypothesis-swept
+shapes, and ``test_model.py`` asserts the full batched scorer against
+``plan_score_ref``. The Rust native mirror
+(`rust/src/sched/plan/scorer.rs::NativeDiscreteScorer`) implements the
+same semantics; the cross-language fixture test keeps all three aligned.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def earliest_start_ref(free_cpu, free_bb, cpu, bb, dur):
+    """Vectorised jnp reference of the batched earliest-start kernel."""
+    k, t = free_cpu.shape
+    ok = (free_cpu >= cpu[:, None]) & (free_bb >= bb[:, None])  # [K,T]
+    prefix = jnp.concatenate(
+        [jnp.zeros((k, 1), jnp.int32), jnp.cumsum(ok.astype(jnp.int32), axis=1)], axis=1
+    )  # [K,T+1]
+    t_idx = jnp.arange(t, dtype=jnp.int32)[None, :]
+    end_idx = jnp.minimum(t_idx + dur[:, None], t)
+    wsum = jnp.take_along_axis(prefix, end_idx, axis=1) - jnp.take_along_axis(
+        prefix, jnp.broadcast_to(t_idx, (k, t)), axis=1
+    )
+    fits = (wsum == dur[:, None]) & (t_idx + dur[:, None] <= t) & (dur[:, None] > 0)
+    any_fit = jnp.any(fits, axis=1)
+    return jnp.where(any_fit, jnp.argmax(fits, axis=1).astype(jnp.int32), jnp.int32(t))
+
+
+def earliest_start_py(free_cpu, free_bb, c, b, d):
+    """Scalar python loop reference (single row) — the slowest, clearest
+    statement of the semantics."""
+    t = len(free_cpu)
+    if d <= 0:
+        return t
+    for s in range(0, t - d + 1):
+        if all(free_cpu[s + i] >= c and free_bb[s + i] >= b for i in range(d)):
+            return s
+    return t
+
+
+def plan_score_ref(free_cpu, free_bb, cpu, bb, dur, wait_base, perms, dt, alpha):
+    """Numpy loop reference of the full batched plan scorer.
+
+    Shapes: free_cpu/free_bb [T]; cpu/bb/dur/wait_base [Q];
+    perms [K, Q] int; returns [K] f32 scores. Semantics mirror
+    NativeDiscreteScorer::score_perm exactly (inactive jobs have
+    cpu == 0 and contribute nothing).
+    """
+    free_cpu = np.asarray(free_cpu, np.float32)
+    free_bb = np.asarray(free_bb, np.float32)
+    perms = np.asarray(perms)
+    k, q = perms.shape
+    t = free_cpu.shape[0]
+    scores = np.zeros((k,), np.float32)
+    for ki in range(k):
+        fc = free_cpu.copy()
+        fb = free_bb.copy()
+        total = np.float32(0.0)
+        for qi in range(q):
+            j = int(perms[ki, qi])
+            c, b, d = np.float32(cpu[j]), np.float32(bb[j]), int(dur[j])
+            active = c > 0
+            s = earliest_start_py(fc, fb, c, b, d)
+            if active:
+                wait = np.float32(wait_base[j]) + np.float32(s) * np.float32(dt)
+                total += np.float32(wait) ** np.float32(alpha)
+                end = min(s + max(d, 1), t)
+                fc[s:end] -= c
+                fb[s:end] -= b
+        scores[ki] = total
+    return scores

@@ -1,0 +1,73 @@
+"""L2: the batched discretised plan scorer (JAX), calling the L1 Pallas
+earliest-start kernel.
+
+Scores K candidate permutations of a Q-job queue against a T-slot
+availability profile in one XLA execution — the inner loop of the
+plan-based scheduler's simulated annealing (paper Algorithm 2). The
+function is AOT-lowered by ``aot.py`` to HLO text that the Rust runtime
+(`rust/src/runtime/`) loads through PJRT; Python never runs at
+scheduling time.
+
+Wire contract (keep in lockstep with rust/src/runtime/scorer.rs):
+  inputs : free_cpu f32[T], free_bb f32[T], cpu f32[Q], bb f32[Q],
+           dur i32[Q], wait_base f32[Q], perms i32[K,Q],
+           dt f32[], alpha f32[]
+  output : (scores f32[K],)
+Padding: inactive job slots have cpu == 0 (and contribute zero score).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels.earliest_start import earliest_start
+
+
+def plan_score_batch(free_cpu, free_bb, cpu, bb, dur, wait_base, perms, dt, alpha):
+    """Score each permutation row of ``perms``; returns f32[K]."""
+    k, q = perms.shape
+    t = free_cpu.shape[0]
+    fc0 = jnp.broadcast_to(free_cpu[None, :], (k, t)).astype(jnp.float32)
+    fb0 = jnp.broadcast_to(free_bb[None, :], (k, t)).astype(jnp.float32)
+    t_idx = jnp.arange(t, dtype=jnp.int32)[None, :]  # [1,T]
+
+    def step(carry, i):
+        fc, fb, score = carry
+        j = perms[:, i]  # [K] job index per batch row
+        c = jnp.take(cpu, j)  # [K]
+        b = jnp.take(bb, j)
+        d = jnp.take(dur, j)
+        w0 = jnp.take(wait_base, j)
+        active = c > 0
+
+        s = earliest_start(fc, fb, c, b, d)  # [K] i32 (L1 Pallas kernel)
+
+        wait = w0 + s.astype(jnp.float32) * dt
+        score = score + jnp.where(active, wait**alpha, 0.0)
+
+        window = (t_idx >= s[:, None]) & (t_idx < (s + d)[:, None])
+        window = window & active[:, None]
+        fc = fc - jnp.where(window, c[:, None], 0.0)
+        fb = fb - jnp.where(window, b[:, None], 0.0)
+        return (fc, fb, score), None
+
+    init = (fc0, fb0, jnp.zeros((k,), jnp.float32))
+    (_, _, score), _ = lax.scan(step, init, jnp.arange(q, dtype=jnp.int32))
+    return (score,)
+
+
+def example_args(q, t, k):
+    """ShapeDtypeStructs for lowering a (Q, T, K) variant."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((t,), f32),  # free_cpu
+        jax.ShapeDtypeStruct((t,), f32),  # free_bb
+        jax.ShapeDtypeStruct((q,), f32),  # cpu
+        jax.ShapeDtypeStruct((q,), f32),  # bb
+        jax.ShapeDtypeStruct((q,), i32),  # dur
+        jax.ShapeDtypeStruct((q,), f32),  # wait_base
+        jax.ShapeDtypeStruct((k, q), i32),  # perms
+        jax.ShapeDtypeStruct((), f32),  # dt
+        jax.ShapeDtypeStruct((), f32),  # alpha
+    )

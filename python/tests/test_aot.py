@@ -1,0 +1,73 @@
+"""AOT pipeline: lowering must produce parseable HLO text whose entry
+layout matches the wire contract, and the artifact directory contents
+must stay executable-compatible with the Rust loader's expectations."""
+
+import os
+import re
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile.aot import lower_variant, VARIANTS
+from compile.model import example_args, plan_score_batch
+from compile.kernels.ref import plan_score_ref
+
+
+def test_lowering_produces_hlo_text():
+    text = lower_variant(8, 32, 2)
+    assert text.startswith("HloModule")
+    # Entry layout carries the exact input shapes of the wire contract.
+    assert "f32[32]" in text  # profiles
+    assert "s32[2,8]" in text  # perms
+    assert "(f32[2]" in text  # tuple-wrapped scores output
+
+
+def test_variant_list_shapes_encoded_in_layout():
+    for q, t, k in VARIANTS:
+        # Cheap structural check without lowering every variant here
+        # (aot.py's main lowers them; q64 takes a few seconds).
+        assert q >= 2 and t >= 2 * q and k >= 1
+
+
+def test_default_artifacts_exist_after_make():
+    # Soft check: when artifacts/ is built, names match the rust parser.
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art):
+        return  # `make artifacts` not run yet: nothing to validate
+    names = [n for n in os.listdir(art) if n.endswith(".hlo.txt")]
+    pat = re.compile(r"plan_score_q(\d+)_t(\d+)_k(\d+)\.hlo\.txt")
+    assert names, "artifact dir exists but is empty"
+    for n in names:
+        assert pat.fullmatch(n), n
+
+
+def test_jit_of_lowerable_fn_matches_oracle():
+    """The exact function handed to jax.jit(...).lower must agree with
+    the numpy oracle (guards against lowering a stale wrapper)."""
+    rng = np.random.default_rng(11)
+    q, t, k = 8, 32, 2
+    fc = rng.integers(1, 9, t).astype(np.float32)
+    fb = rng.integers(1, 9, t).astype(np.float32)
+    cpu = rng.integers(1, 5, q).astype(np.float32)
+    bb = rng.integers(0, 5, q).astype(np.float32)
+    dur = rng.integers(1, 8, q).astype(np.int32)
+    wb = rng.uniform(0, 100, q).astype(np.float32)
+    perms = np.stack([rng.permutation(q) for _ in range(k)]).astype(np.int32)
+    jitted = jax.jit(plan_score_batch)
+    (got,) = jitted(
+        jnp.asarray(fc), jnp.asarray(fb), jnp.asarray(cpu), jnp.asarray(bb),
+        jnp.asarray(dur), jnp.asarray(wb), jnp.asarray(perms),
+        jnp.float32(3.0), jnp.float32(2.0),
+    )
+    want = plan_score_ref(fc, fb, cpu, bb, dur, wb, perms, 3.0, 2.0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4)
+
+
+def test_example_args_match_contract():
+    args = example_args(16, 128, 4)
+    shapes = [a.shape for a in args]
+    assert shapes == [(128,), (128,), (16,), (16,), (16,), (16,), (4, 16), (), ()]
+    assert args[4].dtype == jnp.int32
+    assert args[6].dtype == jnp.int32
+    assert args[0].dtype == jnp.float32

@@ -1,0 +1,105 @@
+"""L1 correctness: the Pallas earliest-start kernel vs the pure-jnp and
+pure-python oracles, hypothesis-swept over shapes and contents."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.earliest_start import earliest_start
+from compile.kernels.ref import earliest_start_py, earliest_start_ref
+
+
+def run_kernel(fc, fb, c, b, d):
+    out = earliest_start(
+        jnp.asarray(fc, jnp.float32),
+        jnp.asarray(fb, jnp.float32),
+        jnp.asarray(c, jnp.float32),
+        jnp.asarray(b, jnp.float32),
+        jnp.asarray(d, jnp.int32),
+    )
+    return np.asarray(out)
+
+
+def test_fits_immediately():
+    fc = np.full((1, 16), 8.0, np.float32)
+    fb = np.full((1, 16), 8.0, np.float32)
+    assert run_kernel(fc, fb, [4.0], [4.0], [5])[0] == 0
+
+
+def test_blocked_prefix():
+    fc = np.full((1, 16), 8.0, np.float32)
+    fc[0, :4] = 1.0
+    fb = np.full((1, 16), 8.0, np.float32)
+    assert run_kernel(fc, fb, [4.0], [1.0], [3])[0] == 4
+
+
+def test_gap_too_short_skips_to_next_window():
+    # free for 2 slots, busy 1, free rest: a 3-slot job starts at 3.
+    fc = np.array([[5, 5, 0, 5, 5, 5, 5, 5]], np.float32)
+    fb = np.full((1, 8), 9.0, np.float32)
+    assert run_kernel(fc, fb, [1.0], [1.0], [3])[0] == 3
+
+
+def test_no_fit_returns_t():
+    fc = np.full((1, 8), 2.0, np.float32)
+    fb = np.full((1, 8), 2.0, np.float32)
+    assert run_kernel(fc, fb, [3.0], [1.0], [1])[0] == 8
+    # Duration longer than the horizon also yields T.
+    assert run_kernel(fc, fb, [1.0], [1.0], [9])[0] == 8
+
+
+def test_zero_duration_is_inactive():
+    fc = np.full((1, 8), 9.0, np.float32)
+    assert run_kernel(fc, fc, [1.0], [1.0], [0])[0] == 8
+
+
+def test_bb_dimension_constrains_independently():
+    fc = np.full((1, 8), 9.0, np.float32)
+    fb = np.array([[0, 0, 9, 9, 9, 9, 9, 9]], np.float32)
+    assert run_kernel(fc, fb, [1.0], [5.0], [2])[0] == 2
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    k=st.integers(1, 6),
+    t=st.sampled_from([8, 17, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_jnp_reference(k, t, seed):
+    rng = np.random.default_rng(seed)
+    fc = rng.integers(0, 6, (k, t)).astype(np.float32)
+    fb = rng.integers(0, 6, (k, t)).astype(np.float32)
+    c = rng.integers(0, 5, k).astype(np.float32)
+    b = rng.integers(0, 5, k).astype(np.float32)
+    d = rng.integers(0, t + 2, k).astype(np.int32)
+    got = run_kernel(fc, fb, c, b, d)
+    want = np.asarray(
+        earliest_start_ref(
+            jnp.asarray(fc), jnp.asarray(fb), jnp.asarray(c), jnp.asarray(b), jnp.asarray(d)
+        )
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(t=st.integers(4, 40), seed=st.integers(0, 2**31 - 1))
+def test_matches_python_loop(t, seed):
+    rng = np.random.default_rng(seed)
+    fc = rng.uniform(0, 6, (1, t)).astype(np.float32)
+    fb = rng.uniform(0, 6, (1, t)).astype(np.float32)
+    c = np.float32(rng.uniform(0, 5))
+    b = np.float32(rng.uniform(0, 5))
+    d = int(rng.integers(1, t + 1))
+    got = run_kernel(fc, fb, [c], [b], [d])[0]
+    want = earliest_start_py(fc[0], fb[0], c, b, d)
+    assert got == want
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int32])
+def test_input_dtypes_coerce(dtype):
+    fc = np.full((2, 8), 5, dtype)
+    fb = np.full((2, 8), 5, dtype)
+    out = run_kernel(fc, fb, np.array([1, 9], dtype), np.array([1, 1], dtype), [2, 2])
+    assert out[0] == 0
+    assert out[1] == 8  # 9 > capacity 5

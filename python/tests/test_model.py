@@ -1,0 +1,126 @@
+"""L2 correctness: the batched plan scorer vs the numpy loop oracle, plus
+semantic sanity checks (permutation sensitivity, padding neutrality)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import plan_score_ref
+from compile.model import plan_score_batch
+
+
+def run_model(fc, fb, cpu, bb, dur, wb, perms, dt, alpha):
+    (scores,) = plan_score_batch(
+        jnp.asarray(fc, jnp.float32),
+        jnp.asarray(fb, jnp.float32),
+        jnp.asarray(cpu, jnp.float32),
+        jnp.asarray(bb, jnp.float32),
+        jnp.asarray(dur, jnp.int32),
+        jnp.asarray(wb, jnp.float32),
+        jnp.asarray(perms, jnp.int32),
+        jnp.float32(dt),
+        jnp.float32(alpha),
+    )
+    return np.asarray(scores)
+
+
+def mk_problem(rng, q, t):
+    fc = rng.integers(1, 9, t).astype(np.float32)
+    fb = rng.integers(1, 9, t).astype(np.float32)
+    cpu = rng.integers(1, 5, q).astype(np.float32)
+    bb = rng.integers(0, 5, q).astype(np.float32)
+    dur = rng.integers(1, max(2, t // 4), q).astype(np.int32)
+    wb = rng.uniform(0, 500, q).astype(np.float32)
+    return fc, fb, cpu, bb, dur, wb
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    q=st.integers(2, 8),
+    t=st.sampled_from([16, 32, 64]),
+    k=st.integers(1, 4),
+    alpha=st.sampled_from([1.0, 2.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_numpy_oracle(q, t, k, alpha, seed):
+    rng = np.random.default_rng(seed)
+    fc, fb, cpu, bb, dur, wb = mk_problem(rng, q, t)
+    perms = np.stack([rng.permutation(q) for _ in range(k)]).astype(np.int32)
+    dt = float(rng.uniform(1.0, 100.0))
+    got = run_model(fc, fb, cpu, bb, dur, wb, perms, dt, alpha)
+    want = plan_score_ref(fc, fb, cpu, bb, dur, wb, perms, dt, alpha)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-3)
+
+
+def test_serialised_jobs_score_known_value():
+    # Machine of 4 cpus; 3 identical 4-cpu jobs of 10 slots each:
+    # starts 0, 10, 20 -> waits 0, 10dt, 20dt; alpha=1 -> 30dt.
+    t, dt = 64, 7.0
+    fc = np.full(t, 4.0, np.float32)
+    fb = np.full(t, 100.0, np.float32)
+    cpu = np.array([4, 4, 4], np.float32)
+    bb = np.array([1, 1, 1], np.float32)
+    dur = np.array([10, 10, 10], np.int32)
+    wb = np.zeros(3, np.float32)
+    perms = np.array([[0, 1, 2]], np.int32)
+    got = run_model(fc, fb, cpu, bb, dur, wb, perms, dt, 1.0)
+    np.testing.assert_allclose(got, [30 * dt], rtol=1e-6)
+
+
+def test_permutation_order_changes_score():
+    # One whale (all cpus, long) + one minnow: whale-first delays minnow.
+    t = 64
+    fc = np.full(t, 4.0, np.float32)
+    fb = np.full(t, 100.0, np.float32)
+    cpu = np.array([4, 1], np.float32)
+    bb = np.array([1, 1], np.float32)
+    dur = np.array([30, 2], np.int32)
+    wb = np.zeros(2, np.float32)
+    perms = np.array([[0, 1], [1, 0]], np.int32)
+    scores = run_model(fc, fb, cpu, bb, dur, wb, perms, 1.0, 1.0)
+    assert scores[1] < scores[0], scores
+
+
+def test_padding_jobs_are_score_neutral():
+    rng = np.random.default_rng(3)
+    q_real, pad, t = 4, 4, 32
+    fc, fb, cpu, bb, dur, wb = mk_problem(rng, q_real, t)
+    # Padded arrays: inactive jobs have cpu=0 (the wire contract).
+    cpu_p = np.concatenate([cpu, np.zeros(pad, np.float32)])
+    bb_p = np.concatenate([bb, np.zeros(pad, np.float32)])
+    dur_p = np.concatenate([dur, np.zeros(pad, np.int32)])
+    wb_p = np.concatenate([wb, np.zeros(pad, np.float32)])
+    perm = rng.permutation(q_real)
+    perm_p = np.concatenate([perm, np.arange(q_real, q_real + pad)])
+    s_real = run_model(fc, fb, cpu, bb, dur, wb, perm[None, :], 5.0, 2.0)
+    s_padded = run_model(fc, fb, cpu_p, bb_p, dur_p, wb_p, perm_p[None, :], 5.0, 2.0)
+    np.testing.assert_allclose(s_real, s_padded, rtol=1e-6)
+
+
+def test_bb_contention_forces_delay():
+    # Plenty of cpus, but the bb dimension fits one job at a time.
+    t = 32
+    fc = np.full(t, 96.0, np.float32)
+    fb = np.full(t, 10.0, np.float32)
+    cpu = np.array([1, 1], np.float32)
+    bb = np.array([8, 8], np.float32)
+    dur = np.array([5, 5], np.int32)
+    wb = np.zeros(2, np.float32)
+    scores = run_model(fc, fb, cpu, bb, dur, wb, np.array([[0, 1]], np.int32), 2.0, 1.0)
+    # Second job waits 5 slots * 2.0 = 10.
+    np.testing.assert_allclose(scores, [10.0], rtol=1e-6)
+
+
+def test_alpha_two_penalises_tail():
+    t = 64
+    fc = np.full(t, 1.0, np.float32)
+    fb = np.full(t, 9.0, np.float32)
+    cpu = np.ones(3, np.float32)
+    bb = np.ones(3, np.float32)
+    dur = np.array([10, 10, 10], np.int32)
+    wb = np.zeros(3, np.float32)
+    perms = np.array([[0, 1, 2]], np.int32)
+    s1 = run_model(fc, fb, cpu, bb, dur, wb, perms, 1.0, 1.0)[0]
+    s2 = run_model(fc, fb, cpu, bb, dur, wb, perms, 1.0, 2.0)[0]
+    assert s1 == 30.0  # 0 + 10 + 20
+    assert s2 == 500.0  # 0 + 100 + 400

@@ -1,0 +1,189 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!  - our SA schedule (189 evals) vs Zheng et al. (8742 evals): quality
+//!    per evaluation (§3.3's central claim);
+//!  - initial candidates only (no annealing) vs full SA;
+//!  - scorer backends: exact profile vs native discrete vs XLA artifact;
+//!  - plan-scheduler memoisation on quiet ticks.
+
+use bbsched::core::job::JobId;
+use bbsched::core::resources::Resources;
+use bbsched::core::time::{Duration, Time};
+use bbsched::report::bench::{bench, report, BenchResult};
+use bbsched::sched::plan::annealing::{optimise, PermScorer, SaParams};
+use bbsched::sched::plan::builder::PlanJob;
+use bbsched::sched::plan::candidates::initial_candidates;
+use bbsched::sched::plan::profile::Profile;
+use bbsched::sched::plan::scheduler::ExternalBatchScorer;
+use bbsched::sched::plan::scorer::{DiscreteProblem, ExactScorer, NativeDiscreteScorer};
+use bbsched::sched::plan::zheng::{optimise_zheng, ZhengParams};
+use bbsched::stats::rng::Pcg32;
+use bbsched::workload::bbmodel::BbModel;
+
+fn snapshot(rng: &mut Pcg32, n: usize) -> (Profile, Vec<PlanJob>, Time) {
+    let bb_model = BbModel::default();
+    let capacity = Resources::new(96, bb_model.capacity_for(96));
+    let now = Time::from_secs(3600);
+    let mut base = Profile::flat(now, capacity);
+    // Some running load.
+    for _ in 0..6 {
+        let a = now + Duration::from_secs(rng.below(600) as u64);
+        let b = a + Duration::from_secs(600 + rng.below(7200) as u64);
+        let req = Resources::new(1 + rng.below(16), (rng.below(40) as u64) << 30);
+        if base.min_free(a, b).fits(&req) {
+            base.subtract(a, b, req);
+        }
+    }
+    let jobs: Vec<PlanJob> = (0..n)
+        .map(|i| {
+            let procs = 1 + rng.below(48);
+            PlanJob {
+                id: JobId(i as u32),
+                req: Resources::new(procs, bb_model.sample(rng, procs, capacity.bb / 2)),
+                walltime: Duration::from_secs(60 * (5 + rng.below(600)) as u64),
+                submit: Time::from_secs(rng.below(3600) as u64),
+            }
+        })
+        .collect();
+    (base, jobs, now)
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut rng = Pcg32::seeded(7);
+    let (base, jobs, now) = snapshot(&mut rng, 24);
+    let cands = initial_candidates(&jobs);
+
+    // --- SA schedules: ours vs Zheng (quality computed once up front). --
+    let quality = {
+        let mut s1 = ExactScorer::new(&base, &jobs, now, 2.0);
+        let mut r1 = Pcg32::seeded(99);
+        let ours = optimise(&mut s1, jobs.len(), &cands, &SaParams::default(), &mut r1);
+        let mut s2 = ExactScorer::new(&base, &jobs, now, 2.0);
+        let mut r2 = Pcg32::seeded(99);
+        let zheng = optimise_zheng(&mut s2, jobs.len(), &ZhengParams::default(), &mut r2);
+        (ours.score, zheng.score, ours.evaluations, zheng.evaluations)
+    };
+    results.push(bench(
+        "sa_ours_189_evals",
+        1,
+        10,
+        || {
+            let mut scorer = ExactScorer::new(&base, &jobs, now, 2.0);
+            let mut r = Pcg32::seeded(99);
+            optimise(&mut scorer, jobs.len(), &cands, &SaParams::default(), &mut r)
+        },
+        |o| format!("score {:.3e}, {} evals", o.score, o.evaluations),
+    ));
+    results.push(bench(
+        "sa_zheng_8742_evals",
+        0,
+        3,
+        || {
+            let mut scorer = ExactScorer::new(&base, &jobs, now, 2.0);
+            let mut r = Pcg32::seeded(99);
+            optimise_zheng(&mut scorer, jobs.len(), &ZhengParams::default(), &mut r)
+        },
+        |o| format!("score {:.3e}, {} evals", o.score, o.evaluations),
+    ));
+
+    // --- Candidates only (skip annealing). ------------------------------
+    results.push(bench(
+        "init_candidates_only",
+        1,
+        10,
+        || {
+            let mut scorer = ExactScorer::new(&base, &jobs, now, 2.0);
+            cands
+                .iter()
+                .map(|c| scorer.score(c))
+                .fold(f64::INFINITY, f64::min)
+        },
+        |s| format!("best candidate score {s:.3e}"),
+    ));
+
+    // --- Scorer backends (score the same 189-eval budget). ---------------
+    results.push(bench(
+        "backend_exact_profile",
+        1,
+        5,
+        || {
+            let mut scorer = ExactScorer::new(&base, &jobs, now, 2.0);
+            let mut r = Pcg32::seeded(5);
+            optimise(&mut scorer, jobs.len(), &cands, &SaParams::default(), &mut r).score
+        },
+        |s| format!("score {s:.3e}"),
+    ));
+    results.push(bench(
+        "backend_native_discrete",
+        1,
+        5,
+        || {
+            let problem = DiscreteProblem::build(&base, &jobs, now, 256, 2.0);
+            let mut scorer = NativeDiscreteScorer::new(problem);
+            let mut r = Pcg32::seeded(5);
+            optimise(&mut scorer, jobs.len(), &cands, &SaParams::default(), &mut r).score
+        },
+        |s| format!("score {s:.3e}"),
+    ));
+    if let Ok(mut xla) =
+        bbsched::runtime::scorer::XlaScorer::from_artifact_dir(std::path::Path::new("artifacts"))
+    {
+        let problem = DiscreteProblem::build(&base, &jobs, now, 256, 2.0);
+        let perms: Vec<Vec<usize>> = cands.clone();
+        results.push(bench(
+            "backend_xla_batch9",
+            1,
+            10,
+            || xla.score_batch(&problem, &perms),
+            |s| format!("9 perms -> {} scores (first {:.3e})", s.len(), s[0]),
+        ));
+    } else {
+        eprintln!("note: artifacts/ missing, skipping backend_xla_batch9");
+    }
+
+    // --- Memoisation. -----------------------------------------------------
+    use bbsched::sched::plan::scheduler::PlanSched;
+    use bbsched::sched::{SchedView, Scheduler};
+    let reqs: Vec<bbsched::JobRequest> = jobs
+        .iter()
+        .map(|j| bbsched::JobRequest {
+            id: j.id,
+            submit: j.submit,
+            walltime: j.walltime,
+            procs: j.req.cpu,
+            bb: j.req.bb,
+        })
+        .collect();
+    let running = [bbsched::sched::RunningInfo {
+        id: JobId(999),
+        req: Resources::new(96, 0),
+        expected_end: Time::from_secs(360_000),
+    }];
+    let view = SchedView {
+        now,
+        capacity: Resources::new(96, BbModel::default().capacity_for(96)),
+        free: Resources::new(0, BbModel::default().capacity_for(96)),
+        queue: &reqs,
+        running: &running,
+    };
+    let mut sched = PlanSched::new(2.0, 1);
+    let _ = sched.schedule(&view); // prime the memo
+    results.push(bench(
+        "plan_sched_memoised_tick",
+        10,
+        1000,
+        || sched.schedule(&view).len(),
+        |n| format!("{n} launches (memo hit)"),
+    ));
+
+    report("ablations", &results);
+    println!(
+        "\nSA quality: ours {:.4e} ({} evals) vs zheng {:.4e} ({} evals) -> ratio {:.4} at {:.1}% of the evaluations",
+        quality.0,
+        quality.2,
+        quality.1,
+        quality.3,
+        quality.0 / quality.1,
+        quality.2 as f64 / quality.3 as f64 * 100.0
+    );
+}

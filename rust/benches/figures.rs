@@ -1,0 +1,141 @@
+//! One benchmark per paper figure: each regenerates that figure's data
+//! series on a scaled workload (2% of the trace, full I/O contention)
+//! and reports the headline values alongside wall time, so `cargo bench`
+//! doubles as a fast shape-check of the reproduction.
+//!
+//! Full-scale numbers come from `repro eval` (see EXPERIMENTS.md).
+
+use bbsched::coordinator::{run_policy, PlanBackendKind};
+use bbsched::metrics::summary::summarize;
+use bbsched::metrics::{bsld_letter_values, bsld_tail, waiting_letter_values, waiting_tail};
+use bbsched::report::bench::{bench, report, BenchResult};
+use bbsched::sched::Policy;
+use bbsched::sim::simulator::{SimConfig, SimResult};
+use bbsched::workload::split::split_workload;
+use bbsched::workload::synth::{generate, SynthConfig};
+
+const SCALE: f64 = 0.02;
+
+fn workload() -> (Vec<bbsched::Job>, SimConfig) {
+    let cfg = SynthConfig::scaled(1, SCALE);
+    let jobs = generate(&cfg);
+    (jobs, SimConfig { bb_capacity: cfg.bb_capacity, ..SimConfig::default() })
+}
+
+fn run(jobs: &[bbsched::Job], sim: &SimConfig, p: Policy) -> SimResult {
+    run_policy(jobs.to_vec(), p, sim, 1, PlanBackendKind::Exact)
+}
+
+fn main() {
+    let (jobs, sim) = workload();
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // Pre-run each policy once; figure benches then measure the metric
+    // regeneration over those records plus one fresh simulation to keep
+    // the end-to-end cost visible.
+    let fcfs_easy = run(&jobs, &sim, Policy::FcfsEasy);
+    let sjf = run(&jobs, &sim, Policy::SjfBb);
+    let plan2 = run(&jobs, &sim, Policy::Plan(2));
+
+    // Fig 3: Gantt of fcfs-easy (holes before tall jobs).
+    results.push(bench(
+        "fig03_gantt_fcfs_easy",
+        0,
+        3,
+        || {
+            let mut cfg = sim.clone();
+            cfg.record_gantt = true;
+            let res = run_policy(jobs.clone(), Policy::FcfsEasy, &cfg, 1, PlanBackendKind::Exact);
+            res.gantt.len()
+        },
+        |n| format!("{n} gantt rows"),
+    ));
+
+    // Figs 5-6: mean waiting time and bounded slowdown per policy.
+    results.push(bench(
+        "fig05_mean_wait",
+        0,
+        3,
+        || {
+            let res = run_policy(jobs.clone(), Policy::SjfBb, &sim, 1, PlanBackendKind::Exact);
+            summarize("sjf-bb", &res.records).mean_wait_h
+        },
+        |v| format!("sjf-bb mean wait {v:.2} h"),
+    ));
+    results.push(bench(
+        "fig06_mean_bsld",
+        0,
+        3,
+        || {
+            let res = run_policy(jobs.clone(), Policy::Plan(2), &sim, 1, PlanBackendKind::Exact);
+            summarize("plan-2", &res.records).mean_bsld
+        },
+        |v| format!("plan-2 mean bsld {v:.2}"),
+    ));
+
+    // Figs 7-8: letter-value quantiles (over the pre-run records).
+    results.push(bench(
+        "fig07_wait_quantiles",
+        1,
+        20,
+        || waiting_letter_values(&sjf.records).len(),
+        |n| format!("{n} letter levels"),
+    ));
+    results.push(bench(
+        "fig08_bsld_quantiles",
+        1,
+        20,
+        || bsld_letter_values(&plan2.records).len(),
+        |n| format!("{n} letter levels"),
+    ));
+
+    // Figs 9-10: top-3000 tails.
+    results.push(bench(
+        "fig09_wait_tail",
+        1,
+        20,
+        || waiting_tail(&fcfs_easy.records, 3000),
+        |t| format!("fcfs-easy tail max {:.1} h", t.first().copied().unwrap_or(0.0)),
+    ));
+    results.push(bench(
+        "fig10_bsld_tail",
+        1,
+        20,
+        || bsld_tail(&fcfs_easy.records, 3000),
+        |t| format!("fcfs-easy tail max bsld {:.0}", t.first().copied().unwrap_or(0.0)),
+    ));
+
+    // Figs 11-12: split -> per-part normalised means (2 parts at bench
+    // scale; 16x3 weeks at full scale).
+    results.push(bench(
+        "fig11_12_norm_parts",
+        0,
+        2,
+        || {
+            let parts = split_workload(&jobs, 2, 0.2);
+            let mut ratios = Vec::new();
+            for part in parts.iter().filter(|p| !p.is_empty()) {
+                let a = run_policy(part.clone(), Policy::Plan(2), &sim, 1, PlanBackendKind::Exact);
+                let b = run_policy(part.clone(), Policy::SjfBb, &sim, 1, PlanBackendKind::Exact);
+                let (sa, sb) = (
+                    summarize("plan-2", &a.records).mean_wait_h,
+                    summarize("sjf-bb", &b.records).mean_wait_h,
+                );
+                if sb > 1e-12 {
+                    ratios.push(sa / sb);
+                }
+            }
+            ratios
+        },
+        |r| format!("plan-2/sjf-bb per-part ratios {r:?}"),
+    ));
+
+    // §4.2 headline at bench scale.
+    let headline = {
+        let p = summarize("plan-2", &plan2.records).mean_wait_h;
+        let s = summarize("sjf-bb", &sjf.records).mean_wait_h;
+        (p / s - 1.0) * 100.0
+    };
+    report("figures (2% workload, full I/O)", &results);
+    println!("\nheadline at bench scale: plan-2 vs sjf-bb mean wait {headline:+.1}% (paper: -20%)");
+}

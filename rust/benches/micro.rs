@@ -1,0 +1,171 @@
+//! Microbenchmarks of the hot paths identified in DESIGN.md §7 —
+//! the inputs to the EXPERIMENTS.md §Perf iteration log:
+//!  - availability-profile earliest_fit / reserve,
+//!  - full plan build per candidate permutation,
+//!  - max-min flow rate recomputation,
+//!  - event-queue throughput,
+//!  - simulator end-to-end step rate,
+//!  - XLA scorer latency per batched execution.
+
+use bbsched::core::job::JobId;
+use bbsched::core::resources::Resources;
+use bbsched::core::time::{Duration, Time};
+use bbsched::coordinator::{run_policy, PlanBackendKind};
+use bbsched::platform::flows::FlowNetwork;
+use bbsched::report::bench::{bench, report, BenchResult};
+use bbsched::sched::plan::builder::{build_plan, PlanJob};
+use bbsched::sched::plan::profile::Profile;
+use bbsched::sched::plan::scorer::DiscreteProblem;
+use bbsched::sched::Policy;
+use bbsched::sim::events::{Event, EventQueue};
+use bbsched::sim::simulator::SimConfig;
+use bbsched::stats::rng::Pcg32;
+use bbsched::workload::bbmodel::BbModel;
+use bbsched::workload::synth::{generate, SynthConfig};
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut rng = Pcg32::seeded(3);
+    let capacity = Resources::new(96, BbModel::default().capacity_for(96));
+
+    // A profile with ~60 breakpoints (a busy cluster).
+    let mut profile = Profile::flat(Time::ZERO, capacity);
+    for _ in 0..30 {
+        let a = Time::from_secs(rng.below(50_000) as u64);
+        let b = a + Duration::from_secs(600 + rng.below(20_000) as u64);
+        let req = Resources::new(1 + rng.below(8), (rng.below(20) as u64) << 30);
+        if profile.min_free(a, b).fits(&req) {
+            profile.subtract(a, b, req);
+        }
+    }
+    let jobs: Vec<PlanJob> = (0..32)
+        .map(|i| {
+            let procs = 1 + rng.below(48);
+            PlanJob {
+                id: JobId(i),
+                req: Resources::new(procs, BbModel::default().sample(&mut rng, procs, capacity.bb / 2)),
+                walltime: Duration::from_secs(60 * (5 + rng.below(600)) as u64),
+                submit: Time::ZERO,
+            }
+        })
+        .collect();
+
+    results.push(bench(
+        "profile_earliest_fit",
+        100,
+        10_000,
+        || profile.earliest_fit(Resources::new(24, 50 << 30), Duration::from_secs(3600), Time::ZERO),
+        |t| format!("-> {t}"),
+    ));
+    results.push(bench(
+        "profile_clone_reserve",
+        100,
+        10_000,
+        || {
+            let mut p = profile.clone();
+            p.reserve(Time::from_secs(1000), Duration::from_secs(600), Resources::new(8, 1 << 30));
+            p.len()
+        },
+        |n| format!("{n} breakpoints"),
+    ));
+    results.push(bench(
+        "plan_build_32_jobs",
+        10,
+        1_000,
+        || build_plan(&profile, &jobs, &(0..32).collect::<Vec<_>>(), Time::ZERO, 2.0).score,
+        |s| format!("score {s:.3e}"),
+    ));
+    results.push(bench(
+        "discretise_T256",
+        10,
+        1_000,
+        || DiscreteProblem::build(&profile, &jobs, Time::ZERO, 256, 2.0).dt,
+        |dt| format!("dt {dt:.1} s"),
+    ));
+
+    // Flow network: 200 flows over 400 links.
+    let caps: Vec<f64> = (0..400).map(|_| rng.range_f64(1e9, 5e9)).collect();
+    let mut net = FlowNetwork::new(caps);
+    for tag in 0..200 {
+        let route: Vec<usize> = (0..3).map(|_| rng.below(400) as usize).collect();
+        net.add_flow(route, 1e9, tag);
+    }
+    results.push(bench(
+        "flow_recompute_200f_400l",
+        10,
+        1_000,
+        || {
+            net.recompute_rates();
+            net.n_active()
+        },
+        |n| format!("{n} flows"),
+    ));
+
+    // Event queue throughput.
+    results.push(bench(
+        "event_queue_push_pop_10k",
+        5,
+        200,
+        || {
+            let mut q = EventQueue::new();
+            for i in 0..10_000u32 {
+                q.push(Time::from_secs(((i as u64) * 7919) % 100_000), Event::JobArrival(JobId(i)));
+            }
+            let mut n = 0;
+            while q.pop().is_some() {
+                n += 1;
+            }
+            n
+        },
+        |n| format!("{n} events"),
+    ));
+
+    // End-to-end simulator rate: 285-job workload with I/O.
+    let wl = SynthConfig::scaled(1, 0.01);
+    let wl_jobs = generate(&wl);
+    let sim = SimConfig { bb_capacity: wl.bb_capacity, ..SimConfig::default() };
+    results.push(bench(
+        "sim_285_jobs_sjf_bb_io",
+        1,
+        5,
+        || run_policy(wl_jobs.clone(), Policy::SjfBb, &sim, 1, PlanBackendKind::Exact).records.len(),
+        |n| format!("{n} jobs simulated"),
+    ));
+    results.push(bench(
+        "sim_285_jobs_plan2_exact",
+        0,
+        3,
+        || run_policy(wl_jobs.clone(), Policy::Plan(2), &sim, 1, PlanBackendKind::Exact).records.len(),
+        |n| format!("{n} jobs simulated"),
+    ));
+
+    // XLA scorer latency per batch (K=8 perms, Q<=64, T=256).
+    if let Ok(mut xla) =
+        bbsched::runtime::scorer::XlaScorer::from_artifact_dir(std::path::Path::new("artifacts"))
+    {
+        use bbsched::sched::plan::scheduler::ExternalBatchScorer;
+        let problem = DiscreteProblem::build(&profile, &jobs, Time::ZERO, 256, 2.0);
+        let perms: Vec<Vec<usize>> = (0..8)
+            .map(|_| {
+                let mut p: Vec<usize> = (0..jobs.len()).collect();
+                rng.shuffle(&mut p);
+                p
+            })
+            .collect();
+        results.push(bench(
+            "xla_score_batch8_q32_t256",
+            3,
+            50,
+            || xla.score_batch(&problem, &perms)[0],
+            |s| format!("first score {s:.3e}"),
+        ));
+        println!(
+            "xla executions {} / fallbacks {}",
+            xla.executions, xla.fallback_scores
+        );
+    } else {
+        eprintln!("note: artifacts/ missing, skipping xla_score_batch8");
+    }
+
+    report("micro", &results);
+}

@@ -1,0 +1,297 @@
+//! The evaluation coordinator: builds schedulers, fans simulations out
+//! over worker threads, and assembles every figure of the paper's
+//! evaluation (§4.2) from the results.
+
+use crate::core::job::Job;
+use crate::metrics::normalized::{normalized_by_reference, NormalizedPart};
+use crate::metrics::summary::{summarize, PolicySummary};
+use crate::metrics::{bsld_letter_values, bsld_tail, waiting_letter_values, waiting_tail};
+use crate::sched::easy::Easy;
+use crate::sched::fcfs::Fcfs;
+use crate::sched::filler::Filler;
+use crate::sched::plan::scheduler::{PlanSched, ScorerBackend};
+use crate::sched::{Policy, Scheduler};
+use crate::sim::simulator::{SimConfig, SimResult, Simulator};
+use crate::stats::descriptive::LetterValue;
+use crate::workload::split::split_workload;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// How the plan-based policies score SA candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanBackendKind {
+    Exact,
+    Discrete { t_slots: usize },
+    /// XLA artifact via PJRT (one client per scheduler instance).
+    Xla { t_slots: usize },
+}
+
+/// Instantiate a scheduler for a policy.
+pub fn make_scheduler(
+    policy: Policy,
+    seed: u64,
+    plan_backend: PlanBackendKind,
+) -> Box<dyn Scheduler + Send> {
+    match policy {
+        Policy::Fcfs => Box::new(Fcfs::new()),
+        Policy::FcfsEasy => Box::new(Easy::fcfs_easy()),
+        Policy::Filler => Box::new(Filler::new()),
+        Policy::FcfsBb => Box::new(Easy::fcfs_bb()),
+        Policy::SjfBb => Box::new(Easy::sjf_bb()),
+        Policy::SlurmLike => Box::new(crate::sched::slurm_like::SlurmLike::new()),
+        Policy::ConservativeBb => Box::new(crate::sched::conservative::Conservative::new()),
+        Policy::Plan(alpha) => {
+            let sched = PlanSched::new(alpha as f64, seed);
+            let sched = match plan_backend {
+                PlanBackendKind::Exact => sched,
+                PlanBackendKind::Discrete { t_slots } => {
+                    sched.with_backend(ScorerBackend::Discrete { t_slots })
+                }
+                PlanBackendKind::Xla { t_slots } => {
+                    match crate::runtime::scorer::XlaScorer::from_artifact_dir(
+                        std::path::Path::new("artifacts"),
+                    ) {
+                        Ok(s) => sched.with_backend(ScorerBackend::External {
+                            t_slots,
+                            scorer: Box::new(s),
+                        }),
+                        Err(e) => {
+                            eprintln!(
+                                "warning: XLA scorer unavailable ({e}); falling back to native discrete"
+                            );
+                            sched.with_backend(ScorerBackend::Discrete { t_slots })
+                        }
+                    }
+                }
+            };
+            Box::new(sched)
+        }
+    }
+}
+
+/// Run one policy over one workload.
+pub fn run_policy(
+    jobs: Vec<Job>,
+    policy: Policy,
+    sim_cfg: &SimConfig,
+    seed: u64,
+    plan_backend: PlanBackendKind,
+) -> SimResult {
+    let sched = make_scheduler(policy, seed, plan_backend);
+    Simulator::new(jobs, sched, sim_cfg.clone()).run()
+}
+
+/// Fan a list of (label, jobs, policy) simulations over worker threads.
+pub fn run_many(
+    tasks: Vec<(String, Vec<Job>, Policy)>,
+    sim_cfg: &SimConfig,
+    seed: u64,
+    plan_backend: PlanBackendKind,
+    n_threads: usize,
+) -> Vec<(String, SimResult)> {
+    let queue: Mutex<VecDeque<(String, Vec<Job>, Policy)>> = Mutex::new(tasks.into());
+    let results: Mutex<Vec<(String, SimResult)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads.max(1) {
+            scope.spawn(|| loop {
+                let task = queue.lock().unwrap().pop_front();
+                let Some((label, jobs, policy)) = task else { break };
+                let res = run_policy(jobs, policy, sim_cfg, seed, plan_backend);
+                results.lock().unwrap().push((label, res));
+            });
+        }
+    });
+    results.into_inner().unwrap()
+}
+
+/// Everything `repro eval` produces — the data behind Figs 5-12.
+#[derive(Debug)]
+pub struct EvalOutput {
+    /// Whole-trace per-policy summaries (Figs 5-6).
+    pub summaries: Vec<PolicySummary>,
+    /// Letter values (Figs 7-8).
+    pub wait_letters: Vec<(String, Vec<LetterValue>)>,
+    pub bsld_letters: Vec<(String, Vec<LetterValue>)>,
+    /// Tails (Figs 9-10).
+    pub wait_tails: Vec<(String, Vec<f64>)>,
+    pub bsld_tails: Vec<(String, Vec<f64>)>,
+    /// Normalised per-part distributions (Figs 11-12).
+    pub norm_wait: Vec<NormalizedPart>,
+    pub norm_bsld: Vec<NormalizedPart>,
+    /// Raw results (whole trace), keyed by policy name.
+    pub whole: Vec<(String, SimResult)>,
+}
+
+/// Evaluation harness parameters.
+#[derive(Debug, Clone)]
+pub struct EvalParams {
+    pub policies: Vec<Policy>,
+    pub tail_k: usize,
+    /// (number of parts, weeks per part) for Figs 11-12; `None` skips them.
+    pub parts: Option<(usize, f64)>,
+    pub reference: Policy,
+    pub seed: u64,
+    pub plan_backend: PlanBackendKind,
+    pub n_threads: usize,
+}
+
+impl Default for EvalParams {
+    fn default() -> EvalParams {
+        EvalParams {
+            policies: Policy::ALL.to_vec(),
+            tail_k: crate::metrics::tail::TAIL_K,
+            parts: Some((16, 3.0)),
+            reference: Policy::SjfBb,
+            seed: 1,
+            plan_backend: PlanBackendKind::Exact,
+            n_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+/// Run the full evaluation over one workload.
+pub fn run_eval(jobs: &[Job], sim_cfg: &SimConfig, params: &EvalParams) -> EvalOutput {
+    // --- Whole trace, every policy (Figs 5-10). -------------------------
+    let tasks: Vec<(String, Vec<Job>, Policy)> = params
+        .policies
+        .iter()
+        .map(|&p| (p.name(), jobs.to_vec(), p))
+        .collect();
+    let mut whole = run_many(tasks, sim_cfg, params.seed, params.plan_backend, params.n_threads);
+    // Keep policy declaration order.
+    whole.sort_by_key(|(label, _)| {
+        params.policies.iter().position(|p| p.name() == *label).unwrap_or(usize::MAX)
+    });
+
+    let summaries: Vec<PolicySummary> =
+        whole.iter().map(|(label, res)| summarize(label, &res.records)).collect();
+    let wait_letters = whole
+        .iter()
+        .map(|(l, r)| (l.clone(), waiting_letter_values(&r.records)))
+        .collect();
+    let bsld_letters = whole
+        .iter()
+        .map(|(l, r)| (l.clone(), bsld_letter_values(&r.records)))
+        .collect();
+    let wait_tails = whole
+        .iter()
+        .map(|(l, r)| (l.clone(), waiting_tail(&r.records, params.tail_k)))
+        .collect();
+    let bsld_tails = whole
+        .iter()
+        .map(|(l, r)| (l.clone(), bsld_tail(&r.records, params.tail_k)))
+        .collect();
+
+    // --- Per-part normalised comparison (Figs 11-12). -------------------
+    let (norm_wait, norm_bsld) = if let Some((n_parts, weeks)) = params.parts {
+        let parts = split_workload(jobs, n_parts, weeks);
+        let mut tasks = Vec::new();
+        for (pi, part) in parts.iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            for &policy in &params.policies {
+                tasks.push((format!("{}#{}", policy.name(), pi), part.clone(), policy));
+            }
+        }
+        let results =
+            run_many(tasks, sim_cfg, params.seed, params.plan_backend, params.n_threads);
+        // metric[policy][part]
+        let mut wait_by: std::collections::HashMap<String, Vec<(usize, f64)>> = Default::default();
+        let mut bsld_by: std::collections::HashMap<String, Vec<(usize, f64)>> = Default::default();
+        for (label, res) in &results {
+            let (policy, part) = label.rsplit_once('#').unwrap();
+            let part: usize = part.parse().unwrap();
+            let s = summarize(policy, &res.records);
+            wait_by.entry(policy.to_string()).or_default().push((part, s.mean_wait_h));
+            bsld_by.entry(policy.to_string()).or_default().push((part, s.mean_bsld));
+        }
+        let series = |by: &std::collections::HashMap<String, Vec<(usize, f64)>>,
+                      policy: &str|
+         -> Vec<f64> {
+            let mut v = by.get(policy).cloned().unwrap_or_default();
+            v.sort_by_key(|&(p, _)| p);
+            v.into_iter().map(|(_, m)| m).collect()
+        };
+        let ref_name = params.reference.name();
+        let ref_wait = series(&wait_by, &ref_name);
+        let ref_bsld = series(&bsld_by, &ref_name);
+        let norm_wait = params
+            .policies
+            .iter()
+            .map(|p| normalized_by_reference(&p.name(), &series(&wait_by, &p.name()), &ref_wait))
+            .collect();
+        let norm_bsld = params
+            .policies
+            .iter()
+            .map(|p| normalized_by_reference(&p.name(), &series(&bsld_by, &p.name()), &ref_bsld))
+            .collect();
+        (norm_wait, norm_bsld)
+    } else {
+        (Vec::new(), Vec::new())
+    };
+
+    EvalOutput {
+        summaries,
+        wait_letters,
+        bsld_letters,
+        wait_tails,
+        bsld_tails,
+        norm_wait,
+        norm_bsld,
+        whole,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::synth::SynthConfig;
+
+    #[test]
+    fn tiny_eval_pipeline_end_to_end() {
+        let cfg = SynthConfig::scaled(5, 0.003); // ~85 jobs
+        let jobs = crate::workload::synth::generate(&cfg);
+        let sim_cfg = SimConfig {
+            bb_capacity: cfg.bb_capacity,
+            io_enabled: false, // fast
+            ..SimConfig::default()
+        };
+        let params = EvalParams {
+            policies: vec![Policy::Fcfs, Policy::FcfsBb, Policy::SjfBb],
+            tail_k: 50,
+            parts: None,
+            ..EvalParams::default()
+        };
+        let out = run_eval(&jobs, &sim_cfg, &params);
+        assert_eq!(out.summaries.len(), 3);
+        for s in &out.summaries {
+            assert_eq!(s.n_jobs, jobs.len(), "{}", s.policy);
+        }
+        // fcfs (no backfilling) should not beat the backfilling policies.
+        let by = |n: &str| out.summaries.iter().find(|s| s.policy == n).unwrap().mean_wait_h;
+        assert!(by("fcfs") >= by("fcfs-bb") * 0.99, "fcfs {} bb {}", by("fcfs"), by("fcfs-bb"));
+    }
+
+    #[test]
+    fn parts_normalisation_reference_is_one() {
+        let cfg = SynthConfig::scaled(6, 0.004);
+        let jobs = crate::workload::synth::generate(&cfg);
+        let sim_cfg = SimConfig {
+            bb_capacity: cfg.bb_capacity,
+            io_enabled: false,
+            ..SimConfig::default()
+        };
+        let params = EvalParams {
+            policies: vec![Policy::FcfsBb, Policy::SjfBb],
+            tail_k: 10,
+            parts: Some((2, 0.05)),
+            ..EvalParams::default()
+        };
+        let out = run_eval(&jobs, &sim_cfg, &params);
+        let refn = out.norm_wait.iter().find(|n| n.policy == "sjf-bb").unwrap();
+        for v in &refn.values {
+            assert!((v - 1.0).abs() < 1e-9);
+        }
+    }
+}

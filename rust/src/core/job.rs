@@ -1,0 +1,232 @@
+//! Jobs: the unit of scheduling.
+//!
+//! A [`Job`] carries what the user submitted (walltime, processor count,
+//! burst-buffer request) plus the hidden ground truth the simulator needs
+//! (actual runtime, number of computation phases — the Fig-4 execution
+//! model of the paper). Schedulers may only look at the user-visible part;
+//! the simulator enforces this by handing schedulers [`JobRequest`] views.
+
+use super::resources::Resources;
+use super::time::{Duration, Time};
+
+/// Dense job identifier (index into the workload's job table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u32);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "j{}", self.0)
+    }
+}
+
+/// The paper's Fig-4 job execution model constants.
+pub const MIN_PHASES: u32 = 1;
+pub const MAX_PHASES: u32 = 10;
+
+/// A job as submitted by a user plus simulation ground truth.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub id: JobId,
+    /// Submission (arrival) time.
+    pub submit: Time,
+    /// User-declared upper bound on processing time; jobs are killed when
+    /// they exceed it. Schedulers plan with this value.
+    pub walltime: Duration,
+    /// Ground-truth total *computation* time (excludes I/O); the simulator
+    /// splits this across `phases` computation phases per Fig 4.
+    pub compute_time: Duration,
+    /// Requested processors (== compute nodes in the paper's model).
+    pub procs: u32,
+    /// Requested burst-buffer bytes (total across the job).
+    pub bb: u64,
+    /// Number of computation phases (1..=10). Phases are interleaved with
+    /// checkpoints to the burst buffer.
+    pub phases: u32,
+}
+
+impl Job {
+    /// The two-dimensional resource request schedulers must reserve.
+    pub fn request(&self) -> Resources {
+        Resources { cpu: self.procs, bb: self.bb }
+    }
+
+    /// User-visible view for schedulers.
+    pub fn as_request(&self) -> JobRequest {
+        JobRequest {
+            id: self.id,
+            submit: self.submit,
+            walltime: self.walltime,
+            procs: self.procs,
+            bb: self.bb,
+        }
+    }
+
+    /// Validate workload-model invariants (used by workload loaders).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.procs == 0 {
+            return Err(format!("{}: zero processors", self.id));
+        }
+        if self.walltime == Duration::ZERO {
+            return Err(format!("{}: zero walltime", self.id));
+        }
+        if self.compute_time == Duration::ZERO {
+            return Err(format!("{}: zero compute time", self.id));
+        }
+        if !(MIN_PHASES..=MAX_PHASES).contains(&self.phases) {
+            return Err(format!("{}: phases {} outside 1..=10", self.id, self.phases));
+        }
+        Ok(())
+    }
+}
+
+/// What a scheduler is allowed to see about a pending job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobRequest {
+    pub id: JobId,
+    pub submit: Time,
+    pub walltime: Duration,
+    pub procs: u32,
+    pub bb: u64,
+}
+
+impl JobRequest {
+    pub fn request(&self) -> Resources {
+        Resources { cpu: self.procs, bb: self.bb }
+    }
+    /// Burst-buffer bytes requested per processor — one of the paper's
+    /// nine initial-candidate sort keys.
+    pub fn bb_per_proc(&self) -> f64 {
+        self.bb as f64 / self.procs.max(1) as f64
+    }
+}
+
+/// Lifecycle of a job inside the simulator (Fig 4 of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Submitted, waiting in the scheduler queue.
+    Pending,
+    /// Transferring input data PFS -> burst buffer.
+    StageIn,
+    /// Executing computation phase `phase` (0-based).
+    Compute { phase: u32 },
+    /// Checkpointing after phase `phase`: compute nodes -> burst buffer;
+    /// computation is suspended.
+    Checkpoint { phase: u32 },
+    /// Transferring results burst buffer -> PFS.
+    StageOut,
+    /// Completed normally at the recorded time.
+    Completed,
+    /// Killed because it exceeded its walltime.
+    Killed,
+}
+
+/// Everything the metrics layer needs about one finished job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobRecord {
+    pub id: JobId,
+    pub submit: Time,
+    pub start: Time,
+    pub finish: Time,
+    pub walltime: Duration,
+    pub procs: u32,
+    pub bb: u64,
+    pub killed: bool,
+}
+
+impl JobRecord {
+    /// Waiting time: from submission to the start of stage-in.
+    pub fn waiting(&self) -> Duration {
+        self.start.since(self.submit)
+    }
+    /// Observed processing time (stage-in through stage-out; includes the
+    /// I/O stretching the paper simulates).
+    pub fn runtime(&self) -> Duration {
+        self.finish.since(self.start)
+    }
+    /// Turnaround: submission to completion.
+    pub fn turnaround(&self) -> Duration {
+        self.finish.since(self.submit)
+    }
+    /// Bounded slowdown with the paper's 10-minute bound:
+    /// `max(1, turnaround / max(runtime, 10 min))`.
+    pub fn bounded_slowdown(&self) -> f64 {
+        let bound = Duration::from_mins(10);
+        let denom = self.runtime().max(bound).as_secs_f64();
+        (self.turnaround().as_secs_f64() / denom).max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> Job {
+        Job {
+            id: JobId(7),
+            submit: Time::from_secs(100),
+            walltime: Duration::from_mins(30),
+            compute_time: Duration::from_mins(20),
+            procs: 4,
+            bb: 1 << 30,
+            phases: 3,
+        }
+    }
+
+    #[test]
+    fn request_view_hides_ground_truth() {
+        let j = job();
+        let r = j.as_request();
+        assert_eq!(r.id, j.id);
+        assert_eq!(r.walltime, j.walltime);
+        assert_eq!(r.request(), Resources::new(4, 1 << 30));
+        assert!((r.bb_per_proc() - (1u64 << 28) as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validation_catches_degenerate_jobs() {
+        let mut j = job();
+        assert!(j.validate().is_ok());
+        j.procs = 0;
+        assert!(j.validate().is_err());
+        let mut j = job();
+        j.phases = 11;
+        assert!(j.validate().is_err());
+        let mut j = job();
+        j.walltime = Duration::ZERO;
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn record_metrics() {
+        let r = JobRecord {
+            id: JobId(1),
+            submit: Time::from_secs(0),
+            start: Time::from_secs(600),
+            finish: Time::from_secs(900),
+            walltime: Duration::from_mins(30),
+            procs: 1,
+            bb: 0,
+            killed: false,
+        };
+        assert_eq!(r.waiting(), Duration::from_secs(600));
+        assert_eq!(r.runtime(), Duration::from_secs(300));
+        assert_eq!(r.turnaround(), Duration::from_secs(900));
+        // runtime 300s < bound 600s => denom = 600; 900/600 = 1.5
+        assert!((r.bounded_slowdown() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounded_slowdown_floors_at_one() {
+        let r = JobRecord {
+            id: JobId(1),
+            submit: Time::from_secs(0),
+            start: Time::from_secs(0),
+            finish: Time::from_secs(60),
+            walltime: Duration::from_mins(5),
+            procs: 1,
+            bb: 0,
+            killed: false,
+        };
+        assert_eq!(r.bounded_slowdown(), 1.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Core vocabulary types shared by every layer: time, resources, jobs.
+
+pub mod job;
+pub mod resources;
+pub mod time;
+
+pub use job::{Job, JobId, JobRecord, JobRequest, JobState};
+pub use resources::{Resources, GIB, TIB};
+pub use time::{Duration, Time, MICROS_PER_SEC};

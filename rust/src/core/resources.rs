@@ -1,0 +1,124 @@
+//! Two-dimensional cluster resources: processors and burst-buffer bytes.
+//!
+//! Every scheduling decision in this system is made against a
+//! [`Resources`] pair — the paper's central point is that reserving only
+//! one of the two dimensions (processors) leads to pathological schedules.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub, SubAssign};
+
+/// Bytes in one gibibyte / tebibyte (burst-buffer sizes).
+pub const GIB: u64 = 1 << 30;
+pub const TIB: u64 = 1 << 40;
+
+/// A quantity of cluster resources: `cpu` processors (the paper equates
+/// one compute node with one processor) and `bb` bytes of shared
+/// burst-buffer capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Resources {
+    pub cpu: u32,
+    pub bb: u64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { cpu: 0, bb: 0 };
+
+    pub fn new(cpu: u32, bb: u64) -> Resources {
+        Resources { cpu, bb }
+    }
+
+    /// True iff `self` can satisfy `req` in both dimensions.
+    pub fn fits(&self, req: &Resources) -> bool {
+        self.cpu >= req.cpu && self.bb >= req.bb
+    }
+
+    /// Component-wise minimum.
+    pub fn min(&self, other: &Resources) -> Resources {
+        Resources { cpu: self.cpu.min(other.cpu), bb: self.bb.min(other.bb) }
+    }
+
+    /// Component-wise saturating subtraction.
+    pub fn saturating_sub(&self, other: &Resources) -> Resources {
+        Resources {
+            cpu: self.cpu.saturating_sub(other.cpu),
+            bb: self.bb.saturating_sub(other.bb),
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.cpu == 0 && self.bb == 0
+    }
+
+    /// Checked subtraction: `None` on underflow in either dimension.
+    pub fn checked_sub(&self, other: &Resources) -> Option<Resources> {
+        Some(Resources {
+            cpu: self.cpu.checked_sub(other.cpu)?,
+            bb: self.bb.checked_sub(other.bb)?,
+        })
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources { cpu: self.cpu + o.cpu, bb: self.bb + o.bb }
+    }
+}
+impl AddAssign for Resources {
+    fn add_assign(&mut self, o: Resources) {
+        self.cpu += o.cpu;
+        self.bb += o.bb;
+    }
+}
+impl Sub for Resources {
+    type Output = Resources;
+    /// Panics on underflow (debug and release): resource accounting bugs
+    /// must never be silently absorbed.
+    fn sub(self, o: Resources) -> Resources {
+        Resources {
+            cpu: self.cpu.checked_sub(o.cpu).expect("cpu resource underflow"),
+            bb: self.bb.checked_sub(o.bb).expect("bb resource underflow"),
+        }
+    }
+}
+impl SubAssign for Resources {
+    fn sub_assign(&mut self, o: Resources) {
+        *self = *self - o;
+    }
+}
+
+impl fmt::Display for Resources {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}cpu/{:.2}GiB", self.cpu, self.bb as f64 / GIB as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_is_conjunctive() {
+        let cap = Resources::new(4, 10 * TIB);
+        assert!(cap.fits(&Resources::new(4, 10 * TIB)));
+        assert!(cap.fits(&Resources::ZERO));
+        assert!(!cap.fits(&Resources::new(5, 0)));
+        assert!(!cap.fits(&Resources::new(0, 10 * TIB + 1)));
+    }
+
+    #[test]
+    fn arithmetic_round_trips() {
+        let a = Resources::new(3, 100);
+        let b = Resources::new(1, 40);
+        assert_eq!(a + b - b, a);
+        assert_eq!(a.saturating_sub(&Resources::new(10, 1000)), Resources::ZERO);
+        assert_eq!(a.checked_sub(&Resources::new(10, 0)), None);
+        assert_eq!(a.min(&b), Resources::new(1, 40));
+    }
+
+    #[test]
+    #[should_panic(expected = "cpu resource underflow")]
+    fn sub_panics_on_underflow() {
+        let _ = Resources::new(1, 0) - Resources::new(2, 0);
+    }
+}

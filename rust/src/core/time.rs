@@ -1,0 +1,179 @@
+//! Simulation time: a monotone clock with microsecond resolution.
+//!
+//! All simulator state is keyed by [`Time`] (absolute instants) and
+//! [`Duration`] (non-negative spans). Integer microseconds keep the
+//! discrete-event engine fully deterministic — no float drift in event
+//! ordering — while still resolving sub-second I/O transfer completions.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Microseconds per second.
+pub const MICROS_PER_SEC: u64 = 1_000_000;
+
+/// An absolute simulation instant, in microseconds since simulation start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Time(pub u64);
+
+/// A non-negative span of simulation time, in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Duration(pub u64);
+
+impl Time {
+    pub const ZERO: Time = Time(0);
+    /// A sentinel "never" instant (used for unset deadlines / +inf).
+    pub const MAX: Time = Time(u64::MAX);
+
+    pub fn from_secs(s: u64) -> Time {
+        Time(s * MICROS_PER_SEC)
+    }
+    pub fn from_secs_f64(s: f64) -> Time {
+        debug_assert!(s >= 0.0, "negative absolute time {s}");
+        Time((s * MICROS_PER_SEC as f64).round() as u64)
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / MICROS_PER_SEC as f64
+    }
+    pub fn as_hours_f64(self) -> f64 {
+        self.as_secs_f64() / 3600.0
+    }
+    /// Saturating difference `self - earlier` as a Duration.
+    pub fn since(self, earlier: Time) -> Duration {
+        Duration(self.0.saturating_sub(earlier.0))
+    }
+    pub fn min(self, other: Time) -> Time {
+        Time(self.0.min(other.0))
+    }
+    pub fn max(self, other: Time) -> Time {
+        Time(self.0.max(other.0))
+    }
+    pub fn is_finite(self) -> bool {
+        self != Time::MAX
+    }
+}
+
+impl Duration {
+    pub const ZERO: Duration = Duration(0);
+    pub const MAX: Duration = Duration(u64::MAX);
+
+    pub fn from_secs(s: u64) -> Duration {
+        Duration(s * MICROS_PER_SEC)
+    }
+    pub fn from_mins(m: u64) -> Duration {
+        Duration(m * 60 * MICROS_PER_SEC)
+    }
+    pub fn from_secs_f64(s: f64) -> Duration {
+        debug_assert!(s >= 0.0, "negative duration {s}");
+        Duration((s * MICROS_PER_SEC as f64).round() as u64)
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / MICROS_PER_SEC as f64
+    }
+    pub fn as_hours_f64(self) -> f64 {
+        self.as_secs_f64() / 3600.0
+    }
+    pub fn saturating_sub(self, other: Duration) -> Duration {
+        Duration(self.0.saturating_sub(other.0))
+    }
+    pub fn min(self, other: Duration) -> Duration {
+        Duration(self.0.min(other.0))
+    }
+    pub fn max(self, other: Duration) -> Duration {
+        Duration(self.0.max(other.0))
+    }
+    /// Integer multiply with saturation (walltime scaling etc.).
+    pub fn mul_f64(self, k: f64) -> Duration {
+        debug_assert!(k >= 0.0);
+        let v = self.0 as f64 * k;
+        if v >= u64::MAX as f64 {
+            Duration::MAX
+        } else {
+            Duration(v.round() as u64)
+        }
+    }
+}
+
+impl Add<Duration> for Time {
+    type Output = Time;
+    fn add(self, d: Duration) -> Time {
+        Time(self.0.saturating_add(d.0))
+    }
+}
+impl AddAssign<Duration> for Time {
+    fn add_assign(&mut self, d: Duration) {
+        self.0 = self.0.saturating_add(d.0);
+    }
+}
+impl Sub<Time> for Time {
+    type Output = Duration;
+    /// Panics in debug if `rhs > self`; saturates in release.
+    fn sub(self, rhs: Time) -> Duration {
+        debug_assert!(rhs <= self, "time underflow: {self:?} - {rhs:?}");
+        Duration(self.0.saturating_sub(rhs.0))
+    }
+}
+impl Add<Duration> for Duration {
+    type Output = Duration;
+    fn add(self, d: Duration) -> Duration {
+        Duration(self.0.saturating_add(d.0))
+    }
+}
+impl AddAssign<Duration> for Duration {
+    fn add_assign(&mut self, d: Duration) {
+        self.0 = self.0.saturating_add(d.0);
+    }
+}
+
+impl fmt::Display for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if *self == Time::MAX {
+            return write!(f, "+inf");
+        }
+        write!(f, "{:.3}s", self.as_secs_f64())
+    }
+}
+impl fmt::Display for Duration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}s", self.as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_round_trips() {
+        assert_eq!(Time::from_secs(5).as_secs_f64(), 5.0);
+        assert_eq!(Duration::from_mins(2), Duration::from_secs(120));
+        assert_eq!(Time::from_secs_f64(1.5).0, 1_500_000);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let t = Time::from_secs(10) + Duration::from_secs(5);
+        assert_eq!(t, Time::from_secs(15));
+        assert_eq!(t - Time::from_secs(10), Duration::from_secs(5));
+        assert_eq!(Time::from_secs(3).since(Time::from_secs(10)), Duration::ZERO);
+    }
+
+    #[test]
+    fn max_is_sticky() {
+        assert_eq!(Time::MAX + Duration::from_secs(1), Time::MAX);
+        assert!(!Time::MAX.is_finite());
+        assert!(Time::from_secs(1).is_finite());
+    }
+
+    #[test]
+    fn mul_f64_saturates() {
+        assert_eq!(Duration::from_secs(10).mul_f64(1.5), Duration::from_secs(15));
+        assert_eq!(Duration::MAX.mul_f64(2.0), Duration::MAX);
+    }
+
+    #[test]
+    fn ordering_is_total() {
+        let mut v = vec![Time::from_secs(3), Time::ZERO, Time::MAX, Time::from_secs(1)];
+        v.sort();
+        assert_eq!(v, vec![Time::ZERO, Time::from_secs(1), Time::from_secs(3), Time::MAX]);
+    }
+}

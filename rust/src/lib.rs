@@ -1,0 +1,31 @@
+//! # bbsched — Plan-based Job Scheduling with Shared Burst Buffers
+//!
+//! A full reproduction of Kopanski & Rzadca (Euro-Par 2021): a
+//! discrete-event supercomputer simulator with a Dragonfly topology,
+//! fluid I/O-contention model and shared burst buffers, six online
+//! scheduling policies (FCFS, EASY variants with/without burst-buffer
+//! reservations, a greedy filler, and plan-based scheduling with
+//! simulated-annealing optimisation), and the measurement harness that
+//! regenerates every figure of the paper's evaluation.
+//!
+//! Architecture (three layers, Python never on the scheduling path):
+//! - L3 (this crate): coordinator — simulator, schedulers, metrics, CLI.
+//! - L2 (`python/compile/model.py`): batched discretised plan scorer in
+//!   JAX, AOT-lowered to HLO text under `artifacts/`.
+//! - L1 (`python/compile/kernels/`): Pallas earliest-start kernel called
+//!   by L2.
+//! - [`runtime`]: loads the AOT artifacts via PJRT and serves scores to
+//!   the simulated-annealing loop.
+
+pub mod coordinator;
+pub mod core;
+pub mod metrics;
+pub mod platform;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod stats;
+pub mod workload;
+
+pub use crate::core::{Duration, Job, JobId, JobRecord, JobRequest, Resources, Time};

@@ -1,0 +1,457 @@
+//! `repro` — the bbsched command-line launcher.
+//!
+//! Subcommands:
+//!   simulate   run one policy over a workload, print its summary
+//!   eval       run the full evaluation (Figs 5-12) and write results/
+//!   gantt      export the Fig-3 Gantt CSV for a policy
+//!   ablation   SA (189 evals) vs Zheng et al. (8742 evals) comparison
+//!   workload   generate/inspect the synthetic KTH-SP2 twin
+//!
+//! Argument parsing is hand-rolled (`--key value` pairs) because the
+//! offline build ships no clap; see DESIGN.md §1.
+
+use bbsched::coordinator::{run_eval, run_policy, EvalParams, PlanBackendKind};
+use bbsched::core::job::Job;
+use bbsched::report::csv;
+use bbsched::report::{fmt_f, render_table};
+use bbsched::sched::Policy;
+use bbsched::sim::simulator::SimConfig;
+use bbsched::stats::descriptive::letter_name;
+use bbsched::stats::{ks_p_value, ks_statistic, LogNormal};
+use bbsched::workload::synth::{generate, SynthConfig};
+use bbsched::workload::{parse_swf, records_to_jobs, BbModel, SwfConvert};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Minimal `--key value` / `--flag` parser.
+struct Args {
+    cmd: String,
+    kv: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut argv = std::env::args().skip(1);
+        let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = HashMap::new();
+        let rest: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let key = rest[i].trim_start_matches('-').to_string();
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                kv.insert(key, rest[i + 1].clone());
+                i += 2;
+            } else {
+                kv.insert(key, "true".to_string());
+                i += 1;
+            }
+        }
+        Args { cmd, kv }
+    }
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+    fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn flag(&self, key: &str) -> bool {
+        self.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+}
+
+fn load_workload(args: &Args) -> (Vec<Job>, u64) {
+    let scale = args.f64("scale", 1.0);
+    let seed = args.u64("seed", 1);
+    // Burst-buffer pressure knob: scales the paper's capacity rule
+    // (capacity = expected demand at full load). The METACENTRUM fit the
+    // paper used is unpublished; EXPERIMENTS.md sweeps this factor.
+    let bb_factor = args.f64("bb-factor", 1.0);
+    if let Some(path) = args.get("swf") {
+        let text = std::fs::read_to_string(path).expect("reading SWF file");
+        let (records, skipped) = parse_swf(&text);
+        if skipped > 0 {
+            eprintln!("note: skipped {skipped} malformed SWF lines");
+        }
+        let bb_model = BbModel::default();
+        let bb_capacity = (bb_model.capacity_for(96) as f64 * bb_factor) as u64;
+        let jobs = records_to_jobs(
+            &records,
+            &SwfConvert {
+                max_procs: 96,
+                walltime_factor_min: 1.25,
+                max_bb_total: (bb_capacity as f64 * 0.8) as u64,
+                bb_model,
+                seed,
+            },
+        );
+        (jobs, bb_capacity)
+    } else {
+        let mut cfg = if (scale - 1.0).abs() < 1e-9 {
+            SynthConfig::paper(seed)
+        } else {
+            SynthConfig::scaled(seed, scale)
+        };
+        cfg.bb_capacity = (cfg.bb_capacity as f64 * bb_factor) as u64;
+        let jobs = generate(&cfg);
+        (jobs, cfg.bb_capacity)
+    }
+}
+
+fn sim_config(args: &Args, bb_capacity: u64) -> SimConfig {
+    SimConfig {
+        bb_capacity,
+        io_enabled: !args.flag("no-io"),
+        record_gantt: args.flag("gantt") || args.get("gantt-out").is_some(),
+        ..SimConfig::default()
+    }
+}
+
+fn plan_backend(args: &Args) -> PlanBackendKind {
+    match args.get("plan-backend").unwrap_or("exact") {
+        "exact" => PlanBackendKind::Exact,
+        "discrete" => PlanBackendKind::Discrete { t_slots: args.usize("t-slots", 256) },
+        "xla" => PlanBackendKind::Xla { t_slots: args.usize("t-slots", 256) },
+        other => panic!("unknown plan backend {other}"),
+    }
+}
+
+fn cmd_simulate(args: &Args) {
+    let policy = Policy::parse(args.get("policy").unwrap_or("sjf-bb"))
+        .expect("unknown policy (fcfs|fcfs-easy|filler|fcfs-bb|sjf-bb|plan-N)");
+    let (jobs, bb_capacity) = load_workload(args);
+    let cfg = sim_config(args, bb_capacity);
+    eprintln!(
+        "simulating {} jobs under {} (bb capacity {:.1} GiB, io={})",
+        jobs.len(),
+        policy.name(),
+        bb_capacity as f64 / (1u64 << 30) as f64,
+        cfg.io_enabled
+    );
+    let t0 = std::time::Instant::now();
+    let res = run_policy(jobs, policy, &cfg, args.u64("seed", 1), plan_backend(args));
+    let summary = bbsched::metrics::summary::summarize(&policy.name(), &res.records);
+    println!(
+        "{}",
+        render_table(
+            "simulation summary",
+            &["policy", "jobs", "killed", "mean wait [h]", "mean bsld", "median wait [h]",
+              "max wait [h]", "makespan [h]", "sched calls", "sched wall [s]", "host [s]"],
+            &[vec![
+                summary.policy.clone(),
+                summary.n_jobs.to_string(),
+                summary.n_killed.to_string(),
+                fmt_f(summary.mean_wait_h),
+                fmt_f(summary.mean_bsld),
+                fmt_f(summary.median_wait_h),
+                fmt_f(summary.max_wait_h),
+                fmt_f(summary.makespan_h),
+                res.sched_invocations.to_string(),
+                fmt_f(res.sched_wall.as_secs_f64()),
+                fmt_f(t0.elapsed().as_secs_f64()),
+            ]],
+        )
+    );
+    if let Some(out) = args.get("records-out") {
+        csv::write_records(Path::new(out), &policy.name(), &res.records).unwrap();
+        eprintln!("records -> {out}");
+    }
+    if let Some(out) = args.get("gantt-out") {
+        csv::write_gantt(Path::new(out), &res.gantt).unwrap();
+        eprintln!("gantt -> {out}");
+    }
+}
+
+fn cmd_eval(args: &Args) {
+    let (jobs, bb_capacity) = load_workload(args);
+    let cfg = sim_config(args, bb_capacity);
+    let out_dir = PathBuf::from(args.get("out-dir").unwrap_or("results"));
+    let policies: Vec<Policy> = match args.get("policies") {
+        Some(list) => list
+            .split(',')
+            .map(|s| Policy::parse(s.trim()).unwrap_or_else(|| panic!("unknown policy {s}")))
+            .collect(),
+        None => Policy::ALL.to_vec(),
+    };
+    let parts = if args.flag("no-parts") {
+        None
+    } else {
+        Some((args.usize("parts", 16), args.f64("part-weeks", 3.0)))
+    };
+    let params = EvalParams {
+        policies,
+        tail_k: args.usize("tail-k", 3000),
+        parts,
+        seed: args.u64("seed", 1),
+        plan_backend: plan_backend(args),
+        ..EvalParams::default()
+    };
+    eprintln!(
+        "evaluating {} policies on {} jobs ({} threads, io={})",
+        params.policies.len(),
+        jobs.len(),
+        params.n_threads,
+        cfg.io_enabled
+    );
+    let t0 = std::time::Instant::now();
+    let out = run_eval(&jobs, &cfg, &params);
+    eprintln!("eval done in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // --- Figs 5-6 table. --------------------------------------------------
+    let rows: Vec<Vec<String>> = out
+        .summaries
+        .iter()
+        .map(|s| {
+            vec![
+                s.policy.clone(),
+                fmt_f(s.mean_wait_h),
+                format!("±{}", fmt_f(s.wait_ci95)),
+                fmt_f(s.mean_bsld),
+                format!("±{}", fmt_f(s.bsld_ci95)),
+                fmt_f(s.median_wait_h),
+                fmt_f(s.max_wait_h),
+                s.n_killed.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "Figs 5-6: mean waiting time / bounded slowdown",
+            &["policy", "mean wait [h]", "ci95", "mean bsld", "ci95", "median [h]", "max [h]", "killed"],
+            &rows,
+        )
+    );
+
+    // --- Headline (§4.2): plan-2 vs sjf-bb. --------------------------------
+    let find = |n: &str| out.summaries.iter().find(|s| s.policy == n);
+    if let (Some(plan2), Some(sjf)) = (find("plan-2"), find("sjf-bb")) {
+        println!(
+            "headline: plan-2 vs sjf-bb: mean wait {:+.1}%  mean bsld {:+.1}%  (paper: -20%, -27%)\n",
+            (plan2.mean_wait_h / sjf.mean_wait_h - 1.0) * 100.0,
+            (plan2.mean_bsld / sjf.mean_bsld - 1.0) * 100.0
+        );
+    }
+
+    // --- Figs 11-12 table. -------------------------------------------------
+    if !out.norm_wait.is_empty() {
+        let rows: Vec<Vec<String>> = out
+            .norm_wait
+            .iter()
+            .zip(&out.norm_bsld)
+            .map(|(w, b)| {
+                vec![
+                    w.policy.clone(),
+                    fmt_f(w.median),
+                    format!("[{}, {}]", fmt_f(w.q1), fmt_f(w.q3)),
+                    fmt_f(b.median),
+                    format!("[{}, {}]", fmt_f(b.q1), fmt_f(b.q3)),
+                ]
+            })
+            .collect();
+        println!(
+            "{}",
+            render_table(
+                "Figs 11-12: per-part metrics normalised by sjf-bb (median [IQR])",
+                &["policy", "norm wait med", "wait IQR", "norm bsld med", "bsld IQR"],
+                &rows,
+            )
+        );
+    }
+
+    // --- CSV outputs. -------------------------------------------------------
+    csv::write_summaries(&out_dir.join("fig05_06_means.csv"), &out.summaries).unwrap();
+    csv::write_letter_values(&out_dir.join("fig07_wait_letters.csv"), &out.wait_letters).unwrap();
+    csv::write_letter_values(&out_dir.join("fig08_bsld_letters.csv"), &out.bsld_letters).unwrap();
+    csv::write_tails(&out_dir.join("fig09_wait_tail.csv"), &out.wait_tails).unwrap();
+    csv::write_tails(&out_dir.join("fig10_bsld_tail.csv"), &out.bsld_tails).unwrap();
+    csv::write_normalized(&out_dir.join("fig11_norm_wait.csv"), &out.norm_wait).unwrap();
+    csv::write_normalized(&out_dir.join("fig12_norm_bsld.csv"), &out.norm_bsld).unwrap();
+    for (label, res) in &out.whole {
+        csv::write_records(&out_dir.join(format!("records_{label}.csv")), label, &res.records)
+            .unwrap();
+    }
+    eprintln!("figure CSVs -> {}", out_dir.display());
+}
+
+fn cmd_gantt(args: &Args) {
+    let policy = Policy::parse(args.get("policy").unwrap_or("fcfs-easy")).expect("policy");
+    let (mut jobs, bb_capacity) = load_workload(args);
+    let first_n = args.usize("first-n", 3500);
+    jobs.truncate(first_n);
+    let mut cfg = sim_config(args, bb_capacity);
+    cfg.record_gantt = true;
+    let res = run_policy(jobs, policy, &cfg, args.u64("seed", 1), plan_backend(args));
+    let out = args.get("out").unwrap_or("results/fig03_gantt.csv").to_string();
+    csv::write_gantt(Path::new(&out), &res.gantt).unwrap();
+    println!("Fig 3 gantt ({} rows, policy {}) -> {out}", res.gantt.len(), policy.name());
+}
+
+fn cmd_ablation(args: &Args) {
+    use bbsched::sched::plan::annealing::{optimise, SaParams};
+    use bbsched::sched::plan::builder::PlanJob;
+    use bbsched::sched::plan::candidates::initial_candidates;
+    use bbsched::sched::plan::profile::Profile;
+    use bbsched::sched::plan::scorer::ExactScorer;
+    use bbsched::sched::plan::zheng::{optimise_zheng, ZhengParams};
+    use bbsched::stats::rng::Pcg32;
+    use bbsched::Resources;
+    use bbsched::Time;
+
+    let n_snapshots = args.usize("snapshots", 20);
+    let queue_len = args.usize("queue", 24);
+    let seed = args.u64("seed", 1);
+    let mut rng = Pcg32::seeded(seed);
+    let bb_model = BbModel::default();
+    let capacity = Resources::new(96, bb_model.capacity_for(96));
+
+    let mut rows = Vec::new();
+    let (mut ours_evals, mut zheng_evals) = (0u64, 0u64);
+    let (mut ours_wins, mut ties) = (0u32, 0u32);
+    for snap in 0..n_snapshots {
+        // Random queue snapshot.
+        let jobs: Vec<PlanJob> = (0..queue_len)
+            .map(|i| {
+                let procs = 1 + rng.below(48);
+                PlanJob {
+                    id: bbsched::JobId(i as u32),
+                    req: Resources::new(
+                        procs,
+                        bb_model.sample(&mut rng, procs, capacity.bb / 2),
+                    ),
+                    walltime: bbsched::Duration::from_secs(60 * (5 + rng.below(600)) as u64),
+                    submit: Time::from_secs(rng.below(3600) as u64),
+                }
+            })
+            .collect();
+        let base = Profile::flat(Time::from_secs(3600), capacity);
+        let now = Time::from_secs(3600);
+
+        let mut s1 = ExactScorer::new(&base, &jobs, now, 2.0);
+        let cands = initial_candidates(&jobs);
+        let mut r1 = Pcg32::seeded(seed + snap as u64);
+        let ours = optimise(&mut s1, jobs.len(), &cands, &SaParams::default(), &mut r1);
+
+        let mut s2 = ExactScorer::new(&base, &jobs, now, 2.0);
+        let mut r2 = Pcg32::seeded(seed + snap as u64);
+        let zheng = optimise_zheng(&mut s2, jobs.len(), &ZhengParams::default(), &mut r2);
+
+        ours_evals += ours.evaluations;
+        zheng_evals += zheng.evaluations;
+        if ours.score <= zheng.score * 1.001 {
+            ours_wins += 1;
+        }
+        if (ours.score - zheng.score).abs() <= 0.001 * zheng.score {
+            ties += 1;
+        }
+        rows.push(vec![
+            snap.to_string(),
+            fmt_f(ours.score),
+            ours.evaluations.to_string(),
+            fmt_f(zheng.score),
+            zheng.evaluations.to_string(),
+            fmt_f(ours.score / zheng.score),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            "ablation: our SA (189 evals) vs Zheng et al. (8742 evals), alpha=2",
+            &["snapshot", "ours score", "ours evals", "zheng score", "zheng evals", "ratio"],
+            &rows,
+        )
+    );
+    println!(
+        "mean evals: ours {:.0}, zheng {:.0} ({}x); ours within 0.1% or better on {}/{} ({} ties)",
+        ours_evals as f64 / n_snapshots as f64,
+        zheng_evals as f64 / n_snapshots as f64,
+        zheng_evals / ours_evals.max(1),
+        ours_wins,
+        n_snapshots,
+        ties
+    );
+}
+
+fn cmd_workload(args: &Args) {
+    let (jobs, bb_capacity) = load_workload(args);
+    let procs: Vec<f64> = jobs.iter().map(|j| j.procs as f64).collect();
+    let bb_pp: Vec<f64> = jobs
+        .iter()
+        .map(|j| j.bb as f64 / j.procs as f64 / (1u64 << 30) as f64)
+        .collect();
+    let runtime_h: Vec<f64> = jobs.iter().map(|j| j.compute_time.as_hours_f64()).collect();
+    use bbsched::stats::descriptive::{mean, quantile};
+    println!(
+        "{}",
+        render_table(
+            "workload statistics",
+            &["stat", "value"],
+            &[
+                vec!["jobs".into(), jobs.len().to_string()],
+                vec!["span [weeks]".into(),
+                     fmt_f(jobs.last().map(|j| j.submit.as_hours_f64() / 168.0).unwrap_or(0.0))],
+                vec!["mean procs".into(), fmt_f(mean(&procs))],
+                vec!["median runtime [h]".into(), fmt_f(quantile(&runtime_h, 0.5))],
+                vec!["mean bb/proc [GiB]".into(), fmt_f(mean(&bb_pp))],
+                vec!["bb capacity [GiB]".into(),
+                     fmt_f(bb_capacity as f64 / (1u64 << 30) as f64)],
+            ],
+        )
+    );
+    // Re-fit the log-normal BB model from the generated jobs and KS-test
+    // it (the paper's §4.1 validation pipeline).
+    let fit = LogNormal::fit(&bb_pp).expect("fit");
+    let d = ks_statistic(&bb_pp, |x| fit.cdf(x));
+    println!(
+        "bb/proc log-normal re-fit: mu={:.3} sigma={:.3}  KS D={:.4} (p={:.3} at n=5000 subsample)",
+        fit.mu,
+        fit.sigma,
+        d,
+        ks_p_value(d, 5000.min(jobs.len()))
+    );
+    if let Some(out) = args.get("letters-out") {
+        let lv = bbsched::stats::descriptive::letter_values(&bb_pp, 8);
+        let mut s = String::from("level,name,lower,upper\n");
+        for l in lv {
+            s.push_str(&format!(
+                "{},{},{:.4},{:.4}\n",
+                l.level,
+                letter_name(l.level),
+                l.lower,
+                l.upper
+            ));
+        }
+        std::fs::write(out, s).unwrap();
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    match args.cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "eval" => cmd_eval(&args),
+        "gantt" => cmd_gantt(&args),
+        "ablation" => cmd_ablation(&args),
+        "workload" => cmd_workload(&args),
+        _ => {
+            println!(
+                "usage: repro <simulate|eval|gantt|ablation|workload> [--key value ...]\n\n\
+                 common flags:\n\
+                 \x20 --scale F        fraction of the paper workload (default 1.0 = 28453 jobs)\n\
+                 \x20 --seed N         workload + scheduler seed\n\
+                 \x20 --swf PATH       use a real SWF log instead of the synthetic twin\n\
+                 \x20 --no-io          disable I/O side effects (pure scheduling)\n\
+                 \x20 --policy NAME    fcfs|fcfs-easy|filler|fcfs-bb|sjf-bb|plan-1|plan-2\n\
+                 \x20 --plan-backend B exact|discrete|xla (SA scorer backend)\n\
+                 \x20 --out-dir DIR    where eval writes figure CSVs (default results/)\n\
+                 \x20 --no-parts       skip the 16-part Figs 11-12 pass\n\
+                 \x20 --parts N --part-weeks W   split shape (default 16 x 3)"
+            );
+        }
+    }
+}

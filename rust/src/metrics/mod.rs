@@ -1,0 +1,25 @@
+//! Evaluation metrics (paper §4.2): per-policy summaries of waiting time
+//! and bounded slowdown, letter-value quantiles, tail distributions and
+//! the per-part normalised comparison.
+
+pub mod normalized;
+pub mod quantiles;
+pub mod summary;
+pub mod tail;
+
+pub use normalized::{normalized_by_reference, NormalizedPart};
+pub use quantiles::{bsld_letter_values, waiting_letter_values};
+pub use summary::{summarize, PolicySummary};
+pub use tail::{bsld_tail, waiting_tail};
+
+use crate::core::job::JobRecord;
+
+/// Waiting times in hours for a record set.
+pub fn waiting_hours(records: &[JobRecord]) -> Vec<f64> {
+    records.iter().map(|r| r.waiting().as_hours_f64()).collect()
+}
+
+/// Bounded slowdowns (10-minute bound, paper's definition).
+pub fn bounded_slowdowns(records: &[JobRecord]) -> Vec<f64> {
+    records.iter().map(|r| r.bounded_slowdown()).collect()
+}

@@ -1,0 +1,88 @@
+//! Per-part normalised comparison — Figs 11-12: the workload is split
+//! into 16 three-week parts, each part is simulated under every policy,
+//! per-part means are normalised by the sjf-bb reference, and the
+//! distribution of the 16 normalised values is shown per policy.
+
+use crate::stats::descriptive::{quantile, mean};
+
+/// One policy's normalised per-part values plus box statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NormalizedPart {
+    pub policy: String,
+    /// metric(policy, part) / metric(reference, part), one per part.
+    pub values: Vec<f64>,
+    pub mean: f64,
+    pub median: f64,
+    pub q1: f64,
+    pub q3: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Normalise `per_part` metric means by the `reference` policy's values.
+/// Parts where the reference is ~0 are skipped (empty parts).
+pub fn normalized_by_reference(
+    policy: &str,
+    per_part: &[f64],
+    reference: &[f64],
+) -> NormalizedPart {
+    assert_eq!(per_part.len(), reference.len(), "part count mismatch");
+    let values: Vec<f64> = per_part
+        .iter()
+        .zip(reference)
+        .filter(|&(_, &r)| r > 1e-12)
+        .map(|(&v, &r)| v / r)
+        .collect();
+    let (min, max) = values
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+    NormalizedPart {
+        policy: policy.to_string(),
+        mean: mean(&values),
+        median: quantile(&values, 0.5),
+        q1: quantile(&values, 0.25),
+        q3: quantile(&values, 0.75),
+        min: if values.is_empty() { 0.0 } else { min },
+        max: if values.is_empty() { 0.0 } else { max },
+        values,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalisation_against_reference() {
+        let policy = [2.0, 4.0, 6.0, 8.0];
+        let reference = [1.0, 2.0, 3.0, 4.0];
+        let n = normalized_by_reference("p", &policy, &reference);
+        assert_eq!(n.values, vec![2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(n.median, 2.0);
+        assert_eq!(n.min, 2.0);
+        assert_eq!(n.max, 2.0);
+    }
+
+    #[test]
+    fn reference_normalises_to_one() {
+        let reference = [3.0, 5.0, 7.0];
+        let n = normalized_by_reference("sjf-bb", &reference, &reference);
+        assert!(n.values.iter().all(|&v| (v - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn zero_reference_parts_skipped() {
+        let policy = [2.0, 4.0];
+        let reference = [0.0, 2.0];
+        let n = normalized_by_reference("p", &policy, &reference);
+        assert_eq!(n.values, vec![2.0]);
+    }
+
+    #[test]
+    fn box_stats_ordered() {
+        let policy = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let reference = [1.0; 5];
+        let n = normalized_by_reference("p", &policy, &reference);
+        assert!(n.min <= n.q1 && n.q1 <= n.median && n.median <= n.q3 && n.q3 <= n.max);
+    }
+}

@@ -1,0 +1,48 @@
+//! Letter-value quantile summaries — Figs 7-8 are letter-value
+//! ("boxen") plots of waiting time and bounded slowdown per policy.
+
+use crate::core::job::JobRecord;
+use crate::metrics::{bounded_slowdowns, waiting_hours};
+use crate::stats::descriptive::{letter_values, LetterValue};
+
+/// Minimum tail points per letter level (Hofmann et al. use a confidence
+/// rule; a fixed floor of 8 matches seaborn's default closely for our n).
+const MIN_TAIL: usize = 8;
+
+pub fn waiting_letter_values(records: &[JobRecord]) -> Vec<LetterValue> {
+    letter_values(&waiting_hours(records), MIN_TAIL)
+}
+
+pub fn bsld_letter_values(records: &[JobRecord]) -> Vec<LetterValue> {
+    letter_values(&bounded_slowdowns(records), MIN_TAIL)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::JobId;
+    use crate::core::time::{Duration, Time};
+
+    #[test]
+    fn waiting_letter_values_monotone() {
+        let records: Vec<JobRecord> = (0..512)
+            .map(|i| JobRecord {
+                id: JobId(i),
+                submit: Time::ZERO,
+                start: Time::from_secs(i as u64 * 60),
+                finish: Time::from_secs(i as u64 * 60 + 600),
+                walltime: Duration::from_secs(600),
+                procs: 1,
+                bb: 0,
+                killed: false,
+            })
+            .collect();
+        let lv = waiting_letter_values(&records);
+        assert!(lv.len() >= 4);
+        for w in lv.windows(2) {
+            assert!(w[1].lower <= w[0].lower && w[1].upper >= w[0].upper);
+        }
+        let bl = bsld_letter_values(&records);
+        assert!(bl.iter().all(|l| l.lower >= 1.0));
+    }
+}

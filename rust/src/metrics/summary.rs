@@ -1,0 +1,96 @@
+//! Per-policy summary statistics — the numbers behind Figs 5-6 (means
+//! with 95% confidence intervals) and the headline comparison of §4.2.
+
+use crate::core::job::JobRecord;
+use crate::metrics::{bounded_slowdowns, waiting_hours};
+use crate::stats::descriptive::{ci95_half_width, mean};
+
+/// Summary of one policy's run over one workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySummary {
+    pub policy: String,
+    pub n_jobs: usize,
+    pub n_killed: usize,
+    /// Mean waiting time in hours + CI half-width (Fig 5).
+    pub mean_wait_h: f64,
+    pub wait_ci95: f64,
+    /// Mean bounded slowdown + CI half-width (Fig 6).
+    pub mean_bsld: f64,
+    pub bsld_ci95: f64,
+    /// Median waiting (hours) — plan-based may trade median for tail.
+    pub median_wait_h: f64,
+    /// Maximum waiting time in hours (starvation indicator).
+    pub max_wait_h: f64,
+    pub makespan_h: f64,
+}
+
+/// Compute the summary for one policy's records.
+pub fn summarize(policy: &str, records: &[JobRecord]) -> PolicySummary {
+    let waits = waiting_hours(records);
+    let bslds = bounded_slowdowns(records);
+    let mut sorted = waits.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = crate::stats::descriptive::quantile_sorted(&sorted, 0.5);
+    let makespan = records
+        .iter()
+        .map(|r| r.finish.as_hours_f64())
+        .fold(0.0f64, f64::max);
+    PolicySummary {
+        policy: policy.to_string(),
+        n_jobs: records.len(),
+        n_killed: records.iter().filter(|r| r.killed).count(),
+        mean_wait_h: mean(&waits),
+        wait_ci95: ci95_half_width(&waits),
+        mean_bsld: mean(&bslds),
+        bsld_ci95: ci95_half_width(&bslds),
+        median_wait_h: median,
+        max_wait_h: sorted.last().copied().unwrap_or(0.0),
+        makespan_h: makespan,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::JobId;
+    use crate::core::time::{Duration, Time};
+
+    fn rec(submit: u64, start: u64, finish: u64) -> JobRecord {
+        JobRecord {
+            id: JobId(0),
+            submit: Time::from_secs(submit),
+            start: Time::from_secs(start),
+            finish: Time::from_secs(finish),
+            walltime: Duration::from_secs(finish - start),
+            procs: 1,
+            bb: 0,
+            killed: false,
+        }
+    }
+
+    #[test]
+    fn summary_computes_means() {
+        // Waits: 0h, 1h, 2h.
+        let records = vec![
+            rec(0, 0, 3600),
+            rec(0, 3600, 7200),
+            rec(0, 7200, 10800),
+        ];
+        let s = summarize("test", &records);
+        assert_eq!(s.n_jobs, 3);
+        assert!((s.mean_wait_h - 1.0).abs() < 1e-9);
+        assert!((s.median_wait_h - 1.0).abs() < 1e-9);
+        assert!((s.max_wait_h - 2.0).abs() < 1e-9);
+        assert!((s.makespan_h - 3.0).abs() < 1e-9);
+        assert!(s.wait_ci95 > 0.0);
+        // All runtimes 1h > 10min bound; bsld = turnaround/runtime.
+        assert!(s.mean_bsld >= 1.0);
+    }
+
+    #[test]
+    fn empty_records() {
+        let s = summarize("none", &[]);
+        assert_eq!(s.n_jobs, 0);
+        assert_eq!(s.mean_wait_h, 0.0);
+    }
+}

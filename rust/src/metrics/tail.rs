@@ -1,0 +1,49 @@
+//! Tail distributions — Figs 9-10 plot, for each policy, the individual
+//! values of the 3000 highest waiting times / bounded slowdowns, which is
+//! where fcfs-easy's dispersion and filler's near-starvation show up.
+
+use crate::core::job::JobRecord;
+use crate::metrics::{bounded_slowdowns, waiting_hours};
+use crate::stats::descriptive::top_k_desc;
+
+/// The paper's tail size.
+pub const TAIL_K: usize = 3000;
+
+pub fn waiting_tail(records: &[JobRecord], k: usize) -> Vec<f64> {
+    top_k_desc(&waiting_hours(records), k)
+}
+
+pub fn bsld_tail(records: &[JobRecord], k: usize) -> Vec<f64> {
+    top_k_desc(&bounded_slowdowns(records), k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::JobId;
+    use crate::core::time::{Duration, Time};
+
+    #[test]
+    fn tails_are_descending_and_capped() {
+        let records: Vec<JobRecord> = (0..100)
+            .map(|i| JobRecord {
+                id: JobId(i),
+                submit: Time::ZERO,
+                start: Time::from_secs((i as u64 * 97) % 5000),
+                finish: Time::from_secs((i as u64 * 97) % 5000 + 60),
+                walltime: Duration::from_secs(60),
+                procs: 1,
+                bb: 0,
+                killed: false,
+            })
+            .collect();
+        let t = waiting_tail(&records, 10);
+        assert_eq!(t.len(), 10);
+        for w in t.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert_eq!(waiting_tail(&records, 3000).len(), 100);
+        let b = bsld_tail(&records, 5);
+        assert!(b.iter().all(|&x| x >= 1.0));
+    }
+}

@@ -1,0 +1,234 @@
+//! Shared burst-buffer storage manager.
+//!
+//! Total capacity is split evenly across the storage nodes (the paper:
+//! "We divide this capacity equally among the storage nodes"). A job's
+//! burst-buffer request is *striped* across storage nodes, preferring
+//! nodes with the most free space (balances load and keeps per-node
+//! spill-over rare), with ties broken by locality to the job's compute
+//! allocation.
+
+use crate::core::job::JobId;
+use std::collections::HashMap;
+
+/// One slice of a job's burst-buffer allocation on one storage node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BbSlice {
+    /// Index into the pool's storage-node table (NOT a topology NodeId).
+    pub storage_idx: usize,
+    pub bytes: u64,
+}
+
+/// A storage node's bookkeeping.
+#[derive(Debug, Clone)]
+struct StorageNode {
+    /// Topology node id (for routing flows to it).
+    node_id: usize,
+    group: usize,
+    capacity: u64,
+    used: u64,
+}
+
+/// The pool of burst-buffer storage nodes.
+#[derive(Debug)]
+pub struct BurstBufferPool {
+    nodes: Vec<StorageNode>,
+    allocations: HashMap<JobId, Vec<BbSlice>>,
+}
+
+impl BurstBufferPool {
+    /// `storage` = (topology node id, group) per storage node;
+    /// `total_capacity` bytes are divided equally (remainder to the first
+    /// nodes so the sum is exact).
+    pub fn new(storage: &[(usize, usize)], total_capacity: u64) -> BurstBufferPool {
+        assert!(!storage.is_empty(), "no storage nodes");
+        let n = storage.len() as u64;
+        let base = total_capacity / n;
+        let rem = total_capacity % n;
+        let nodes = storage
+            .iter()
+            .enumerate()
+            .map(|(i, &(node_id, group))| StorageNode {
+                node_id,
+                group,
+                capacity: base + if (i as u64) < rem { 1 } else { 0 },
+                used: 0,
+            })
+            .collect();
+        BurstBufferPool { nodes, allocations: HashMap::new() }
+    }
+
+    pub fn total_capacity(&self) -> u64 {
+        self.nodes.iter().map(|n| n.capacity).sum()
+    }
+
+    pub fn total_free(&self) -> u64 {
+        self.nodes.iter().map(|n| n.capacity - n.used).sum()
+    }
+
+    pub fn n_storage_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Topology node id of storage node `idx`.
+    pub fn storage_node_id(&self, idx: usize) -> usize {
+        self.nodes[idx].node_id
+    }
+
+    /// Can `bytes` be allocated right now (aggregate check — striping
+    /// makes per-node fragmentation impossible unless a single slice
+    /// would exceed a node, which striping avoids by splitting)?
+    pub fn can_allocate(&self, bytes: u64) -> bool {
+        self.total_free() >= bytes
+    }
+
+    /// Allocate `bytes` for `job`, preferring storage nodes in
+    /// `preferred_groups` (the groups of the job's compute nodes), then
+    /// most-free-first. Returns the slices, or `None` if capacity is
+    /// insufficient (no partial allocation is left behind).
+    pub fn allocate(
+        &mut self,
+        job: JobId,
+        bytes: u64,
+        preferred_groups: &[usize],
+    ) -> Option<Vec<BbSlice>> {
+        assert!(
+            !self.allocations.contains_key(&job),
+            "double burst-buffer allocation for {job}"
+        );
+        if bytes == 0 {
+            self.allocations.insert(job, Vec::new());
+            return Some(Vec::new());
+        }
+        if !self.can_allocate(bytes) {
+            return None;
+        }
+        // Order: preferred groups first, then by free space descending.
+        let mut order: Vec<usize> = (0..self.nodes.len()).collect();
+        order.sort_by(|&a, &b| {
+            let pa = preferred_groups.contains(&self.nodes[a].group);
+            let pb = preferred_groups.contains(&self.nodes[b].group);
+            pb.cmp(&pa)
+                .then_with(|| {
+                    let fa = self.nodes[a].capacity - self.nodes[a].used;
+                    let fb = self.nodes[b].capacity - self.nodes[b].used;
+                    fb.cmp(&fa)
+                })
+                .then(a.cmp(&b))
+        });
+        let mut left = bytes;
+        let mut slices = Vec::new();
+        for idx in order {
+            if left == 0 {
+                break;
+            }
+            let free = self.nodes[idx].capacity - self.nodes[idx].used;
+            if free == 0 {
+                continue;
+            }
+            let take = free.min(left);
+            self.nodes[idx].used += take;
+            slices.push(BbSlice { storage_idx: idx, bytes: take });
+            left -= take;
+        }
+        debug_assert_eq!(left, 0);
+        self.allocations.insert(job, slices.clone());
+        Some(slices)
+    }
+
+    /// Release a job's slices. Panics if the job holds no allocation
+    /// (accounting bugs must be loud).
+    pub fn free(&mut self, job: JobId) -> Vec<BbSlice> {
+        let slices = self
+            .allocations
+            .remove(&job)
+            .unwrap_or_else(|| panic!("freeing unallocated burst buffer for {job}"));
+        for s in &slices {
+            debug_assert!(self.nodes[s.storage_idx].used >= s.bytes);
+            self.nodes[s.storage_idx].used -= s.bytes;
+        }
+        slices
+    }
+
+    pub fn slices(&self, job: JobId) -> Option<&[BbSlice]> {
+        self.allocations.get(&job).map(|v| v.as_slice())
+    }
+
+    /// Per-node (capacity, used) view for invariant checks.
+    pub fn node_usage(&self) -> Vec<(u64, u64)> {
+        self.nodes.iter().map(|n| (n.capacity, n.used)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> BurstBufferPool {
+        // 4 storage nodes in 2 groups, 400 bytes total => 100 each.
+        BurstBufferPool::new(&[(10, 0), (20, 0), (30, 1), (40, 1)], 400)
+    }
+
+    #[test]
+    fn capacity_split_is_exact() {
+        let p = BurstBufferPool::new(&[(0, 0), (1, 0), (2, 0)], 100);
+        assert_eq!(p.total_capacity(), 100);
+        let caps: Vec<u64> = p.node_usage().iter().map(|&(c, _)| c).collect();
+        assert_eq!(caps, vec![34, 33, 33]);
+    }
+
+    #[test]
+    fn allocation_prefers_groups_then_striped() {
+        let mut p = pool();
+        let s = p.allocate(JobId(1), 150, &[1]).unwrap();
+        // Group-1 nodes (idx 2,3) first; 100 on one, 50 on the other.
+        assert!(s.iter().all(|sl| sl.storage_idx >= 2));
+        let total: u64 = s.iter().map(|sl| sl.bytes).sum();
+        assert_eq!(total, 150);
+        assert_eq!(p.total_free(), 250);
+    }
+
+    #[test]
+    fn refuses_overcommit_without_partial_allocation() {
+        let mut p = pool();
+        assert!(p.allocate(JobId(1), 300, &[]).is_some());
+        assert!(p.allocate(JobId(2), 200, &[]).is_none());
+        // No partial residue.
+        assert_eq!(p.total_free(), 100);
+        assert!(p.slices(JobId(2)).is_none());
+    }
+
+    #[test]
+    fn free_restores_capacity() {
+        let mut p = pool();
+        p.allocate(JobId(1), 333, &[]).unwrap();
+        assert_eq!(p.total_free(), 67);
+        let slices = p.free(JobId(1));
+        assert!(!slices.is_empty());
+        assert_eq!(p.total_free(), 400);
+        for (cap, used) in p.node_usage() {
+            assert!(used <= cap);
+        }
+    }
+
+    #[test]
+    fn zero_byte_allocation_is_legal() {
+        let mut p = pool();
+        assert_eq!(p.allocate(JobId(5), 0, &[]).unwrap(), vec![]);
+        p.free(JobId(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "double burst-buffer allocation")]
+    fn double_allocation_panics() {
+        let mut p = pool();
+        p.allocate(JobId(1), 10, &[]).unwrap();
+        let _ = p.allocate(JobId(1), 10, &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "freeing unallocated")]
+    fn double_free_panics() {
+        let mut p = pool();
+        p.free(JobId(9));
+    }
+}

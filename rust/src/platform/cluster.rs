@@ -1,0 +1,277 @@
+//! Compute-node allocation and the aggregate cluster facade.
+//!
+//! [`ComputePool`] tracks which compute nodes are busy and implements the
+//! locality-aware placement the paper motivates for Dragonfly ("we prefer
+//! to allocate nodes for a job within a single group"): best-fit group
+//! first, then chassis-compact within the group, spilling over only when
+//! no single group can host the job.
+
+use crate::core::job::JobId;
+use crate::core::resources::Resources;
+use crate::platform::burst_buffer::{BbSlice, BurstBufferPool};
+use crate::platform::topology::{NodeRole, Topology};
+use std::collections::HashMap;
+
+/// A job's physical allocation.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub job: JobId,
+    /// Topology node ids of the compute nodes.
+    pub compute_nodes: Vec<usize>,
+    /// Burst-buffer slices (indices into the storage pool).
+    pub bb_slices: Vec<BbSlice>,
+}
+
+/// Free/busy bookkeeping for compute nodes.
+#[derive(Debug)]
+pub struct ComputePool {
+    /// For each compute node: topology node id + group, and busy flag.
+    nodes: Vec<(usize, usize, bool)>,
+    free_count: u32,
+    by_job: HashMap<JobId, Vec<usize>>, // indices into `nodes`
+}
+
+impl ComputePool {
+    pub fn new(topo: &Topology) -> ComputePool {
+        let nodes: Vec<(usize, usize, bool)> = topo
+            .nodes
+            .iter()
+            .filter(|n| n.role == NodeRole::Compute)
+            .map(|n| (n.id, n.group, false))
+            .collect();
+        let free_count = nodes.len() as u32;
+        ComputePool { nodes, free_count, by_job: HashMap::new() }
+    }
+
+    pub fn total(&self) -> u32 {
+        self.nodes.len() as u32
+    }
+
+    pub fn free(&self) -> u32 {
+        self.free_count
+    }
+
+    /// Allocate `count` compute nodes for `job`. Locality policy:
+    /// 1. pick the group with the fewest free nodes still >= count
+    ///    (best fit keeps big holes available);
+    /// 2. otherwise take nodes from groups in descending free order
+    ///    (spreads the spill over the least-loaded groups).
+    /// Returns topology node ids, or `None` if not enough free nodes.
+    pub fn allocate(&mut self, job: JobId, count: u32) -> Option<Vec<usize>> {
+        assert!(!self.by_job.contains_key(&job), "double node allocation for {job}");
+        if count == 0 || count > self.free_count {
+            return None;
+        }
+        // Free nodes per group.
+        let mut groups: HashMap<usize, Vec<usize>> = HashMap::new();
+        for (i, &(_, g, busy)) in self.nodes.iter().enumerate() {
+            if !busy {
+                groups.entry(g).or_default().push(i);
+            }
+        }
+        let mut picked: Vec<usize> = Vec::with_capacity(count as usize);
+        // Best-fit single group.
+        if let Some((_, idxs)) = groups
+            .iter()
+            .filter(|(_, v)| v.len() >= count as usize)
+            .min_by_key(|(g, v)| (v.len(), **g))
+        {
+            picked.extend(idxs.iter().take(count as usize));
+        } else {
+            // Spill: largest groups first.
+            let mut order: Vec<(&usize, &Vec<usize>)> = groups.iter().collect();
+            order.sort_by_key(|(g, v)| (std::cmp::Reverse(v.len()), **g));
+            for (_, idxs) in order {
+                for &i in idxs {
+                    if picked.len() == count as usize {
+                        break;
+                    }
+                    picked.push(i);
+                }
+            }
+        }
+        debug_assert_eq!(picked.len(), count as usize);
+        for &i in &picked {
+            self.nodes[i].2 = true;
+        }
+        self.free_count -= count;
+        let node_ids: Vec<usize> = picked.iter().map(|&i| self.nodes[i].0).collect();
+        self.by_job.insert(job, picked);
+        Some(node_ids)
+    }
+
+    /// Free `job`'s nodes. Panics if it holds none.
+    pub fn free_job(&mut self, job: JobId) {
+        let picked = self
+            .by_job
+            .remove(&job)
+            .unwrap_or_else(|| panic!("freeing unallocated nodes for {job}"));
+        for i in picked {
+            debug_assert!(self.nodes[i].2);
+            self.nodes[i].2 = false;
+            self.free_count += 1;
+        }
+    }
+
+    /// Groups spanned by a set of topology node ids.
+    pub fn groups_of(&self, node_ids: &[usize]) -> Vec<usize> {
+        let mut gs: Vec<usize> = self
+            .nodes
+            .iter()
+            .filter(|(id, _, _)| node_ids.contains(id))
+            .map(|&(_, g, _)| g)
+            .collect();
+        gs.sort_unstable();
+        gs.dedup();
+        gs
+    }
+}
+
+/// Aggregate resource view + allocation across compute and burst buffers.
+#[derive(Debug)]
+pub struct Cluster {
+    pub compute: ComputePool,
+    pub bb: BurstBufferPool,
+    allocations: HashMap<JobId, Allocation>,
+}
+
+impl Cluster {
+    pub fn new(topo: &Topology, bb_total_capacity: u64) -> Cluster {
+        let storage: Vec<(usize, usize)> = topo
+            .nodes
+            .iter()
+            .filter(|n| n.role == NodeRole::Storage)
+            .map(|n| (n.id, n.group))
+            .collect();
+        Cluster {
+            compute: ComputePool::new(topo),
+            bb: BurstBufferPool::new(&storage, bb_total_capacity),
+            allocations: HashMap::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> Resources {
+        Resources { cpu: self.compute.total(), bb: self.bb.total_capacity() }
+    }
+
+    pub fn free(&self) -> Resources {
+        Resources { cpu: self.compute.free(), bb: self.bb.total_free() }
+    }
+
+    pub fn fits_now(&self, req: &Resources) -> bool {
+        self.free().fits(req)
+    }
+
+    /// Atomically allocate both dimensions; either both succeed or
+    /// neither. Burst buffers are placed preferring the groups hosting
+    /// the job's compute nodes.
+    pub fn allocate(&mut self, job: JobId, req: &Resources) -> Option<&Allocation> {
+        if !self.fits_now(req) {
+            return None;
+        }
+        let compute_nodes = self.compute.allocate(job, req.cpu)?;
+        let groups = self.compute.groups_of(&compute_nodes);
+        let bb_slices = match self.bb.allocate(job, req.bb, &groups) {
+            Some(s) => s,
+            None => {
+                self.compute.free_job(job);
+                return None;
+            }
+        };
+        self.allocations.insert(job, Allocation { job, compute_nodes, bb_slices });
+        self.allocations.get(&job)
+    }
+
+    pub fn release(&mut self, job: JobId) -> Allocation {
+        let alloc = self
+            .allocations
+            .remove(&job)
+            .unwrap_or_else(|| panic!("releasing unallocated {job}"));
+        self.compute.free_job(job);
+        self.bb.free(job);
+        alloc
+    }
+
+    pub fn allocation(&self, job: JobId) -> Option<&Allocation> {
+        self.allocations.get(&job)
+    }
+
+    pub fn running_jobs(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.allocations.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::topology::TopologyConfig;
+
+    fn cluster() -> Cluster {
+        let topo = Topology::build(TopologyConfig::default());
+        Cluster::new(&topo, 1200)
+    }
+
+    #[test]
+    fn capacity_matches_paper_platform() {
+        let c = cluster();
+        assert_eq!(c.capacity().cpu, 96);
+        assert_eq!(c.capacity().bb, 1200);
+        assert_eq!(c.free(), c.capacity());
+    }
+
+    #[test]
+    fn allocate_release_round_trip() {
+        let mut c = cluster();
+        let req = Resources::new(10, 500);
+        let alloc = c.allocate(JobId(1), &req).unwrap();
+        assert_eq!(alloc.compute_nodes.len(), 10);
+        assert_eq!(c.free(), Resources::new(86, 700));
+        c.release(JobId(1));
+        assert_eq!(c.free(), c.capacity());
+    }
+
+    #[test]
+    fn atomicity_when_bb_unavailable() {
+        let mut c = cluster();
+        c.allocate(JobId(1), &Resources::new(4, 1100)).unwrap();
+        // CPUs available but BB is not.
+        assert!(c.allocate(JobId(2), &Resources::new(4, 200)).is_none());
+        assert_eq!(c.free().cpu, 92, "compute must not leak on failed alloc");
+    }
+
+    #[test]
+    fn locality_single_group_when_possible() {
+        let topo = Topology::build(TopologyConfig::default());
+        let mut c = Cluster::new(&topo, 1200);
+        let alloc = c.allocate(JobId(1), &Resources::new(8, 0)).unwrap().clone();
+        let groups: std::collections::HashSet<usize> =
+            alloc.compute_nodes.iter().map(|&n| topo.nodes[n].group).collect();
+        assert_eq!(groups.len(), 1, "8 nodes fit one 32-node group");
+    }
+
+    #[test]
+    fn spill_across_groups_for_big_jobs() {
+        let topo = Topology::build(TopologyConfig::default());
+        let mut c = Cluster::new(&topo, 1200);
+        let alloc = c.allocate(JobId(1), &Resources::new(80, 0)).unwrap().clone();
+        let groups: std::collections::HashSet<usize> =
+            alloc.compute_nodes.iter().map(|&n| topo.nodes[n].group).collect();
+        assert!(groups.len() > 1);
+        assert_eq!(c.free().cpu, 16);
+    }
+
+    #[test]
+    fn full_pack_and_drain() {
+        let mut c = cluster();
+        for i in 0..12 {
+            assert!(c.allocate(JobId(i), &Resources::new(8, 100)).is_some());
+        }
+        assert_eq!(c.free().cpu, 0);
+        assert_eq!(c.free().bb, 0);
+        assert!(c.allocate(JobId(99), &Resources::new(1, 0)).is_none());
+        for i in 0..12 {
+            c.release(JobId(i));
+        }
+        assert_eq!(c.free(), c.capacity());
+    }
+}

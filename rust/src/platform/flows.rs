@@ -1,0 +1,326 @@
+//! Flow-level (fluid) network model with progressive-filling max-min
+//! fairness — the same family of models SimGrid uses for Batsim's I/O
+//! side effects. Every active data transfer is a *flow* over a fixed
+//! route (a set of links); whenever the flow set changes, all rates are
+//! recomputed so that (a) no link's capacity is exceeded and (b) the
+//! allocation is max-min fair (no flow's rate can be raised without
+//! lowering a poorer flow's).
+//!
+//! The simulator advances flows between events and asks for the earliest
+//! completion to schedule the next network event.
+
+use crate::core::time::{Duration, Time};
+use std::collections::HashMap;
+
+pub type FlowId = u64;
+
+#[derive(Debug, Clone)]
+pub struct Flow {
+    pub id: FlowId,
+    /// Link ids this flow traverses (deduplicated).
+    pub route: Vec<usize>,
+    /// Bytes still to transfer.
+    pub remaining: f64,
+    /// Current max-min fair rate, bytes/s (0 until first recompute).
+    pub rate: f64,
+    /// Opaque tag the simulator uses to dispatch completions.
+    pub tag: u64,
+}
+
+/// The fluid network state.
+#[derive(Debug)]
+pub struct FlowNetwork {
+    capacities: Vec<f64>,
+    flows: HashMap<FlowId, Flow>,
+    next_id: FlowId,
+    /// Time up to which all `remaining` values are valid.
+    clock: Time,
+    rates_dirty: bool,
+    /// Completion epsilon: flows with fewer than this many bytes left are
+    /// considered finished (guards float dust).
+    epsilon: f64,
+}
+
+impl FlowNetwork {
+    pub fn new(link_capacities: Vec<f64>) -> FlowNetwork {
+        FlowNetwork {
+            capacities: link_capacities,
+            flows: HashMap::new(),
+            next_id: 1,
+            clock: Time::ZERO,
+            rates_dirty: false,
+            epsilon: 1e-3,
+        }
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.flows.len()
+    }
+
+    pub fn flow(&self, id: FlowId) -> Option<&Flow> {
+        self.flows.get(&id)
+    }
+
+    /// Add a flow of `bytes` over `route` at the current clock; returns its id.
+    /// Rates are marked dirty; call `recompute_rates` (or rely on
+    /// `next_completion` doing it) afterwards.
+    pub fn add_flow(&mut self, mut route: Vec<usize>, bytes: f64, tag: u64) -> FlowId {
+        assert!(bytes > 0.0, "empty transfer");
+        route.sort_unstable();
+        route.dedup();
+        let id = self.next_id;
+        self.next_id += 1;
+        self.flows.insert(id, Flow { id, route, remaining: bytes, rate: 0.0, tag });
+        self.rates_dirty = true;
+        id
+    }
+
+    /// Remove a flow (e.g. its job was killed). Returns the flow if present.
+    pub fn remove_flow(&mut self, id: FlowId) -> Option<Flow> {
+        let f = self.flows.remove(&id);
+        if f.is_some() {
+            self.rates_dirty = true;
+        }
+        f
+    }
+
+    /// Advance the fluid state to absolute time `now`, draining bytes at
+    /// current rates, and return the flows that completed (remaining ~ 0),
+    /// removing them from the network.
+    pub fn advance_to(&mut self, now: Time) -> Vec<Flow> {
+        debug_assert!(now >= self.clock, "time went backwards: {now} < {}", self.clock);
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        let dt = (now - self.clock).as_secs_f64();
+        self.clock = now;
+        if dt > 0.0 {
+            for f in self.flows.values_mut() {
+                f.remaining -= f.rate * dt;
+            }
+        }
+        let eps = self.epsilon;
+        let done_ids: Vec<FlowId> = self
+            .flows
+            .values()
+            .filter(|f| f.remaining <= eps)
+            .map(|f| f.id)
+            .collect();
+        let mut done = Vec::with_capacity(done_ids.len());
+        for id in done_ids {
+            done.push(self.flows.remove(&id).unwrap());
+        }
+        if !done.is_empty() {
+            self.rates_dirty = true;
+        }
+        done
+    }
+
+    /// Earliest absolute completion time across active flows, or `None`
+    /// when the network is idle. Recomputes rates if needed.
+    pub fn next_completion(&mut self) -> Option<Time> {
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        self.flows
+            .values()
+            .filter(|f| f.rate > 0.0)
+            .map(|f| {
+                let secs = (f.remaining.max(0.0)) / f.rate;
+                self.clock + Duration::from_secs_f64(secs)
+            })
+            .min()
+            // Guard: never return "now" twice in a row due to rounding.
+            .map(|t| t.max(self.clock + Duration(1)))
+    }
+
+    /// Progressive filling: repeatedly find the bottleneck link (smallest
+    /// fair share = remaining capacity / unfrozen flows), freeze its flows
+    /// at that share, subtract, and continue. O(L * F) per round, few
+    /// rounds in practice.
+    pub fn recompute_rates(&mut self) {
+        self.rates_dirty = false;
+        if self.flows.is_empty() {
+            return;
+        }
+        let mut remaining_cap = self.capacities.clone();
+        // Per-link unfrozen flow counts.
+        let mut link_count = vec![0u32; self.capacities.len()];
+        let mut unfrozen: HashMap<FlowId, ()> = HashMap::with_capacity(self.flows.len());
+        for f in self.flows.values() {
+            unfrozen.insert(f.id, ());
+            for &l in &f.route {
+                link_count[l] += 1;
+            }
+        }
+        // Iterate until all flows frozen.
+        while !unfrozen.is_empty() {
+            // Find bottleneck share.
+            let mut best_share = f64::INFINITY;
+            let mut best_link = usize::MAX;
+            for (l, &cnt) in link_count.iter().enumerate() {
+                if cnt > 0 {
+                    let share = remaining_cap[l] / cnt as f64;
+                    if share < best_share {
+                        best_share = share;
+                        best_link = l;
+                    }
+                }
+            }
+            if best_link == usize::MAX {
+                // No constrained link left: shouldn't happen (every flow
+                // crosses at least one link), but freeze at infinity guard.
+                for (id, _) in unfrozen.drain() {
+                    self.flows.get_mut(&id).unwrap().rate = f64::MAX;
+                }
+                break;
+            }
+            // Freeze every unfrozen flow crossing the bottleneck.
+            let frozen: Vec<FlowId> = unfrozen
+                .keys()
+                .copied()
+                .filter(|id| self.flows[id].route.contains(&best_link))
+                .collect();
+            debug_assert!(!frozen.is_empty());
+            for id in frozen {
+                unfrozen.remove(&id);
+                let route = self.flows[&id].route.clone();
+                self.flows.get_mut(&id).unwrap().rate = best_share;
+                for l in route {
+                    link_count[l] -= 1;
+                    remaining_cap[l] = (remaining_cap[l] - best_share).max(0.0);
+                }
+            }
+        }
+    }
+
+    /// Validation helper: per-link total allocated rate (tests assert this
+    /// never exceeds capacity).
+    pub fn link_loads(&self) -> Vec<f64> {
+        let mut loads = vec![0.0; self.capacities.len()];
+        for f in self.flows.values() {
+            for &l in &f.route {
+                loads[l] += f.rate;
+            }
+        }
+        loads
+    }
+
+    pub fn capacities(&self) -> &[f64] {
+        &self.capacities
+    }
+
+    pub fn clock(&self) -> Time {
+        self.clock
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(caps: &[f64]) -> FlowNetwork {
+        FlowNetwork::new(caps.to_vec())
+    }
+
+    #[test]
+    fn single_flow_gets_bottleneck_capacity() {
+        let mut n = net(&[10.0, 4.0, 8.0]);
+        let f = n.add_flow(vec![0, 1, 2], 40.0, 0);
+        n.recompute_rates();
+        assert_eq!(n.flow(f).unwrap().rate, 4.0);
+        // 40 bytes at 4 B/s = 10 s.
+        assert_eq!(n.next_completion().unwrap(), Time::from_secs(10));
+    }
+
+    #[test]
+    fn equal_sharing_on_shared_link() {
+        let mut n = net(&[9.0]);
+        let a = n.add_flow(vec![0], 9.0, 0);
+        let b = n.add_flow(vec![0], 90.0, 1);
+        let c = n.add_flow(vec![0], 900.0, 2);
+        n.recompute_rates();
+        for f in [a, b, c] {
+            assert!((n.flow(f).unwrap().rate - 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn max_min_gives_leftover_to_unbottlenecked() {
+        // Flow A uses links 0+1; flow B uses only link 0.
+        // Link 1 cap 2 bottlenecks A at 2; B then gets 10-2=8 on link 0.
+        let mut n = net(&[10.0, 2.0]);
+        let a = n.add_flow(vec![0, 1], 100.0, 0);
+        let b = n.add_flow(vec![0], 100.0, 1);
+        n.recompute_rates();
+        assert!((n.flow(a).unwrap().rate - 2.0).abs() < 1e-9);
+        assert!((n.flow(b).unwrap().rate - 8.0).abs() < 1e-9);
+        let loads = n.link_loads();
+        assert!(loads[0] <= 10.0 + 1e-9 && loads[1] <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn advance_drains_and_completes() {
+        let mut n = net(&[4.0]);
+        let a = n.add_flow(vec![0], 8.0, 7);
+        let done = n.advance_to(Time::from_secs(1));
+        assert!(done.is_empty());
+        assert!((n.flow(a).unwrap().remaining - 4.0).abs() < 1e-9);
+        let done = n.advance_to(Time::from_secs(2));
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tag, 7);
+        assert_eq!(n.n_active(), 0);
+        assert!(n.next_completion().is_none());
+    }
+
+    #[test]
+    fn rates_rebalance_when_flow_completes() {
+        let mut n = net(&[6.0]);
+        let _a = n.add_flow(vec![0], 6.0, 0); // done at t=2 (rate 3)
+        let b = n.add_flow(vec![0], 60.0, 1);
+        let t1 = n.next_completion().unwrap();
+        assert_eq!(t1, Time::from_secs(2));
+        let done = n.advance_to(t1);
+        assert_eq!(done.len(), 1);
+        // b had 60-3*2 = 54 left; now alone at rate 6 => 9 s more.
+        let t2 = n.next_completion().unwrap();
+        assert_eq!(t2, Time::from_secs(11));
+        assert!((n.flow(b).unwrap().rate - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remove_flow_rebalances() {
+        let mut n = net(&[4.0]);
+        let a = n.add_flow(vec![0], 100.0, 0);
+        let b = n.add_flow(vec![0], 100.0, 1);
+        n.recompute_rates();
+        assert!((n.flow(b).unwrap().rate - 2.0).abs() < 1e-9);
+        n.remove_flow(a);
+        n.recompute_rates();
+        assert!((n.flow(b).unwrap().rate - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn never_exceeds_capacity_random_stress() {
+        use crate::stats::rng::Pcg32;
+        let mut rng = Pcg32::seeded(99);
+        let caps: Vec<f64> = (0..20).map(|_| rng.range_f64(1.0, 10.0)).collect();
+        let mut n = net(&caps);
+        for tag in 0..200 {
+            let len = rng.range_u32(1, 5) as usize;
+            let route: Vec<usize> =
+                (0..len).map(|_| rng.below(20) as usize).collect();
+            n.add_flow(route, rng.range_f64(1.0, 100.0), tag);
+        }
+        n.recompute_rates();
+        let loads = n.link_loads();
+        for (l, &load) in loads.iter().enumerate() {
+            assert!(load <= caps[l] * (1.0 + 1e-9), "link {l}: {load} > {}", caps[l]);
+        }
+        // Pareto check: every flow is bottlenecked by some saturated link.
+        for f in (1..=200).filter_map(|i| n.flow(i)) {
+            let saturated = f.route.iter().any(|&l| loads[l] >= caps[l] - 1e-6);
+            assert!(saturated, "flow {} not bottlenecked", f.id);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Platform substrate: the simulated supercomputer.
+//!
+//! - [`topology`]: Dragonfly graph (nodes, routers, links, PFS).
+//! - [`routing`]: minimal-path routes with caching.
+//! - [`flows`]: fluid max-min-fair network model (I/O contention).
+//! - [`burst_buffer`]: shared burst-buffer pool with striping.
+//! - [`cluster`]: compute-node allocation + aggregate resource view.
+
+pub mod burst_buffer;
+pub mod cluster;
+pub mod flows;
+pub mod routing;
+pub mod topology;
+
+pub use burst_buffer::{BbSlice, BurstBufferPool};
+pub use cluster::{Allocation, Cluster, ComputePool};
+pub use flows::{Flow, FlowId, FlowNetwork};
+pub use routing::Router;
+pub use topology::{Link, LinkId, LinkKind, Node, NodeId, NodeRole, Topology, TopologyConfig};

@@ -1,0 +1,175 @@
+//! Shortest-path routing over the Dragonfly router graph.
+//!
+//! Routes are computed once per (source router, destination router) pair
+//! by BFS (all links have equal hop cost; minimal routing is the standard
+//! Dragonfly baseline) and cached. A node-to-node route is then:
+//! source uplink + router path + destination uplink. Transfers to/from
+//! the PFS additionally cross the single shared PFS link, which is what
+//! makes I/O congestion visible in the simulation.
+
+use super::topology::{LinkId, NodeId, RouterId, Topology};
+use std::collections::HashMap;
+
+/// Route cache keyed by router pairs.
+#[derive(Debug)]
+pub struct Router {
+    topo_routers: usize,
+    cache: HashMap<(RouterId, RouterId), Vec<LinkId>>,
+}
+
+impl Router {
+    pub fn new(topo: &Topology) -> Router {
+        Router { topo_routers: topo.routers.len(), cache: HashMap::new() }
+    }
+
+    /// Links on the path between two routers (empty when equal).
+    pub fn router_path(&mut self, topo: &Topology, from: RouterId, to: RouterId) -> Vec<LinkId> {
+        if from == to {
+            return Vec::new();
+        }
+        let key = (from, to);
+        if let Some(p) = self.cache.get(&key) {
+            return p.clone();
+        }
+        let path = bfs_path(topo, from, to)
+            .unwrap_or_else(|| panic!("disconnected routers {from} -> {to}"));
+        // Paths are symmetric in an undirected graph with uniform weights;
+        // cache both directions.
+        let mut rev = path.clone();
+        rev.reverse();
+        self.cache.insert((to, from), rev);
+        self.cache.insert(key, path.clone());
+        path
+    }
+
+    /// Full node-to-node route as a list of link ids (uplinks included).
+    pub fn route(&mut self, topo: &Topology, from: NodeId, to: NodeId) -> Vec<LinkId> {
+        assert_ne!(from, to, "route to self");
+        let rf = topo.nodes[from].router;
+        let rt = topo.nodes[to].router;
+        let mut links = vec![topo.node_uplink[from]];
+        links.extend(self.router_path(topo, rf, rt));
+        links.push(topo.node_uplink[to]);
+        links
+    }
+
+    /// Number of cached router pairs (for diagnostics).
+    pub fn cached_pairs(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Upper bound on cache size.
+    pub fn capacity_hint(&self) -> usize {
+        self.topo_routers * self.topo_routers
+    }
+}
+
+fn bfs_path(topo: &Topology, from: RouterId, to: RouterId) -> Option<Vec<LinkId>> {
+    let n = topo.routers.len();
+    let mut prev: Vec<Option<(RouterId, LinkId)>> = vec![None; n];
+    let mut visited = vec![false; n];
+    let mut queue = std::collections::VecDeque::new();
+    visited[from] = true;
+    queue.push_back(from);
+    while let Some(r) = queue.pop_front() {
+        if r == to {
+            // Reconstruct.
+            let mut links = Vec::new();
+            let mut cur = to;
+            while cur != from {
+                let (p, l) = prev[cur].unwrap();
+                links.push(l);
+                cur = p;
+            }
+            links.reverse();
+            return Some(links);
+        }
+        for &(l, peer) in &topo.router_adj[r] {
+            if !visited[peer] {
+                visited[peer] = true;
+                prev[peer] = Some((r, l));
+                queue.push_back(peer);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::topology::{LinkKind, TopologyConfig};
+
+    fn topo() -> Topology {
+        Topology::build(TopologyConfig::default())
+    }
+
+    #[test]
+    fn same_router_nodes_use_two_uplinks() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        // Nodes 0,1 share router 0 in the default layout.
+        assert_eq!(t.nodes[0].router, t.nodes[1].router);
+        let route = r.route(&t, 0, 1);
+        assert_eq!(route.len(), 2);
+        assert!(matches!(t.links[route[0]].kind, LinkKind::NodeUplink(0)));
+        assert!(matches!(t.links[route[1]].kind, LinkKind::NodeUplink(1)));
+    }
+
+    #[test]
+    fn intra_group_is_single_hop() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        // Find two nodes in the same group, different routers.
+        let a = t.nodes.iter().find(|n| n.group == 0).unwrap().id;
+        let b = t
+            .nodes
+            .iter()
+            .find(|n| n.group == 0 && n.router != t.nodes[a].router)
+            .unwrap()
+            .id;
+        let route = r.route(&t, a, b);
+        // uplink + one local link + uplink (all-to-all intra-group).
+        assert_eq!(route.len(), 3);
+        assert!(matches!(t.links[route[1]].kind, LinkKind::Local(..)));
+    }
+
+    #[test]
+    fn inter_group_crosses_a_global_link() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        let a = t.nodes.iter().find(|n| n.group == 0).unwrap().id;
+        let b = t.nodes.iter().find(|n| n.group == 2).unwrap().id;
+        let route = r.route(&t, a, b);
+        assert!(route
+            .iter()
+            .any(|&l| matches!(t.links[l].kind, LinkKind::Global(..))));
+        // Minimal: at most uplink + local + global + local + uplink.
+        assert!(route.len() <= 5);
+    }
+
+    #[test]
+    fn pfs_route_includes_pfs_link() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        let route = r.route(&t, 5, t.pfs_node);
+        assert_eq!(*route.last().unwrap(), t.pfs_link);
+    }
+
+    #[test]
+    fn routes_are_cached_and_symmetric() {
+        let t = topo();
+        let mut r = Router::new(&t);
+        let a = t.nodes.iter().find(|n| n.group == 0).unwrap().id;
+        let b = t.nodes.iter().find(|n| n.group == 1).unwrap().id;
+        let fwd = r.route(&t, a, b);
+        let cached = r.cached_pairs();
+        let bwd = r.route(&t, b, a);
+        assert_eq!(r.cached_pairs(), cached, "reverse should hit cache");
+        let mut fwd_mid: Vec<_> = fwd[1..fwd.len() - 1].to_vec();
+        let mut bwd_mid: Vec<_> = bwd[1..bwd.len() - 1].to_vec();
+        fwd_mid.sort();
+        bwd_mid.sort();
+        assert_eq!(fwd_mid, bwd_mid);
+    }
+}

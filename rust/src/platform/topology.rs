@@ -1,0 +1,295 @@
+//! Dragonfly cluster topology (the paper's §4.1 platform model).
+//!
+//! 3 groups × 4 chassis × 3 routers × 3 nodes = 108 nodes; 96 are compute
+//! nodes and 12 (one per chassis) are burst-buffer storage nodes. One
+//! additional node represents the PFS, attached to the compute network by
+//! a single shared 5 GB/s link. The compute network models 10 Gbit/s
+//! Ethernet.
+//!
+//! Router graph: routers within a group are all-to-all connected (the
+//! canonical dragonfly intra-group pattern); every pair of groups is
+//! connected by one global link per (ordered) pair, with the endpoint
+//! routers assigned round-robin so global traffic does not converge on a
+//! single router.
+
+/// Role a node plays in the platform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeRole {
+    Compute,
+    /// Burst-buffer storage node (one per chassis by default).
+    Storage,
+    /// The parallel-file-system endpoint.
+    Pfs,
+}
+
+/// Identifier types (indices into the topology tables).
+pub type NodeId = usize;
+pub type RouterId = usize;
+pub type LinkId = usize;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Node {
+    pub id: NodeId,
+    pub role: NodeRole,
+    pub router: RouterId,
+    pub group: usize,
+    pub chassis: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Router {
+    pub id: RouterId,
+    pub group: usize,
+    pub chassis: usize,
+}
+
+/// What a link connects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Node <-> its router.
+    NodeUplink(NodeId),
+    /// Router <-> router within one group.
+    Local(RouterId, RouterId),
+    /// Router <-> router across groups.
+    Global(RouterId, RouterId),
+    /// The single shared PFS attachment link.
+    PfsLink,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Link {
+    pub id: LinkId,
+    pub kind: LinkKind,
+    /// Capacity in bytes per second.
+    pub capacity: f64,
+}
+
+/// Topology construction parameters.
+#[derive(Debug, Clone)]
+pub struct TopologyConfig {
+    pub groups: usize,
+    pub chassis_per_group: usize,
+    pub routers_per_chassis: usize,
+    pub nodes_per_router: usize,
+    /// Storage nodes per chassis (taken from the chassis' node slots).
+    pub storage_per_chassis: usize,
+    /// 10 Gbit/s Ethernet = 1.25e9 B/s for node uplinks and local links.
+    pub edge_bw: f64,
+    /// Global (inter-group) link bandwidth, B/s.
+    pub global_bw: f64,
+    /// Shared PFS link bandwidth, B/s (paper: 5 GB/s).
+    pub pfs_bw: f64,
+}
+
+impl Default for TopologyConfig {
+    /// The paper's platform: 108 nodes, 96 compute + 12 storage,
+    /// 10 Gbit/s network, 5 GB/s PFS link.
+    fn default() -> Self {
+        TopologyConfig {
+            groups: 3,
+            chassis_per_group: 4,
+            routers_per_chassis: 3,
+            nodes_per_router: 3,
+            storage_per_chassis: 1,
+            edge_bw: 1.25e9,
+            global_bw: 1.25e9,
+            pfs_bw: 5.0e9,
+        }
+    }
+}
+
+/// The immutable platform graph.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub cfg: TopologyConfig,
+    pub nodes: Vec<Node>,
+    pub routers: Vec<Router>,
+    pub links: Vec<Link>,
+    /// Router adjacency: (link, peer router).
+    pub router_adj: Vec<Vec<(LinkId, RouterId)>>,
+    /// Node -> its uplink.
+    pub node_uplink: Vec<LinkId>,
+    /// The PFS node id and the router it hangs off.
+    pub pfs_node: NodeId,
+    pub pfs_link: LinkId,
+    pub pfs_router: RouterId,
+}
+
+impl Topology {
+    pub fn build(cfg: TopologyConfig) -> Topology {
+        let routers_per_group = cfg.chassis_per_group * cfg.routers_per_chassis;
+        let n_routers = cfg.groups * routers_per_group;
+
+        let mut routers = Vec::with_capacity(n_routers);
+        for g in 0..cfg.groups {
+            for c in 0..cfg.chassis_per_group {
+                for _ in 0..cfg.routers_per_chassis {
+                    routers.push(Router { id: routers.len(), group: g, chassis: c });
+                }
+            }
+        }
+
+        // Nodes: fill chassis by chassis; the first `storage_per_chassis`
+        // node slots of each chassis become storage nodes (deterministic,
+        // spread one per chassis as in Fugaku's 1-in-16 layout).
+        let mut nodes: Vec<Node> = Vec::new();
+        for g in 0..cfg.groups {
+            for c in 0..cfg.chassis_per_group {
+                let mut storage_left = cfg.storage_per_chassis;
+                for r in 0..cfg.routers_per_chassis {
+                    let router_id = (g * cfg.chassis_per_group + c) * cfg.routers_per_chassis + r;
+                    for _ in 0..cfg.nodes_per_router {
+                        let role = if storage_left > 0 {
+                            storage_left -= 1;
+                            NodeRole::Storage
+                        } else {
+                            NodeRole::Compute
+                        };
+                        nodes.push(Node {
+                            id: nodes.len(),
+                            role,
+                            router: router_id,
+                            group: g,
+                            chassis: c,
+                        });
+                    }
+                }
+            }
+        }
+
+        let mut links: Vec<Link> = Vec::new();
+        let mut router_adj: Vec<Vec<(LinkId, RouterId)>> = vec![Vec::new(); n_routers];
+        let mut node_uplink = vec![usize::MAX; nodes.len() + 1];
+
+        // Node uplinks.
+        for n in &nodes {
+            let id = links.len();
+            links.push(Link { id, kind: LinkKind::NodeUplink(n.id), capacity: cfg.edge_bw });
+            node_uplink[n.id] = id;
+        }
+
+        // Intra-group all-to-all router links.
+        for g in 0..cfg.groups {
+            let base = g * routers_per_group;
+            for a in 0..routers_per_group {
+                for b in (a + 1)..routers_per_group {
+                    let (ra, rb) = (base + a, base + b);
+                    let id = links.len();
+                    links.push(Link { id, kind: LinkKind::Local(ra, rb), capacity: cfg.edge_bw });
+                    router_adj[ra].push((id, rb));
+                    router_adj[rb].push((id, ra));
+                }
+            }
+        }
+
+        // Global links: one per unordered group pair, endpoints assigned
+        // round-robin over each group's routers.
+        let mut next_port = vec![0usize; cfg.groups];
+        for ga in 0..cfg.groups {
+            for gb in (ga + 1)..cfg.groups {
+                let ra = ga * routers_per_group + next_port[ga] % routers_per_group;
+                let rb = gb * routers_per_group + next_port[gb] % routers_per_group;
+                next_port[ga] += 1;
+                next_port[gb] += 1;
+                let id = links.len();
+                links.push(Link { id, kind: LinkKind::Global(ra, rb), capacity: cfg.global_bw });
+                router_adj[ra].push((id, rb));
+                router_adj[rb].push((id, ra));
+            }
+        }
+
+        // PFS node: attach via a dedicated shared link to router 0 (the
+        // paper: "connected with a single shared link to one additional
+        // node which represents PFS").
+        let pfs_router = 0;
+        let pfs_node = nodes.len();
+        nodes.push(Node { id: pfs_node, role: NodeRole::Pfs, router: pfs_router, group: 0, chassis: 0 });
+        let pfs_link = links.len();
+        links.push(Link { id: pfs_link, kind: LinkKind::PfsLink, capacity: cfg.pfs_bw });
+        node_uplink[pfs_node] = pfs_link;
+
+        Topology { cfg, nodes, routers, links, router_adj, node_uplink, pfs_node, pfs_link, pfs_router }
+    }
+
+    pub fn compute_nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| n.role == NodeRole::Compute)
+    }
+    pub fn storage_nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| n.role == NodeRole::Storage)
+    }
+    pub fn n_compute(&self) -> usize {
+        self.compute_nodes().count()
+    }
+    pub fn n_storage(&self) -> usize {
+        self.storage_nodes().count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_platform_shape() {
+        let t = Topology::build(TopologyConfig::default());
+        assert_eq!(t.routers.len(), 36);
+        assert_eq!(t.nodes.len(), 109); // 108 + PFS
+        assert_eq!(t.n_compute(), 96);
+        assert_eq!(t.n_storage(), 12);
+        // One storage node per chassis.
+        for g in 0..3 {
+            for c in 0..4 {
+                let cnt = t
+                    .storage_nodes()
+                    .filter(|n| n.group == g && n.chassis == c)
+                    .count();
+                assert_eq!(cnt, 1, "group {g} chassis {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn link_counts() {
+        let t = Topology::build(TopologyConfig::default());
+        // 108 uplinks + 3 * C(12,2)=66 local * 3 groups + C(3,2)=3 global + 1 pfs
+        let uplinks = t.links.iter().filter(|l| matches!(l.kind, LinkKind::NodeUplink(_))).count();
+        let locals = t.links.iter().filter(|l| matches!(l.kind, LinkKind::Local(..))).count();
+        let globals = t.links.iter().filter(|l| matches!(l.kind, LinkKind::Global(..))).count();
+        assert_eq!(uplinks, 108);
+        assert_eq!(locals, 3 * 66);
+        assert_eq!(globals, 3);
+        assert_eq!(t.links[t.pfs_link].capacity, 5.0e9);
+    }
+
+    #[test]
+    fn adjacency_is_symmetric() {
+        let t = Topology::build(TopologyConfig::default());
+        for (r, adj) in t.router_adj.iter().enumerate() {
+            for &(l, peer) in adj {
+                assert!(t.router_adj[peer].iter().any(|&(l2, p2)| l2 == l && p2 == r));
+            }
+        }
+    }
+
+    #[test]
+    fn every_node_has_uplink() {
+        let t = Topology::build(TopologyConfig::default());
+        for n in &t.nodes {
+            assert_ne!(t.node_uplink[n.id], usize::MAX);
+        }
+    }
+
+    #[test]
+    fn custom_shape() {
+        let t = Topology::build(TopologyConfig {
+            groups: 2,
+            chassis_per_group: 2,
+            routers_per_chassis: 1,
+            nodes_per_router: 4,
+            storage_per_chassis: 1,
+            ..TopologyConfig::default()
+        });
+        assert_eq!(t.n_compute(), 12);
+        assert_eq!(t.n_storage(), 4);
+    }
+}

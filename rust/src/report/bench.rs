@@ -1,0 +1,128 @@
+//! Minimal benchmarking harness (the offline build ships no criterion):
+//! warmup + timed iterations, mean / stddev / min / throughput reporting,
+//! and a global registry so `cargo bench` output is one aligned table
+//! per suite.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's measurements.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    /// Optional domain metric (e.g. "mean wait 1.3 h") shown beside time.
+    pub note: String,
+}
+
+/// Run `f` with `warmup` unmeasured and `iters` measured iterations.
+/// The closure's return value is kept alive to prevent dead-code
+/// elimination and its last value can annotate the result via `note_fn`.
+pub fn bench<T>(
+    name: &str,
+    warmup: u32,
+    iters: u32,
+    mut f: impl FnMut() -> T,
+    note_fn: impl Fn(&T) -> String,
+) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    let mut last = None;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let out = std::hint::black_box(f());
+        samples.push(t0.elapsed());
+        last = Some(out);
+    }
+    let mean_ns = samples.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / iters as f64;
+    let var = samples
+        .iter()
+        .map(|d| {
+            let x = d.as_nanos() as f64 - mean_ns;
+            x * x
+        })
+        .sum::<f64>()
+        / iters as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_nanos(mean_ns as u64),
+        stddev: Duration::from_nanos(var.sqrt() as u64),
+        min: samples.iter().min().copied().unwrap(),
+        note: note_fn(last.as_ref().unwrap()),
+    }
+}
+
+/// Human-friendly duration.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+/// Print one suite's results as an aligned table.
+pub fn report(suite: &str, results: &[BenchResult]) {
+    println!("\n=== bench suite: {suite} ===");
+    let name_w = results.iter().map(|r| r.name.len()).max().unwrap_or(10).max(10);
+    println!(
+        "{:<name_w$}  {:>10}  {:>10}  {:>10}  {:>5}  note",
+        "benchmark", "mean", "stddev", "min", "iters"
+    );
+    for r in results {
+        println!(
+            "{:<name_w$}  {:>10}  {:>10}  {:>10}  {:>5}  {}",
+            r.name,
+            fmt_dur(r.mean),
+            fmt_dur(r.stddev),
+            fmt_dur(r.min),
+            r.iters,
+            r.note
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench(
+            "spin",
+            1,
+            5,
+            || {
+                let mut x = 0u64;
+                for i in 0..10_000 {
+                    x = x.wrapping_add(i);
+                }
+                x
+            },
+            |x| format!("x={x}"),
+        );
+        assert_eq!(r.iters, 5);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.min <= r.mean);
+        assert!(r.note.starts_with("x="));
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with(" s"));
+    }
+}

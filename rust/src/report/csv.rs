@@ -1,0 +1,159 @@
+//! CSV writers for every figure's data series, so the paper's plots can
+//! be regenerated with any plotting tool from `results/*.csv`.
+
+use crate::core::job::JobRecord;
+use crate::metrics::normalized::NormalizedPart;
+use crate::metrics::summary::PolicySummary;
+use crate::sim::simulator::GanttEntry;
+use crate::stats::descriptive::{letter_name, LetterValue};
+use std::io::Write;
+use std::path::Path;
+
+fn write_file(path: &Path, content: &str) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(content.as_bytes())
+}
+
+/// Figs 5-6: one row per policy with means and CI half-widths.
+pub fn write_summaries(path: &Path, summaries: &[PolicySummary]) -> std::io::Result<()> {
+    let mut s = String::from(
+        "policy,n_jobs,n_killed,mean_wait_h,wait_ci95,mean_bsld,bsld_ci95,median_wait_h,max_wait_h,makespan_h\n",
+    );
+    for m in summaries {
+        s.push_str(&format!(
+            "{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6}\n",
+            m.policy,
+            m.n_jobs,
+            m.n_killed,
+            m.mean_wait_h,
+            m.wait_ci95,
+            m.mean_bsld,
+            m.bsld_ci95,
+            m.median_wait_h,
+            m.max_wait_h,
+            m.makespan_h
+        ));
+    }
+    write_file(path, &s)
+}
+
+/// Figs 7-8: letter values per policy.
+pub fn write_letter_values(
+    path: &Path,
+    per_policy: &[(String, Vec<LetterValue>)],
+) -> std::io::Result<()> {
+    let mut s = String::from("policy,level,name,lower,upper\n");
+    for (policy, lvs) in per_policy {
+        for lv in lvs {
+            s.push_str(&format!(
+                "{},{},{},{:.6},{:.6}\n",
+                policy,
+                lv.level,
+                letter_name(lv.level),
+                lv.lower,
+                lv.upper
+            ));
+        }
+    }
+    write_file(path, &s)
+}
+
+/// Figs 9-10: the top-k tail values per policy (rank-indexed).
+pub fn write_tails(path: &Path, per_policy: &[(String, Vec<f64>)]) -> std::io::Result<()> {
+    let mut s = String::from("policy,rank,value\n");
+    for (policy, tail) in per_policy {
+        for (rank, v) in tail.iter().enumerate() {
+            s.push_str(&format!("{},{},{:.6}\n", policy, rank, v));
+        }
+    }
+    write_file(path, &s)
+}
+
+/// Figs 11-12: per-part normalised values + box stats per policy.
+pub fn write_normalized(path: &Path, parts: &[NormalizedPart]) -> std::io::Result<()> {
+    let mut s = String::from("policy,part,value,mean,median,q1,q3,min,max\n");
+    for p in parts {
+        for (i, v) in p.values.iter().enumerate() {
+            s.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6}\n",
+                p.policy, i, v, p.mean, p.median, p.q1, p.q3, p.min, p.max
+            ));
+        }
+    }
+    write_file(path, &s)
+}
+
+/// Fig 3: Gantt rows (one row per (job, node) pair).
+pub fn write_gantt(path: &Path, gantt: &[GanttEntry]) -> std::io::Result<()> {
+    let mut s = String::from("job,node,start_s,finish_s\n");
+    for g in gantt {
+        for &node in &g.compute_nodes {
+            s.push_str(&format!(
+                "{},{},{:.3},{:.3}\n",
+                g.job.0,
+                node,
+                g.start.as_secs_f64(),
+                g.finish.as_secs_f64()
+            ));
+        }
+    }
+    write_file(path, &s)
+}
+
+/// Raw per-job records (for external analysis / debugging).
+pub fn write_records(path: &Path, policy: &str, records: &[JobRecord]) -> std::io::Result<()> {
+    let mut s =
+        String::from("policy,job,submit_s,start_s,finish_s,wait_h,bsld,procs,bb_bytes,killed\n");
+    for r in records {
+        s.push_str(&format!(
+            "{},{},{:.3},{:.3},{:.3},{:.6},{:.6},{},{},{}\n",
+            policy,
+            r.id.0,
+            r.submit.as_secs_f64(),
+            r.start.as_secs_f64(),
+            r.finish.as_secs_f64(),
+            r.waiting().as_hours_f64(),
+            r.bounded_slowdown(),
+            r.procs,
+            r.bb,
+            r.killed
+        ));
+    }
+    write_file(path, &s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::JobId;
+    use crate::core::time::{Duration, Time};
+    use crate::metrics::summary::summarize;
+
+    #[test]
+    fn csv_round_trip_smoke() {
+        let dir = std::env::temp_dir().join(format!("bbsched_csv_{}", std::process::id()));
+        let records = vec![JobRecord {
+            id: JobId(0),
+            submit: Time::ZERO,
+            start: Time::from_secs(60),
+            finish: Time::from_secs(660),
+            walltime: Duration::from_secs(600),
+            procs: 2,
+            bb: 1024,
+            killed: false,
+        }];
+        let s = summarize("fcfs", &records);
+        write_summaries(&dir.join("fig5.csv"), &[s]).unwrap();
+        let text = std::fs::read_to_string(dir.join("fig5.csv")).unwrap();
+        assert!(text.starts_with("policy,"));
+        assert!(text.contains("fcfs,1,0,"));
+        write_records(&dir.join("records.csv"), "fcfs", &records).unwrap();
+        write_tails(&dir.join("fig9.csv"), &[("fcfs".into(), vec![3.0, 1.0])]).unwrap();
+        let t = std::fs::read_to_string(dir.join("fig9.csv")).unwrap();
+        assert!(t.contains("fcfs,0,3.000000"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

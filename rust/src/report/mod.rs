@@ -1,0 +1,8 @@
+//! Reporting: ASCII tables for the terminal, CSV series for every figure,
+//! and Gantt export.
+
+pub mod bench;
+pub mod csv;
+pub mod table;
+
+pub use table::{fmt_f, render_table};

@@ -1,0 +1,88 @@
+//! Minimal ASCII table renderer for terminal reports (the `repro eval`
+//! output mirrors the paper's figures as tables).
+
+/// Build an aligned ASCII table. `header.len()` must equal each row's len.
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncol, "ragged table row");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let sep: String = widths
+        .iter()
+        .map(|w| "-".repeat(w + 2))
+        .collect::<Vec<_>>()
+        .join("+");
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!(" {:<width$} ", c, width = widths[i]))
+            .collect::<Vec<_>>()
+            .join("|")
+    };
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    out.push('\n');
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format a float compactly (3 significant-ish digits).
+pub fn fmt_f(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let t = render_table(
+            "demo",
+            &["policy", "mean"],
+            &[
+                vec!["fcfs".into(), "12.5".into()],
+                vec!["plan-2".into(), "0.31".into()],
+            ],
+        );
+        assert!(t.contains("== demo =="));
+        assert!(t.contains("policy"));
+        let lines: Vec<&str> = t.lines().collect();
+        // header + sep + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        assert_eq!(lines[2].matches('+').count(), 1);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_f(0.0), "0");
+        assert_eq!(fmt_f(123.456), "123.5");
+        assert_eq!(fmt_f(3.14159), "3.14");
+        assert_eq!(fmt_f(0.01234), "0.0123");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_panic() {
+        render_table("x", &["a", "b"], &[vec!["1".into()]]);
+    }
+}

@@ -1,0 +1,90 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced once at
+//! build time by `python/compile/aot.py`) and execute them from the Rust
+//! scheduling hot path. Python is never involved at runtime.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled artifact ready to execute.
+pub struct LoadedComputation {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// One PJRT CPU client hosting any number of loaded artifacts.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    pub fn cpu() -> Result<RuntimeClient> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedComputation> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedComputation {
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+            exe,
+        })
+    }
+}
+
+impl LoadedComputation {
+    /// Execute with the given input literals; returns the first output
+    /// (artifacts are lowered with `return_tuple=True`, so the result is
+    /// unwrapped from its 1-tuple).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .context("executing artifact")?;
+        let lit = result[0][0].to_literal_sync().context("fetching result")?;
+        lit.to_tuple1().context("unwrapping 1-tuple result")
+    }
+}
+
+/// Helpers to build input literals.
+pub fn lit_f32(values: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(values)
+}
+
+pub fn lit_i32(values: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(values)
+}
+
+pub fn lit_f32_2d(values: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(values.len(), rows * cols);
+    xla::Literal::vec1(values)
+        .reshape(&[rows as i64, cols as i64])
+        .context("reshaping 2d literal")
+}
+
+pub fn lit_i32_2d(values: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(values.len(), rows * cols);
+    xla::Literal::vec1(values)
+        .reshape(&[rows as i64, cols as i64])
+        .context("reshaping 2d literal")
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}

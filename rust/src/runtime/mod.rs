@@ -1,0 +1,9 @@
+//! PJRT runtime bridge: loads the AOT-compiled HLO artifacts (built once
+//! by `make artifacts`) and serves batched plan scores to the scheduler's
+//! simulated-annealing loop. Python never runs on this path.
+
+pub mod client;
+pub mod scorer;
+
+pub use client::{LoadedComputation, RuntimeClient};
+pub use scorer::{ScorerDims, XlaScorer};

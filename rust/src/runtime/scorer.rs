@@ -1,0 +1,206 @@
+//! The XLA-backed batch permutation scorer: executes the AOT-compiled
+//! L2 plan-score model (`artifacts/plan_score_q{Q}_t{T}_k{K}.hlo.txt`)
+//! from the simulated-annealing loop.
+//!
+//! Wire contract (must match `python/compile/model.py` and
+//! `python/compile/aot.py`):
+//!   inputs : free_cpu f32[T], free_bb f32[T], cpu f32[Q], bb f32[Q],
+//!            dur i32[Q], wait_base f32[Q], perms i32[K,Q],
+//!            dt f32[], alpha f32[]
+//!   output : scores f32[K]
+//! Queue shorter than Q: pad job arrays with zeros (cpu == 0 marks a job
+//! inactive) and pad each permutation with the padded indices. Queues
+//! longer than Q fall back to the native mirror for that invocation.
+
+use crate::sched::plan::scheduler::ExternalBatchScorer;
+use crate::sched::plan::scorer::{DiscreteProblem, NativeDiscreteScorer};
+use crate::runtime::client::{
+    lit_f32, lit_i32, lit_i32_2d, lit_scalar_f32, LoadedComputation, RuntimeClient,
+};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One artifact variant's dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScorerDims {
+    pub q: usize,
+    pub t: usize,
+    pub k: usize,
+}
+
+struct Variant {
+    dims: ScorerDims,
+    comp: LoadedComputation,
+}
+
+/// PJRT-backed scorer. Holds the client plus every artifact variant found
+/// in the artifact directory, dispatching each batch to the smallest
+/// variant whose Q fits the queue.
+pub struct XlaScorer {
+    _client: RuntimeClient,
+    variants: Vec<Variant>,
+    /// Counters for EXPERIMENTS.md §Perf.
+    pub executions: u64,
+    pub fallback_scores: u64,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe; a scorer instance is only
+// ever driven from the one simulation thread that owns its scheduler.
+unsafe impl Send for XlaScorer {}
+
+impl XlaScorer {
+    /// Scan `dir` for `plan_score_q*_t*_k*.hlo.txt` artifacts.
+    pub fn from_artifact_dir(dir: &Path) -> Result<XlaScorer> {
+        let client = RuntimeClient::cpu()?;
+        let mut variants = Vec::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("reading artifact dir {}", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            let name = path.file_name().unwrap_or_default().to_string_lossy().into_owned();
+            if let Some(dims) = parse_dims(&name) {
+                let comp = client.load_hlo_text(&path)?;
+                variants.push(Variant { dims, comp });
+            }
+        }
+        if variants.is_empty() {
+            bail!("no plan_score_q*_t*_k*.hlo.txt artifacts in {}", dir.display());
+        }
+        variants.sort_by_key(|v| v.dims.q);
+        Ok(XlaScorer { _client: client, variants, executions: 0, fallback_scores: 0 })
+    }
+
+    pub fn dims(&self) -> Vec<ScorerDims> {
+        self.variants.iter().map(|v| v.dims).collect()
+    }
+
+    /// T slots of the largest variant (what the scheduler should
+    /// discretise to).
+    pub fn preferred_t_slots(&self) -> usize {
+        self.variants.last().map(|v| v.dims.t).unwrap_or(256)
+    }
+
+    fn pick_variant(&self, n_jobs: usize, t_slots: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.dims.q >= n_jobs && v.dims.t == t_slots)
+    }
+
+    /// Execute one padded batch of up to `dims.k` permutations.
+    fn execute_chunk(
+        variant: &Variant,
+        p: &DiscreteProblem,
+        perms: &[Vec<usize>],
+    ) -> Result<Vec<f64>> {
+        let ScorerDims { q, t, k } = variant.dims;
+        let n = p.n_jobs();
+        debug_assert!(n <= q && perms.len() <= k);
+        // Resample the profile onto exactly T slots is the caller's job
+        // (DiscreteProblem::build(t_slots = T)); enforce here.
+        if p.t_slots() != t {
+            bail!("problem has {} slots, artifact expects {}", p.t_slots(), t);
+        }
+        let pad = |v: &[f32], len: usize| -> Vec<f32> {
+            let mut out = v.to_vec();
+            out.resize(len, 0.0);
+            out
+        };
+        let cpu = pad(&p.cpu, q);
+        let bb = pad(&p.bb, q);
+        let mut dur: Vec<i32> = p.dur.clone();
+        dur.resize(q, 0);
+        let wait = pad(&p.wait_base, q);
+        // Permutation rows padded with the inactive indices n..q; missing
+        // rows replicate row 0 (their scores are discarded).
+        let mut perm_data = Vec::with_capacity(k * q);
+        for row in 0..k {
+            let perm = perms.get(row).unwrap_or(&perms[0]);
+            for &x in perm {
+                perm_data.push(x as i32);
+            }
+            for pad_idx in n..q {
+                perm_data.push(pad_idx as i32);
+            }
+        }
+        let inputs = [
+            lit_f32(&p.free_cpu),
+            lit_f32(&p.free_bb),
+            lit_f32(&cpu),
+            lit_f32(&bb),
+            lit_i32(&dur),
+            lit_f32(&wait),
+            lit_i32_2d(&perm_data, k, q)?,
+            lit_scalar_f32(p.dt as f32),
+            lit_scalar_f32(p.alpha as f32),
+        ];
+        let out = variant.comp.execute(&inputs)?;
+        let scores: Vec<f32> = out.to_vec().context("reading scores")?;
+        if scores.len() != k {
+            bail!("artifact returned {} scores, expected {k}", scores.len());
+        }
+        Ok(scores.iter().take(perms.len()).map(|&s| s as f64).collect())
+    }
+}
+
+fn parse_dims(name: &str) -> Option<ScorerDims> {
+    let rest = name.strip_prefix("plan_score_q")?.strip_suffix(".hlo.txt")?;
+    let (q, rest) = rest.split_once("_t")?;
+    let (t, k) = rest.split_once("_k")?;
+    Some(ScorerDims { q: q.parse().ok()?, t: t.parse().ok()?, k: k.parse().ok()? })
+}
+
+impl ExternalBatchScorer for XlaScorer {
+    fn score_batch(&mut self, problem: &DiscreteProblem, perms: &[Vec<usize>]) -> Vec<f64> {
+        if perms.is_empty() {
+            return vec![];
+        }
+        let Some(variant) = self.pick_variant(problem.n_jobs(), problem.t_slots()) else {
+            // Queue too long (or T mismatch) for any artifact: native
+            // mirror fallback.
+            self.fallback_scores += perms.len() as u64;
+            let native = NativeDiscreteScorer::new(problem.clone());
+            return perms.iter().map(|p| native.score_perm(p)).collect();
+        };
+        let k = variant.dims.k;
+        let mut out = Vec::with_capacity(perms.len());
+        let (mut execs, mut fallbacks) = (0u64, 0u64);
+        for chunk in perms.chunks(k) {
+            match Self::execute_chunk(variant, problem, chunk) {
+                Ok(scores) => {
+                    execs += 1;
+                    out.extend(scores);
+                }
+                Err(e) => {
+                    // A failed execution must not kill the simulation:
+                    // score natively and keep going.
+                    eprintln!("XLA scorer execution failed ({e}); using native mirror");
+                    fallbacks += chunk.len() as u64;
+                    let native = NativeDiscreteScorer::new(problem.clone());
+                    out.extend(chunk.iter().map(|p| native.score_perm(p)));
+                }
+            }
+        }
+        self.executions += execs;
+        self.fallback_scores += fallbacks;
+        out
+    }
+
+    fn label(&self) -> &'static str {
+        "xla-pjrt-cpu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_parser() {
+        assert_eq!(
+            parse_dims("plan_score_q64_t256_k8.hlo.txt"),
+            Some(ScorerDims { q: 64, t: 256, k: 8 })
+        );
+        assert_eq!(parse_dims("model.hlo.txt"), None);
+        assert_eq!(parse_dims("plan_score_q64_t256_k8.bin"), None);
+    }
+}

@@ -1,0 +1,88 @@
+//! Plain FCFS without backfilling (the paper's `fcfs` baseline): launch
+//! jobs strictly in arrival order, stopping at the first job that does
+//! not fit both resource dimensions.
+
+use crate::core::job::JobId;
+use crate::sched::{SchedView, Scheduler};
+
+#[derive(Debug, Default)]
+pub struct Fcfs;
+
+impl Fcfs {
+    pub fn new() -> Fcfs {
+        Fcfs
+    }
+}
+
+impl Scheduler for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<JobId> {
+        let mut free = view.free;
+        let mut launches = Vec::new();
+        for j in view.queue {
+            let req = j.request();
+            if free.fits(&req) {
+                free -= req;
+                launches.push(j.id);
+            } else {
+                break; // strict FCFS: never look past the head blocker
+            }
+        }
+        launches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::JobRequest;
+    use crate::core::resources::Resources;
+    use crate::core::time::{Duration, Time};
+
+    fn req(id: u32, procs: u32, bb: u64) -> JobRequest {
+        JobRequest {
+            id: JobId(id),
+            submit: Time::ZERO,
+            walltime: Duration::from_mins(10),
+            procs,
+            bb,
+        }
+    }
+
+    fn view<'a>(free: Resources, queue: &'a [JobRequest]) -> SchedView<'a> {
+        SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(96, 1000),
+            free,
+            queue,
+            running: &[],
+        }
+    }
+
+    #[test]
+    fn launches_prefix_that_fits() {
+        let q = [req(0, 10, 100), req(1, 20, 100), req(2, 10, 100)];
+        let mut s = Fcfs::new();
+        let l = s.schedule(&view(Resources::new(35, 250), &q));
+        assert_eq!(l, vec![JobId(0), JobId(1)]); // third blocked by bb
+    }
+
+    #[test]
+    fn head_blocker_blocks_everything() {
+        let q = [req(0, 96, 0), req(1, 1, 0)];
+        let mut s = Fcfs::new();
+        let l = s.schedule(&view(Resources::new(50, 1000), &q));
+        assert!(l.is_empty(), "fcfs must not skip the head");
+    }
+
+    #[test]
+    fn bb_dimension_blocks_too() {
+        let q = [req(0, 1, 900), req(1, 1, 10)];
+        let mut s = Fcfs::new();
+        let l = s.schedule(&view(Resources::new(96, 500), &q));
+        assert!(l.is_empty());
+    }
+}

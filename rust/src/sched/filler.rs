@@ -1,0 +1,84 @@
+//! The `filler` policy: the bare `Backfill` procedure of Algorithm 1
+//! without any future reservation (§3.2). Launches every queued job that
+//! fits right now, in queue order. Good average behaviour but can delay
+//! individual jobs indefinitely — the paper's starvation discussion
+//! (this is also how Slurm effectively treats jobs whose burst-buffer
+//! stage-in has not started).
+
+use crate::core::job::JobId;
+use crate::sched::{SchedView, Scheduler};
+
+#[derive(Debug, Default)]
+pub struct Filler;
+
+impl Filler {
+    pub fn new() -> Filler {
+        Filler
+    }
+}
+
+impl Scheduler for Filler {
+    fn name(&self) -> &'static str {
+        "filler"
+    }
+
+    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<JobId> {
+        let mut free = view.free;
+        let mut launches = Vec::new();
+        for j in view.queue {
+            let req = j.request();
+            if free.fits(&req) {
+                free -= req;
+                launches.push(j.id);
+            }
+            // No break: keep scanning past blocked jobs.
+        }
+        launches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::JobRequest;
+    use crate::core::resources::Resources;
+    use crate::core::time::{Duration, Time};
+
+    fn req(id: u32, procs: u32, bb: u64) -> JobRequest {
+        JobRequest {
+            id: JobId(id),
+            submit: Time::ZERO,
+            walltime: Duration::from_mins(10),
+            procs,
+            bb,
+        }
+    }
+
+    #[test]
+    fn skips_blocked_jobs() {
+        let q = [req(0, 90, 0), req(1, 5, 0), req(2, 90, 0), req(3, 5, 0)];
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(96, 1000),
+            free: Resources::new(12, 1000),
+            queue: &q,
+            running: &[],
+        };
+        let mut s = Filler::new();
+        assert_eq!(s.schedule(&view), vec![JobId(1), JobId(3)]);
+    }
+
+    #[test]
+    fn respects_cumulative_commitment() {
+        let q = [req(0, 8, 0), req(1, 8, 0), req(2, 8, 0)];
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(96, 1000),
+            free: Resources::new(16, 1000),
+            queue: &q,
+            running: &[],
+        };
+        let mut s = Filler::new();
+        assert_eq!(s.schedule(&view), vec![JobId(0), JobId(1)]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Scheduling policies (the paper's §3).
+//!
+//! A [`Scheduler`] is invoked by the simulator on every trigger (periodic
+//! tick, job arrival, job completion) with a [`SchedView`] of the cluster
+//! and returns the ordered list of queued jobs to launch *now*. Future
+//! reservations are scheduler-internal state: as in Algorithm 1 line 18,
+//! they are dropped and re-acquired on every invocation, so the simulator
+//! never needs to know about them.
+
+pub mod conservative;
+pub mod easy;
+pub mod fcfs;
+pub mod filler;
+pub mod plan;
+pub mod slurm_like;
+
+use crate::core::job::{JobId, JobRequest};
+use crate::core::resources::Resources;
+use crate::core::time::Time;
+
+/// What a scheduler may know about one running job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunningInfo {
+    pub id: JobId,
+    pub req: Resources,
+    /// Start + walltime: the contractual upper bound the scheduler may
+    /// plan with (actual completion is usually earlier).
+    pub expected_end: Time,
+}
+
+/// A read-only snapshot handed to schedulers.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedView<'a> {
+    pub now: Time,
+    pub capacity: Resources,
+    /// Free resources at `now` (both dimensions).
+    pub free: Resources,
+    /// Pending jobs in arrival order.
+    pub queue: &'a [JobRequest],
+    /// Currently running jobs.
+    pub running: &'a [RunningInfo],
+}
+
+impl<'a> SchedView<'a> {
+    /// Future release profile: (time, resources released) events derived
+    /// from running jobs' walltime bounds, sorted by time. The base for
+    /// reservation/profile construction.
+    pub fn releases(&self) -> Vec<(Time, Resources)> {
+        let mut rel: Vec<(Time, Resources)> =
+            self.running.iter().map(|r| (r.expected_end, r.req)).collect();
+        rel.sort_by_key(|&(t, _)| t);
+        rel
+    }
+}
+
+/// A scheduling policy.
+pub trait Scheduler {
+    /// Static policy name (matches the paper's policy labels).
+    fn name(&self) -> &'static str;
+    /// Decide which pending jobs to start now, in launch order. Every
+    /// returned job must fit the (sequentially updated) free resources;
+    /// the simulator asserts this.
+    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<JobId>;
+}
+
+/// Policy registry used by the CLI and the evaluation harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Fcfs,
+    FcfsEasy,
+    Filler,
+    FcfsBb,
+    SjfBb,
+    /// Slurm-like decoupled burst-buffer allocation (§3.2 extension; not
+    /// part of the paper's evaluated set).
+    SlurmLike,
+    /// Conservative backfilling with CPU+BB reservations (§3.2 extension).
+    ConservativeBb,
+    /// Plan-based with the waiting-time exponent alpha.
+    Plan(u32),
+}
+
+impl Policy {
+    pub const ALL: [Policy; 7] = [
+        Policy::Fcfs,
+        Policy::FcfsEasy,
+        Policy::Filler,
+        Policy::FcfsBb,
+        Policy::SjfBb,
+        Policy::Plan(1),
+        Policy::Plan(2),
+    ];
+
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Fcfs => "fcfs".into(),
+            Policy::FcfsEasy => "fcfs-easy".into(),
+            Policy::Filler => "filler".into(),
+            Policy::FcfsBb => "fcfs-bb".into(),
+            Policy::SjfBb => "sjf-bb".into(),
+            Policy::SlurmLike => "slurm-like".into(),
+            Policy::ConservativeBb => "conservative-bb".into(),
+            Policy::Plan(a) => format!("plan-{a}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        Some(match s {
+            "fcfs" => Policy::Fcfs,
+            "fcfs-easy" => Policy::FcfsEasy,
+            "filler" => Policy::Filler,
+            "fcfs-bb" => Policy::FcfsBb,
+            "sjf-bb" => Policy::SjfBb,
+            "slurm-like" => Policy::SlurmLike,
+            "conservative-bb" => Policy::ConservativeBb,
+            _ => {
+                let rest = s.strip_prefix("plan-")?;
+                Policy::Plan(rest.parse().ok()?)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::parse(&p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("plan-3"), Some(Policy::Plan(3)));
+        assert_eq!(Policy::parse("nope"), None);
+        assert_eq!(Policy::parse("plan-x"), None);
+    }
+
+    #[test]
+    fn releases_sorted() {
+        let running = [
+            RunningInfo { id: JobId(1), req: Resources::new(1, 0), expected_end: Time::from_secs(50) },
+            RunningInfo { id: JobId(2), req: Resources::new(2, 0), expected_end: Time::from_secs(10) },
+        ];
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(4, 0),
+            free: Resources::new(1, 0),
+            queue: &[],
+            running: &running,
+        };
+        let rel = view.releases();
+        assert_eq!(rel[0].0, Time::from_secs(10));
+        assert_eq!(rel[1].0, Time::from_secs(50));
+    }
+}

@@ -1,0 +1,335 @@
+//! Simulated-annealing plan optimisation — Algorithm 2 of the paper.
+//!
+//! Enhancements over Zheng et al. (CLUSTER 2016), as described in §3.3:
+//! exhaustive search for small queues (<= 5 jobs), nine sorted initial
+//! candidates whose best/worst scores set the initial temperature
+//! (Ben-Ameur 2004), skipping the annealing when all candidates tie, and
+//! fast cooling (r=0.9, N=30, M=6) — 189 evaluations instead of
+//! Zheng's 8742.
+//!
+//! The scorer is pluggable: the exact profile-based scorer (default,
+//! reproduces the paper), or the discretised batch scorer backed by the
+//! AOT-compiled XLA artifact (L1/L2 layers) for the accelerated path.
+
+use crate::stats::rng::Pcg32;
+
+/// Scoring backend for candidate permutations.
+pub trait PermScorer {
+    fn score(&mut self, perm: &[usize]) -> f64;
+    /// Batched scoring; the XLA backend overrides this with one PJRT
+    /// execution per batch.
+    fn score_batch(&mut self, perms: &[Vec<usize>]) -> Vec<f64> {
+        perms.iter().map(|p| self.score(p)).collect()
+    }
+    /// Total single-permutation evaluations so far (ablation metric).
+    fn evaluations(&self) -> u64;
+}
+
+/// Algorithm 2 tuning parameters (paper defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct SaParams {
+    /// Temperature cooling rate r.
+    pub cooling_rate: f64,
+    /// Number of cooling steps N.
+    pub n_cooling: u32,
+    /// Constant-temperature steps per cooling step M.
+    pub m_const: u32,
+    /// Queues up to this size are searched exhaustively.
+    pub exhaustive_limit: usize,
+    /// Propose the M constant-temperature neighbours as one batch and
+    /// score them in a single call (enables the XLA backend). The accept
+    /// chain is then processed against the batch scores.
+    pub batched: bool,
+}
+
+impl Default for SaParams {
+    fn default() -> SaParams {
+        SaParams {
+            cooling_rate: 0.9,
+            n_cooling: 30,
+            m_const: 6,
+            exhaustive_limit: 5,
+            batched: false,
+        }
+    }
+}
+
+/// Result of one optimisation run.
+#[derive(Debug, Clone)]
+pub struct SaOutcome {
+    pub perm: Vec<usize>,
+    pub score: f64,
+    /// Scorer evaluations consumed (paper: N*M + |I| = 189).
+    pub evaluations: u64,
+    /// False when the queue was solved exhaustively or annealing was
+    /// skipped (S_best == S_worst).
+    pub annealed: bool,
+}
+
+/// Optimise the ordering of `n` queued jobs. `candidates` are the initial
+/// permutations (the nine sorts of §3.3); they must be non-empty unless
+/// `n <= exhaustive_limit`.
+pub fn optimise(
+    scorer: &mut dyn PermScorer,
+    n: usize,
+    candidates: &[Vec<usize>],
+    params: &SaParams,
+    rng: &mut Pcg32,
+) -> SaOutcome {
+    let evals0 = scorer.evaluations();
+    if n == 0 {
+        return SaOutcome { perm: vec![], score: 0.0, evaluations: 0, annealed: false };
+    }
+    // --- Exhaustive search for small queues (Algorithm 2 line 2-4). ----
+    if n <= params.exhaustive_limit {
+        let mut best_perm: Vec<usize> = (0..n).collect();
+        let mut best = f64::INFINITY;
+        for perm in permutations(n) {
+            let s = scorer.score(&perm);
+            if s < best {
+                best = s;
+                best_perm = perm;
+            }
+        }
+        return SaOutcome {
+            perm: best_perm,
+            score: best,
+            evaluations: scorer.evaluations() - evals0,
+            annealed: false,
+        };
+    }
+
+    // --- Initial candidates (lines 5-6). -------------------------------
+    assert!(!candidates.is_empty(), "no initial candidates for n={n}");
+    let cand_scores = scorer.score_batch(&candidates.to_vec());
+    let (bi, _) = cand_scores
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    let (wi, _) = cand_scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    let (mut s_best, s_worst) = (cand_scores[bi], cand_scores[wi]);
+    let mut p_best = candidates[bi].clone();
+
+    // Skip annealing when no candidate spread (line 7).
+    if (s_worst - s_best).abs() < f64::EPSILON {
+        return SaOutcome {
+            perm: p_best,
+            score: s_best,
+            evaluations: scorer.evaluations() - evals0,
+            annealed: false,
+        };
+    }
+
+    // --- Annealing (lines 8-21). ----------------------------------------
+    let mut temp = s_worst - s_best; // Ben-Ameur-style initial temperature
+    let mut p = p_best.clone();
+    let mut s = s_best;
+    for _ in 0..params.n_cooling {
+        if params.batched {
+            // Propose M neighbours of the current P, score them as one
+            // batch (one PJRT execution), then run the accept chain.
+            let mut proposals = Vec::with_capacity(params.m_const as usize);
+            for _ in 0..params.m_const {
+                proposals.push(random_swap(&p, rng));
+            }
+            let scores = scorer.score_batch(&proposals);
+            for (p_new, s_new) in proposals.into_iter().zip(scores) {
+                accept(
+                    p_new, s_new, &mut p, &mut s, &mut p_best, &mut s_best, temp, rng,
+                );
+            }
+        } else {
+            for _ in 0..params.m_const {
+                let p_new = random_swap(&p, rng);
+                let s_new = scorer.score(&p_new);
+                accept(
+                    p_new, s_new, &mut p, &mut s, &mut p_best, &mut s_best, temp, rng,
+                );
+            }
+        }
+        temp *= params.cooling_rate;
+    }
+    SaOutcome {
+        perm: p_best,
+        score: s_best,
+        evaluations: scorer.evaluations() - evals0,
+        annealed: true,
+    }
+}
+
+/// The accept rule of Algorithm 2 lines 16-20.
+#[allow(clippy::too_many_arguments)]
+fn accept(
+    p_new: Vec<usize>,
+    s_new: f64,
+    p: &mut Vec<usize>,
+    s: &mut f64,
+    p_best: &mut Vec<usize>,
+    s_best: &mut f64,
+    temp: f64,
+    rng: &mut Pcg32,
+) {
+    if s_new < *s_best {
+        *s_best = s_new;
+        *p_best = p_new.clone();
+        *s = s_new;
+        *p = p_new;
+    } else if s_new < *s || rng.f64() < ((*s - s_new) / temp).exp() {
+        *s = s_new;
+        *p = p_new;
+    }
+}
+
+/// Swap two distinct random positions.
+fn random_swap(p: &[usize], rng: &mut Pcg32) -> Vec<usize> {
+    let mut q = p.to_vec();
+    let n = q.len();
+    let i = rng.below(n as u32) as usize;
+    let mut j = rng.below(n as u32) as usize;
+    while j == i {
+        j = rng.below(n as u32) as usize;
+    }
+    q.swap(i, j);
+    q
+}
+
+/// All permutations of 0..n (Heap's algorithm). Only used for n <= 5.
+pub fn permutations(n: usize) -> Vec<Vec<usize>> {
+    let mut a: Vec<usize> = (0..n).collect();
+    let mut out = vec![a.clone()];
+    let mut c = vec![0usize; n];
+    let mut i = 0;
+    while i < n {
+        if c[i] < i {
+            if i % 2 == 0 {
+                a.swap(0, i);
+            } else {
+                a.swap(c[i], i);
+            }
+            out.push(a.clone());
+            c[i] += 1;
+            i = 0;
+        } else {
+            c[i] = 0;
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy scorer: the score of a permutation is its weighted
+    /// displacement from a hidden target ordering — unique global optimum.
+    struct ToyScorer {
+        target: Vec<usize>,
+        evals: u64,
+    }
+    impl PermScorer for ToyScorer {
+        fn score(&mut self, perm: &[usize]) -> f64 {
+            self.evals += 1;
+            perm.iter()
+                .enumerate()
+                .map(|(pos, &j)| {
+                    let want = self.target.iter().position(|&t| t == j).unwrap();
+                    ((pos as f64 - want as f64).abs() + 1.0) * (j as f64 + 1.0)
+                })
+                .sum()
+        }
+        fn evaluations(&self) -> u64 {
+            self.evals
+        }
+    }
+
+    #[test]
+    fn permutations_count_and_uniqueness() {
+        let perms = permutations(4);
+        assert_eq!(perms.len(), 24);
+        let set: std::collections::HashSet<Vec<usize>> = perms.into_iter().collect();
+        assert_eq!(set.len(), 24);
+        assert_eq!(permutations(0).len(), 1);
+        assert_eq!(permutations(1).len(), 1);
+    }
+
+    #[test]
+    fn exhaustive_finds_global_optimum() {
+        let target = vec![3, 1, 4, 0, 2];
+        let mut scorer = ToyScorer { target: target.clone(), evals: 0 };
+        let mut rng = Pcg32::seeded(1);
+        let out = optimise(&mut scorer, 5, &[], &SaParams::default(), &mut rng);
+        assert!(!out.annealed);
+        assert_eq!(out.perm, target);
+        assert_eq!(out.evaluations, 120);
+    }
+
+    #[test]
+    fn annealing_improves_on_initial_candidates() {
+        let target: Vec<usize> = vec![7, 2, 5, 0, 6, 1, 4, 3];
+        let mut scorer = ToyScorer { target: target.clone(), evals: 0 };
+        let mut rng = Pcg32::seeded(7);
+        let identity: Vec<usize> = (0..8).collect();
+        let reversed: Vec<usize> = (0..8).rev().collect();
+        let cands = vec![identity.clone(), reversed];
+        let s_identity = ToyScorer { target: target.clone(), evals: 0 }.score(&identity);
+        let out = optimise(&mut scorer, 8, &cands, &SaParams::default(), &mut rng);
+        assert!(out.annealed);
+        assert!(out.score < s_identity, "{} !< {}", out.score, s_identity);
+        // Paper's budget: N*M + |I| = 30*6 + 2 = 182 here.
+        assert_eq!(out.evaluations, 182);
+    }
+
+    #[test]
+    fn annealing_never_returns_worse_than_best_candidate() {
+        for seed in 0..20 {
+            let target: Vec<usize> = vec![5, 3, 1, 6, 0, 4, 2];
+            let mut scorer = ToyScorer { target, evals: 0 };
+            let mut rng = Pcg32::seeded(seed);
+            let cands: Vec<Vec<usize>> = vec![(0..7).collect(), (0..7).rev().collect()];
+            let cand_best = {
+                let mut s2 = ToyScorer { target: scorer.target.clone(), evals: 0 };
+                cands.iter().map(|c| s2.score(c)).fold(f64::INFINITY, f64::min)
+            };
+            let out = optimise(&mut scorer, 7, &cands, &SaParams::default(), &mut rng);
+            assert!(out.score <= cand_best + 1e-12, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn identical_candidates_skip_annealing() {
+        let target: Vec<usize> = (0..8).collect();
+        let mut scorer = ToyScorer { target, evals: 0 };
+        let mut rng = Pcg32::seeded(3);
+        let cands = vec![(0..8).collect::<Vec<_>>(), (0..8).collect::<Vec<_>>()];
+        let out = optimise(&mut scorer, 8, &cands, &SaParams::default(), &mut rng);
+        assert!(!out.annealed);
+        assert_eq!(out.evaluations, 2);
+    }
+
+    #[test]
+    fn batched_mode_same_eval_budget() {
+        let target: Vec<usize> = vec![7, 2, 5, 0, 6, 1, 4, 3];
+        let mut scorer = ToyScorer { target, evals: 0 };
+        let mut rng = Pcg32::seeded(11);
+        let cands: Vec<Vec<usize>> = vec![(0..8).collect(), (0..8).rev().collect()];
+        let params = SaParams { batched: true, ..SaParams::default() };
+        let out = optimise(&mut scorer, 8, &cands, &params, &mut rng);
+        assert_eq!(out.evaluations, 182);
+        assert!(out.annealed);
+    }
+
+    #[test]
+    fn empty_queue() {
+        let mut scorer = ToyScorer { target: vec![], evals: 0 };
+        let mut rng = Pcg32::seeded(1);
+        let out = optimise(&mut scorer, 0, &[], &SaParams::default(), &mut rng);
+        assert!(out.perm.is_empty());
+        assert_eq!(out.score, 0.0);
+    }
+}

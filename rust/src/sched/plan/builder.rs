@@ -1,0 +1,161 @@
+//! Execution-plan construction (§3.3): given an ordering (permutation) of
+//! the waiting queue, place every job at its earliest feasible start on
+//! the availability profile and score the plan by the paper's objective
+//! `sum_j (W_j)^alpha` (Eq. 1).
+
+use crate::core::job::{JobId, JobRequest};
+use crate::core::resources::Resources;
+use crate::core::time::{Duration, Time};
+use crate::sched::plan::profile::Profile;
+
+/// The per-job data the planner needs (a distilled [`JobRequest`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PlanJob {
+    pub id: JobId,
+    pub req: Resources,
+    pub walltime: Duration,
+    pub submit: Time,
+}
+
+impl PlanJob {
+    pub fn from_request(r: &JobRequest) -> PlanJob {
+        PlanJob { id: r.id, req: r.request(), walltime: r.walltime, submit: r.submit }
+    }
+}
+
+/// A complete execution plan: a start time for every queued job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    /// Planned start, indexed like the queue (NOT like the permutation).
+    pub starts: Vec<Time>,
+    /// The optimisation objective: sum of waiting-times^alpha (seconds).
+    pub score: f64,
+}
+
+/// Build the plan for `perm` (a permutation of `0..jobs.len()`) on a copy
+/// of `base`, scoring with exponent `alpha`.
+pub fn build_plan(
+    base: &Profile,
+    jobs: &[PlanJob],
+    perm: &[usize],
+    now: Time,
+    alpha: f64,
+) -> ExecutionPlan {
+    debug_assert_eq!(perm.len(), jobs.len());
+    let mut profile = base.clone();
+    let mut starts = vec![Time::ZERO; jobs.len()];
+    let mut score = 0.0;
+    for &pi in perm {
+        let j = &jobs[pi];
+        let t = profile.earliest_fit(j.req, j.walltime, now);
+        profile.reserve(t, j.walltime, j.req);
+        starts[pi] = t;
+        score += waiting_penalty(t, j.submit, alpha);
+    }
+    ExecutionPlan { starts, score }
+}
+
+/// Score only (hot path of the simulated-annealing loop — avoids
+/// materialising the starts vector).
+pub fn score_plan(base: &Profile, jobs: &[PlanJob], perm: &[usize], now: Time, alpha: f64) -> f64 {
+    let mut scratch = base.clone();
+    score_plan_scratch(base, &mut scratch, jobs, perm, now, alpha)
+}
+
+/// Allocation-free variant: `scratch` is reset from `base` and reused
+/// (the SA loop evaluates hundreds of permutations per scheduling event;
+/// see EXPERIMENTS.md §Perf).
+pub fn score_plan_scratch(
+    base: &Profile,
+    scratch: &mut Profile,
+    jobs: &[PlanJob],
+    perm: &[usize],
+    now: Time,
+    alpha: f64,
+) -> f64 {
+    scratch.reset_from(base);
+    let mut score = 0.0;
+    for &pi in perm {
+        let j = &jobs[pi];
+        let t = scratch.earliest_fit(j.req, j.walltime, now);
+        scratch.reserve(t, j.walltime, j.req);
+        score += waiting_penalty(t, j.submit, alpha);
+    }
+    score
+}
+
+#[inline]
+pub fn waiting_penalty(start: Time, submit: Time, alpha: f64) -> f64 {
+    let wait = start.since(submit).as_secs_f64();
+    if alpha == 1.0 {
+        wait
+    } else if alpha == 2.0 {
+        wait * wait
+    } else {
+        wait.powf(alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u32, cpu: u32, bb: u64, wall_s: u64, submit_s: u64) -> PlanJob {
+        PlanJob {
+            id: JobId(id),
+            req: Resources::new(cpu, bb),
+            walltime: Duration::from_secs(wall_s),
+            submit: Time::from_secs(submit_s),
+        }
+    }
+
+    #[test]
+    fn sequential_placement_respects_capacity() {
+        let base = Profile::flat(Time::ZERO, Resources::new(4, 10));
+        let jobs = vec![
+            job(0, 3, 8, 100, 0),
+            job(1, 3, 8, 100, 0), // conflicts with job 0 in both dims
+            job(2, 1, 2, 100, 0), // fits beside job 0
+        ];
+        let plan = build_plan(&base, &jobs, &[0, 1, 2], Time::ZERO, 1.0);
+        assert_eq!(plan.starts[0], Time::ZERO);
+        assert_eq!(plan.starts[1], Time::from_secs(100));
+        assert_eq!(plan.starts[2], Time::ZERO);
+        // waits: 0 + 100 + 0
+        assert!((plan.score - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn permutation_changes_plan_and_score() {
+        let base = Profile::flat(Time::ZERO, Resources::new(4, 10));
+        let jobs = vec![job(0, 4, 0, 1000, 0), job(1, 1, 0, 10, 0)];
+        // Big job first: small one waits 1000s.
+        let p01 = build_plan(&base, &jobs, &[0, 1], Time::ZERO, 1.0);
+        // Small job first: big one... also fits at 0? No: small uses 1 cpu,
+        // big needs 4 => big waits 10.
+        let p10 = build_plan(&base, &jobs, &[1, 0], Time::ZERO, 1.0);
+        assert!((p01.score - 1000.0).abs() < 1e-9);
+        assert!((p10.score - 10.0).abs() < 1e-9);
+        assert_eq!(score_plan(&base, &jobs, &[1, 0], Time::ZERO, 1.0), p10.score);
+    }
+
+    #[test]
+    fn alpha_two_penalises_long_waits_superlinearly() {
+        let base = Profile::flat(Time::ZERO, Resources::new(1, 0));
+        // Three unit jobs serialised: waits 0, 10, 20.
+        let jobs = vec![job(0, 1, 0, 10, 0), job(1, 1, 0, 10, 0), job(2, 1, 0, 10, 0)];
+        let s1 = score_plan(&base, &jobs, &[0, 1, 2], Time::ZERO, 1.0);
+        let s2 = score_plan(&base, &jobs, &[0, 1, 2], Time::ZERO, 2.0);
+        assert!((s1 - 30.0).abs() < 1e-9);
+        assert!((s2 - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn waiting_includes_time_already_spent_in_queue() {
+        let base = Profile::flat(Time::from_secs(100), Resources::new(1, 0));
+        let jobs = vec![job(0, 1, 0, 10, 30)]; // submitted 70s ago
+        let plan = build_plan(&base, &jobs, &[0], Time::from_secs(100), 1.0);
+        assert_eq!(plan.starts[0], Time::from_secs(100));
+        assert!((plan.score - 70.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,114 @@
+//! The nine initial candidate permutations of §3.3: sorting the queue by
+//! nine criteria seeds the simulated annealing with a diverse population,
+//! from which the best/worst scores also set the initial temperature
+//! (Ben-Ameur 2004).
+
+use crate::sched::plan::builder::PlanJob;
+
+/// Criterion names, for diagnostics and the ablation bench.
+pub const CRITERIA: [&str; 9] = [
+    "fcfs",
+    "procs-asc",
+    "procs-desc",
+    "bbratio-asc",
+    "bbratio-desc",
+    "bb-asc",
+    "bb-desc",
+    "walltime-asc",
+    "walltime-desc",
+];
+
+/// Generate the nine candidate permutations (indices into `jobs`).
+/// Duplicates are possible (e.g. all jobs identical) and harmless.
+pub fn initial_candidates(jobs: &[PlanJob]) -> Vec<Vec<usize>> {
+    let n = jobs.len();
+    let base: Vec<usize> = (0..n).collect();
+    let mut out = Vec::with_capacity(9);
+
+    // (1) FCFS: submission order == queue order.
+    out.push(base.clone());
+
+    // Sort keys. Ties broken by queue position to keep determinism.
+    let by = |key: &dyn Fn(&PlanJob) -> f64, desc: bool| -> Vec<usize> {
+        let mut p = base.clone();
+        p.sort_by(|&a, &b| {
+            let (ka, kb) = (key(&jobs[a]), key(&jobs[b]));
+            let ord = ka.partial_cmp(&kb).unwrap();
+            let ord = if desc { ord.reverse() } else { ord };
+            ord.then(a.cmp(&b))
+        });
+        p
+    };
+
+    // (2,3) processors.
+    out.push(by(&|j| j.req.cpu as f64, false));
+    out.push(by(&|j| j.req.cpu as f64, true));
+    // (4,5) burst-buffer-per-processor relative to processors (the
+    // paper's ratio criterion).
+    let ratio = |j: &PlanJob| (j.req.bb as f64 / j.req.cpu.max(1) as f64) / j.req.cpu.max(1) as f64;
+    out.push(by(&ratio, false));
+    out.push(by(&ratio, true));
+    // (6,7) total burst-buffer request.
+    out.push(by(&|j| j.req.bb as f64, false));
+    out.push(by(&|j| j.req.bb as f64, true));
+    // (8,9) walltime.
+    out.push(by(&|j| j.walltime.0 as f64, false));
+    out.push(by(&|j| j.walltime.0 as f64, true));
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::JobId;
+    use crate::core::resources::Resources;
+    use crate::core::time::{Duration, Time};
+
+    fn job(id: u32, cpu: u32, bb: u64, wall_s: u64) -> PlanJob {
+        PlanJob {
+            id: JobId(id),
+            req: Resources::new(cpu, bb),
+            walltime: Duration::from_secs(wall_s),
+            submit: Time::ZERO,
+        }
+    }
+
+    #[test]
+    fn nine_candidates_all_permutations() {
+        let jobs = vec![job(0, 4, 100, 50), job(1, 1, 900, 500), job(2, 2, 10, 5)];
+        let cands = initial_candidates(&jobs);
+        assert_eq!(cands.len(), 9);
+        for c in &cands {
+            let mut s = c.clone();
+            s.sort();
+            assert_eq!(s, vec![0, 1, 2], "not a permutation: {c:?}");
+        }
+        // FCFS is identity.
+        assert_eq!(cands[0], vec![0, 1, 2]);
+        // procs ascending: job1(1), job2(2), job0(4).
+        assert_eq!(cands[1], vec![1, 2, 0]);
+        // procs descending is its reverse here.
+        assert_eq!(cands[2], vec![0, 2, 1]);
+        // walltime ascending: job2(5), job0(50), job1(500).
+        assert_eq!(cands[7], vec![2, 0, 1]);
+        assert_eq!(cands[8], vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn ties_break_by_queue_position() {
+        let jobs = vec![job(0, 2, 5, 10), job(1, 2, 5, 10), job(2, 2, 5, 10)];
+        for c in initial_candidates(&jobs) {
+            assert_eq!(c, vec![0, 1, 2]);
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(initial_candidates(&[]).len(), 9);
+        let one = vec![job(0, 1, 1, 1)];
+        for c in initial_candidates(&one) {
+            assert_eq!(c, vec![0]);
+        }
+    }
+}

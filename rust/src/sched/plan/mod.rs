@@ -1,0 +1,19 @@
+//! Plan-based scheduling (§3.3): availability profiles, execution-plan
+//! construction, the nine initial candidates, simulated annealing
+//! (Algorithm 2), the Zheng et al. baseline, and the policy driver.
+
+pub mod annealing;
+pub mod builder;
+pub mod candidates;
+pub mod profile;
+pub mod scheduler;
+pub mod scorer;
+pub mod zheng;
+
+pub use annealing::{optimise, permutations, PermScorer, SaOutcome, SaParams};
+pub use builder::{build_plan, score_plan, ExecutionPlan, PlanJob};
+pub use candidates::initial_candidates;
+pub use profile::Profile;
+pub use scheduler::{ExternalBatchScorer, PlanSched, ScorerBackend};
+pub use scorer::{DiscreteProblem, ExactScorer, NativeDiscreteScorer};
+pub use zheng::{optimise_zheng, ZhengOutcome, ZhengParams};

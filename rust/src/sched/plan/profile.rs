@@ -1,0 +1,304 @@
+//! Two-resource availability profile: piecewise-constant free
+//! (processors, burst-buffer) over future time.
+//!
+//! This is the core data structure of both EASY reservations (Algorithm 1
+//! line 14: "Reserve compute [and storage] resources for J at the
+//! earliest time in the future") and the plan builder (§3.3: "for each
+//! job find the earliest point in time when sufficient resources are
+//! available").
+
+use crate::core::resources::Resources;
+use crate::core::time::{Duration, Time};
+use crate::sched::SchedView;
+
+/// Piecewise-constant free-resource timeline. `points[i]` gives the free
+/// resources from `points[i].0` (inclusive) until `points[i+1].0`
+/// (exclusive); the last point extends to +infinity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Profile {
+    points: Vec<(Time, Resources)>,
+}
+
+impl Profile {
+    /// A profile that is fully free from `now` on.
+    pub fn flat(now: Time, capacity: Resources) -> Profile {
+        Profile { points: vec![(now, capacity)] }
+    }
+
+    /// Build the availability profile a scheduler sees: cluster capacity
+    /// minus every running job's request until its walltime-bound end.
+    pub fn from_view(view: &SchedView<'_>) -> Profile {
+        let mut p = Profile::flat(view.now, view.capacity);
+        for r in view.running {
+            if r.expected_end > view.now {
+                p.subtract(view.now, r.expected_end, r.req);
+            }
+        }
+        p
+    }
+
+    pub fn start(&self) -> Time {
+        self.points[0].0
+    }
+
+    /// Free resources at an instant (>= profile start).
+    pub fn free_at(&self, t: Time) -> Resources {
+        debug_assert!(t >= self.start());
+        match self.points.binary_search_by_key(&t, |&(pt, _)| pt) {
+            Ok(i) => self.points[i].1,
+            Err(i) => self.points[i - 1].1,
+        }
+    }
+
+    /// Ensure a breakpoint exists at `t`; returns its index.
+    fn split_at(&mut self, t: Time) -> usize {
+        match self.points.binary_search_by_key(&t, |&(pt, _)| pt) {
+            Ok(i) => i,
+            Err(i) => {
+                let prev = self.points[i - 1].1;
+                self.points.insert(i, (t, prev));
+                i
+            }
+        }
+    }
+
+    /// Subtract `req` over `[from, to)`. Panics on over-subscription —
+    /// callers must only reserve what the profile shows as free.
+    pub fn subtract(&mut self, from: Time, to: Time, req: Resources) {
+        if req.is_zero() || from >= to {
+            return;
+        }
+        let from = from.max(self.start());
+        if from >= to {
+            return;
+        }
+        let i0 = self.split_at(from);
+        let i1 = if to.is_finite() { self.split_at(to) } else { self.points.len() };
+        for i in i0..i1 {
+            self.points[i].1 = self.points[i]
+                .1
+                .checked_sub(&req)
+                .unwrap_or_else(|| panic!("profile over-subscription at {}", self.points[i].0));
+        }
+        self.coalesce();
+    }
+
+    /// Add `req` back over `[from, to)` (used by what-if analyses).
+    pub fn add(&mut self, from: Time, to: Time, req: Resources) {
+        if req.is_zero() || from >= to {
+            return;
+        }
+        let from = from.max(self.start());
+        let i0 = self.split_at(from);
+        let i1 = if to.is_finite() { self.split_at(to) } else { self.points.len() };
+        for i in i0..i1 {
+            self.points[i].1 += req;
+        }
+        self.coalesce();
+    }
+
+    fn coalesce(&mut self) {
+        self.points.dedup_by(|next, prev| next.1 == prev.1);
+    }
+
+    /// Earliest `t >= not_before` such that free >= `req` throughout
+    /// `[t, t + dur)`. Always exists because the final segment extends to
+    /// infinity (callers guarantee `req` fits total capacity).
+    pub fn earliest_fit(&self, req: Resources, dur: Duration, not_before: Time) -> Time {
+        let not_before = not_before.max(self.start());
+        let n = self.points.len();
+        // Candidate starts: `not_before` or any later breakpoint.
+        let mut i = match self.points.binary_search_by_key(&not_before, |&(t, _)| t) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        loop {
+            let cand = self.points[i].0.max(not_before);
+            let end = cand + dur;
+            // Scan segments covering [cand, end).
+            let mut j = i;
+            let mut ok = true;
+            while j < n {
+                let seg_start = self.points[j].0;
+                if seg_start >= end {
+                    break;
+                }
+                if !self.points[j].1.fits(&req) {
+                    ok = false;
+                    // No start before the end of segment j can work.
+                    i = j + 1;
+                    break;
+                }
+                j += 1;
+            }
+            if ok {
+                return cand;
+            }
+            debug_assert!(i < n, "infinite segment must fit {req}");
+            if i >= n {
+                // Defensive: should be unreachable when req <= capacity.
+                return self.points[n - 1].0;
+            }
+        }
+    }
+
+    /// Reserve = subtract over `[at, at + dur)`.
+    pub fn reserve(&mut self, at: Time, dur: Duration, req: Resources) {
+        self.subtract(at, at + dur, req);
+    }
+
+    /// Reset this profile to a copy of `other` without reallocating
+    /// (hot path: the SA scorer re-evaluates hundreds of plans per
+    /// scheduling event against the same base profile).
+    pub fn reset_from(&mut self, other: &Profile) {
+        self.points.clear();
+        self.points.extend_from_slice(&other.points);
+    }
+
+    /// Number of breakpoints (perf diagnostics).
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Iterate (start, free) breakpoints (for discretisation and tests).
+    pub fn breakpoints(&self) -> &[(Time, Resources)] {
+        &self.points
+    }
+
+    /// The minimum free resources over `[from, to)` (used by the
+    /// discretiser's conservative sampling).
+    pub fn min_free(&self, from: Time, to: Time) -> Resources {
+        let from = from.max(self.start());
+        let mut i = match self.points.binary_search_by_key(&from, |&(t, _)| t) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        let mut min = self.points[i].1;
+        i += 1;
+        while i < self.points.len() && self.points[i].0 < to {
+            min = min.min(&self.points[i].1);
+            i += 1;
+        }
+        min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn res(cpu: u32, bb: u64) -> Resources {
+        Resources::new(cpu, bb)
+    }
+    fn t(s: u64) -> Time {
+        Time::from_secs(s)
+    }
+    fn d(s: u64) -> Duration {
+        Duration::from_secs(s)
+    }
+
+    #[test]
+    fn flat_profile_fits_immediately() {
+        let p = Profile::flat(t(100), res(4, 10));
+        assert_eq!(p.earliest_fit(res(4, 10), d(1000), t(100)), t(100));
+        assert_eq!(p.free_at(t(5000)), res(4, 10));
+    }
+
+    #[test]
+    fn subtract_creates_segments_and_coalesces() {
+        let mut p = Profile::flat(t(0), res(4, 10));
+        p.subtract(t(10), t(20), res(2, 5));
+        assert_eq!(p.free_at(t(0)), res(4, 10));
+        assert_eq!(p.free_at(t(10)), res(2, 5));
+        assert_eq!(p.free_at(t(19)), res(2, 5));
+        assert_eq!(p.free_at(t(20)), res(4, 10));
+        // Adding it back merges segments away.
+        p.add(t(10), t(20), res(2, 5));
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn earliest_fit_skips_busy_window() {
+        let mut p = Profile::flat(t(0), res(4, 10));
+        p.subtract(t(0), t(100), res(3, 0)); // only 1 cpu free until 100
+        assert_eq!(p.earliest_fit(res(1, 5), d(50), t(0)), t(0));
+        assert_eq!(p.earliest_fit(res(2, 0), d(50), t(0)), t(100));
+        // A long job that cannot finish before the busy window ends must
+        // start after it.
+        assert_eq!(p.earliest_fit(res(4, 0), d(10), t(0)), t(100));
+    }
+
+    #[test]
+    fn earliest_fit_respects_bb_dimension() {
+        let mut p = Profile::flat(t(0), res(4, 10));
+        p.subtract(t(0), t(60), res(0, 8)); // bb-constrained
+        assert_eq!(p.earliest_fit(res(1, 4), d(30), t(0)), t(60));
+        assert_eq!(p.earliest_fit(res(4, 2), d(30), t(0)), t(0));
+    }
+
+    #[test]
+    fn earliest_fit_fits_in_gap_between_reservations() {
+        let mut p = Profile::flat(t(0), res(4, 0));
+        p.subtract(t(50), t(100), res(3, 0));
+        // 2-cpu job of 50s fits in [0,50).
+        assert_eq!(p.earliest_fit(res(2, 0), d(50), t(0)), t(0));
+        // But a 60s one must wait until 100.
+        assert_eq!(p.earliest_fit(res(2, 0), d(60), t(0)), t(100));
+    }
+
+    #[test]
+    fn not_before_is_honoured() {
+        let p = Profile::flat(t(0), res(4, 0));
+        assert_eq!(p.earliest_fit(res(1, 0), d(10), t(42)), t(42));
+    }
+
+    #[test]
+    fn from_view_subtracts_running() {
+        use crate::core::job::JobId;
+        use crate::sched::RunningInfo;
+        let running = [RunningInfo {
+            id: JobId(1),
+            req: res(3, 6),
+            expected_end: t(500),
+        }];
+        let view = SchedView {
+            now: t(100),
+            capacity: res(4, 10),
+            free: res(1, 4),
+            queue: &[],
+            running: &running,
+        };
+        let p = Profile::from_view(&view);
+        assert_eq!(p.free_at(t(100)), res(1, 4));
+        assert_eq!(p.free_at(t(500)), res(4, 10));
+    }
+
+    #[test]
+    #[should_panic(expected = "over-subscription")]
+    fn oversubscription_panics() {
+        let mut p = Profile::flat(t(0), res(2, 0));
+        p.subtract(t(0), t(10), res(3, 0));
+    }
+
+    #[test]
+    fn min_free_over_window() {
+        let mut p = Profile::flat(t(0), res(8, 100));
+        p.subtract(t(10), t(20), res(5, 30));
+        p.subtract(t(15), t(30), res(1, 50));
+        assert_eq!(p.min_free(t(0), t(40)), res(2, 20));
+        assert_eq!(p.min_free(t(20), t(40)), res(7, 50));
+        assert_eq!(p.min_free(t(30), t(40)), res(8, 100));
+    }
+
+    #[test]
+    fn reserve_then_next_job_goes_behind() {
+        let mut p = Profile::flat(t(0), res(4, 10));
+        let s1 = p.earliest_fit(res(4, 10), d(100), t(0));
+        p.reserve(s1, d(100), res(4, 10));
+        let s2 = p.earliest_fit(res(1, 1), d(10), t(0));
+        assert_eq!(s2, t(100));
+    }
+}

@@ -1,0 +1,339 @@
+//! The `plan-alpha` scheduling policy (Algorithm 2 end-to-end): optimise
+//! the queue ordering with simulated annealing, build the execution plan
+//! for the winner, launch every job whose planned start is *now*, and
+//! keep the rest as (implicit) future reservations that are re-derived on
+//! the next invocation.
+//!
+//! Scoring backends:
+//! - `Exact` (default): the event-grained profile scorer — reproduces the
+//!   paper's Pybatsim implementation.
+//! - `Discrete`: the native mirror of the L1/L2 discretised semantics.
+//! - `External`: the discretised problem scored by the AOT-compiled XLA
+//!   artifact through PJRT (see [`crate::runtime`]); the SA proposal loop
+//!   then runs in batched mode so each temperature step is one PJRT
+//!   execution. The *final* plan is always rebuilt exactly in Rust before
+//!   anything launches — discretisation can never commit resources.
+
+use crate::core::job::JobId;
+
+use crate::sched::plan::annealing::{optimise, PermScorer, SaOutcome, SaParams};
+use crate::sched::plan::builder::{build_plan, PlanJob};
+use crate::sched::plan::candidates::initial_candidates;
+use crate::sched::plan::profile::Profile;
+use crate::sched::plan::scorer::{DiscreteProblem, ExactScorer, NativeDiscreteScorer};
+use crate::sched::{SchedView, Scheduler};
+use crate::stats::rng::Pcg32;
+
+/// External batch scorer over the discretised problem (implemented by
+/// `runtime::scorer::XlaScorer`).
+pub trait ExternalBatchScorer: Send {
+    /// Score each permutation; `perms` are permutations of
+    /// `0..problem.n_jobs()`.
+    fn score_batch(&mut self, problem: &DiscreteProblem, perms: &[Vec<usize>]) -> Vec<f64>;
+    /// Backend label for logs/EXPERIMENTS.md.
+    fn label(&self) -> &'static str;
+}
+
+/// Which scorer drives the SA search.
+pub enum ScorerBackend {
+    Exact,
+    Discrete { t_slots: usize },
+    External { t_slots: usize, scorer: Box<dyn ExternalBatchScorer> },
+}
+
+impl std::fmt::Debug for ScorerBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScorerBackend::Exact => write!(f, "Exact"),
+            ScorerBackend::Discrete { t_slots } => write!(f, "Discrete(T={t_slots})"),
+            ScorerBackend::External { t_slots, scorer } => {
+                write!(f, "External({}, T={t_slots})", scorer.label())
+            }
+        }
+    }
+}
+
+/// Plan-based scheduler state.
+pub struct PlanSched {
+    pub alpha: f64,
+    pub params: SaParams,
+    pub backend: ScorerBackend,
+    rng: Pcg32,
+    /// Memoisation: if neither the queue nor the running set changed
+    /// since the last invocation, no new job can possibly start (free
+    /// resources only change on job events), so skip the SA entirely.
+    /// This collapses the per-tick cost on quiet periods.
+    memo_key: u64,
+    /// Cumulative SA evaluations (ablation/diagnostics).
+    pub total_evaluations: u64,
+    pub invocations_planned: u64,
+    pub invocations_memoised: u64,
+}
+
+impl PlanSched {
+    pub fn new(alpha: f64, seed: u64) -> PlanSched {
+        PlanSched {
+            alpha,
+            params: SaParams::default(),
+            backend: ScorerBackend::Exact,
+            rng: Pcg32::seeded(seed),
+            memo_key: 0,
+            total_evaluations: 0,
+            invocations_planned: 0,
+            invocations_memoised: 0,
+        }
+    }
+
+    pub fn with_backend(mut self, backend: ScorerBackend) -> PlanSched {
+        if matches!(backend, ScorerBackend::External { .. }) {
+            self.params.batched = true;
+        }
+        self.backend = backend;
+        self
+    }
+
+    fn state_key(view: &SchedView<'_>) -> u64 {
+        // FNV-1a over queue ids + running (id, end) pairs.
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut eat = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for j in view.queue {
+            eat(j.id.0 as u64 + 1);
+        }
+        eat(u64::MAX);
+        for r in view.running {
+            eat(r.id.0 as u64 + 1);
+            eat(r.expected_end.0);
+        }
+        h
+    }
+
+    /// Run the optimisation for the current view, returning the chosen
+    /// permutation. Public for the ablation benches.
+    pub fn optimise_view(&mut self, view: &SchedView<'_>, jobs: &[PlanJob]) -> SaOutcome {
+        let base = Profile::from_view(view);
+        let candidates = initial_candidates(jobs);
+        let outcome = match &mut self.backend {
+            ScorerBackend::Exact => {
+                let mut scorer = ExactScorer::new(&base, jobs, view.now, self.alpha);
+                optimise(&mut scorer, jobs.len(), &candidates, &self.params, &mut self.rng)
+            }
+            ScorerBackend::Discrete { t_slots } => {
+                let problem = DiscreteProblem::build(&base, jobs, view.now, *t_slots, self.alpha);
+                let mut scorer = NativeDiscreteScorer::new(problem);
+                optimise(&mut scorer, jobs.len(), &candidates, &self.params, &mut self.rng)
+            }
+            ScorerBackend::External { t_slots, scorer } => {
+                let problem = DiscreteProblem::build(&base, jobs, view.now, *t_slots, self.alpha);
+                let mut adapter = ExternalAdapter { problem, scorer: scorer.as_mut(), evals: 0 };
+                optimise(&mut adapter, jobs.len(), &candidates, &self.params, &mut self.rng)
+            }
+        };
+        self.total_evaluations += outcome.evaluations;
+        outcome
+    }
+}
+
+/// Adapts an [`ExternalBatchScorer`] to the [`PermScorer`] interface the
+/// annealing loop consumes.
+struct ExternalAdapter<'a> {
+    problem: DiscreteProblem,
+    scorer: &'a mut dyn ExternalBatchScorer,
+    evals: u64,
+}
+
+impl PermScorer for ExternalAdapter<'_> {
+    fn score(&mut self, perm: &[usize]) -> f64 {
+        self.evals += 1;
+        self.scorer.score_batch(&self.problem, &[perm.to_vec()])[0]
+    }
+    fn score_batch(&mut self, perms: &[Vec<usize>]) -> Vec<f64> {
+        self.evals += perms.len() as u64;
+        self.scorer.score_batch(&self.problem, perms)
+    }
+    fn evaluations(&self) -> u64 {
+        self.evals
+    }
+}
+
+impl Scheduler for PlanSched {
+    fn name(&self) -> &'static str {
+        // Leaked once per process; policy labels are process-static.
+        match (self.alpha, &self.backend) {
+            (a, ScorerBackend::Exact) if a == 1.0 => "plan-1",
+            (a, ScorerBackend::Exact) if a == 2.0 => "plan-2",
+            (a, _) if a == 1.0 => "plan-1-xla",
+            (a, _) if a == 2.0 => "plan-2-xla",
+            _ => "plan",
+        }
+    }
+
+    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<JobId> {
+        if view.queue.is_empty() {
+            return vec![];
+        }
+        let key = Self::state_key(view);
+        if key == self.memo_key {
+            self.invocations_memoised += 1;
+            return vec![];
+        }
+        let jobs: Vec<PlanJob> = view.queue.iter().map(PlanJob::from_request).collect();
+        let outcome = self.optimise_view(view, &jobs);
+        self.invocations_planned += 1;
+
+        // Final plan is always exact, regardless of search backend.
+        let base = Profile::from_view(view);
+        let plan = build_plan(&base, &jobs, &outcome.perm, view.now, self.alpha);
+        let mut launches = Vec::new();
+        for &pi in &outcome.perm {
+            if plan.starts[pi] == view.now {
+                launches.push(jobs[pi].id);
+            }
+        }
+        // Remember the state *after* our launches: queue minus launches.
+        // (Cheap recomputation: hash the surviving ids.)
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut eat = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for j in view.queue {
+            if !launches.contains(&j.id) {
+                eat(j.id.0 as u64 + 1);
+            }
+        }
+        eat(u64::MAX);
+        for r in view.running {
+            eat(r.id.0 as u64 + 1);
+            eat(r.expected_end.0);
+        }
+        // Launched jobs join `running`, changing the key on the next
+        // invocation anyway; only the no-launch case must match exactly.
+        self.memo_key = if launches.is_empty() { h } else { 0 };
+        launches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::JobRequest;
+    use crate::core::resources::Resources;
+    use crate::core::time::{Duration, Time};
+    use crate::sched::RunningInfo;
+
+    fn req(id: u32, procs: u32, bb: u64, wall_mins: u64, submit_s: u64) -> JobRequest {
+        JobRequest {
+            id: JobId(id),
+            submit: Time::from_secs(submit_s),
+            walltime: Duration::from_mins(wall_mins),
+            procs,
+            bb,
+        }
+    }
+
+    #[test]
+    fn launches_whatever_fits_now_small_queue() {
+        let q = [req(0, 2, 10, 10, 0), req(1, 2, 10, 10, 0), req(2, 4, 10, 10, 0)];
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(4, 100),
+            free: Resources::new(4, 100),
+            queue: &q,
+            running: &[],
+        };
+        let mut s = PlanSched::new(2.0, 1);
+        let l = s.schedule(&view);
+        // Exhaustive search: jobs 0+1 in parallel now, job 2 later.
+        assert_eq!(l.len(), 2);
+        assert!(l.contains(&JobId(0)) && l.contains(&JobId(1)));
+    }
+
+    #[test]
+    fn plan_reorders_to_fill_bb_gap() {
+        // Running job holds all bb until t=600. Head job needs bb; a later
+        // job does not — plan must start the later one now.
+        let q = [req(0, 2, 90, 10, 0), req(1, 2, 0, 5, 1)];
+        let running = [RunningInfo {
+            id: JobId(9),
+            req: Resources::new(1, 100),
+            expected_end: Time::from_secs(600),
+        }];
+        let view = SchedView {
+            now: Time::from_secs(60),
+            capacity: Resources::new(4, 100),
+            free: Resources::new(3, 0),
+            queue: &q,
+            running: &running,
+        };
+        let mut s = PlanSched::new(2.0, 1);
+        let l = s.schedule(&view);
+        assert_eq!(l, vec![JobId(1)]);
+    }
+
+    #[test]
+    fn memoisation_skips_unchanged_state() {
+        let q = [req(0, 8, 0, 10, 0)];
+        let running = [RunningInfo {
+            id: JobId(9),
+            req: Resources::new(90, 0),
+            expected_end: Time::from_secs(600),
+        }];
+        let mk_view = |now: u64| SchedView {
+            now: Time::from_secs(now),
+            capacity: Resources::new(96, 100),
+            free: Resources::new(6, 100),
+            queue: &q,
+            running: &running,
+        };
+        let mut s = PlanSched::new(2.0, 1);
+        assert!(s.schedule(&mk_view(60)).is_empty());
+        assert_eq!(s.invocations_planned, 1);
+        // Next tick, nothing changed: memoised.
+        assert!(s.schedule(&mk_view(120)).is_empty());
+        assert_eq!(s.invocations_memoised, 1);
+        assert_eq!(s.invocations_planned, 1);
+    }
+
+    #[test]
+    fn discrete_backend_also_launches() {
+        let q = [req(0, 2, 10, 10, 0), req(1, 2, 10, 10, 0)];
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(4, 100),
+            free: Resources::new(4, 100),
+            queue: &q,
+            running: &[],
+        };
+        let mut s = PlanSched::new(2.0, 1)
+            .with_backend(ScorerBackend::Discrete { t_slots: 128 });
+        let l = s.schedule(&view);
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn large_queue_uses_annealing_and_respects_capacity() {
+        let q: Vec<JobRequest> =
+            (0..12).map(|i| req(i, 1 + (i % 4), (i as u64 % 3) * 10, 5 + i as u64, 0)).collect();
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(8, 40),
+            free: Resources::new(8, 40),
+            queue: &q,
+            running: &[],
+        };
+        let mut s = PlanSched::new(2.0, 42);
+        let l = s.schedule(&view);
+        // Whatever launches must cumulatively fit.
+        let mut free = Resources::new(8, 40);
+        for id in &l {
+            let j = q.iter().find(|j| j.id == *id).unwrap();
+            assert!(free.fits(&j.request()));
+            free -= j.request();
+        }
+        assert!(!l.is_empty());
+        assert!(s.total_evaluations >= 189, "{}", s.total_evaluations);
+    }
+}

@@ -1,0 +1,10 @@
+//! Discrete-event simulation: the engine, the event vocabulary and the
+//! Fig-4 job execution model.
+
+pub mod events;
+pub mod jobexec;
+pub mod simulator;
+
+pub use events::{Event, EventQueue};
+pub use jobexec::{FlowKind, RunningJob};
+pub use simulator::{GanttEntry, SimConfig, SimResult, Simulator};

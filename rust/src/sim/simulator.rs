@@ -1,0 +1,668 @@
+//! The discrete-event supercomputer simulator (replaces Batsim/SimGrid).
+//!
+//! Drives the event queue, the fluid network, the cluster state and the
+//! per-job Fig-4 execution state machines, and invokes the scheduling
+//! policy on the paper's triggers: a periodic tick (default 60 s, as in
+//! the worked example of §3.1) plus job arrivals and completions.
+//!
+//! Determinism: given (workload, config, scheduler), a run is bit-for-bit
+//! reproducible — events at equal timestamps are processed FIFO and all
+//! state updates are ordered.
+
+use crate::core::job::{Job, JobId, JobRecord, JobRequest, JobState};
+
+use crate::core::time::{Duration, Time};
+use crate::platform::cluster::Cluster;
+use crate::platform::flows::FlowNetwork;
+use crate::platform::routing::Router;
+use crate::platform::topology::{Topology, TopologyConfig};
+use crate::sched::{RunningInfo, SchedView, Scheduler};
+use crate::sim::events::{Event, EventQueue};
+use crate::sim::jobexec::{stage_transfers, FlowKind, RunningJob};
+use std::collections::HashMap;
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub topo: TopologyConfig,
+    /// Total shared burst-buffer capacity in bytes.
+    pub bb_capacity: u64,
+    /// Scheduler tick period (paper: 1 minute).
+    pub tick: Duration,
+    /// Also invoke the scheduler on arrivals/completions (Batsim-style
+    /// event triggers). The §3.1 worked example only needs the tick.
+    pub event_triggers: bool,
+    /// Simulate I/O side effects (stage-in/checkpoint/drain/stage-out
+    /// through the contended network). When false, a job's runtime is
+    /// exactly its ground-truth compute time — used by scheduler unit
+    /// tests and plan-quality benches.
+    pub io_enabled: bool,
+    /// Hard stop (guards runaway configurations).
+    pub horizon: Option<Time>,
+    /// Record per-job node placements for Gantt export (Fig 3).
+    pub record_gantt: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            topo: TopologyConfig::default(),
+            bb_capacity: 0, // must be set by the caller (workload-dependent)
+            tick: Duration::from_secs(60),
+            event_triggers: true,
+            io_enabled: true,
+            horizon: None,
+            record_gantt: false,
+        }
+    }
+}
+
+/// One Gantt row: where and when a job ran.
+#[derive(Debug, Clone)]
+pub struct GanttEntry {
+    pub job: JobId,
+    pub start: Time,
+    pub finish: Time,
+    pub compute_nodes: Vec<usize>,
+}
+
+/// Everything a simulation run produces.
+#[derive(Debug)]
+pub struct SimResult {
+    pub policy: String,
+    pub records: Vec<JobRecord>,
+    pub makespan: Time,
+    pub gantt: Vec<GanttEntry>,
+    /// Number of scheduler invocations and the host wall-clock time spent
+    /// inside them (the L3 perf metric for EXPERIMENTS.md §Perf).
+    pub sched_invocations: u64,
+    pub sched_wall: std::time::Duration,
+    pub killed_jobs: u32,
+}
+
+pub struct Simulator {
+    cfg: SimConfig,
+    topo: Topology,
+    router: Router,
+    net: FlowNetwork,
+    cluster: Cluster,
+    jobs: Vec<Job>,
+    clock: Time,
+    queue: EventQueue,
+    /// Pending queue in arrival order (scheduler sees this).
+    pending: Vec<JobId>,
+    running: HashMap<JobId, RunningJob>,
+    flow_owner: HashMap<u64, (JobId, FlowKind)>,
+    records: Vec<JobRecord>,
+    gantt: Vec<GanttEntry>,
+    scheduler: Box<dyn Scheduler>,
+    arrivals_left: usize,
+    net_wake_gen: u64,
+    flows_dirty: bool,
+    gen_counter: u64,
+    sched_invocations: u64,
+    sched_wall: std::time::Duration,
+    killed: u32,
+}
+
+impl Simulator {
+    /// `jobs` need not be sorted; they are indexed by `JobId` = position
+    /// after sorting by submit time.
+    pub fn new(mut jobs: Vec<Job>, scheduler: Box<dyn Scheduler>, cfg: SimConfig) -> Simulator {
+        assert!(cfg.bb_capacity > 0 || jobs.iter().all(|j| j.bb == 0),
+            "bb_capacity must be set when jobs request burst buffers");
+        jobs.sort_by_key(|j| (j.submit, j.id.0));
+        for (i, j) in jobs.iter_mut().enumerate() {
+            j.id = JobId(i as u32);
+            j.validate().expect("invalid job");
+        }
+        let topo = Topology::build(cfg.topo.clone());
+        let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity).collect();
+        let cluster = Cluster::new(&topo, cfg.bb_capacity);
+        for j in &jobs {
+            assert!(
+                cluster.capacity().fits(&j.request()),
+                "job {} requests more than cluster capacity", j.id
+            );
+        }
+        let mut queue = EventQueue::new();
+        for j in &jobs {
+            queue.push(j.submit, Event::JobArrival(j.id));
+        }
+        queue.push(Time::ZERO, Event::SchedulerTick);
+        if let Some(h) = cfg.horizon {
+            queue.push(h, Event::Horizon);
+        }
+        let arrivals_left = jobs.len();
+        Simulator {
+            router: Router::new(&topo),
+            net: FlowNetwork::new(caps),
+            cluster,
+            topo,
+            jobs,
+            clock: Time::ZERO,
+            queue,
+            pending: Vec::new(),
+            running: HashMap::new(),
+            flow_owner: HashMap::new(),
+            records: Vec::new(),
+            gantt: Vec::new(),
+            scheduler,
+            arrivals_left,
+            net_wake_gen: 0,
+            flows_dirty: false,
+            gen_counter: 0,
+            sched_invocations: 0,
+            sched_wall: std::time::Duration::ZERO,
+            cfg,
+            killed: 0,
+        }
+    }
+
+    /// Run to completion (all jobs finished or horizon reached).
+    pub fn run(mut self) -> SimResult {
+        let mut horizon_hit = false;
+        'main: while let Some((t, first)) = self.queue.pop() {
+            debug_assert!(t >= self.clock, "event time regression");
+            self.clock = t;
+            // Drain network progress up to now; flow completions are part
+            // of this batch.
+            let mut trigger = self.drain_network();
+            // Process every event scheduled for this exact timestamp as
+            // one batch, then invoke the scheduler at most once.
+            let mut batch = vec![first];
+            while self.queue.peek_time() == Some(t) {
+                batch.push(self.queue.pop().unwrap().1);
+            }
+            for ev in batch {
+                match ev {
+                    Event::Horizon => {
+                        horizon_hit = true;
+                        break 'main;
+                    }
+                    other => trigger |= self.handle(other),
+                }
+            }
+            if trigger && !self.pending.is_empty() {
+                self.invoke_scheduler();
+            }
+            self.reschedule_network_wake();
+            if self.arrivals_left == 0 && self.pending.is_empty() && self.running.is_empty() {
+                break;
+            }
+        }
+        if horizon_hit {
+            // Kill whatever is still running so records are complete.
+            let ids: Vec<JobId> = self.running.keys().copied().collect();
+            for id in ids {
+                self.kill_job(id);
+            }
+        }
+        let makespan = self.records.iter().map(|r| r.finish).max().unwrap_or(Time::ZERO);
+        SimResult {
+            policy: self.scheduler.name().to_string(),
+            records: self.records,
+            makespan,
+            gantt: self.gantt,
+            sched_invocations: self.sched_invocations,
+            sched_wall: self.sched_wall,
+            killed_jobs: self.killed,
+        }
+    }
+
+    /// Returns true when the event is a scheduler trigger.
+    fn handle(&mut self, ev: Event) -> bool {
+        match ev {
+            Event::JobArrival(id) => {
+                self.arrivals_left -= 1;
+                self.pending.push(id);
+                self.cfg.event_triggers
+            }
+            Event::SchedulerTick => {
+                // Keep ticking while anything can still happen.
+                if self.arrivals_left > 0 || !self.pending.is_empty() || !self.running.is_empty()
+                {
+                    self.queue.push(self.clock + self.cfg.tick, Event::SchedulerTick);
+                }
+                true
+            }
+            Event::NetworkWake { gen } => {
+                // Stale wakes are ignored; fresh ones only matter because
+                // drain_network ran at the top of the batch.
+                let _ = gen == self.net_wake_gen;
+                self.cfg.event_triggers // completions may have freed resources
+            }
+            Event::ComputePhaseEnd { job, phase, gen } => self.on_phase_end(job, phase, gen),
+            Event::WalltimeKill { job, gen } => {
+                let valid = self
+                    .running
+                    .get(&job)
+                    .map(|rj| rj.gen == gen)
+                    .unwrap_or(false);
+                if valid {
+                    self.kill_job(job);
+                    self.cfg.event_triggers
+                } else {
+                    false
+                }
+            }
+            Event::Horizon => unreachable!("handled in run()"),
+        }
+    }
+
+    // ----- network ------------------------------------------------------
+
+    fn drain_network(&mut self) -> bool {
+        let done = self.net.advance_to(self.clock);
+        let mut trigger = false;
+        for flow in done {
+            if let Some((job, kind)) = self.flow_owner.remove(&flow.id) {
+                trigger |= self.on_flow_done(job, kind, flow.id);
+            }
+        }
+        trigger
+    }
+
+    fn reschedule_network_wake(&mut self) {
+        if self.flows_dirty {
+            self.flows_dirty = false;
+            self.net_wake_gen += 1;
+        }
+        if let Some(t) = self.net.next_completion() {
+            self.queue.push(t, Event::NetworkWake { gen: self.net_wake_gen });
+        }
+    }
+
+    /// Start the flows of one stage for a job. Returns the flow ids;
+    /// empty when the job has no burst-buffer request (zero-byte stages
+    /// complete instantly).
+    fn start_stage_flows(&mut self, id: JobId, kind: FlowKind) -> Vec<u64> {
+        let rj = &self.running[&id];
+        let slices: Vec<(usize, u64)> = rj
+            .alloc
+            .bb_slices
+            .iter()
+            .map(|s| (self.cluster.bb.storage_node_id(s.storage_idx), s.bytes))
+            .collect();
+        let transfers =
+            stage_transfers(kind, &rj.alloc.compute_nodes, &slices, self.topo.pfs_node);
+        let mut ids = Vec::with_capacity(transfers.len());
+        for (src, dst, bytes) in transfers {
+            let route = self.router.route(&self.topo, src, dst);
+            let fid = self.net.add_flow(route, bytes as f64, id.0 as u64);
+            self.flow_owner.insert(fid, (id, kind));
+            ids.push(fid);
+        }
+        if !ids.is_empty() {
+            self.flows_dirty = true;
+        }
+        ids
+    }
+
+    // ----- job lifecycle --------------------------------------------------
+
+    fn launch(&mut self, id: JobId) {
+        let job = self.jobs[id.0 as usize].clone();
+        let req = job.request();
+        let alloc = self
+            .cluster
+            .allocate(id, &req)
+            .unwrap_or_else(|| panic!("scheduler launched {id} without resources"))
+            .clone();
+        self.gen_counter += 1;
+        let gen = self.gen_counter;
+        let rj = RunningJob::new(job.clone(), alloc, self.clock, gen);
+        // One microsecond of grace so a job finishing exactly at its
+        // walltime (perfect estimate, no I/O) completes rather than dies:
+        // the kill event would otherwise win the FIFO tie.
+        self.queue
+            .push(rj.kill_time() + Duration(1), Event::WalltimeKill { job: id, gen });
+        self.running.insert(id, rj);
+
+        if self.cfg.io_enabled && job.bb > 0 {
+            let flows = self.start_stage_flows(id, FlowKind::StageIn);
+            debug_assert!(!flows.is_empty());
+            let rj = self.running.get_mut(&id).unwrap();
+            rj.state = JobState::StageIn;
+            rj.gating_flows = flows;
+        } else if self.cfg.io_enabled {
+            // No burst buffer: straight to compute.
+            self.begin_compute_phase(id, 0);
+        } else {
+            // I/O disabled: one lumped compute interval.
+            let end = self.clock + job.compute_time;
+            let rj = self.running.get_mut(&id).unwrap();
+            rj.state = JobState::Compute { phase: job.phases - 1 };
+            self.queue.push(end, Event::ComputePhaseEnd {
+                job: id,
+                phase: job.phases - 1,
+                gen,
+            });
+        }
+    }
+
+    fn begin_compute_phase(&mut self, id: JobId, phase: u32) {
+        let rj = self.running.get_mut(&id).unwrap();
+        rj.state = JobState::Compute { phase };
+        let end = self.clock + rj.phase_duration(phase);
+        let gen = rj.gen;
+        self.queue.push(end, Event::ComputePhaseEnd { job: id, phase, gen });
+    }
+
+    fn on_phase_end(&mut self, id: JobId, phase: u32, gen: u64) -> bool {
+        let Some(rj) = self.running.get(&id) else { return false };
+        if rj.gen != gen || rj.state != (JobState::Compute { phase }) {
+            return false; // stale
+        }
+        let last = rj.is_last_phase(phase);
+        let has_bb = rj.job.bb > 0 && self.cfg.io_enabled;
+        if last {
+            if has_bb {
+                let flows = self.start_stage_flows(id, FlowKind::StageOut);
+                let rj = self.running.get_mut(&id).unwrap();
+                rj.state = JobState::StageOut;
+                if flows.is_empty() {
+                    rj.stage_out_done = true;
+                    if rj.is_complete() {
+                        return self.complete_job(id);
+                    }
+                } else {
+                    rj.gating_flows = flows;
+                }
+                false
+            } else {
+                self.complete_job(id)
+            }
+        } else if has_bb {
+            // Checkpoint: computation suspends until it completes.
+            let flows = self.start_stage_flows(id, FlowKind::Checkpoint);
+            let rj = self.running.get_mut(&id).unwrap();
+            rj.state = JobState::Checkpoint { phase };
+            if flows.is_empty() {
+                self.begin_compute_phase(id, phase + 1);
+            } else {
+                rj.gating_flows = flows;
+            }
+            false
+        } else {
+            self.begin_compute_phase(id, phase + 1);
+            false
+        }
+    }
+
+    fn on_flow_done(&mut self, id: JobId, kind: FlowKind, flow: u64) -> bool {
+        let Some(rj) = self.running.get_mut(&id) else { return false };
+        match kind {
+            FlowKind::StageIn => {
+                if rj.gating_flow_done(flow) {
+                    self.begin_compute_phase(id, 0);
+                }
+                false
+            }
+            FlowKind::Checkpoint => {
+                if rj.gating_flow_done(flow) {
+                    let JobState::Checkpoint { phase } = rj.state else {
+                        unreachable!("checkpoint flow outside checkpoint state")
+                    };
+                    // Async drain starts now; next compute phase runs
+                    // concurrently with it (Fig 4).
+                    let drains = self.start_stage_flows(id, FlowKind::Drain);
+                    let rj = self.running.get_mut(&id).unwrap();
+                    rj.drain_flows.extend(drains);
+                    self.begin_compute_phase(id, phase + 1);
+                }
+                false
+            }
+            FlowKind::StageOut => {
+                if rj.gating_flow_done(flow) {
+                    rj.stage_out_done = true;
+                    if rj.is_complete() {
+                        return self.complete_job(id);
+                    }
+                }
+                false
+            }
+            FlowKind::Drain => {
+                rj.drain_flow_done(flow);
+                if rj.is_complete() {
+                    return self.complete_job(id);
+                }
+                false
+            }
+        }
+    }
+
+    fn complete_job(&mut self, id: JobId) -> bool {
+        let rj = self.running.remove(&id).unwrap();
+        debug_assert!(rj.all_flow_ids().is_empty());
+        self.record(&rj, false);
+        self.cluster.release(id);
+        self.cfg.event_triggers
+    }
+
+    fn kill_job(&mut self, id: JobId) {
+        let rj = self.running.remove(&id).unwrap();
+        for fid in rj.all_flow_ids() {
+            self.net.remove_flow(fid);
+            self.flow_owner.remove(&fid);
+            self.flows_dirty = true;
+        }
+        self.record(&rj, true);
+        self.cluster.release(id);
+        self.killed += 1;
+    }
+
+    fn record(&mut self, rj: &RunningJob, killed: bool) {
+        self.records.push(JobRecord {
+            id: rj.job.id,
+            submit: rj.job.submit,
+            start: rj.start,
+            finish: self.clock,
+            walltime: rj.job.walltime,
+            procs: rj.job.procs,
+            bb: rj.job.bb,
+            killed,
+        });
+        if self.cfg.record_gantt {
+            self.gantt.push(GanttEntry {
+                job: rj.job.id,
+                start: rj.start,
+                finish: self.clock,
+                compute_nodes: rj.alloc.compute_nodes.clone(),
+            });
+        }
+    }
+
+    // ----- scheduling ----------------------------------------------------
+
+    fn invoke_scheduler(&mut self) {
+        let queue: Vec<JobRequest> = self
+            .pending
+            .iter()
+            .map(|&id| self.jobs[id.0 as usize].as_request())
+            .collect();
+        let mut running: Vec<RunningInfo> = self
+            .running
+            .values()
+            .map(|rj| RunningInfo {
+                id: rj.job.id,
+                req: rj.job.request(),
+                expected_end: rj.kill_time(),
+            })
+            .collect();
+        running.sort_by_key(|r| r.id);
+        let view = SchedView {
+            now: self.clock,
+            capacity: self.cluster.capacity(),
+            free: self.cluster.free(),
+            queue: &queue,
+            running: &running,
+        };
+        let t0 = std::time::Instant::now();
+        let launches = self.scheduler.schedule(&view);
+        self.sched_wall += t0.elapsed();
+        self.sched_invocations += 1;
+        for id in launches {
+            let pos = self
+                .pending
+                .iter()
+                .position(|&p| p == id)
+                .unwrap_or_else(|| panic!("scheduler launched non-pending {id}"));
+            let req = self.jobs[id.0 as usize].request();
+            assert!(
+                self.cluster.fits_now(&req),
+                "scheduler over-committed: {id} needs {req} but only {} free",
+                self.cluster.free()
+            );
+            self.pending.remove(pos);
+            self.launch(id);
+        }
+    }
+
+    /// Test/diagnostic hooks.
+    pub fn clock(&self) -> Time {
+        self.clock
+    }
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+    pub fn n_pending(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::fcfs::Fcfs;
+    use crate::core::resources::TIB;
+
+    fn mk_job(id: u32, submit_s: u64, runtime_s: u64, procs: u32, bb: u64) -> Job {
+        Job {
+            id: JobId(id),
+            submit: Time::from_secs(submit_s),
+            walltime: Duration::from_secs(runtime_s * 4 + 3600),
+            compute_time: Duration::from_secs(runtime_s),
+            procs,
+            bb,
+            phases: 2,
+        }
+    }
+
+    fn cfg(bb: u64) -> SimConfig {
+        SimConfig { bb_capacity: bb, ..SimConfig::default() }
+    }
+
+    #[test]
+    fn empty_workload_terminates() {
+        let sim = Simulator::new(vec![], Box::new(Fcfs::new()), cfg(TIB));
+        let res = sim.run();
+        assert!(res.records.is_empty());
+        assert_eq!(res.makespan, Time::ZERO);
+    }
+
+    #[test]
+    fn single_job_runs_and_completes_with_io() {
+        let jobs = vec![mk_job(0, 0, 600, 4, 10 * (1 << 30))];
+        let res = Simulator::new(jobs, Box::new(Fcfs::new()), cfg(TIB)).run();
+        assert_eq!(res.records.len(), 1);
+        let r = res.records[0];
+        assert!(!r.killed);
+        assert_eq!(r.start, Time::ZERO);
+        // Runtime must exceed pure compute time (stage-in + checkpoint +
+        // stage-out all move 10 GiB through the network).
+        assert!(r.runtime() > Duration::from_secs(600), "runtime {}", r.runtime());
+        // ... but not absurdly (plenty of bandwidth for one job).
+        assert!(r.runtime() < Duration::from_secs(700), "runtime {}", r.runtime());
+    }
+
+    #[test]
+    fn io_disabled_runtime_is_exact() {
+        let jobs = vec![mk_job(0, 0, 600, 4, 1 << 30)];
+        let mut c = cfg(TIB);
+        c.io_enabled = false;
+        let res = Simulator::new(jobs, Box::new(Fcfs::new()), c).run();
+        assert_eq!(res.records[0].runtime(), Duration::from_secs(600));
+    }
+
+    #[test]
+    fn zero_bb_job_skips_staging() {
+        let jobs = vec![mk_job(0, 0, 300, 2, 0)];
+        let res = Simulator::new(jobs, Box::new(Fcfs::new()), cfg(TIB)).run();
+        assert_eq!(res.records[0].runtime(), Duration::from_secs(300));
+    }
+
+    #[test]
+    fn fcfs_serialises_conflicting_jobs() {
+        // Two jobs each needing 60 cpus: cannot overlap on 96.
+        let jobs = vec![
+            mk_job(0, 0, 600, 60, 0),
+            mk_job(1, 0, 600, 60, 0),
+        ];
+        let mut c = cfg(TIB);
+        c.io_enabled = false;
+        let res = Simulator::new(jobs, Box::new(Fcfs::new()), c).run();
+        let (a, b) = (res.records[0], res.records[1]);
+        assert_eq!(a.start, Time::ZERO);
+        assert!(b.start >= a.finish, "b must wait for a");
+    }
+
+    #[test]
+    fn bb_contention_serialises_even_with_free_cpus() {
+        // Plenty of CPUs but BB capacity only fits one job at a time.
+        let jobs = vec![
+            mk_job(0, 0, 600, 4, 800 * (1 << 30)),
+            mk_job(1, 0, 600, 4, 800 * (1 << 30)),
+        ];
+        let res =
+            Simulator::new(jobs, Box::new(Fcfs::new()), cfg(1000 * (1 << 30))).run();
+        let (a, b) = (res.records[0], res.records[1]);
+        assert!(b.start >= a.finish, "bb must serialise: {:?} {:?}", a, b);
+    }
+
+    #[test]
+    fn walltime_kill_fires() {
+        let mut j = mk_job(0, 0, 600, 4, 0);
+        j.walltime = Duration::from_secs(100); // far below compute time
+        let res = Simulator::new(vec![j], Box::new(Fcfs::new()), cfg(TIB)).run();
+        assert_eq!(res.killed_jobs, 1);
+        let r = res.records[0];
+        assert!(r.killed);
+        // Killed at walltime + the 1 microsecond completion-tie grace.
+        assert_eq!(r.runtime(), Duration::from_secs(100) + Duration(1));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let jobs: Vec<Job> = (0..20)
+            .map(|i| mk_job(i, (i as u64) * 30, 300 + (i as u64 * 37) % 400, 1 + (i % 8), ((i as u64 % 5) + 1) * (1 << 30)))
+            .collect();
+        let r1 = Simulator::new(jobs.clone(), Box::new(Fcfs::new()), cfg(8 * (1 << 30) * 4)).run();
+        let r2 = Simulator::new(jobs, Box::new(Fcfs::new()), cfg(8 * (1 << 30) * 4)).run();
+        assert_eq!(r1.records.len(), r2.records.len());
+        for (a, b) in r1.records.iter().zip(&r2.records) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn gantt_recording() {
+        let jobs = vec![mk_job(0, 0, 60, 3, 0)];
+        let mut c = cfg(TIB);
+        c.record_gantt = true;
+        let res = Simulator::new(jobs, Box::new(Fcfs::new()), c).run();
+        assert_eq!(res.gantt.len(), 1);
+        assert_eq!(res.gantt[0].compute_nodes.len(), 3);
+    }
+
+    #[test]
+    fn horizon_kills_stragglers() {
+        let jobs = vec![mk_job(0, 0, 10_000, 4, 0)];
+        let mut c = cfg(TIB);
+        c.horizon = Some(Time::from_secs(500));
+        let res = Simulator::new(jobs, Box::new(Fcfs::new()), c).run();
+        assert_eq!(res.records.len(), 1);
+        assert!(res.records[0].killed);
+        assert!(res.makespan <= Time::from_secs(500));
+    }
+}

@@ -1,0 +1,164 @@
+//! Descriptive statistics used by the metrics layer: means, confidence
+//! intervals, quantiles, and letter values (the paper's Figs 7–8 are
+//! letter-value "boxen" plots).
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation; 0.0 for n < 2.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let ss: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum();
+    (ss / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Half-width of the 95% normal-approximation confidence interval on the
+/// mean (the paper's small black bars in Figs 5–6).
+pub fn ci95_half_width(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    1.96 * stddev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolation quantile (type 7, matching numpy's default).
+/// `q` in [0, 1]. Input need not be sorted.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// Quantile on already-sorted data.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// One letter-value level: the pair of lower/upper quantiles at depth
+/// 2^-(k+1) (k=0 is the median reported once).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LetterValue {
+    /// Level name index: 0=M(edian), 1=F(ourths), 2=E(ighths), ...
+    pub level: u32,
+    pub lower: f64,
+    pub upper: f64,
+}
+
+/// Letter-value summary (Hofmann, Wickham & Kafadar 2017): median,
+/// fourths, eighths, ... down to levels still estimated from enough data
+/// (stop when fewer than `min_tail` points lie beyond the level).
+pub fn letter_values(xs: &[f64], min_tail: usize) -> Vec<LetterValue> {
+    if xs.is_empty() {
+        return vec![];
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let med = quantile_sorted(&sorted, 0.5);
+    let mut out = vec![LetterValue { level: 0, lower: med, upper: med }];
+    let mut depth = 0.25f64; // fourths
+    let mut level = 1;
+    while depth * n as f64 >= min_tail as f64 && level <= 16 {
+        out.push(LetterValue {
+            level,
+            lower: quantile_sorted(&sorted, depth),
+            upper: quantile_sorted(&sorted, 1.0 - depth),
+        });
+        depth /= 2.0;
+        level += 1;
+    }
+    out
+}
+
+/// The canonical letter-value level names used in plots.
+pub fn letter_name(level: u32) -> String {
+    const NAMES: [&str; 9] = ["M", "F", "E", "D", "C", "B", "A", "Z", "Y"];
+    if (level as usize) < NAMES.len() {
+        NAMES[level as usize].to_string()
+    } else {
+        format!("L{level}")
+    }
+}
+
+/// Top-`k` largest values, descending (the paper's Figs 9–10 tail plots
+/// show the 3000 highest waiting times / slowdowns per policy).
+pub fn top_k_desc(xs: &[f64], k: usize) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    v.truncate(k);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.13809).abs() < 1e-4);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn quantiles_match_numpy_type7() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn letter_values_shrink_with_depth() {
+        let xs: Vec<f64> = (0..1024).map(|i| i as f64).collect();
+        let lv = letter_values(&xs, 8);
+        assert_eq!(lv[0].level, 0);
+        assert!((lv[0].lower - 511.5).abs() < 1e-9);
+        // Each deeper level widens the covered range.
+        for w in lv.windows(2) {
+            assert!(w[1].lower <= w[0].lower);
+            assert!(w[1].upper >= w[0].upper);
+        }
+        // 1024 points, min_tail 8 => depth down to 8/1024 = 2^-7 (level 6).
+        assert_eq!(lv.last().unwrap().level, 6);
+        assert_eq!(letter_name(0), "M");
+        assert_eq!(letter_name(2), "E");
+    }
+
+    #[test]
+    fn ci_is_zero_for_singletons_and_positive_otherwise() {
+        assert_eq!(ci95_half_width(&[3.0]), 0.0);
+        assert!(ci95_half_width(&[1.0, 2.0, 3.0]) > 0.0);
+    }
+
+    #[test]
+    fn top_k() {
+        let xs = [5.0, 1.0, 9.0, 3.0];
+        assert_eq!(top_k_desc(&xs, 2), vec![9.0, 5.0]);
+        assert_eq!(top_k_desc(&xs, 10).len(), 4);
+    }
+}

@@ -1,0 +1,86 @@
+//! Kolmogorov–Smirnov goodness-of-fit test (one-sample), used to validate
+//! the fitted log-normal burst-buffer model exactly as the paper does
+//! ("validated the quality of fitting with ... Kolmogorov-Smirnov
+//! D-statistic test").
+
+/// One-sample KS D-statistic of `samples` against a CDF.
+pub fn ks_statistic<F: Fn(f64) -> f64>(samples: &[f64], cdf: F) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in v.iter().enumerate() {
+        let f = cdf(x).clamp(0.0, 1.0);
+        let d_plus = (i as f64 + 1.0) / n - f;
+        let d_minus = f - i as f64 / n;
+        d = d.max(d_plus).max(d_minus);
+    }
+    d
+}
+
+/// Asymptotic p-value for the KS statistic (Kolmogorov distribution,
+/// Marsaglia–Tsang–Wang series truncation).
+pub fn ks_p_value(d: f64, n: usize) -> f64 {
+    if n == 0 || d <= 0.0 {
+        return 1.0;
+    }
+    let sqrt_n = (n as f64).sqrt();
+    let lambda = (sqrt_n + 0.12 + 0.11 / sqrt_n) * d;
+    // P = 2 * sum_{k>=1} (-1)^{k-1} exp(-2 k^2 lambda^2)
+    let mut p = 0.0;
+    let mut sign = 1.0;
+    for k in 1..=100 {
+        let term = (-2.0 * (k as f64).powi(2) * lambda * lambda).exp();
+        p += sign * term;
+        sign = -sign;
+        if term < 1e-12 {
+            break;
+        }
+    }
+    (2.0 * p).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::fit::LogNormal;
+    use crate::stats::rng::Pcg32;
+
+    #[test]
+    fn matching_distribution_passes() {
+        let mut r = Pcg32::seeded(3);
+        let samples: Vec<f64> = (0..4000).map(|_| r.lognormal(1.0, 0.5)).collect();
+        let model = LogNormal { mu: 1.0, sigma: 0.5 };
+        let d = ks_statistic(&samples, |x| model.cdf(x));
+        let p = ks_p_value(d, samples.len());
+        assert!(d < 0.03, "D = {d}");
+        assert!(p > 0.05, "p = {p}");
+    }
+
+    #[test]
+    fn wrong_distribution_fails() {
+        let mut r = Pcg32::seeded(4);
+        let samples: Vec<f64> = (0..4000).map(|_| r.exponential(1.0)).collect();
+        let model = LogNormal { mu: 1.0, sigma: 0.5 };
+        let d = ks_statistic(&samples, |x| model.cdf(x));
+        assert!(d > 0.2, "D = {d}");
+        assert!(ks_p_value(d, samples.len()) < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(ks_statistic(&[], |_| 0.5), 0.0);
+        assert_eq!(ks_p_value(0.0, 10), 1.0);
+        assert_eq!(ks_p_value(0.5, 0), 1.0);
+    }
+
+    #[test]
+    fn uniform_exact_small_case() {
+        // Single sample at 0.5 against U(0,1): D = 0.5.
+        let d = ks_statistic(&[0.5], |x| x.clamp(0.0, 1.0));
+        assert!((d - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! Statistics substrate: deterministic RNG + distributions, descriptive
+//! statistics, distribution fitting and goodness-of-fit tests.
+//!
+//! Implemented in-tree because the offline build environment ships no
+//! `rand`/`statrs`; these modules are first-class substrates with their
+//! own test suites.
+
+pub mod descriptive;
+pub mod fit;
+pub mod ks;
+pub mod rng;
+
+pub use descriptive::{ci95_half_width, letter_name, letter_values, mean, quantile, stddev};
+pub use fit::{cross_validate_lognormal, LogNormal, Normal};
+pub use ks::{ks_p_value, ks_statistic};
+pub use rng::Pcg32;

@@ -1,0 +1,13 @@
+//! Workload models: SWF log ingestion, the KTH-SP2 statistical twin
+//! generator, the log-normal burst-buffer request model, and the
+//! 16-part splitter for the robustness figures.
+
+pub mod bbmodel;
+pub mod split;
+pub mod swf;
+pub mod synth;
+
+pub use bbmodel::BbModel;
+pub use split::split_workload;
+pub use swf::{parse_swf, records_to_jobs, SwfConvert, SwfRecord};
+pub use synth::{generate, SynthConfig};

@@ -1,0 +1,75 @@
+//! Workload splitting for the paper's robustness analysis (Figs 11-12):
+//! "we split the workload into 16 non-overlapping, three-week-long
+//! parts", simulate each part independently, and normalise each policy's
+//! per-part averages by the sjf-bb reference.
+
+use crate::core::job::{Job, JobId};
+use crate::core::time::{Duration, Time};
+
+/// Split `jobs` (sorted by submit) into `n_parts` consecutive windows of
+/// `part_weeks` weeks each, re-zeroing submit times inside every part.
+/// Jobs past the last window are dropped (mirrors the paper's fixed
+/// 16 x 3 weeks over an ~48-week trace).
+pub fn split_workload(jobs: &[Job], n_parts: usize, part_weeks: f64) -> Vec<Vec<Job>> {
+    let part_span = Duration::from_secs_f64(part_weeks * 7.0 * 24.0 * 3600.0);
+    let mut parts: Vec<Vec<Job>> = vec![Vec::new(); n_parts];
+    for j in jobs {
+        let idx = (j.submit.0 / part_span.0.max(1)) as usize;
+        if idx >= n_parts {
+            continue;
+        }
+        let part_start = Time(part_span.0 * idx as u64);
+        let mut job = j.clone();
+        job.submit = Time(j.submit.0 - part_start.0);
+        job.id = JobId(parts[idx].len() as u32);
+        parts[idx].push(job);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(submit_s: u64) -> Job {
+        Job {
+            id: JobId(0),
+            submit: Time::from_secs(submit_s),
+            walltime: Duration::from_mins(10),
+            compute_time: Duration::from_mins(5),
+            procs: 1,
+            bb: 1,
+            phases: 1,
+        }
+    }
+
+    #[test]
+    fn assigns_and_rezeroes() {
+        let week = 7 * 24 * 3600;
+        let jobs = vec![job(0), job(week), job(3 * week + 5), job(6 * week + 1)];
+        let parts = split_workload(&jobs, 2, 3.0);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].len(), 2);
+        assert_eq!(parts[1].len(), 1); // the 6-week job is dropped
+        assert_eq!(parts[1][0].submit, Time::from_secs(5));
+        // Ids re-assigned densely within a part.
+        assert_eq!(parts[0][1].id, JobId(1));
+    }
+
+    #[test]
+    fn paper_shape_16x3() {
+        // 48 weeks of one job per week -> 16 parts x 3 jobs.
+        let week = 7 * 24 * 3600;
+        let jobs: Vec<Job> = (0..48).map(|w| job(w * week + 10)).collect();
+        let parts = split_workload(&jobs, 16, 3.0);
+        assert_eq!(parts.len(), 16);
+        assert!(parts.iter().all(|p| p.len() == 3));
+    }
+
+    #[test]
+    fn empty_input() {
+        let parts = split_workload(&[], 16, 3.0);
+        assert_eq!(parts.len(), 16);
+        assert!(parts.iter().all(|p| p.is_empty()));
+    }
+}

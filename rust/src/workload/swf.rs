@@ -1,0 +1,190 @@
+//! Parser for the Standard Workload Format (SWF) of the Parallel
+//! Workloads Archive (Feitelson et al.), so the real KTH-SP2-1996-2.1-cln
+//! log can be dropped into the pipeline unchanged when available. Jobs
+//! missing a memory column get burst-buffer requests from the
+//! [`crate::workload::bbmodel::BbModel`].
+
+use crate::core::job::{Job, JobId};
+use crate::core::time::{Duration, Time};
+use crate::stats::rng::Pcg32;
+use crate::workload::bbmodel::BbModel;
+
+/// One raw SWF record (the 18 standard fields we care about).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwfRecord {
+    pub job_id: i64,
+    pub submit: i64,
+    pub wait: i64,
+    pub run: i64,
+    pub procs_alloc: i64,
+    pub mem_used_kb: i64,
+    pub procs_req: i64,
+    pub walltime_req: i64,
+    pub mem_req_kb: i64,
+    pub status: i64,
+}
+
+/// Parse SWF text. Lines starting with `;` are header comments. Returns
+/// records in file order, skipping malformed lines (counted).
+pub fn parse_swf(text: &str) -> (Vec<SwfRecord>, usize) {
+    let mut records = Vec::new();
+    let mut skipped = 0;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with(';') {
+            continue;
+        }
+        let f: Vec<i64> = line
+            .split_whitespace()
+            .map(|t| t.parse::<f64>().map(|v| v as i64).unwrap_or(-1))
+            .collect();
+        if f.len() < 11 {
+            skipped += 1;
+            continue;
+        }
+        records.push(SwfRecord {
+            job_id: f[0],
+            submit: f[1],
+            wait: f[2],
+            run: f[3],
+            procs_alloc: f[4],
+            mem_used_kb: f[6],
+            procs_req: f[7],
+            walltime_req: f[8],
+            mem_req_kb: f[9],
+            status: f[10],
+        });
+    }
+    (records, skipped)
+}
+
+/// Options controlling the SWF -> [`Job`] conversion.
+#[derive(Debug, Clone)]
+pub struct SwfConvert {
+    /// Machine size to clamp processor requests to (paper: 96).
+    pub max_procs: u32,
+    /// Floor on walltime relative to runtime so the I/O stretching of the
+    /// Fig-4 model does not mass-kill jobs with exact estimates.
+    pub walltime_factor_min: f64,
+    /// Maximum total burst-buffer request per job (typically a fraction
+    /// of capacity so every job remains schedulable).
+    pub max_bb_total: u64,
+    /// Burst-buffer model for logs without a usable memory column.
+    pub bb_model: BbModel,
+    pub seed: u64,
+}
+
+/// Convert records to simulator jobs: extract submit/walltime/processors
+/// (the paper's fields), use runtime as ground-truth compute time, fill
+/// burst buffers from the memory column when present, else sample.
+pub fn records_to_jobs(records: &[SwfRecord], opt: &SwfConvert) -> Vec<Job> {
+    let mut rng = Pcg32::seeded(opt.seed);
+    let mut jobs = Vec::with_capacity(records.len());
+    let t0 = records.iter().map(|r| r.submit).filter(|&s| s >= 0).min().unwrap_or(0);
+    for r in records {
+        let run = r.run.max(0);
+        if run == 0 {
+            continue; // cancelled before start
+        }
+        let procs = r.procs_req.max(r.procs_alloc).max(1).min(opt.max_procs as i64) as u32;
+        let submit = Time::from_secs((r.submit - t0).max(0) as u64);
+        let compute = Duration::from_secs(run as u64);
+        let wall_req = if r.walltime_req > 0 { r.walltime_req } else { run };
+        let wall = Duration::from_secs(wall_req.max(run) as u64)
+            .max(compute.mul_f64(opt.walltime_factor_min));
+        // Memory column is per processor in KB in SWF.
+        let bb = if r.mem_req_kb > 0 || r.mem_used_kb > 0 {
+            let per_proc_b = r.mem_req_kb.max(r.mem_used_kb) as u64 * 1024;
+            (per_proc_b * procs as u64).min(opt.max_bb_total)
+        } else {
+            opt.bb_model.sample(&mut rng, procs, opt.max_bb_total)
+        };
+        let phases = 1 + rng.below(10);
+        jobs.push(Job {
+            id: JobId(jobs.len() as u32),
+            submit,
+            walltime: wall,
+            compute_time: compute,
+            procs,
+            bb,
+            phases,
+        });
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+; Version: 2.2
+; Computer: IBM SP2
+; the paper's log: KTH-SP2-1996-2.1-cln
+1 0 10 300 4 -1 2048 4 600 2048 1 1 1 -1 -1 -1 -1 -1
+2 60 0 100 8 -1 -1 8 200 -1 1 2 1 -1 -1 -1 -1 -1
+3 120 5 0 1 -1 -1 1 100 -1 5 3 1 -1 -1 -1 -1 -1
+bad line
+4 180 0 50 200 -1 -1 200 100 -1 1 4 1 -1 -1 -1 -1 -1
+";
+
+    fn opts() -> SwfConvert {
+        SwfConvert {
+            max_procs: 96,
+            walltime_factor_min: 1.25,
+            max_bb_total: 1 << 40,
+            bb_model: BbModel::default(),
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn parses_and_skips_malformed() {
+        let (recs, skipped) = parse_swf(SAMPLE);
+        assert_eq!(recs.len(), 4);
+        assert_eq!(skipped, 1);
+        assert_eq!(recs[0].procs_req, 4);
+        assert_eq!(recs[0].mem_req_kb, 2048);
+        assert_eq!(recs[1].walltime_req, 200);
+    }
+
+    #[test]
+    fn conversion_drops_zero_runtime_and_clamps() {
+        let (recs, _) = parse_swf(SAMPLE);
+        let jobs = records_to_jobs(&recs, &opts());
+        // Job 3 (run=0) dropped.
+        assert_eq!(jobs.len(), 3);
+        // Job 4's 200 procs clamped to 96.
+        assert_eq!(jobs[2].procs, 96);
+        // Submit times re-zeroed to the first record.
+        assert_eq!(jobs[0].submit, Time::ZERO);
+        assert_eq!(jobs[1].submit, Time::from_secs(60));
+    }
+
+    #[test]
+    fn memory_column_becomes_bb_when_present() {
+        let (recs, _) = parse_swf(SAMPLE);
+        let jobs = records_to_jobs(&recs, &opts());
+        // Job 1: 2048 KB/proc * 4 procs = 8 MiB.
+        assert_eq!(jobs[0].bb, 2048 * 1024 * 4);
+        // Job 2 has no memory column: sampled, non-zero.
+        assert!(jobs[1].bb > 0);
+    }
+
+    #[test]
+    fn walltime_floor_applies() {
+        let (recs, _) = parse_swf(SAMPLE);
+        let jobs = records_to_jobs(&recs, &opts());
+        for j in &jobs {
+            assert!(j.walltime.as_secs_f64() >= j.compute_time.as_secs_f64() * 1.25 - 1e-6);
+        }
+    }
+
+    #[test]
+    fn deterministic_sampling() {
+        let (recs, _) = parse_swf(SAMPLE);
+        let a = records_to_jobs(&recs, &opts());
+        let b = records_to_jobs(&recs, &opts());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,99 @@
+//! Bit-exact regression of the §3.1 worked example (Table 1, Figs 1-2)
+//! under this implementation's documented semantics (see
+//! examples/paper_example.rs for the narrated version).
+
+use bbsched::core::job::{Job, JobId, JobRecord};
+use bbsched::core::resources::TIB;
+use bbsched::core::time::{Duration, Time};
+use bbsched::coordinator::{run_policy, PlanBackendKind};
+use bbsched::platform::topology::TopologyConfig;
+use bbsched::sched::Policy;
+use bbsched::sim::simulator::SimConfig;
+
+const TABLE1: [(u64, u64, u32, u64); 8] = [
+    (0, 10, 1, 4),
+    (0, 4, 1, 2),
+    (1, 1, 3, 8),
+    (2, 3, 2, 4),
+    (3, 1, 3, 4),
+    (3, 1, 2, 2),
+    (4, 5, 1, 2),
+    (4, 3, 2, 4),
+];
+
+fn jobs() -> Vec<Job> {
+    TABLE1
+        .iter()
+        .enumerate()
+        .map(|(i, &(submit_m, runtime_m, cpus, bb_tb))| Job {
+            id: JobId(i as u32),
+            submit: Time::from_secs(submit_m * 60),
+            walltime: Duration::from_mins(runtime_m),
+            compute_time: Duration::from_mins(runtime_m),
+            procs: cpus,
+            bb: bb_tb * TIB,
+            phases: 1,
+        })
+        .collect()
+}
+
+fn cfg() -> SimConfig {
+    SimConfig {
+        topo: TopologyConfig {
+            groups: 1,
+            chassis_per_group: 1,
+            routers_per_chassis: 1,
+            nodes_per_router: 5,
+            storage_per_chassis: 1,
+            ..TopologyConfig::default()
+        },
+        bb_capacity: 10 * TIB,
+        io_enabled: false,
+        ..SimConfig::default()
+    }
+}
+
+fn starts_minutes(policy: Policy) -> Vec<f64> {
+    let res = run_policy(jobs(), policy, &cfg(), 1, PlanBackendKind::Exact);
+    let mut recs: Vec<JobRecord> = res.records;
+    recs.sort_by_key(|r| r.id);
+    recs.iter().map(|r| r.start.as_secs_f64() / 60.0).collect()
+}
+
+#[test]
+fn fig1_fcfs_easy_schedule() {
+    // Jobs 1..8 start at: 0, 0, 10, 11, 14, 3, 10, 15 (derived in
+    // examples/paper_example.rs; job 3 is the barrier of Fig 1).
+    assert_eq!(starts_minutes(Policy::FcfsEasy), vec![0.0, 0.0, 10.0, 11.0, 14.0, 3.0, 10.0, 15.0]);
+}
+
+#[test]
+fn fig2_fcfs_bb_schedule() {
+    // With burst-buffer reservations: 0, 0, 10, 2, 9, 5, 4, 6 — job 4
+    // starts at submission; everything backfills around job 3's (10,11)
+    // reservation.
+    assert_eq!(starts_minutes(Policy::FcfsBb), vec![0.0, 0.0, 10.0, 2.0, 9.0, 5.0, 4.0, 6.0]);
+}
+
+#[test]
+fn fcfs_baseline_is_worst() {
+    // Plain FCFS stalls everything behind job 3 until t=10.
+    let starts = starts_minutes(Policy::Fcfs);
+    assert_eq!(starts[0], 0.0);
+    assert_eq!(starts[1], 0.0);
+    assert_eq!(starts[2], 10.0);
+    for (i, s) in starts.iter().enumerate().skip(3) {
+        assert!(*s >= 10.0, "job {} started at {s} before the barrier lifted", i + 1);
+    }
+}
+
+#[test]
+fn plan_based_matches_or_beats_fcfs_bb_on_example() {
+    let total = |p: Policy| -> f64 {
+        let res = run_policy(jobs(), p, &cfg(), 1, PlanBackendKind::Exact);
+        res.records.iter().map(|r| r.waiting().as_secs_f64()).sum()
+    };
+    let bb = total(Policy::FcfsBb);
+    let plan = total(Policy::Plan(2));
+    assert!(plan <= bb * 1.001, "plan-2 total wait {plan} vs fcfs-bb {bb}");
+}

@@ -1,0 +1,244 @@
+//! Property-based tests over the scheduling substrates.
+//!
+//! The offline build ships no proptest crate, so properties are checked
+//! with an in-tree harness: a seeded generator produces hundreds of
+//! random cases per property; any failure reports its seed so the case
+//! replays deterministically (set `BBSCHED_PROP_SEED` to rerun one).
+
+use bbsched::core::job::JobId;
+use bbsched::core::resources::Resources;
+use bbsched::core::time::{Duration, Time};
+use bbsched::platform::flows::FlowNetwork;
+use bbsched::sched::plan::annealing::{optimise, PermScorer, SaParams};
+use bbsched::sched::plan::builder::{build_plan, PlanJob};
+use bbsched::sched::plan::candidates::initial_candidates;
+use bbsched::sched::plan::profile::Profile;
+use bbsched::sched::plan::scorer::{DiscreteProblem, ExactScorer, NativeDiscreteScorer};
+use bbsched::stats::rng::Pcg32;
+
+const CASES: u64 = 200;
+
+fn seeds() -> Vec<u64> {
+    if let Ok(s) = std::env::var("BBSCHED_PROP_SEED") {
+        return vec![s.parse().unwrap()];
+    }
+    (0..CASES).collect()
+}
+
+fn random_jobs(rng: &mut Pcg32, capacity: Resources, n: usize) -> Vec<PlanJob> {
+    (0..n)
+        .map(|i| PlanJob {
+            id: JobId(i as u32),
+            req: Resources::new(
+                1 + rng.below(capacity.cpu),
+                (rng.next_u64() % (capacity.bb + 1)).min(capacity.bb),
+            ),
+            walltime: Duration::from_secs(1 + rng.below(10_000) as u64),
+            submit: Time::from_secs(rng.below(5_000) as u64),
+        })
+        .collect()
+}
+
+fn random_profile(rng: &mut Pcg32, capacity: Resources, now: Time) -> Profile {
+    let mut p = Profile::flat(now, capacity);
+    for _ in 0..rng.below(8) {
+        let a = now + Duration::from_secs(rng.below(2_000) as u64);
+        let b = a + Duration::from_secs(1 + rng.below(5_000) as u64);
+        let req = Resources::new(rng.below(capacity.cpu + 1), rng.next_u64() % (capacity.bb + 1));
+        if p.min_free(a, b).fits(&req) {
+            p.subtract(a, b, req);
+        }
+    }
+    p
+}
+
+/// PROPERTY: a plan never overlaps reservations beyond capacity — at any
+/// breakpoint of the resulting profile, usage <= capacity in both
+/// dimensions — and every start respects `now` and earliest-fit.
+#[test]
+fn prop_plan_builder_never_oversubscribes() {
+    for seed in seeds() {
+        let mut rng = Pcg32::seeded(seed);
+        let capacity = Resources::new(4 + rng.below(93), 1 + rng.next_u64() % (1 << 40));
+        let now = Time::from_secs(rng.below(10_000) as u64);
+        let base = random_profile(&mut rng, capacity, now);
+        let n_jobs = 1 + rng.below(12) as usize;
+        let jobs = random_jobs(&mut rng, capacity, n_jobs);
+        let mut perm: Vec<usize> = (0..jobs.len()).collect();
+        rng.shuffle(&mut perm);
+        let plan = build_plan(&base, &jobs, &perm, now, 2.0);
+        // Rebuild usage on a fresh profile: subtract must never panic
+        // (panic == over-subscription caught by Profile's checked sub).
+        let mut check = base.clone();
+        for (ji, j) in jobs.iter().enumerate() {
+            let s = plan.starts[ji];
+            assert!(s >= now, "seed {seed}: start before now");
+            check.subtract(s, s + j.walltime, j.req); // panics on violation
+        }
+        // Score must equal the sum of waits^alpha.
+        let manual: f64 = jobs
+            .iter()
+            .enumerate()
+            .map(|(ji, j)| plan.starts[ji].since(j.submit).as_secs_f64().powi(2))
+            .sum();
+        assert!(
+            (plan.score - manual).abs() <= manual.abs() * 1e-9 + 1e-6,
+            "seed {seed}: score mismatch {} vs {manual}",
+            plan.score
+        );
+    }
+}
+
+/// PROPERTY: simulated annealing never returns worse than the best
+/// initial candidate, and exhaustive search (n<=5) is globally optimal.
+#[test]
+fn prop_sa_never_worse_than_candidates() {
+    for seed in seeds() {
+        let mut rng = Pcg32::seeded(seed ^ 0xabcdef);
+        let capacity = Resources::new(8 + rng.below(88), 1 + rng.next_u64() % (1 << 40));
+        let now = Time::from_secs(1_000);
+        let base = random_profile(&mut rng, capacity, now);
+        let n = 2 + rng.below(9) as usize;
+        let jobs = random_jobs(&mut rng, capacity, n);
+        let cands = initial_candidates(&jobs);
+        let cand_best = {
+            let mut s = ExactScorer::new(&base, &jobs, now, 2.0);
+            cands
+                .iter()
+                .map(|c| s.score(c))
+                .fold(f64::INFINITY, f64::min)
+        };
+        let mut scorer = ExactScorer::new(&base, &jobs, now, 2.0);
+        let out = optimise(&mut scorer, n, &cands, &SaParams::default(), &mut rng);
+        if n <= 5 {
+            assert!(
+                out.score <= cand_best + 1e-9,
+                "seed {seed}: exhaustive worse than a candidate"
+            );
+        } else {
+            assert!(
+                out.score <= cand_best * (1.0 + 1e-12) + 1e-9,
+                "seed {seed}: SA worse than best candidate: {} > {cand_best}",
+                out.score
+            );
+        }
+    }
+}
+
+/// PROPERTY: earliest_fit returns the minimal feasible start — no
+/// earlier breakpoint (or `now`) admits the window.
+#[test]
+fn prop_earliest_fit_is_minimal() {
+    for seed in seeds() {
+        let mut rng = Pcg32::seeded(seed ^ 0x1234);
+        let capacity = Resources::new(2 + rng.below(94), 1 + rng.next_u64() % (1 << 38));
+        let now = Time::from_secs(rng.below(1_000) as u64);
+        let profile = random_profile(&mut rng, capacity, now);
+        let req = Resources::new(1 + rng.below(capacity.cpu), rng.next_u64() % (capacity.bb + 1));
+        let dur = Duration::from_secs(1 + rng.below(8_000) as u64);
+        let t = profile.earliest_fit(req, dur, now);
+        // Feasible at t:
+        assert!(
+            profile.min_free(t, t + dur).fits(&req),
+            "seed {seed}: claimed fit is infeasible"
+        );
+        // Minimal: every candidate start strictly before t fails.
+        let mut candidates: Vec<Time> = profile
+            .breakpoints()
+            .iter()
+            .map(|&(bt, _)| bt)
+            .filter(|&bt| bt > now && bt < t)
+            .collect();
+        candidates.push(now);
+        for c in candidates {
+            if c < t {
+                assert!(
+                    !profile.min_free(c, c + dur).fits(&req),
+                    "seed {seed}: earlier start {c} was feasible (got {t})"
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY: max-min fair rates never exceed any link capacity, are
+/// Pareto-bottlenecked, and total throughput equals what drains.
+#[test]
+fn prop_flow_fairness_feasible_and_bottlenecked() {
+    for seed in seeds() {
+        let mut rng = Pcg32::seeded(seed ^ 0x777);
+        let n_links = 3 + rng.below(20) as usize;
+        let caps: Vec<f64> = (0..n_links).map(|_| rng.range_f64(0.5, 20.0)).collect();
+        let mut net = FlowNetwork::new(caps.clone());
+        let n_flows = 1 + rng.below(40);
+        for tag in 0..n_flows {
+            let len = 1 + rng.below(4) as usize;
+            let route: Vec<usize> = (0..len).map(|_| rng.below(n_links as u32) as usize).collect();
+            net.add_flow(route, rng.range_f64(1.0, 50.0), tag as u64);
+        }
+        net.recompute_rates();
+        let loads = net.link_loads();
+        for (l, &load) in loads.iter().enumerate() {
+            assert!(
+                load <= caps[l] * (1.0 + 1e-9),
+                "seed {seed}: link {l} overloaded {load} > {}",
+                caps[l]
+            );
+        }
+        // Pareto: every flow crosses at least one saturated link.
+        for id in 1..=n_flows as u64 {
+            if let Some(f) = net.flow(id) {
+                assert!(
+                    f.route.iter().any(|&l| loads[l] >= caps[l] - 1e-6),
+                    "seed {seed}: flow {id} not bottlenecked (rate {})",
+                    f.rate
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY: the native discrete scorer agrees with a brute-force
+/// earliest-slot search (independent implementation).
+#[test]
+fn prop_discrete_scorer_matches_bruteforce() {
+    for seed in seeds().into_iter().take(100) {
+        let mut rng = Pcg32::seeded(seed ^ 0xbeef);
+        let t = 16 + rng.below(48) as usize;
+        let n = 1 + rng.below(6) as usize;
+        let capacity = Resources::new(1 + rng.below(16), ((1 + rng.below(64)) as u64) << 30);
+        let base = random_profile(&mut rng, capacity, Time::ZERO);
+        let jobs = random_jobs(&mut rng, capacity, n);
+        let problem = DiscreteProblem::build(&base, &jobs, Time::ZERO, t, 1.0);
+        let scorer = NativeDiscreteScorer::new(problem.clone());
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let got = scorer.score_perm(&perm);
+        // Brute force mirror.
+        let mut fc = problem.free_cpu.clone();
+        let mut fb = problem.free_bb.clone();
+        let mut want = 0.0f64;
+        for &ji in &perm {
+            let (c, b, d) = (problem.cpu[ji], problem.bb[ji], problem.dur[ji].max(1) as usize);
+            let mut s = fc.len();
+            'outer: for cand in 0..fc.len().saturating_sub(d - 1) {
+                for k in cand..cand + d {
+                    if fc[k] < c || fb[k] < b {
+                        continue 'outer;
+                    }
+                }
+                s = cand;
+                break;
+            }
+            want += problem.wait_base[ji] as f64 + s as f64 * problem.dt;
+            for k in s..(s + d).min(fc.len()) {
+                fc[k] -= c;
+                fb[k] -= b;
+            }
+        }
+        assert!(
+            (got - want).abs() <= want.abs() * 1e-9 + 1e-6,
+            "seed {seed}: {got} vs {want}"
+        );
+    }
+}

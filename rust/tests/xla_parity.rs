@@ -1,0 +1,147 @@
+//! Cross-layer parity: the AOT-compiled XLA artifact (L1 Pallas kernel +
+//! L2 JAX scorer) must agree with the native Rust mirror
+//! (`NativeDiscreteScorer`) on the same discretised problems — this is
+//! the contract that lets the simulated-annealing search run on either
+//! backend interchangeably.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use bbsched::core::job::JobId;
+use bbsched::core::resources::Resources;
+use bbsched::core::time::{Duration, Time};
+use bbsched::sched::plan::builder::PlanJob;
+use bbsched::sched::plan::profile::Profile;
+use bbsched::sched::plan::scheduler::ExternalBatchScorer;
+use bbsched::sched::plan::scorer::{DiscreteProblem, NativeDiscreteScorer};
+use bbsched::runtime::scorer::XlaScorer;
+use bbsched::stats::rng::Pcg32;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("plan_score_q16_t128_k4.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+fn random_problem(rng: &mut Pcg32, n_jobs: usize, t_slots: usize) -> DiscreteProblem {
+    let capacity = Resources::new(96, 300 << 30);
+    let mut base = Profile::flat(Time::ZERO, capacity);
+    // Random running-job load.
+    for _ in 0..rng.range_u32(0, 6) {
+        let start = rng.below(100) as u64;
+        let end = start + 100 + rng.below(5000) as u64;
+        let req = Resources::new(1 + rng.below(40), (rng.below(100) as u64) << 30);
+        if base.min_free(Time::from_secs(start), Time::from_secs(end)).fits(&req) {
+            base.subtract(Time::from_secs(start), Time::from_secs(end), req);
+        }
+    }
+    let jobs: Vec<PlanJob> = (0..n_jobs)
+        .map(|i| PlanJob {
+            id: JobId(i as u32),
+            req: Resources::new(1 + rng.below(48), ((1 + rng.below(80)) as u64) << 30),
+            walltime: Duration::from_secs(60 * (1 + rng.below(300)) as u64),
+            submit: Time::ZERO,
+        })
+        .collect();
+    DiscreteProblem::build(&base, &jobs, Time::ZERO, t_slots, 2.0)
+}
+
+fn random_perms(rng: &mut Pcg32, n: usize, count: usize) -> Vec<Vec<usize>> {
+    (0..count)
+        .map(|_| {
+            let mut p: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut p);
+            p
+        })
+        .collect()
+}
+
+#[test]
+fn xla_matches_native_mirror() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let mut xla = XlaScorer::from_artifact_dir(&dir).expect("load artifacts");
+    let mut rng = Pcg32::seeded(2024);
+    for case in 0..6 {
+        let n_jobs = 3 + rng.below(13) as usize;
+        let problem = random_problem(&mut rng, n_jobs, 128);
+        let perms = random_perms(&mut rng, n_jobs, 5);
+        let native = NativeDiscreteScorer::new(problem.clone());
+        let want: Vec<f64> = perms.iter().map(|p| native.score_perm(p)).collect();
+        let got = xla.score_batch(&problem, &perms);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let tol = w.abs().max(1.0) * 2e-4; // f32 accumulation slack
+            assert!(
+                (g - w).abs() <= tol,
+                "case {case} perm {i}: xla {g} vs native {w}"
+            );
+        }
+    }
+    assert!(xla.executions > 0, "should have used the artifact");
+    assert_eq!(xla.fallback_scores, 0, "no fallback expected at Q<=16");
+}
+
+#[test]
+fn xla_ranking_agrees_with_exact_scorer() {
+    // Discretisation may shift absolute scores but must usually preserve
+    // the ranking the SA search needs. Check top-choice agreement on
+    // clearly separated candidates.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let mut xla = XlaScorer::from_artifact_dir(&dir).expect("load artifacts");
+    let capacity = Resources::new(8, 100 << 30);
+    let base = Profile::flat(Time::ZERO, capacity);
+    // One whale + two minnows: minnows-first is clearly better.
+    let jobs = vec![
+        PlanJob {
+            id: JobId(0),
+            req: Resources::new(8, 50 << 30),
+            walltime: Duration::from_secs(7200),
+            submit: Time::ZERO,
+        },
+        PlanJob {
+            id: JobId(1),
+            req: Resources::new(1, 1 << 30),
+            walltime: Duration::from_secs(60),
+            submit: Time::ZERO,
+        },
+        PlanJob {
+            id: JobId(2),
+            req: Resources::new(1, 1 << 30),
+            walltime: Duration::from_secs(60),
+            submit: Time::ZERO,
+        },
+    ];
+    let problem = DiscreteProblem::build(&base, &jobs, Time::ZERO, 128, 2.0);
+    let perms = vec![vec![0, 1, 2], vec![1, 2, 0]];
+    let scores = xla.score_batch(&problem, &perms);
+    assert!(
+        scores[1] < scores[0],
+        "minnows-first must score better: {scores:?}"
+    );
+}
+
+#[test]
+fn oversized_queue_falls_back_to_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let mut xla = XlaScorer::from_artifact_dir(&dir).expect("load artifacts");
+    let mut rng = Pcg32::seeded(7);
+    let problem = random_problem(&mut rng, 100, 128); // > max Q (64)
+    let perms = random_perms(&mut rng, 100, 2);
+    let native = NativeDiscreteScorer::new(problem.clone());
+    let want: Vec<f64> = perms.iter().map(|p| native.score_perm(p)).collect();
+    let got = xla.score_batch(&problem, &perms);
+    assert_eq!(got, want, "fallback must be exactly the native mirror");
+    assert!(xla.fallback_scores >= 2);
+}
