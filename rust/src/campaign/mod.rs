@@ -1,0 +1,68 @@
+//! The experiment-campaign subsystem: declarative grids of independent
+//! simulator runs, executed in parallel.
+//!
+//! The paper's evaluation (Figs 5-12) is a grid of (scheduler x workload
+//! seed x bb-factor) simulations; this module turns that one-shot loop
+//! into a reusable, scenario-driven campaign layer:
+//!
+//! - [`spec`]: the `[section]`/`key = value` campaign format, built-in
+//!   specs (`paper-eval`, `smoke`), and grid enumeration.
+//! - [`runner`]: grid execution on the shared work-stealing pool
+//!   ([`crate::pool::parallel_map`], also the engine under
+//!   `coordinator::run_many`), per-run fault isolation, and in-order
+//!   NDJSON streaming.
+//! - [`progress`]: stderr progress lines and the final speedup summary.
+//!
+//! Exit-code contract (repx-style, what CI scripts rely on):
+//! `0` = every run succeeded, `1` = at least one run failed,
+//! `2` = the spec failed to parse or validate (nothing was run).
+
+pub mod progress;
+pub mod runner;
+pub mod spec;
+
+pub use progress::Progress;
+pub use runner::{execute_run, parallel_map, run_campaign, CampaignResult, RunOutcome};
+pub use spec::{CampaignSpec, RunSpec, SpecError, BUILTINS};
+
+/// Process exit code for a fully-successful campaign.
+pub const EXIT_OK: i32 = 0;
+/// Process exit code when at least one run failed.
+pub const EXIT_RUN_FAILED: i32 = 1;
+/// Process exit code for a spec parse/validation error.
+pub const EXIT_SPEC_ERROR: i32 = 2;
+
+/// Map executed outcomes onto the exit-code contract.
+pub fn exit_code(outcomes: &[RunOutcome]) -> i32 {
+    if outcomes.iter().all(|o| o.ok()) {
+        EXIT_OK
+    } else {
+        EXIT_RUN_FAILED
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_code_contract() {
+        let spec = CampaignSpec::smoke();
+        let runs = spec.enumerate();
+        let ok = RunOutcome {
+            run: runs[0].clone(),
+            label: runs[0].label(),
+            summary: None,
+            fingerprint: 1,
+            sched_invocations: 0,
+            sched_wall_s: 0.0,
+            wall_s: 0.0,
+            error: None,
+        };
+        let mut failed = ok.clone();
+        failed.error = Some("boom".to_string());
+        assert_eq!(exit_code(&[]), EXIT_OK);
+        assert_eq!(exit_code(&[ok.clone()]), EXIT_OK);
+        assert_eq!(exit_code(&[ok, failed]), EXIT_RUN_FAILED);
+    }
+}

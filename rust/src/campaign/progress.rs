@@ -1,0 +1,107 @@
+//! Campaign progress reporting: per-run lines and the final wall-clock
+//! summary, all on stderr so `--json` stdout stays machine-readable.
+
+use crate::campaign::runner::{CampaignResult, RunOutcome};
+use crate::campaign::spec::RunSpec;
+use crate::report::fmt_f;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Shared, thread-safe progress state (workers call into it directly).
+pub struct Progress {
+    enabled: bool,
+    total: usize,
+    started: AtomicUsize,
+    done: AtomicUsize,
+    failed: AtomicUsize,
+    t0: Instant,
+}
+
+impl Progress {
+    pub fn new(total: usize, enabled: bool) -> Progress {
+        Progress {
+            enabled,
+            total,
+            started: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            t0: Instant::now(),
+        }
+    }
+
+    /// Silent progress (used by tests and library callers).
+    pub fn quiet(total: usize) -> Progress {
+        Progress::new(total, false)
+    }
+
+    pub fn run_started(&self, run: &RunSpec) {
+        let nth = self.started.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.enabled {
+            eprintln!("[{nth}/{}] {} ...", self.total, run.label());
+        }
+    }
+
+    pub fn run_finished(&self, outcome: &RunOutcome) {
+        let done = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+        if !outcome.ok() {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        if !self.enabled {
+            return;
+        }
+        match (&outcome.summary, &outcome.error) {
+            (Some(s), _) => eprintln!(
+                "[{done}/{}] {} ok: mean_wait={}h mean_bsld={} ({}s)",
+                self.total,
+                outcome.label,
+                fmt_f(s.mean_wait_h),
+                fmt_f(s.mean_bsld),
+                fmt_f(outcome.wall_s),
+            ),
+            (None, Some(e)) => {
+                eprintln!("[{done}/{}] {} FAILED: {e}", self.total, outcome.label)
+            }
+            (None, None) => eprintln!("[{done}/{}] {} done", self.total, outcome.label),
+        }
+    }
+
+    /// Final summary line: totals, failures, and the parallel speedup
+    /// over a hypothetical sequential pass.
+    pub fn finish(&self, result: &CampaignResult) {
+        if !self.enabled {
+            return;
+        }
+        let agg = result.aggregate_run_s();
+        let speedup = if result.wall_s > 0.0 { agg / result.wall_s } else { 1.0 };
+        eprintln!(
+            "campaign done: {} runs ({} failed) on {} threads in {}s \
+             (aggregate run time {}s, speedup {}x)",
+            result.outcomes.len(),
+            result.n_failed(),
+            result.jobs,
+            fmt_f(result.wall_s),
+            fmt_f(agg),
+            fmt_f(speedup),
+        );
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_track_outcomes() {
+        let p = Progress::quiet(2);
+        let spec = crate::campaign::spec::CampaignSpec::smoke();
+        let runs = spec.enumerate();
+        p.run_started(&runs[0]);
+        assert!(p.elapsed_s() >= 0.0);
+        assert_eq!(p.started.load(Ordering::Relaxed), 1);
+        assert_eq!(p.done.load(Ordering::Relaxed), 0);
+    }
+}

@@ -1,0 +1,234 @@
+//! The campaign execution engine: drives [`crate::pool::parallel_map`]
+//! (the work-stealing `std::thread` + channel pool) over the grid, plus
+//! the per-run harness that turns one grid cell into a [`RunOutcome`].
+//!
+//! Determinism contract: every simulation is shared-nothing and seeded,
+//! so the *metrics* of a run are independent of how many workers execute
+//! the grid. [`run_campaign`] additionally emits streamed records in
+//! enumeration order (a reorder buffer holds early finishers), so the
+//! record stream for `--jobs N` is byte-identical to `--jobs 1` apart
+//! from the explicitly wall-clock fields, which the deterministic
+//! projection ([`RunOutcome::deterministic_line`]) excludes.
+
+use crate::campaign::progress::Progress;
+use crate::campaign::spec::{CampaignSpec, RunSpec};
+use crate::coordinator::run_policy;
+use crate::metrics::summary::{summarize, PolicySummary};
+use crate::report::json::JsonObject;
+use crate::sim::simulator::SimConfig;
+use crate::workload::load_source;
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// The work-stealing pool driving campaigns (shared infrastructure,
+/// re-exported here because campaigns are its primary client).
+pub use crate::pool::parallel_map;
+
+/// Everything one grid cell produced.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub run: RunSpec,
+    pub label: String,
+    /// `None` when the run failed (see `error`).
+    pub summary: Option<PolicySummary>,
+    /// [`crate::sim::simulator::SimResult::fingerprint`] of the run
+    /// (0 for failed runs).
+    pub fingerprint: u64,
+    pub sched_invocations: u64,
+    pub sched_wall_s: f64,
+    /// Host wall-clock of the whole run (workload build + simulation).
+    pub wall_s: f64,
+    pub error: Option<String>,
+}
+
+impl RunOutcome {
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// One NDJSON record. `timing = false` omits the host wall-clock
+    /// fields, which is the projection the determinism guarantee (and
+    /// the `--jobs N` == `--jobs 1` test) is stated over.
+    pub fn to_json(&self, timing: bool) -> String {
+        let mut obj = self.run.identity_json(JsonObject::new()).bool("ok", self.ok());
+        if let Some(s) = &self.summary {
+            obj = crate::report::json::summary_fields(obj, s)
+                .str("fingerprint", &format!("{:016x}", self.fingerprint));
+        }
+        if let Some(e) = &self.error {
+            obj = obj.str("error", e);
+        }
+        if timing {
+            obj = obj
+                .num_u("sched_invocations", self.sched_invocations)
+                .num_f("sched_wall_s", self.sched_wall_s)
+                .num_f("wall_s", self.wall_s);
+        }
+        obj.end()
+    }
+
+    /// The wall-clock-free record line; byte-identical across `--jobs`.
+    pub fn deterministic_line(&self) -> String {
+        self.to_json(false)
+    }
+}
+
+/// A finished campaign.
+#[derive(Debug)]
+pub struct CampaignResult {
+    /// One outcome per grid cell, in enumeration order.
+    pub outcomes: Vec<RunOutcome>,
+    /// Worker threads used.
+    pub jobs: usize,
+    /// Campaign wall-clock.
+    pub wall_s: f64,
+}
+
+impl CampaignResult {
+    pub fn n_failed(&self) -> usize {
+        self.outcomes.iter().filter(|o| !o.ok()).count()
+    }
+
+    /// Sum of per-run wall-clock — what a sequential pass would have
+    /// cost; `aggregate_run_s / wall_s` is the parallel speedup.
+    pub fn aggregate_run_s(&self) -> f64 {
+        self.outcomes.iter().map(|o| o.wall_s).sum()
+    }
+}
+
+/// Execute one grid cell, turning panics and workload errors into a
+/// failed outcome instead of tearing the campaign down.
+pub fn execute_run(spec: &CampaignSpec, run: &RunSpec) -> RunOutcome {
+    let t0 = Instant::now();
+    let label = run.label();
+    let result = catch_unwind(AssertUnwindSafe(|| -> Result<_, String> {
+        let (jobs, bb_capacity) = load_source(&run.source, run.seed, run.bb_factor)?;
+        let sim_cfg = SimConfig {
+            bb_capacity,
+            io_enabled: spec.io_enabled,
+            ..SimConfig::default()
+        };
+        let res = run_policy(jobs, run.policy, &sim_cfg, run.seed, spec.plan_backend);
+        let summary = summarize(&run.policy.name(), &res.records);
+        Ok((summary, res.fingerprint(), res.sched_invocations, res.sched_wall.as_secs_f64()))
+    }));
+    let flat = match result {
+        Ok(inner) => inner,
+        Err(payload) => Err(panic_message(payload)),
+    };
+    match flat {
+        Ok((summary, fingerprint, sched_invocations, sched_wall_s)) => RunOutcome {
+            run: run.clone(),
+            label,
+            summary: Some(summary),
+            fingerprint,
+            sched_invocations,
+            sched_wall_s,
+            wall_s: t0.elapsed().as_secs_f64(),
+            error: None,
+        },
+        Err(error) => RunOutcome {
+            run: run.clone(),
+            label,
+            summary: None,
+            fingerprint: 0,
+            sched_invocations: 0,
+            sched_wall_s: 0.0,
+            wall_s: t0.elapsed().as_secs_f64(),
+            error: Some(error),
+        },
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: <non-string payload>".to_string()
+    }
+}
+
+/// In-order streaming: outcomes arrive in completion order, the sink
+/// sees them in enumeration order (early finishers wait in the buffer).
+struct StreamState<S> {
+    next: usize,
+    buffered: BTreeMap<usize, RunOutcome>,
+    sink: S,
+}
+
+impl<S: FnMut(&RunOutcome)> StreamState<S> {
+    fn push(&mut self, outcome: RunOutcome) {
+        self.buffered.insert(outcome.run.index, outcome);
+        while let Some(o) = self.buffered.remove(&self.next) {
+            (self.sink)(&o);
+            self.next += 1;
+        }
+    }
+}
+
+/// Run the whole grid on `jobs` workers. `on_record` observes every
+/// outcome in enumeration order as soon as its turn is complete (the
+/// NDJSON stream); the returned outcomes are in the same order.
+pub fn run_campaign<S>(
+    spec: &CampaignSpec,
+    jobs: usize,
+    progress: &Progress,
+    on_record: S,
+) -> CampaignResult
+where
+    S: FnMut(&RunOutcome) + Send,
+{
+    let runs = spec.enumerate();
+    let n = runs.len();
+    let jobs = jobs.clamp(1, n.max(1));
+    let t0 = Instant::now();
+    let stream = Mutex::new(StreamState { next: 0, buffered: BTreeMap::new(), sink: on_record });
+    let outcomes = parallel_map(runs, jobs, |run| {
+        progress.run_started(&run);
+        let outcome = execute_run(spec, &run);
+        progress.run_finished(&outcome);
+        stream.lock().unwrap().push(outcome.clone());
+        outcome
+    });
+    CampaignResult { outcomes, jobs, wall_s: t0.elapsed().as_secs_f64() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_state_reorders() {
+        let seen = std::cell::RefCell::new(Vec::new());
+        let spec = CampaignSpec::smoke();
+        let runs = spec.enumerate();
+        let mut st = StreamState {
+            next: 0,
+            buffered: BTreeMap::new(),
+            sink: |o: &RunOutcome| seen.borrow_mut().push(o.run.index),
+        };
+        // Deliver out of order: 1 then 0 — nothing may be emitted until
+        // index 0 lands, then both flush in enumeration order.
+        st.push(execute_outcome_stub(&runs[1]));
+        assert!(seen.borrow().is_empty());
+        st.push(execute_outcome_stub(&runs[0]));
+        assert_eq!(*seen.borrow(), vec![0, 1]);
+    }
+
+    fn execute_outcome_stub(run: &RunSpec) -> RunOutcome {
+        RunOutcome {
+            run: run.clone(),
+            label: run.label(),
+            summary: None,
+            fingerprint: 0,
+            sched_invocations: 0,
+            sched_wall_s: 0.0,
+            wall_s: 0.0,
+            error: Some("stub".to_string()),
+        }
+    }
+}

@@ -1,0 +1,494 @@
+//! Declarative campaign specifications: a hand-rolled `[section]` +
+//! `key = value` format (no external deps, same philosophy as the CLI's
+//! `Args` parser) describing a grid of independent simulator runs.
+//!
+//! ```text
+//! # smoke.campaign — tiny 2x1 grid for CI
+//! [campaign]
+//! name = smoke
+//! out-dir = results/smoke
+//!
+//! [grid]
+//! policies = fcfs, sjf-bb
+//! seeds = 1
+//! scales = 0.003
+//! bb-factors = 1.0
+//!
+//! [sim]
+//! io = false
+//! plan-backend = exact
+//! ```
+//!
+//! Lists are comma-separated; `#` starts a comment; unknown sections or
+//! keys are hard errors (exit code 2 at the CLI) so typos cannot
+//! silently shrink a grid. `swfs` (real trace paths) and `scales`
+//! (synthetic-twin sizes) are mutually exclusive workload axes.
+
+use crate::coordinator::PlanBackendKind;
+use crate::report::json::JsonObject;
+use crate::sched::Policy;
+use crate::workload::WorkloadSource;
+use std::fmt;
+use std::path::PathBuf;
+
+/// A parse/validation failure, pointing at the offending spec line
+/// (line 0 = a whole-spec validation error).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl SpecError {
+    fn at(line: usize, msg: impl Into<String>) -> SpecError {
+        SpecError { line, msg: msg.into() }
+    }
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line == 0 {
+            write!(f, "campaign spec: {}", self.msg)
+        } else {
+            write!(f, "campaign spec line {}: {}", self.line, self.msg)
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// A full campaign: the grid axes plus shared simulator settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignSpec {
+    pub name: String,
+    /// Where CSV/NDJSON outputs land (default `results/<name>`).
+    pub out_dir: PathBuf,
+    /// Grid axes. The cross product of these is the run list.
+    pub policies: Vec<Policy>,
+    pub seeds: Vec<u64>,
+    pub sources: Vec<WorkloadSource>,
+    pub bb_factors: Vec<f64>,
+    /// Shared simulator settings.
+    pub io_enabled: bool,
+    pub plan_backend: PlanBackendKind,
+}
+
+/// One cell of the campaign grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSpec {
+    /// Dense index in enumeration order — the deterministic output order.
+    pub index: usize,
+    pub policy: Policy,
+    pub seed: u64,
+    pub source: WorkloadSource,
+    pub bb_factor: f64,
+}
+
+impl RunSpec {
+    /// Stable human-readable run id, e.g. `plan-2+s1+x0.003+bb1`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}+s{}+{}+bb{}",
+            self.policy.name(),
+            self.seed,
+            self.source.label(),
+            self.bb_factor
+        )
+    }
+
+    /// The identity fields every machine-readable record for this run
+    /// starts with — one field list, so `--dry-run` listings and
+    /// executed NDJSON records agree by construction.
+    pub fn identity_json(&self, obj: JsonObject) -> JsonObject {
+        obj.num_u("run", self.index as u64)
+            .str("label", &self.label())
+            .str("policy", &self.policy.name())
+            .num_u("seed", self.seed)
+            .str("workload", &self.source.label())
+            .num_f("bb_factor", self.bb_factor)
+    }
+}
+
+/// Names accepted by [`CampaignSpec::builtin`].
+pub const BUILTINS: &[&str] = &["paper-eval", "smoke"];
+
+impl CampaignSpec {
+    /// The paper's full evaluation grid (Figs 5-12 inputs): every policy
+    /// of the evaluated set over three workload seeds at paper scale.
+    pub fn paper_eval() -> CampaignSpec {
+        CampaignSpec {
+            name: "paper-eval".to_string(),
+            out_dir: PathBuf::from("results/paper-eval"),
+            policies: Policy::ALL.to_vec(),
+            seeds: vec![1, 2, 3],
+            sources: vec![WorkloadSource::Synth { scale: 1.0 }],
+            bb_factors: vec![1.0],
+            io_enabled: true,
+            plan_backend: PlanBackendKind::Exact,
+        }
+    }
+
+    /// A seconds-scale grid exercising the whole pipeline (CI smoke).
+    pub fn smoke() -> CampaignSpec {
+        CampaignSpec {
+            name: "smoke".to_string(),
+            out_dir: PathBuf::from("results/smoke"),
+            policies: vec![Policy::Fcfs, Policy::SjfBb],
+            seeds: vec![1],
+            sources: vec![WorkloadSource::Synth { scale: 0.003 }],
+            bb_factors: vec![1.0],
+            io_enabled: false,
+            plan_backend: PlanBackendKind::Exact,
+        }
+    }
+
+    /// Look up a built-in spec by name (see [`BUILTINS`]).
+    pub fn builtin(name: &str) -> Option<CampaignSpec> {
+        match name {
+            "paper-eval" => Some(CampaignSpec::paper_eval()),
+            "smoke" => Some(CampaignSpec::smoke()),
+            _ => None,
+        }
+    }
+
+    /// Parse the `[section]` / `key = value` text format.
+    pub fn parse(text: &str) -> Result<CampaignSpec, SpecError> {
+        let mut name = "campaign".to_string();
+        let mut out_dir: Option<PathBuf> = None;
+        let mut policies: Vec<Policy> = Vec::new();
+        let mut seeds: Vec<u64> = vec![1];
+        let mut scales: Option<Vec<f64>> = None;
+        let mut swfs: Option<Vec<PathBuf>> = None;
+        let mut bb_factors: Vec<f64> = vec![1.0];
+        let mut io_enabled = true;
+        let mut backend_name = "exact".to_string();
+        let mut t_slots = 256usize;
+
+        let mut section = "campaign".to_string();
+        for (i, raw) in text.lines().enumerate() {
+            let ln = i + 1;
+            let line = match raw.find('#') {
+                Some(pos) => &raw[..pos],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let Some(sec) = inner.strip_suffix(']') else {
+                    return Err(SpecError::at(ln, format!("malformed section header `{line}`")));
+                };
+                let sec = sec.trim();
+                if !["campaign", "grid", "sim"].contains(&sec) {
+                    return Err(SpecError::at(
+                        ln,
+                        format!("unknown section [{sec}] (expected [campaign], [grid] or [sim])"),
+                    ));
+                }
+                section = sec.to_string();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(SpecError::at(ln, format!("expected `key = value`, got `{line}`")));
+            };
+            let (key, value) = (key.trim(), value.trim());
+            match (section.as_str(), key) {
+                ("campaign", "name") => {
+                    if value.is_empty() {
+                        return Err(SpecError::at(ln, "campaign name must not be empty"));
+                    }
+                    name = value.to_string();
+                }
+                ("campaign", "out-dir") => out_dir = Some(PathBuf::from(value)),
+                ("grid", "policies") => {
+                    policies = parse_list(ln, key, value, |s| {
+                        Policy::parse(s).ok_or_else(|| format!("unknown policy `{s}`"))
+                    })?;
+                }
+                ("grid", "seeds") => {
+                    seeds = parse_list(ln, key, value, |s| {
+                        s.parse::<u64>().map_err(|_| format!("invalid seed `{s}`"))
+                    })?;
+                }
+                ("grid", "scales") => {
+                    scales = Some(parse_list(ln, key, value, |s| {
+                        let v: f64 =
+                            s.parse().map_err(|_| format!("invalid scale `{s}`"))?;
+                        if !v.is_finite() || v <= 0.0 {
+                            return Err(format!("scale must be positive, got `{s}`"));
+                        }
+                        Ok(v)
+                    })?);
+                }
+                ("grid", "swfs") => {
+                    swfs = Some(parse_list(ln, key, value, |s| Ok(PathBuf::from(s)))?);
+                }
+                ("grid", "bb-factors") => {
+                    bb_factors = parse_list(ln, key, value, |s| {
+                        let v: f64 =
+                            s.parse().map_err(|_| format!("invalid bb-factor `{s}`"))?;
+                        if !v.is_finite() || v <= 0.0 {
+                            return Err(format!("bb-factor must be positive, got `{s}`"));
+                        }
+                        Ok(v)
+                    })?;
+                }
+                ("sim", "io") => {
+                    io_enabled = parse_bool(ln, key, value)?;
+                }
+                ("sim", "plan-backend") => {
+                    if !["exact", "discrete", "xla"].contains(&value) {
+                        return Err(SpecError::at(
+                            ln,
+                            format!("unknown plan-backend `{value}` (exact|discrete|xla)"),
+                        ));
+                    }
+                    backend_name = value.to_string();
+                }
+                ("sim", "t-slots") => {
+                    t_slots = value
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&v| v > 0)
+                        .ok_or_else(|| {
+                            SpecError::at(ln, format!("invalid t-slots `{value}`"))
+                        })?;
+                }
+                (sec, key) => {
+                    return Err(SpecError::at(ln, format!("unknown key `{key}` in [{sec}]")));
+                }
+            }
+        }
+
+        if policies.is_empty() {
+            return Err(SpecError::at(0, "grid declares no policies (set [grid] policies = ...)"));
+        }
+        if scales.is_some() && swfs.is_some() {
+            return Err(SpecError::at(
+                0,
+                "scales and swfs are mutually exclusive workload axes",
+            ));
+        }
+        let sources: Vec<WorkloadSource> = match (swfs, scales) {
+            (Some(paths), _) => {
+                paths.into_iter().map(|path| WorkloadSource::Swf { path }).collect()
+            }
+            (None, Some(scales)) => {
+                scales.into_iter().map(|scale| WorkloadSource::Synth { scale }).collect()
+            }
+            (None, None) => vec![WorkloadSource::Synth { scale: 1.0 }],
+        };
+        let plan_backend = match backend_name.as_str() {
+            "exact" => PlanBackendKind::Exact,
+            "discrete" => PlanBackendKind::Discrete { t_slots },
+            "xla" => PlanBackendKind::Xla { t_slots },
+            _ => unreachable!("backend name validated at parse time"),
+        };
+        Ok(CampaignSpec {
+            out_dir: out_dir.unwrap_or_else(|| PathBuf::from("results").join(&name)),
+            name,
+            policies,
+            seeds,
+            sources,
+            bb_factors,
+            io_enabled,
+            plan_backend,
+        })
+    }
+
+    /// Render back to the text format (round-trips through [`parse`]).
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str("[campaign]\n");
+        s.push_str(&format!("name = {}\n", self.name));
+        s.push_str(&format!("out-dir = {}\n\n", self.out_dir.display()));
+        s.push_str("[grid]\n");
+        let names: Vec<String> = self.policies.iter().map(|p| p.name()).collect();
+        s.push_str(&format!("policies = {}\n", names.join(", ")));
+        let seeds: Vec<String> = self.seeds.iter().map(|v| v.to_string()).collect();
+        s.push_str(&format!("seeds = {}\n", seeds.join(", ")));
+        let mut scales = Vec::new();
+        let mut swfs = Vec::new();
+        for src in &self.sources {
+            match src {
+                WorkloadSource::Synth { scale } => scales.push(format!("{scale}")),
+                WorkloadSource::Swf { path } => swfs.push(path.display().to_string()),
+            }
+        }
+        if !swfs.is_empty() {
+            s.push_str(&format!("swfs = {}\n", swfs.join(", ")));
+        } else {
+            s.push_str(&format!("scales = {}\n", scales.join(", ")));
+        }
+        let bbs: Vec<String> = self.bb_factors.iter().map(|v| v.to_string()).collect();
+        s.push_str(&format!("bb-factors = {}\n\n", bbs.join(", ")));
+        s.push_str("[sim]\n");
+        s.push_str(&format!("io = {}\n", self.io_enabled));
+        match self.plan_backend {
+            PlanBackendKind::Exact => s.push_str("plan-backend = exact\n"),
+            PlanBackendKind::Discrete { t_slots } => {
+                s.push_str(&format!("plan-backend = discrete\nt-slots = {t_slots}\n"));
+            }
+            PlanBackendKind::Xla { t_slots } => {
+                s.push_str(&format!("plan-backend = xla\nt-slots = {t_slots}\n"));
+            }
+        }
+        s
+    }
+
+    /// The grid size (`enumerate().len()` without materialising it).
+    pub fn n_runs(&self) -> usize {
+        self.policies.len() * self.seeds.len() * self.sources.len() * self.bb_factors.len()
+    }
+
+    /// Materialise the run list in the deterministic enumeration order:
+    /// policy (outermost), seed, workload source, bb-factor (innermost).
+    pub fn enumerate(&self) -> Vec<RunSpec> {
+        let mut runs = Vec::with_capacity(self.n_runs());
+        for &policy in &self.policies {
+            for &seed in &self.seeds {
+                for source in &self.sources {
+                    for &bb_factor in &self.bb_factors {
+                        runs.push(RunSpec {
+                            index: runs.len(),
+                            policy,
+                            seed,
+                            source: source.clone(),
+                            bb_factor,
+                        });
+                    }
+                }
+            }
+        }
+        runs
+    }
+}
+
+fn parse_bool(ln: usize, key: &str, value: &str) -> Result<bool, SpecError> {
+    match value {
+        "true" | "yes" | "on" | "1" => Ok(true),
+        "false" | "no" | "off" | "0" => Ok(false),
+        _ => Err(SpecError::at(ln, format!("invalid boolean for {key}: `{value}`"))),
+    }
+}
+
+fn parse_list<T>(
+    ln: usize,
+    key: &str,
+    value: &str,
+    item: impl Fn(&str) -> Result<T, String>,
+) -> Result<Vec<T>, SpecError> {
+    let items: Vec<&str> =
+        value.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if items.is_empty() {
+        return Err(SpecError::at(ln, format!("{key} must list at least one value")));
+    }
+    items
+        .into_iter()
+        .map(|s| item(s).map_err(|msg| SpecError::at(ln, msg)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = "\
+# demo
+[campaign]
+name = demo
+out-dir = /tmp/demo
+
+[grid]
+policies = fcfs, sjf-bb, plan-2
+seeds = 1, 2
+scales = 0.01, 0.02
+bb-factors = 0.5, 1.0
+
+[sim]
+io = false
+plan-backend = discrete
+t-slots = 128
+";
+
+    #[test]
+    fn parses_full_spec() {
+        let spec = CampaignSpec::parse(SPEC).unwrap();
+        assert_eq!(spec.name, "demo");
+        assert_eq!(spec.out_dir, PathBuf::from("/tmp/demo"));
+        assert_eq!(spec.policies, vec![Policy::Fcfs, Policy::SjfBb, Policy::Plan(2)]);
+        assert_eq!(spec.seeds, vec![1, 2]);
+        assert_eq!(spec.bb_factors, vec![0.5, 1.0]);
+        assert!(!spec.io_enabled);
+        assert_eq!(spec.plan_backend, PlanBackendKind::Discrete { t_slots: 128 });
+        assert_eq!(spec.n_runs(), 3 * 2 * 2 * 2);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let spec = CampaignSpec::parse("[grid]\npolicies = fcfs\n").unwrap();
+        assert_eq!(spec.name, "campaign");
+        assert_eq!(spec.out_dir, PathBuf::from("results/campaign"));
+        assert_eq!(spec.seeds, vec![1]);
+        assert_eq!(spec.sources, vec![WorkloadSource::Synth { scale: 1.0 }]);
+        assert_eq!(spec.bb_factors, vec![1.0]);
+        assert!(spec.io_enabled);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = CampaignSpec::parse("[grid]\npolicies = fcfs\nseeds = banana\n").unwrap_err();
+        assert_eq!(err.line, 3);
+        let err = CampaignSpec::parse("[nope]\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = CampaignSpec::parse("[grid]\nnot a kv line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = CampaignSpec::parse("[grid]\npolicies = warp-speed\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = CampaignSpec::parse("[grid]\npolicies = fcfs\nscales = -1\n").unwrap_err();
+        assert_eq!(err.line, 3);
+        let err = CampaignSpec::parse("").unwrap_err();
+        assert_eq!(err.line, 0); // no policies
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        let err = CampaignSpec::parse("[grid]\npolicies = fcfs\nturbo = yes\n").unwrap_err();
+        assert!(err.msg.contains("unknown key"), "{err}");
+    }
+
+    #[test]
+    fn scales_and_swfs_conflict() {
+        let err =
+            CampaignSpec::parse("[grid]\npolicies = fcfs\nscales = 1\nswfs = a.swf\n").unwrap_err();
+        assert!(err.msg.contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn enumeration_order_is_policy_seed_source_bb() {
+        let spec = CampaignSpec::parse(
+            "[grid]\npolicies = fcfs, sjf-bb\nseeds = 1, 2\nscales = 0.01\nbb-factors = 1, 2\n",
+        )
+        .unwrap();
+        let runs = spec.enumerate();
+        assert_eq!(runs.len(), 8);
+        assert_eq!(runs[0].label(), "fcfs+s1+x0.01+bb1");
+        assert_eq!(runs[1].label(), "fcfs+s1+x0.01+bb2");
+        assert_eq!(runs[2].label(), "fcfs+s2+x0.01+bb1");
+        assert_eq!(runs[4].label(), "sjf-bb+s1+x0.01+bb1");
+        for (i, r) in runs.iter().enumerate() {
+            assert_eq!(r.index, i);
+        }
+    }
+
+    #[test]
+    fn builtins_round_trip_through_text() {
+        for name in BUILTINS {
+            let spec = CampaignSpec::builtin(name).unwrap();
+            let reparsed = CampaignSpec::parse(&spec.to_text()).unwrap();
+            assert_eq!(spec, reparsed, "builtin {name} does not round-trip");
+        }
+        assert!(CampaignSpec::builtin("nope").is_none());
+    }
+}

@@ -14,8 +14,6 @@ use crate::sched::{Policy, Scheduler};
 use crate::sim::simulator::{SimConfig, SimResult, Simulator};
 use crate::stats::descriptive::LetterValue;
 use crate::workload::split::split_workload;
-use std::collections::VecDeque;
-use std::sync::Mutex;
 
 /// How the plan-based policies score SA candidates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -82,6 +80,9 @@ pub fn run_policy(
 }
 
 /// Fan a list of (label, jobs, policy) simulations over worker threads.
+///
+/// Thin client of the shared work-stealing pool; unlike the old inline
+/// pool, results come back in input order.
 pub fn run_many(
     tasks: Vec<(String, Vec<Job>, Policy)>,
     sim_cfg: &SimConfig,
@@ -89,19 +90,9 @@ pub fn run_many(
     plan_backend: PlanBackendKind,
     n_threads: usize,
 ) -> Vec<(String, SimResult)> {
-    let queue: Mutex<VecDeque<(String, Vec<Job>, Policy)>> = Mutex::new(tasks.into());
-    let results: Mutex<Vec<(String, SimResult)>> = Mutex::new(Vec::new());
-    std::thread::scope(|scope| {
-        for _ in 0..n_threads.max(1) {
-            scope.spawn(|| loop {
-                let task = queue.lock().unwrap().pop_front();
-                let Some((label, jobs, policy)) = task else { break };
-                let res = run_policy(jobs, policy, sim_cfg, seed, plan_backend);
-                results.lock().unwrap().push((label, res));
-            });
-        }
-    });
-    results.into_inner().unwrap()
+    crate::pool::parallel_map(tasks, n_threads, |(label, jobs, policy)| {
+        (label, run_policy(jobs, policy, sim_cfg, seed, plan_backend))
+    })
 }
 
 /// Everything `repro eval` produces — the data behind Figs 5-12.
@@ -157,11 +148,9 @@ pub fn run_eval(jobs: &[Job], sim_cfg: &SimConfig, params: &EvalParams) -> EvalO
         .iter()
         .map(|&p| (p.name(), jobs.to_vec(), p))
         .collect();
-    let mut whole = run_many(tasks, sim_cfg, params.seed, params.plan_backend, params.n_threads);
-    // Keep policy declaration order.
-    whole.sort_by_key(|(label, _)| {
-        params.policies.iter().position(|p| p.name() == *label).unwrap_or(usize::MAX)
-    });
+    // `run_many` preserves task order, so results are already in policy
+    // declaration order.
+    let whole = run_many(tasks, sim_cfg, params.seed, params.plan_backend, params.n_threads);
 
     let summaries: Vec<PolicySummary> =
         whole.iter().map(|(label, res)| summarize(label, &res.records)).collect();

@@ -16,11 +16,16 @@
 //!   by L2.
 //! - [`runtime`]: loads the AOT artifacts via PJRT and serves scores to
 //!   the simulated-annealing loop.
+//! - [`campaign`]: declarative experiment grids (scheduler x seed x
+//!   scale x bb-factor) executed on a work-stealing thread pool with a
+//!   deterministic, machine-readable output contract.
 
+pub mod campaign;
 pub mod coordinator;
 pub mod core;
 pub mod metrics;
 pub mod platform;
+pub mod pool;
 pub mod report;
 pub mod runtime;
 pub mod sched;

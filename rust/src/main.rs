@@ -3,23 +3,31 @@
 //! Subcommands:
 //!   simulate   run one policy over a workload, print its summary
 //!   eval       run the full evaluation (Figs 5-12) and write results/
+//!   campaign   run a (policy x seed x workload x bb-factor) grid in
+//!              parallel from a spec file or a built-in spec
 //!   gantt      export the Fig-3 Gantt CSV for a policy
 //!   ablation   SA (189 evals) vs Zheng et al. (8742 evals) comparison
 //!   workload   generate/inspect the synthetic KTH-SP2 twin
 //!
+//! Exit codes (repx-style): 0 = success, 1 = some campaign run failed,
+//! 2 = spec/usage error.
+//!
 //! Argument parsing is hand-rolled (`--key value` pairs) because the
 //! offline build ships no clap; see DESIGN.md §1.
 
+use bbsched::campaign::{
+    self, CampaignSpec, Progress, RunOutcome, EXIT_OK, EXIT_SPEC_ERROR,
+};
 use bbsched::coordinator::{run_eval, run_policy, EvalParams, PlanBackendKind};
 use bbsched::core::job::Job;
 use bbsched::report::csv;
+use bbsched::report::json::{summary_fields, JsonObject};
 use bbsched::report::{fmt_f, render_table};
 use bbsched::sched::Policy;
 use bbsched::sim::simulator::SimConfig;
 use bbsched::stats::descriptive::letter_name;
 use bbsched::stats::{ks_p_value, ks_statistic, LogNormal};
-use bbsched::workload::synth::{generate, SynthConfig};
-use bbsched::workload::{parse_swf, records_to_jobs, BbModel, SwfConvert};
+use bbsched::workload::{load_source, BbModel, WorkloadSource};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -66,40 +74,21 @@ impl Args {
 }
 
 fn load_workload(args: &Args) -> (Vec<Job>, u64) {
-    let scale = args.f64("scale", 1.0);
     let seed = args.u64("seed", 1);
     // Burst-buffer pressure knob: scales the paper's capacity rule
     // (capacity = expected demand at full load). The METACENTRUM fit the
     // paper used is unpublished; EXPERIMENTS.md sweeps this factor.
     let bb_factor = args.f64("bb-factor", 1.0);
-    if let Some(path) = args.get("swf") {
-        let text = std::fs::read_to_string(path).expect("reading SWF file");
-        let (records, skipped) = parse_swf(&text);
-        if skipped > 0 {
-            eprintln!("note: skipped {skipped} malformed SWF lines");
+    let source = match args.get("swf") {
+        Some(path) => WorkloadSource::Swf { path: PathBuf::from(path) },
+        None => WorkloadSource::Synth { scale: args.f64("scale", 1.0) },
+    };
+    match load_source(&source, seed, bb_factor) {
+        Ok(out) => out,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(EXIT_SPEC_ERROR);
         }
-        let bb_model = BbModel::default();
-        let bb_capacity = (bb_model.capacity_for(96) as f64 * bb_factor) as u64;
-        let jobs = records_to_jobs(
-            &records,
-            &SwfConvert {
-                max_procs: 96,
-                walltime_factor_min: 1.25,
-                max_bb_total: (bb_capacity as f64 * 0.8) as u64,
-                bb_model,
-                seed,
-            },
-        );
-        (jobs, bb_capacity)
-    } else {
-        let mut cfg = if (scale - 1.0).abs() < 1e-9 {
-            SynthConfig::paper(seed)
-        } else {
-            SynthConfig::scaled(seed, scale)
-        };
-        cfg.bb_capacity = (cfg.bb_capacity as f64 * bb_factor) as u64;
-        let jobs = generate(&cfg);
-        (jobs, cfg.bb_capacity)
     }
 }
 
@@ -136,27 +125,40 @@ fn cmd_simulate(args: &Args) {
     let t0 = std::time::Instant::now();
     let res = run_policy(jobs, policy, &cfg, args.u64("seed", 1), plan_backend(args));
     let summary = bbsched::metrics::summary::summarize(&policy.name(), &res.records);
-    println!(
-        "{}",
-        render_table(
-            "simulation summary",
-            &["policy", "jobs", "killed", "mean wait [h]", "mean bsld", "median wait [h]",
-              "max wait [h]", "makespan [h]", "sched calls", "sched wall [s]", "host [s]"],
-            &[vec![
-                summary.policy.clone(),
-                summary.n_jobs.to_string(),
-                summary.n_killed.to_string(),
-                fmt_f(summary.mean_wait_h),
-                fmt_f(summary.mean_bsld),
-                fmt_f(summary.median_wait_h),
-                fmt_f(summary.max_wait_h),
-                fmt_f(summary.makespan_h),
-                res.sched_invocations.to_string(),
-                fmt_f(res.sched_wall.as_secs_f64()),
-                fmt_f(t0.elapsed().as_secs_f64()),
-            ]],
-        )
-    );
+    if args.flag("json") {
+        // Machine-readable one-object output (ptybox-style `--json`).
+        println!(
+            "{}",
+            summary_fields(JsonObject::new().str("policy", &summary.policy), &summary)
+                .str("fingerprint", &format!("{:016x}", res.fingerprint()))
+                .num_u("sched_invocations", res.sched_invocations)
+                .num_f("sched_wall_s", res.sched_wall.as_secs_f64())
+                .num_f("wall_s", t0.elapsed().as_secs_f64())
+                .end()
+        );
+    } else {
+        println!(
+            "{}",
+            render_table(
+                "simulation summary",
+                &["policy", "jobs", "killed", "mean wait [h]", "mean bsld", "median wait [h]",
+                  "max wait [h]", "makespan [h]", "sched calls", "sched wall [s]", "host [s]"],
+                &[vec![
+                    summary.policy.clone(),
+                    summary.n_jobs.to_string(),
+                    summary.n_killed.to_string(),
+                    fmt_f(summary.mean_wait_h),
+                    fmt_f(summary.mean_bsld),
+                    fmt_f(summary.median_wait_h),
+                    fmt_f(summary.max_wait_h),
+                    fmt_f(summary.makespan_h),
+                    res.sched_invocations.to_string(),
+                    fmt_f(res.sched_wall.as_secs_f64()),
+                    fmt_f(t0.elapsed().as_secs_f64()),
+                ]],
+            )
+        );
+    }
     if let Some(out) = args.get("records-out") {
         csv::write_records(Path::new(out), &policy.name(), &res.records).unwrap();
         eprintln!("records -> {out}");
@@ -277,6 +279,186 @@ fn cmd_eval(args: &Args) {
             .unwrap();
     }
     eprintln!("figure CSVs -> {}", out_dir.display());
+}
+
+/// `repro campaign`: run a declarative (policy x seed x workload x
+/// bb-factor) grid on a work-stealing thread pool. Returns the process
+/// exit code (0 = all runs ok, 1 = some run failed, 2 = spec error).
+fn cmd_campaign(args: &Args) -> i32 {
+    // --- Resolve the spec: --spec FILE beats --builtin NAME. -------------
+    let mut spec = if let Some(path) = args.get("spec") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("error: reading spec {path}: {e}");
+                return EXIT_SPEC_ERROR;
+            }
+        };
+        match CampaignSpec::parse(&text) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("error: {path}: {e}");
+                return EXIT_SPEC_ERROR;
+            }
+        }
+    } else {
+        let name = args.get("builtin").unwrap_or("paper-eval");
+        match CampaignSpec::builtin(name) {
+            Some(s) => s,
+            None => {
+                eprintln!(
+                    "error: unknown built-in campaign `{name}` (have: {})",
+                    campaign::BUILTINS.join(", ")
+                );
+                return EXIT_SPEC_ERROR;
+            }
+        }
+    };
+    // --- CLI overrides. ---------------------------------------------------
+    if let Some(dir) = args.get("out-dir") {
+        spec.out_dir = PathBuf::from(dir);
+    }
+    if let Some(path) = args.get("swf") {
+        spec.sources = vec![WorkloadSource::Swf { path: PathBuf::from(path) }];
+    }
+    let json = args.flag("json");
+    let runs = spec.enumerate();
+
+    // --- Dry run: enumerate the grid without simulating. ------------------
+    if args.flag("dry-run") {
+        if json {
+            for r in &runs {
+                println!("{}", r.identity_json(JsonObject::new()).end());
+            }
+            println!(
+                "{}",
+                JsonObject::new()
+                    .str("campaign", &spec.name)
+                    .bool("dry_run", true)
+                    .num_u("runs", runs.len() as u64)
+                    .end()
+            );
+        } else {
+            let rows: Vec<Vec<String>> = runs
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.index.to_string(),
+                        r.policy.name(),
+                        r.seed.to_string(),
+                        r.source.label(),
+                        fmt_f(r.bb_factor),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                render_table(
+                    &format!("campaign `{}` (dry run, {} runs)", spec.name, runs.len()),
+                    &["run", "policy", "seed", "workload", "bb-factor"],
+                    &rows,
+                )
+            );
+        }
+        return EXIT_OK;
+    }
+
+    // --- Execute. ----------------------------------------------------------
+    let default_jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let jobs = args.usize("jobs", default_jobs).max(1);
+    eprintln!(
+        "campaign `{}`: {} runs on {} threads -> {}",
+        spec.name,
+        runs.len(),
+        jobs.min(runs.len().max(1)),
+        spec.out_dir.display()
+    );
+    let progress = Progress::new(runs.len(), !args.flag("quiet"));
+    let result = campaign::run_campaign(&spec, jobs, &progress, |o: &RunOutcome| {
+        if json {
+            // NDJSON record stream in deterministic enumeration order.
+            println!("{}", o.to_json(true));
+        }
+    });
+    progress.finish(&result);
+
+    // --- Persist: CSV + NDJSON under out_dir. A failed write must not
+    // let the process report success. ---------------------------------------
+    let mut persist_ok = true;
+    if let Err(e) = std::fs::create_dir_all(&spec.out_dir) {
+        eprintln!("error: creating {}: {e}", spec.out_dir.display());
+        persist_ok = false;
+    }
+    let csv_path = spec.out_dir.join("campaign.csv");
+    if let Err(e) = csv::write_campaign(&csv_path, &result.outcomes) {
+        eprintln!("error: writing {}: {e}", csv_path.display());
+        persist_ok = false;
+    }
+    let nd_path = spec.out_dir.join("campaign.ndjson");
+    let nd: String =
+        result.outcomes.iter().map(|o| o.to_json(true) + "\n").collect();
+    if let Err(e) = std::fs::write(&nd_path, nd) {
+        eprintln!("error: writing {}: {e}", nd_path.display());
+        persist_ok = false;
+    }
+    eprintln!("campaign results -> {}", spec.out_dir.display());
+
+    // --- Human summary table (stdout stays NDJSON-only under --json). ------
+    if json {
+        println!(
+            "{}",
+            JsonObject::new()
+                .str("campaign", &spec.name)
+                .num_u("runs", result.outcomes.len() as u64)
+                .num_u("failed", result.n_failed() as u64)
+                .num_u("jobs", result.jobs as u64)
+                .num_f("wall_s", result.wall_s)
+                .num_f("aggregate_run_s", result.aggregate_run_s())
+                .end()
+        );
+    } else {
+        let rows: Vec<Vec<String>> = result
+            .outcomes
+            .iter()
+            .map(|o| match (&o.summary, &o.error) {
+                (Some(s), _) => vec![
+                    o.label.clone(),
+                    "ok".to_string(),
+                    fmt_f(s.mean_wait_h),
+                    fmt_f(s.mean_bsld),
+                    fmt_f(s.median_wait_h),
+                    fmt_f(s.max_wait_h),
+                    s.n_killed.to_string(),
+                    fmt_f(o.wall_s),
+                ],
+                (None, e) => vec![
+                    o.label.clone(),
+                    format!("FAILED: {}", e.as_deref().unwrap_or("?")),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    fmt_f(o.wall_s),
+                ],
+            })
+            .collect();
+        println!(
+            "{}",
+            render_table(
+                &format!("campaign `{}` results", spec.name),
+                &["run", "status", "mean wait [h]", "mean bsld", "median [h]", "max [h]",
+                  "killed", "wall [s]"],
+                &rows,
+            )
+        );
+    }
+    let code = campaign::exit_code(&result.outcomes);
+    if code == EXIT_OK && !persist_ok {
+        campaign::EXIT_RUN_FAILED
+    } else {
+        code
+    }
 }
 
 fn cmd_gantt(args: &Args) {
@@ -432,15 +614,36 @@ fn cmd_workload(args: &Args) {
 
 fn main() {
     let args = Args::parse();
-    match args.cmd.as_str() {
-        "simulate" => cmd_simulate(&args),
-        "eval" => cmd_eval(&args),
-        "gantt" => cmd_gantt(&args),
-        "ablation" => cmd_ablation(&args),
-        "workload" => cmd_workload(&args),
-        _ => {
+    let code = match args.cmd.as_str() {
+        "simulate" => {
+            cmd_simulate(&args);
+            EXIT_OK
+        }
+        "eval" => {
+            cmd_eval(&args);
+            EXIT_OK
+        }
+        "campaign" => cmd_campaign(&args),
+        "gantt" => {
+            cmd_gantt(&args);
+            EXIT_OK
+        }
+        "ablation" => {
+            cmd_ablation(&args);
+            EXIT_OK
+        }
+        "workload" => {
+            cmd_workload(&args);
+            EXIT_OK
+        }
+        other => {
+            // `help` (or no subcommand) is a successful usage request;
+            // anything else is a usage error per the exit-code contract.
+            if other != "help" {
+                eprintln!("error: unknown subcommand `{other}`");
+            }
             println!(
-                "usage: repro <simulate|eval|gantt|ablation|workload> [--key value ...]\n\n\
+                "usage: repro <simulate|eval|campaign|gantt|ablation|workload> [--key value ...]\n\n\
                  common flags:\n\
                  \x20 --scale F        fraction of the paper workload (default 1.0 = 28453 jobs)\n\
                  \x20 --seed N         workload + scheduler seed\n\
@@ -450,8 +653,22 @@ fn main() {
                  \x20 --plan-backend B exact|discrete|xla (SA scorer backend)\n\
                  \x20 --out-dir DIR    where eval writes figure CSVs (default results/)\n\
                  \x20 --no-parts       skip the 16-part Figs 11-12 pass\n\
-                 \x20 --parts N --part-weeks W   split shape (default 16 x 3)"
+                 \x20 --parts N --part-weeks W   split shape (default 16 x 3)\n\
+                 \x20 --json           machine-readable output (simulate, campaign)\n\n\
+                 campaign flags:\n\
+                 \x20 --spec FILE      campaign spec ([campaign]/[grid]/[sim] sections)\n\
+                 \x20 --builtin NAME   built-in spec: paper-eval (default) | smoke\n\
+                 \x20 --jobs N         worker threads (default: all cores)\n\
+                 \x20 --dry-run        enumerate the grid without simulating\n\
+                 \x20 --quiet          suppress per-run progress on stderr\n\n\
+                 exit codes: 0 = ok, 1 = some campaign run failed, 2 = spec/usage error"
             );
+            if other == "help" {
+                EXIT_OK
+            } else {
+                EXIT_SPEC_ERROR
+            }
         }
-    }
+    };
+    std::process::exit(code);
 }

@@ -1,0 +1,148 @@
+//! A generic work-stealing thread pool on `std::thread` + channels —
+//! neutral infrastructure shared by the evaluation coordinator
+//! (`coordinator::run_many`) and the campaign runner
+//! (`campaign::runner::run_campaign`).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Mutex};
+
+/// Deterministic parallel map: apply `f` to every task on `jobs` worker
+/// threads and return the results in input order.
+///
+/// Scheduling is work-stealing: tasks are sharded round-robin onto
+/// per-worker deques; a worker pops from the front of its own deque and,
+/// when empty, steals from the back of the longest other deque, retrying
+/// until every deque is observed empty (a lost steal race never idles a
+/// worker while tasks remain). Results flow back to the caller over an
+/// mpsc channel and are reassembled by task index, so callers observe
+/// input order no matter which worker ran what.
+///
+/// If `f` panics, the first panic payload is re-raised on the calling
+/// thread (remaining workers wind down first).
+pub fn parallel_map<T, R, F>(tasks: Vec<T>, jobs: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = tasks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let jobs = jobs.clamp(1, n);
+    let mut queues: Vec<Mutex<VecDeque<(usize, T)>>> =
+        (0..jobs).map(|_| Mutex::new(VecDeque::new())).collect();
+    for (i, t) in tasks.into_iter().enumerate() {
+        queues[i % jobs].get_mut().unwrap().push_back((i, t));
+    }
+    let queues = &queues;
+    let f = &f;
+    let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<R>)>();
+    std::thread::scope(|scope| {
+        for w in 0..jobs {
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let task = queues[w].lock().unwrap().pop_front();
+                let Some((i, t)) = task.or_else(|| steal(queues, w)) else {
+                    // All deques observed empty at once: nothing left to
+                    // run or steal (tasks are never re-enqueued).
+                    break;
+                };
+                let result = catch_unwind(AssertUnwindSafe(|| f(t)));
+                let poisoned = result.is_err();
+                if tx.send((i, result)).is_err() || poisoned {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut first_panic = None;
+        for (i, result) in rx.iter() {
+            match result {
+                Ok(v) => out[i] = Some(v),
+                Err(payload) => {
+                    first_panic = Some(payload);
+                    break;
+                }
+            }
+        }
+        if let Some(payload) = first_panic {
+            // Dropping the receiver makes the remaining workers' sends
+            // fail so they exit; scope joins them, then we re-raise the
+            // original panic for the caller.
+            drop(rx);
+            resume_unwind(payload);
+        }
+        out.into_iter().map(|r| r.expect("worker dropped a task")).collect()
+    })
+}
+
+/// Steal from the back of the longest foreign deque (classic victim
+/// selection; back-stealing keeps the victim's cache-warm front work).
+/// Retries on a lost race; returns `None` only after observing every
+/// deque empty in one full scan.
+fn steal<T>(queues: &[Mutex<VecDeque<(usize, T)>>], thief: usize) -> Option<(usize, T)> {
+    loop {
+        let mut victim: Option<(usize, usize)> = None; // (len, index)
+        for (qi, q) in queues.iter().enumerate() {
+            if qi == thief {
+                continue;
+            }
+            let len = q.lock().unwrap().len();
+            let better = match victim {
+                Some((best, _)) => len > best,
+                None => len > 0,
+            };
+            if better {
+                victim = Some((len, qi));
+            }
+        }
+        let (_, qi) = victim?;
+        // The victim may have been drained since the scan; rescan rather
+        // than giving up while other deques may still hold work.
+        if let Some(task) = queues[qi].lock().unwrap().pop_back() {
+            return Some(task);
+        }
+        std::thread::yield_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let tasks: Vec<u64> = (0..100).collect();
+        let out = parallel_map(tasks, 8, |t| {
+            // Vary per-task latency so completion order scrambles.
+            std::thread::sleep(std::time::Duration::from_micros(((t * 37) % 200) + 1));
+            t * t
+        });
+        assert_eq!(out, (0..100u64).map(|t| t * t).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let out: Vec<u32> = parallel_map(Vec::<u32>::new(), 4, |t| t);
+        assert!(out.is_empty());
+        assert_eq!(parallel_map(vec![7u32], 16, |t| t + 1), vec![8]);
+    }
+
+    #[test]
+    fn propagates_the_original_panic_message() {
+        let caught = std::panic::catch_unwind(|| {
+            parallel_map(vec![1u32, 2, 3], 2, |t| {
+                if t == 2 {
+                    panic!("task two exploded");
+                }
+                t
+            })
+        });
+        let payload = caught.unwrap_err();
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "task two exploded");
+    }
+}

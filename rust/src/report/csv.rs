@@ -1,6 +1,7 @@
 //! CSV writers for every figure's data series, so the paper's plots can
 //! be regenerated with any plotting tool from `results/*.csv`.
 
+use crate::campaign::runner::RunOutcome;
 use crate::core::job::JobRecord;
 use crate::metrics::normalized::NormalizedPart;
 use crate::metrics::summary::PolicySummary;
@@ -99,6 +100,62 @@ pub fn write_gantt(path: &Path, gantt: &[GanttEntry]) -> std::io::Result<()> {
                 g.finish.as_secs_f64()
             ));
         }
+    }
+    write_file(path, &s)
+}
+
+/// RFC 4180 field escaping: quote when a field contains a comma, quote
+/// or newline (labels and error messages are free-form text).
+fn csv_escape(field: &str) -> String {
+    if field.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Campaign results: one row per grid cell, in enumeration order.
+pub fn write_campaign(path: &Path, outcomes: &[RunOutcome]) -> std::io::Result<()> {
+    let mut s = String::from(
+        "run,label,policy,seed,workload,bb_factor,ok,n_jobs,n_killed,mean_wait_h,mean_bsld,\
+         median_wait_h,max_wait_h,makespan_h,fingerprint,sched_invocations,sched_wall_s,wall_s,\
+         error\n",
+    );
+    for o in outcomes {
+        let (n_jobs, n_killed, wait, bsld, median, max, makespan) = match &o.summary {
+            Some(m) => (
+                m.n_jobs.to_string(),
+                m.n_killed.to_string(),
+                format!("{:.6}", m.mean_wait_h),
+                format!("{:.6}", m.mean_bsld),
+                format!("{:.6}", m.median_wait_h),
+                format!("{:.6}", m.max_wait_h),
+                format!("{:.6}", m.makespan_h),
+            ),
+            None => Default::default(),
+        };
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:016x},{},{:.6},{:.6},{}\n",
+            o.run.index,
+            csv_escape(&o.label),
+            o.run.policy.name(),
+            o.run.seed,
+            csv_escape(&o.run.source.label()),
+            o.run.bb_factor,
+            o.ok(),
+            n_jobs,
+            n_killed,
+            wait,
+            bsld,
+            median,
+            max,
+            makespan,
+            o.fingerprint,
+            o.sched_invocations,
+            o.sched_wall_s,
+            o.wall_s,
+            csv_escape(o.error.as_deref().unwrap_or("")),
+        ));
     }
     write_file(path, &s)
 }

@@ -1,0 +1,172 @@
+//! Hand-rolled JSON serialization for `--json` machine-readable output
+//! (the offline build ships no serde). Only what the CLI needs: flat
+//! objects, string/number/bool fields, and NDJSON record streams.
+//!
+//! Number formatting uses Rust's shortest-round-trip `Display`, which is
+//! deterministic for identical inputs — the property the campaign
+//! layer's byte-identical-output guarantee rests on. Non-finite floats
+//! serialize as `null` (JSON has no NaN/inf).
+
+/// Escape a string for embedding in a JSON document (RFC 8259 §7).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize an f64 as a JSON value (`null` when non-finite).
+pub fn number(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Incremental flat-object builder:
+/// `JsonObject::new().str("a", "x").num_u("b", 1).end()` ->
+/// `{"a":"x","b":1}`.
+#[derive(Debug, Clone)]
+pub struct JsonObject {
+    buf: String,
+}
+
+impl JsonObject {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> JsonObject {
+        JsonObject { buf: String::from("{") }
+    }
+
+    fn key(&mut self, k: &str) {
+        if self.buf.len() > 1 {
+            self.buf.push(',');
+        }
+        self.buf.push('"');
+        self.buf.push_str(&escape(k));
+        self.buf.push_str("\":");
+    }
+
+    pub fn str(mut self, k: &str, v: &str) -> JsonObject {
+        self.key(k);
+        self.buf.push('"');
+        self.buf.push_str(&escape(v));
+        self.buf.push('"');
+        self
+    }
+
+    pub fn num_f(mut self, k: &str, v: f64) -> JsonObject {
+        self.key(k);
+        self.buf.push_str(&number(v));
+        self
+    }
+
+    pub fn num_u(mut self, k: &str, v: u64) -> JsonObject {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    pub fn bool(mut self, k: &str, v: bool) -> JsonObject {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Insert a pre-serialized JSON value (object, array, ...).
+    pub fn raw(mut self, k: &str, json: &str) -> JsonObject {
+        self.key(k);
+        self.buf.push_str(json);
+        self
+    }
+
+    pub fn end(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+/// Serialize a sequence of pre-serialized values as a JSON array.
+pub fn array<I: IntoIterator<Item = String>>(items: I) -> String {
+    let mut buf = String::from("[");
+    for (i, item) in items.into_iter().enumerate() {
+        if i > 0 {
+            buf.push(',');
+        }
+        buf.push_str(&item);
+    }
+    buf.push(']');
+    buf
+}
+
+/// The shared `--json` metric fields of a per-policy summary — the one
+/// field list behind both `repro simulate --json` and campaign NDJSON
+/// records (callers add their own identity keys like `policy`/`label`).
+pub fn summary_fields(
+    obj: JsonObject,
+    s: &crate::metrics::summary::PolicySummary,
+) -> JsonObject {
+    obj.num_u("n_jobs", s.n_jobs as u64)
+        .num_u("n_killed", s.n_killed as u64)
+        .num_f("mean_wait_h", s.mean_wait_h)
+        .num_f("wait_ci95", s.wait_ci95)
+        .num_f("mean_bsld", s.mean_bsld)
+        .num_f("bsld_ci95", s.bsld_ci95)
+        .num_f("median_wait_h", s.median_wait_h)
+        .num_f("max_wait_h", s.max_wait_h)
+        .num_f("makespan_h", s.makespan_h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_flat_objects() {
+        let j = JsonObject::new()
+            .str("name", "smoke")
+            .num_u("runs", 4)
+            .num_f("wall_s", 1.5)
+            .bool("ok", true)
+            .end();
+        assert_eq!(j, r#"{"name":"smoke","runs":4,"wall_s":1.5,"ok":true}"#);
+    }
+
+    #[test]
+    fn escapes_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        let j = JsonObject::new().str("k", "v\"w").end();
+        assert_eq!(j, r#"{"k":"v\"w"}"#);
+    }
+
+    #[test]
+    fn numbers_are_shortest_round_trip() {
+        assert_eq!(number(1.0), "1");
+        assert_eq!(number(0.003), "0.003");
+        assert_eq!(number(f64::NAN), "null");
+        assert_eq!(number(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn arrays_and_raw() {
+        let arr = array(vec!["1".to_string(), "2".to_string()]);
+        assert_eq!(arr, "[1,2]");
+        let j = JsonObject::new().raw("xs", &arr).end();
+        assert_eq!(j, r#"{"xs":[1,2]}"#);
+    }
+
+    #[test]
+    fn empty_object() {
+        assert_eq!(JsonObject::new().end(), "{}");
+    }
+}

@@ -1,8 +1,10 @@
 //! Reporting: ASCII tables for the terminal, CSV series for every figure,
-//! and Gantt export.
+//! Gantt export, and hand-rolled JSON for `--json` machine output.
 
 pub mod bench;
 pub mod csv;
+pub mod json;
 pub mod table;
 
+pub use json::JsonObject;
 pub use table::{fmt_f, render_table};

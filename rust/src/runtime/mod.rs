@@ -1,9 +1,21 @@
 //! PJRT runtime bridge: loads the AOT-compiled HLO artifacts (built once
 //! by `make artifacts`) and serves batched plan scores to the scheduler's
 //! simulated-annealing loop. Python never runs on this path.
+//!
+//! The real bridge needs the `xla` and `anyhow` crates, which only exist
+//! in the full offline build environment; the default build swaps in
+//! [`scorer`]'s native stub (same API, always falls back to the native
+//! discrete mirror) so the crate builds with zero external dependencies.
 
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(feature = "xla")]
 pub mod scorer;
 
+#[cfg(not(feature = "xla"))]
+#[path = "scorer_stub.rs"]
+pub mod scorer;
+
+#[cfg(feature = "xla")]
 pub use client::{LoadedComputation, RuntimeClient};
 pub use scorer::{ScorerDims, XlaScorer};

@@ -1,0 +1,53 @@
+//! Build-without-`xla` stand-in for [`XlaScorer`]: the same public
+//! surface as `runtime/scorer.rs`, but artifact loading always fails
+//! (callers fall back to the native discrete backend) and, defensively,
+//! `score_batch` mirrors scores natively if an instance is ever driven.
+
+use crate::sched::plan::scheduler::ExternalBatchScorer;
+use crate::sched::plan::scorer::{DiscreteProblem, NativeDiscreteScorer};
+use std::path::Path;
+
+/// One artifact variant's dimensions (mirror of the real scorer's type).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScorerDims {
+    pub q: usize,
+    pub t: usize,
+    pub k: usize,
+}
+
+/// Stub scorer: never holds a PJRT client.
+pub struct XlaScorer {
+    pub executions: u64,
+    pub fallback_scores: u64,
+}
+
+impl XlaScorer {
+    /// Always fails: artifacts cannot be executed without the `xla`
+    /// feature. The message is what `coordinator::make_scheduler` prints
+    /// before falling back to the native discrete backend.
+    pub fn from_artifact_dir(_dir: &Path) -> Result<XlaScorer, String> {
+        Err("built without the `xla` cargo feature; plan-backend xla unavailable".to_string())
+    }
+
+    pub fn dims(&self) -> Vec<ScorerDims> {
+        Vec::new()
+    }
+
+    /// T slots of the largest variant (what the scheduler should
+    /// discretise to); the stub returns the conventional default.
+    pub fn preferred_t_slots(&self) -> usize {
+        256
+    }
+}
+
+impl ExternalBatchScorer for XlaScorer {
+    fn score_batch(&mut self, problem: &DiscreteProblem, perms: &[Vec<usize>]) -> Vec<f64> {
+        self.fallback_scores += perms.len() as u64;
+        let native = NativeDiscreteScorer::new(problem.clone());
+        perms.iter().map(|p| native.score_perm(p)).collect()
+    }
+
+    fn label(&self) -> &'static str {
+        "xla-stub-native"
+    }
+}

@@ -80,6 +80,37 @@ pub struct SimResult {
     pub killed_jobs: u32,
 }
 
+impl SimResult {
+    /// Order-sensitive FNV-1a hash over every record's simulation-time
+    /// fields plus the makespan. Two runs agree on this fingerprint iff
+    /// they produced identical per-job schedules, so it is the value the
+    /// campaign layer's parallel-vs-sequential determinism checks (and
+    /// its NDJSON records) rely on. Host wall-clock metrics are excluded.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+            }
+        };
+        for r in &self.records {
+            mix(r.id.0 as u64);
+            mix(r.submit.0);
+            mix(r.start.0);
+            mix(r.finish.0);
+            mix(r.walltime.0);
+            mix(r.procs as u64);
+            mix(r.bb);
+            mix(r.killed as u64);
+        }
+        mix(self.makespan.0);
+        mix(self.killed_jobs as u64);
+        h
+    }
+}
+
 pub struct Simulator {
     cfg: SimConfig,
     topo: Topology,

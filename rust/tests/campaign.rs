@@ -1,0 +1,138 @@
+//! Campaign-layer integration tests: spec parsing and the exit-code
+//! contract, grid enumeration, and the headline determinism guarantee —
+//! a grid executed on 4 workers produces record-for-record identical
+//! metrics to the same grid on 1 worker.
+
+use bbsched::campaign::{
+    exit_code, run_campaign, CampaignSpec, Progress, RunOutcome, EXIT_OK, EXIT_RUN_FAILED,
+    EXIT_SPEC_ERROR,
+};
+use bbsched::coordinator::PlanBackendKind;
+use bbsched::sched::Policy;
+use bbsched::workload::WorkloadSource;
+use std::sync::Mutex;
+
+/// A seconds-scale grid: 3 policies x 2 seeds x 1 scale x 2 bb-factors.
+fn tiny_spec() -> CampaignSpec {
+    CampaignSpec::parse(
+        "[campaign]\n\
+         name = tiny\n\
+         [grid]\n\
+         policies = fcfs, fcfs-bb, sjf-bb\n\
+         seeds = 1, 2\n\
+         scales = 0.002\n\
+         bb-factors = 0.75, 1.0\n\
+         [sim]\n\
+         io = false\n",
+    )
+    .unwrap()
+}
+
+#[test]
+fn invalid_specs_map_to_exit_code_2() {
+    // The CLI returns EXIT_SPEC_ERROR whenever parse fails; every parse
+    // failure must therefore be an Err, never a silently-shrunk grid.
+    let bad = [
+        "[grid]\npolicies = warp-speed\n",        // unknown policy
+        "[grid]\npolicies = fcfs\nseeds = nan\n", // bad number
+        "[grid]\npolicies = fcfs\nbb-factors = 0\n", // non-positive factor
+        "[grid]\nwat\n",                          // not key = value
+        "[warp]\n",                               // unknown section
+        "[grid]\npolicies = fcfs\nturbo = on\n",  // unknown key
+        "",                                       // empty grid
+    ];
+    for spec in bad {
+        assert!(CampaignSpec::parse(spec).is_err(), "accepted bad spec: {spec:?}");
+    }
+    assert_eq!(EXIT_SPEC_ERROR, 2);
+}
+
+#[test]
+fn grid_enumeration_covers_the_cross_product() {
+    let spec = tiny_spec();
+    let runs = spec.enumerate();
+    assert_eq!(runs.len(), 3 * 2 * 2);
+    assert_eq!(spec.n_runs(), runs.len());
+    // Every (policy, seed, bb) combination appears exactly once.
+    let mut seen = std::collections::HashSet::new();
+    for r in &runs {
+        assert!(seen.insert((r.policy.name(), r.seed, r.bb_factor.to_bits())));
+        assert_eq!(r.source, WorkloadSource::Synth { scale: 0.002 });
+    }
+    // Indexes are dense and in order.
+    for (i, r) in runs.iter().enumerate() {
+        assert_eq!(r.index, i);
+    }
+    assert_eq!(spec.plan_backend, PlanBackendKind::Exact);
+}
+
+#[test]
+fn parallel_campaign_is_bit_identical_to_sequential() {
+    let spec = tiny_spec();
+
+    let run_with = |jobs: usize| -> (Vec<String>, Vec<String>) {
+        let streamed = Mutex::new(Vec::new());
+        let progress = Progress::quiet(spec.n_runs());
+        let result = run_campaign(&spec, jobs, &progress, |o: &RunOutcome| {
+            streamed.lock().unwrap().push(o.deterministic_line());
+        });
+        assert_eq!(exit_code(&result.outcomes), EXIT_OK);
+        let collected: Vec<String> =
+            result.outcomes.iter().map(|o| o.deterministic_line()).collect();
+        (streamed.into_inner().unwrap(), collected)
+    };
+
+    let (stream1, seq) = run_with(1);
+    let (stream4, par) = run_with(4);
+
+    // Record-for-record, byte-for-byte: the collected outcomes AND the
+    // order-preserving stream both match across worker counts.
+    assert_eq!(seq.len(), spec.n_runs());
+    assert_eq!(seq, par, "metrics differ between --jobs 1 and --jobs 4");
+    assert_eq!(stream1, seq, "stream order differs from enumeration order");
+    assert_eq!(stream4, seq, "parallel stream is not deterministic");
+    // Sanity: the runs actually simulated something.
+    for o in &seq {
+        assert!(o.contains("\"ok\":true"), "unexpected record: {o}");
+        assert!(o.contains("\"fingerprint\":"), "missing fingerprint: {o}");
+    }
+}
+
+#[test]
+fn failed_runs_are_isolated_and_flip_the_exit_code() {
+    // A nonexistent SWF path must surface as a failed outcome (and exit
+    // code 1), never as a panic that tears the whole campaign down.
+    let spec = CampaignSpec::parse(
+        "[grid]\n\
+         policies = fcfs\n\
+         seeds = 1\n\
+         swfs = /nonexistent/trace.swf\n",
+    )
+    .unwrap();
+    let progress = Progress::quiet(spec.n_runs());
+    let result = run_campaign(&spec, 2, &progress, |_| {});
+    assert_eq!(result.outcomes.len(), 1);
+    let o = &result.outcomes[0];
+    assert!(!o.ok());
+    assert!(o.summary.is_none());
+    assert!(o.error.as_deref().unwrap().contains("reading SWF file"));
+    assert_eq!(exit_code(&result.outcomes), EXIT_RUN_FAILED);
+}
+
+#[test]
+fn builtin_specs_exist_and_enumerate() {
+    let paper = CampaignSpec::builtin("paper-eval").unwrap();
+    assert_eq!(paper.policies, Policy::ALL.to_vec());
+    assert_eq!(paper.n_runs(), Policy::ALL.len() * 3);
+    let smoke = CampaignSpec::builtin("smoke").unwrap();
+    assert!(smoke.n_runs() >= 2);
+    assert!(CampaignSpec::builtin("bogus").is_none());
+}
+
+#[test]
+fn run_labels_are_stable() {
+    let runs = tiny_spec().enumerate();
+    assert_eq!(runs[0].label(), "fcfs+s1+x0.002+bb0.75");
+    assert_eq!(runs[1].label(), "fcfs+s1+x0.002+bb1");
+    assert_eq!(runs[4].label(), "fcfs-bb+s1+x0.002+bb0.75");
+}

@@ -4,7 +4,9 @@
 //! the contract that lets the simulated-annealing search run on either
 //! backend interchangeably.
 //!
-//! Requires `make artifacts` (skipped with a message otherwise).
+//! Requires `make artifacts` (skipped with a message otherwise) and the
+//! `xla` cargo feature (the whole test crate is compiled out without it).
+#![cfg(feature = "xla")]
 
 use bbsched::core::job::JobId;
 use bbsched::core::resources::Resources;
