@@ -12,10 +12,10 @@ use bbsched::report::bench::{bench, report, BenchResult};
 use bbsched::sched::plan::annealing::{optimise, PermScorer, SaParams};
 use bbsched::sched::plan::builder::PlanJob;
 use bbsched::sched::plan::candidates::initial_candidates;
-use bbsched::sched::plan::profile::Profile;
 use bbsched::sched::plan::scheduler::ExternalBatchScorer;
 use bbsched::sched::plan::scorer::{DiscreteProblem, ExactScorer, NativeDiscreteScorer};
 use bbsched::sched::plan::zheng::{optimise_zheng, ZhengParams};
+use bbsched::sched::timeline::Profile;
 use bbsched::stats::rng::Pcg32;
 use bbsched::workload::bbmodel::BbModel;
 
@@ -143,7 +143,7 @@ fn main() {
 
     // --- Memoisation. -----------------------------------------------------
     use bbsched::sched::plan::scheduler::PlanSched;
-    use bbsched::sched::{SchedView, Scheduler};
+    use bbsched::sched::{CtxHarness, SchedView};
     let reqs: Vec<bbsched::JobRequest> = jobs
         .iter()
         .map(|j| bbsched::JobRequest {
@@ -167,12 +167,14 @@ fn main() {
         running: &running,
     };
     let mut sched = PlanSched::new(2.0, 1);
-    let _ = sched.schedule(&view); // prime the memo
+    let mut harness = CtxHarness::from_view(&view);
+    // Prime the memo.
+    let _ = bbsched::sched::Scheduler::schedule(&mut sched, &mut harness.ctx(view));
     results.push(bench(
         "plan_sched_memoised_tick",
         10,
         1000,
-        || sched.schedule(&view).len(),
+        || bbsched::sched::Scheduler::schedule(&mut sched, &mut harness.ctx(view)).len(),
         |n| format!("{n} launches (memo hit)"),
     ));
 

@@ -14,8 +14,8 @@ use bbsched::coordinator::{run_policy, PlanBackendKind};
 use bbsched::platform::flows::FlowNetwork;
 use bbsched::report::bench::{bench, report, BenchResult};
 use bbsched::sched::plan::builder::{build_plan, PlanJob};
-use bbsched::sched::plan::profile::Profile;
 use bbsched::sched::plan::scorer::DiscreteProblem;
+use bbsched::sched::timeline::Profile;
 use bbsched::sched::Policy;
 use bbsched::sim::events::{Event, EventQueue};
 use bbsched::sim::simulator::SimConfig;
@@ -43,7 +43,10 @@ fn main() {
             let procs = 1 + rng.below(48);
             PlanJob {
                 id: JobId(i),
-                req: Resources::new(procs, BbModel::default().sample(&mut rng, procs, capacity.bb / 2)),
+                req: Resources::new(
+                    procs,
+                    BbModel::default().sample(&mut rng, procs, capacity.bb / 2),
+                ),
                 walltime: Duration::from_secs(60 * (5 + rng.below(600)) as u64),
                 submit: Time::ZERO,
             }
@@ -54,7 +57,9 @@ fn main() {
         "profile_earliest_fit",
         100,
         10_000,
-        || profile.earliest_fit(Resources::new(24, 50 << 30), Duration::from_secs(3600), Time::ZERO),
+        || {
+            profile.earliest_fit(Resources::new(24, 50 << 30), Duration::from_secs(3600), Time::ZERO)
+        },
         |t| format!("-> {t}"),
     ));
     results.push(bench(
@@ -128,14 +133,22 @@ fn main() {
         "sim_285_jobs_sjf_bb_io",
         1,
         5,
-        || run_policy(wl_jobs.clone(), Policy::SjfBb, &sim, 1, PlanBackendKind::Exact).records.len(),
+        || {
+            run_policy(wl_jobs.clone(), Policy::SjfBb, &sim, 1, PlanBackendKind::Exact)
+                .records
+                .len()
+        },
         |n| format!("{n} jobs simulated"),
     ));
     results.push(bench(
         "sim_285_jobs_plan2_exact",
         0,
         3,
-        || run_policy(wl_jobs.clone(), Policy::Plan(2), &sim, 1, PlanBackendKind::Exact).records.len(),
+        || {
+            run_policy(wl_jobs.clone(), Policy::Plan(2), &sim, 1, PlanBackendKind::Exact)
+                .records
+                .len()
+        },
         |n| format!("{n} jobs simulated"),
     ));
 

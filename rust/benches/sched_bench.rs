@@ -1,0 +1,144 @@
+//! Scheduler-cost bench: `sched_wall` and invocation counts per policy
+//! on a ~10k-job synthetic workload, measured twice per policy —
+//!
+//! - `incremental`: the shared [`ResourceTimeline`] maintained by the
+//!   simulator (the default), prefix-cached plan scoring;
+//! - `rebuild`: the pre-refactor cost model — the timeline rebuilt from
+//!   the running set on every invocation, cold plan scoring.
+//!
+//! Both modes are fingerprint-identical by construction (asserted here);
+//! only the wall-clock differs. Emits `BENCH_sched.json` (override the
+//! path with `BENCH_OUT`) to feed the perf trajectory.
+//!
+//! Usage: `cargo bench --bench sched_bench` (full ~10k-job workload) or
+//! `cargo bench --bench sched_bench -- --quick` (CI smoke size).
+
+use bbsched::coordinator::{run_policy_opts, PlanBackendKind, SchedOpts};
+use bbsched::report::bench::{fmt_dur, write_json, BenchResult};
+use bbsched::report::{fmt_f, render_table};
+use bbsched::sched::Policy;
+use bbsched::sim::simulator::SimConfig;
+use bbsched::workload::synth::{generate, SynthConfig};
+use std::time::Duration;
+
+struct Row {
+    policy: String,
+    invocations: u64,
+    incremental: Duration,
+    rebuild: Duration,
+    fingerprint: u64,
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // scale 1.0 == 28,453 jobs / 48 weeks; 0.35 lands at ~10k jobs.
+    let scale = if quick { 0.01 } else { 0.35 };
+    let cfg = SynthConfig::scaled(1, scale);
+    let jobs = generate(&cfg);
+    // Pure scheduling cost: I/O off so runtime == compute time and every
+    // second of wall-clock difference is scheduler-side.
+    let sim = SimConfig { bb_capacity: cfg.bb_capacity, io_enabled: false, ..SimConfig::default() };
+    let policies = [
+        Policy::Fcfs,
+        Policy::FcfsEasy,
+        Policy::Filler,
+        Policy::FcfsBb,
+        Policy::SjfBb,
+        Policy::SlurmLike,
+        Policy::ConservativeBb,
+        Policy::Plan(1),
+        Policy::Plan(2),
+    ];
+    eprintln!(
+        "sched bench: {} jobs (scale {scale}), {} policies x 2 timeline modes",
+        jobs.len(),
+        policies.len()
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for policy in policies {
+        let inc = run_policy_opts(
+            jobs.clone(),
+            policy,
+            &sim,
+            1,
+            PlanBackendKind::Exact,
+            SchedOpts::default(),
+        );
+        let reb_cfg = SimConfig { rebuild_timeline: true, ..sim.clone() };
+        let reb = run_policy_opts(
+            jobs.clone(),
+            policy,
+            &reb_cfg,
+            1,
+            PlanBackendKind::Exact,
+            SchedOpts { plan_cold_scoring: true, ..SchedOpts::default() },
+        );
+        assert_eq!(
+            inc.fingerprint(),
+            reb.fingerprint(),
+            "{}: timeline modes must be behaviour-identical",
+            policy.name()
+        );
+        assert_eq!(inc.sched_invocations, reb.sched_invocations);
+        eprintln!(
+            "  {:>16}: {} invocations, incremental {} vs rebuild {}",
+            policy.name(),
+            inc.sched_invocations,
+            fmt_dur(inc.sched_wall),
+            fmt_dur(reb.sched_wall),
+        );
+        rows.push(Row {
+            policy: policy.name(),
+            invocations: inc.sched_invocations,
+            incremental: inc.sched_wall,
+            rebuild: reb.sched_wall,
+            fingerprint: inc.fingerprint(),
+        });
+    }
+
+    // --- Table. -----------------------------------------------------------
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.policy.clone(),
+                r.invocations.to_string(),
+                fmt_dur(r.incremental),
+                fmt_dur(r.rebuild),
+                fmt_f(r.rebuild.as_secs_f64() / r.incremental.as_secs_f64().max(1e-12)),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            &format!("sched_wall per policy ({} jobs, io off)", jobs.len()),
+            &["policy", "invocations", "incremental", "rebuild", "speedup"],
+            &table,
+        )
+    );
+
+    // --- BENCH_sched.json (the perf-trajectory contract). -----------------
+    let results: Vec<BenchResult> = rows
+        .iter()
+        .map(|r| BenchResult {
+            name: r.policy.clone(),
+            iters: 1,
+            mean: r.incremental,
+            stddev: Duration::ZERO,
+            min: r.incremental,
+            note: format!(
+                "invocations={} rebuild_s={:.6} speedup={:.3} fingerprint={:016x} jobs={}",
+                r.invocations,
+                r.rebuild.as_secs_f64(),
+                r.rebuild.as_secs_f64() / r.incremental.as_secs_f64().max(1e-12),
+                r.fingerprint,
+                jobs.len(),
+            ),
+        })
+        .collect();
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_sched.json".to_string());
+    write_json(std::path::Path::new(&out), "sched_wall", &results).expect("write bench json");
+    println!("bench json -> {out}");
+}

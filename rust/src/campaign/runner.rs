@@ -12,7 +12,7 @@
 
 use crate::campaign::progress::Progress;
 use crate::campaign::spec::{CampaignSpec, RunSpec};
-use crate::coordinator::run_policy;
+use crate::coordinator::{run_policy_opts, SchedOpts};
 use crate::metrics::summary::{summarize, PolicySummary};
 use crate::report::json::JsonObject;
 use crate::sim::simulator::SimConfig;
@@ -110,7 +110,8 @@ pub fn execute_run(spec: &CampaignSpec, run: &RunSpec) -> RunOutcome {
             io_enabled: spec.io_enabled,
             ..SimConfig::default()
         };
-        let res = run_policy(jobs, run.policy, &sim_cfg, run.seed, spec.plan_backend);
+        let opts = SchedOpts { plan_warm_start: spec.plan_warm_start, ..SchedOpts::default() };
+        let res = run_policy_opts(jobs, run.policy, &sim_cfg, run.seed, spec.plan_backend, opts);
         let summary = summarize(&run.policy.name(), &res.records);
         Ok((summary, res.fingerprint(), res.sched_invocations, res.sched_wall.as_secs_f64()))
     }));

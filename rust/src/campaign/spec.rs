@@ -71,6 +71,10 @@ pub struct CampaignSpec {
     /// Shared simulator settings.
     pub io_enabled: bool,
     pub plan_backend: PlanBackendKind,
+    /// Warm-start the plan policies' SA from the previous tick's plan
+    /// (`[sim] plan-warm-start`). Off by default: it changes search
+    /// trajectories, so the paper-faithful grids stay fingerprint-stable.
+    pub plan_warm_start: bool,
 }
 
 /// One cell of the campaign grid.
@@ -125,6 +129,7 @@ impl CampaignSpec {
             bb_factors: vec![1.0],
             io_enabled: true,
             plan_backend: PlanBackendKind::Exact,
+            plan_warm_start: false,
         }
     }
 
@@ -139,6 +144,7 @@ impl CampaignSpec {
             bb_factors: vec![1.0],
             io_enabled: false,
             plan_backend: PlanBackendKind::Exact,
+            plan_warm_start: false,
         }
     }
 
@@ -161,6 +167,7 @@ impl CampaignSpec {
         let mut swfs: Option<Vec<PathBuf>> = None;
         let mut bb_factors: Vec<f64> = vec![1.0];
         let mut io_enabled = true;
+        let mut plan_warm_start = false;
         let mut backend_name = "exact".to_string();
         let mut t_slots = 256usize;
 
@@ -237,6 +244,9 @@ impl CampaignSpec {
                 ("sim", "io") => {
                     io_enabled = parse_bool(ln, key, value)?;
                 }
+                ("sim", "plan-warm-start") => {
+                    plan_warm_start = parse_bool(ln, key, value)?;
+                }
                 ("sim", "plan-backend") => {
                     if !["exact", "discrete", "xla"].contains(&value) {
                         return Err(SpecError::at(
@@ -294,6 +304,7 @@ impl CampaignSpec {
             bb_factors,
             io_enabled,
             plan_backend,
+            plan_warm_start,
         })
     }
 
@@ -325,6 +336,7 @@ impl CampaignSpec {
         s.push_str(&format!("bb-factors = {}\n\n", bbs.join(", ")));
         s.push_str("[sim]\n");
         s.push_str(&format!("io = {}\n", self.io_enabled));
+        s.push_str(&format!("plan-warm-start = {}\n", self.plan_warm_start));
         match self.plan_backend {
             PlanBackendKind::Exact => s.push_str("plan-backend = exact\n"),
             PlanBackendKind::Discrete { t_slots } => {
@@ -450,6 +462,17 @@ t-slots = 128
         assert_eq!(err.line, 3);
         let err = CampaignSpec::parse("").unwrap_err();
         assert_eq!(err.line, 0); // no policies
+    }
+
+    #[test]
+    fn plan_warm_start_parses_and_round_trips() {
+        let spec =
+            CampaignSpec::parse("[grid]\npolicies = plan-2\n[sim]\nplan-warm-start = true\n")
+                .unwrap();
+        assert!(spec.plan_warm_start);
+        let reparsed = CampaignSpec::parse(&spec.to_text()).unwrap();
+        assert_eq!(spec, reparsed);
+        assert!(!CampaignSpec::smoke().plan_warm_start);
     }
 
     #[test]

@@ -24,11 +24,32 @@ pub enum PlanBackendKind {
     Xla { t_slots: usize },
 }
 
-/// Instantiate a scheduler for a policy.
+/// Orthogonal scheduler construction knobs (all default-off; the
+/// defaults reproduce the paper-faithful, fingerprint-stable policies).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedOpts {
+    /// Plan policies: seed the SA with the previous tick's plan.
+    pub plan_warm_start: bool,
+    /// Plan policies: disable the exact scorer's prefix cache (perf
+    /// baseline; behaviour-identical).
+    pub plan_cold_scoring: bool,
+}
+
+/// Instantiate a scheduler for a policy (default options).
 pub fn make_scheduler(
     policy: Policy,
     seed: u64,
     plan_backend: PlanBackendKind,
+) -> Box<dyn Scheduler + Send> {
+    make_scheduler_opts(policy, seed, plan_backend, SchedOpts::default())
+}
+
+/// Instantiate a scheduler for a policy with explicit options.
+pub fn make_scheduler_opts(
+    policy: Policy,
+    seed: u64,
+    plan_backend: PlanBackendKind,
+    opts: SchedOpts,
 ) -> Box<dyn Scheduler + Send> {
     match policy {
         Policy::Fcfs => Box::new(Fcfs::new()),
@@ -39,7 +60,9 @@ pub fn make_scheduler(
         Policy::SlurmLike => Box::new(crate::sched::slurm_like::SlurmLike::new()),
         Policy::ConservativeBb => Box::new(crate::sched::conservative::Conservative::new()),
         Policy::Plan(alpha) => {
-            let sched = PlanSched::new(alpha as f64, seed);
+            let sched = PlanSched::new(alpha as f64, seed)
+                .with_warm_start(opts.plan_warm_start)
+                .with_cold_scoring(opts.plan_cold_scoring);
             let sched = match plan_backend {
                 PlanBackendKind::Exact => sched,
                 PlanBackendKind::Discrete { t_slots } => {
@@ -67,7 +90,7 @@ pub fn make_scheduler(
     }
 }
 
-/// Run one policy over one workload.
+/// Run one policy over one workload (default scheduler options).
 pub fn run_policy(
     jobs: Vec<Job>,
     policy: Policy,
@@ -75,7 +98,19 @@ pub fn run_policy(
     seed: u64,
     plan_backend: PlanBackendKind,
 ) -> SimResult {
-    let sched = make_scheduler(policy, seed, plan_backend);
+    run_policy_opts(jobs, policy, sim_cfg, seed, plan_backend, SchedOpts::default())
+}
+
+/// Run one policy over one workload with explicit scheduler options.
+pub fn run_policy_opts(
+    jobs: Vec<Job>,
+    policy: Policy,
+    sim_cfg: &SimConfig,
+    seed: u64,
+    plan_backend: PlanBackendKind,
+    opts: SchedOpts,
+) -> SimResult {
+    let sched = make_scheduler_opts(policy, seed, plan_backend, opts);
     Simulator::new(jobs, sched, sim_cfg.clone()).run()
 }
 

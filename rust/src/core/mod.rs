@@ -5,5 +5,5 @@ pub mod resources;
 pub mod time;
 
 pub use job::{Job, JobId, JobRecord, JobRequest, JobState};
-pub use resources::{Resources, GIB, TIB};
+pub use resources::{ResourceDelta, Resources, GIB, TIB};
 pub use time::{Duration, Time, MICROS_PER_SEC};

@@ -58,6 +58,72 @@ impl Resources {
     }
 }
 
+/// A *signed* change to a [`Resources`] quantity — the unit of
+/// communication between the platform layer (which emits one delta per
+/// allocation/release) and the [`crate::sched::timeline`] subsystem
+/// (which applies deltas to segments of the availability timeline
+/// instead of rebuilding it from the running set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct ResourceDelta {
+    pub cpu: i64,
+    pub bb: i128,
+}
+
+impl ResourceDelta {
+    pub const ZERO: ResourceDelta = ResourceDelta { cpu: 0, bb: 0 };
+
+    /// The delta of acquiring `r` (free resources shrink).
+    pub fn acquire(r: Resources) -> ResourceDelta {
+        ResourceDelta { cpu: -(r.cpu as i64), bb: -(r.bb as i128) }
+    }
+
+    /// The delta of releasing `r` (free resources grow).
+    pub fn release(r: Resources) -> ResourceDelta {
+        ResourceDelta { cpu: r.cpu as i64, bb: r.bb as i128 }
+    }
+
+    /// The inverse delta (undo).
+    pub fn inverse(self) -> ResourceDelta {
+        ResourceDelta { cpu: -self.cpu, bb: -self.bb }
+    }
+
+    /// True when both components are non-negative (a pure release).
+    pub fn is_release(self) -> bool {
+        self.cpu >= 0 && self.bb >= 0
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.cpu == 0 && self.bb == 0
+    }
+
+    /// Component-wise absolute magnitude as unsigned resources.
+    pub fn magnitude(self) -> Resources {
+        Resources { cpu: self.cpu.unsigned_abs() as u32, bb: self.bb.unsigned_abs() as u64 }
+    }
+}
+
+impl std::ops::Neg for ResourceDelta {
+    type Output = ResourceDelta;
+    fn neg(self) -> ResourceDelta {
+        self.inverse()
+    }
+}
+
+impl Resources {
+    /// Apply a signed delta; `None` on underflow (either dimension going
+    /// negative) or overflow. Resource-accounting bugs must never be
+    /// silently absorbed, so callers either unwrap loudly or recover
+    /// deliberately.
+    pub fn checked_apply(&self, d: ResourceDelta) -> Option<Resources> {
+        let cpu = (self.cpu as i64).checked_add(d.cpu)?;
+        let bb = (self.bb as i128).checked_add(d.bb)?;
+        if cpu < 0 || bb < 0 || cpu > u32::MAX as i64 || bb > u64::MAX as i128 {
+            return None;
+        }
+        Some(Resources { cpu: cpu as u32, bb: bb as u64 })
+    }
+}
+
 impl Add for Resources {
     type Output = Resources;
     fn add(self, o: Resources) -> Resources {
@@ -120,5 +186,28 @@ mod tests {
     #[should_panic(expected = "cpu resource underflow")]
     fn sub_panics_on_underflow() {
         let _ = Resources::new(1, 0) - Resources::new(2, 0);
+    }
+
+    #[test]
+    fn delta_round_trips() {
+        let r = Resources::new(3, 100);
+        let a = ResourceDelta::acquire(r);
+        let b = ResourceDelta::release(r);
+        assert_eq!(a.inverse(), b);
+        assert_eq!(-b, a);
+        assert!(b.is_release() && !a.is_release());
+        assert_eq!(a.magnitude(), r);
+        assert_eq!(b.magnitude(), r);
+        let free = Resources::new(10, 500);
+        assert_eq!(free.checked_apply(a), Some(Resources::new(7, 400)));
+        assert_eq!(free.checked_apply(a).unwrap().checked_apply(b), Some(free));
+    }
+
+    #[test]
+    fn delta_apply_catches_underflow() {
+        let free = Resources::new(2, 50);
+        assert_eq!(free.checked_apply(ResourceDelta::acquire(Resources::new(3, 0))), None);
+        assert_eq!(free.checked_apply(ResourceDelta::acquire(Resources::new(0, 51))), None);
+        assert!(ResourceDelta::ZERO.is_zero());
     }
 }

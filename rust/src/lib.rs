@@ -19,6 +19,25 @@
 //! - [`campaign`]: declarative experiment grids (scheduler x seed x
 //!   scale x bb-factor) executed on a work-stealing thread pool with a
 //!   deterministic, machine-readable output contract.
+//!
+//! Scheduling data path (the `sched::timeline` subsystem):
+//! - [`sched::timeline::ResourceTimeline`] — one piecewise-constant
+//!   free-(processors, burst-buffer) timeline per simulation, **owned by
+//!   the simulator** and maintained incrementally from the platform
+//!   layer's allocation deltas (job start subtracts its request until
+//!   the walltime bound; early completion adds the tail back) instead of
+//!   being rebuilt from the running set on every invocation.
+//! - [`sched::SchedCtx`] — the `Scheduler` trait boundary: a read-only
+//!   `SchedView` snapshot + the cached timeline + an id→queue-index map.
+//!   Policies make tentative reservations through a scoped
+//!   [`sched::timeline::TimelineTxn`] that rolls back on drop
+//!   (Algorithm 1's "drop all reservations" as scope exit).
+//! - Parity: `SimConfig::{rebuild_timeline, validate_timeline}` keep the
+//!   pre-refactor rebuild semantics available as a perf baseline and an
+//!   every-invocation equality assertion; `tests/parity.rs` proves all
+//!   policies fingerprint-identical across modes, and
+//!   `benches/sched_bench.rs` emits `BENCH_sched.json` with the
+//!   per-policy `sched_wall` trajectory.
 
 pub mod campaign;
 pub mod coordinator;

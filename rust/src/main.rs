@@ -18,7 +18,9 @@
 use bbsched::campaign::{
     self, CampaignSpec, Progress, RunOutcome, EXIT_OK, EXIT_SPEC_ERROR,
 };
-use bbsched::coordinator::{run_eval, run_policy, EvalParams, PlanBackendKind};
+use bbsched::coordinator::{
+    run_eval, run_policy, run_policy_opts, EvalParams, PlanBackendKind, SchedOpts,
+};
 use bbsched::core::job::Job;
 use bbsched::report::csv;
 use bbsched::report::json::{summary_fields, JsonObject};
@@ -123,7 +125,8 @@ fn cmd_simulate(args: &Args) {
         cfg.io_enabled
     );
     let t0 = std::time::Instant::now();
-    let res = run_policy(jobs, policy, &cfg, args.u64("seed", 1), plan_backend(args));
+    let opts = SchedOpts { plan_warm_start: args.flag("plan-warm-start"), ..SchedOpts::default() };
+    let res = run_policy_opts(jobs, policy, &cfg, args.u64("seed", 1), plan_backend(args), opts);
     let summary = bbsched::metrics::summary::summarize(&policy.name(), &res.records);
     if args.flag("json") {
         // Machine-readable one-object output (ptybox-style `--json`).
@@ -225,7 +228,10 @@ fn cmd_eval(args: &Args) {
         "{}",
         render_table(
             "Figs 5-6: mean waiting time / bounded slowdown",
-            &["policy", "mean wait [h]", "ci95", "mean bsld", "ci95", "median [h]", "max [h]", "killed"],
+            &[
+                "policy", "mean wait [h]", "ci95", "mean bsld", "ci95", "median [h]", "max [h]",
+                "killed",
+            ],
             &rows,
         )
     );
@@ -478,9 +484,9 @@ fn cmd_ablation(args: &Args) {
     use bbsched::sched::plan::annealing::{optimise, SaParams};
     use bbsched::sched::plan::builder::PlanJob;
     use bbsched::sched::plan::candidates::initial_candidates;
-    use bbsched::sched::plan::profile::Profile;
     use bbsched::sched::plan::scorer::ExactScorer;
     use bbsched::sched::plan::zheng::{optimise_zheng, ZhengParams};
+    use bbsched::sched::timeline::Profile;
     use bbsched::stats::rng::Pcg32;
     use bbsched::Resources;
     use bbsched::Time;
@@ -651,6 +657,7 @@ fn main() {
                  \x20 --no-io          disable I/O side effects (pure scheduling)\n\
                  \x20 --policy NAME    fcfs|fcfs-easy|filler|fcfs-bb|sjf-bb|plan-1|plan-2\n\
                  \x20 --plan-backend B exact|discrete|xla (SA scorer backend)\n\
+                 \x20 --plan-warm-start seed the plan SA from the previous tick's plan\n\
                  \x20 --out-dir DIR    where eval writes figure CSVs (default results/)\n\
                  \x20 --no-parts       skip the 16-part Figs 11-12 pass\n\
                  \x20 --parts N --part-weeks W   split shape (default 16 x 3)\n\

@@ -7,10 +7,21 @@
 //! no single group can host the job.
 
 use crate::core::job::JobId;
-use crate::core::resources::Resources;
+use crate::core::resources::{ResourceDelta, Resources};
 use crate::platform::burst_buffer::{BbSlice, BurstBufferPool};
 use crate::platform::topology::{NodeRole, Topology};
 use std::collections::HashMap;
+
+/// One signed change to the cluster's free pool, attributed to a job —
+/// what the platform layer emits for the simulator to fold into the
+/// shared [`crate::sched::timeline::ResourceTimeline`] (the amounts come
+/// from the *actual* allocation, so the timeline can never drift from
+/// the cluster's own accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimelineDelta {
+    pub job: JobId,
+    pub delta: ResourceDelta,
+}
 
 /// A job's physical allocation.
 #[derive(Debug, Clone)]
@@ -133,6 +144,10 @@ pub struct Cluster {
     pub compute: ComputePool,
     pub bb: BurstBufferPool,
     allocations: HashMap<JobId, Allocation>,
+    /// Deltas emitted by allocate/release since the last drain. The
+    /// owner (the simulator) drains after every allocation event; the
+    /// buffer is bounded by that contract.
+    deltas: Vec<TimelineDelta>,
 }
 
 impl Cluster {
@@ -147,6 +162,7 @@ impl Cluster {
             compute: ComputePool::new(topo),
             bb: BurstBufferPool::new(&storage, bb_total_capacity),
             allocations: HashMap::new(),
+            deltas: Vec::new(),
         }
     }
 
@@ -178,6 +194,11 @@ impl Cluster {
                 return None;
             }
         };
+        let held = Resources {
+            cpu: compute_nodes.len() as u32,
+            bb: bb_slices.iter().map(|s| s.bytes).sum(),
+        };
+        self.deltas.push(TimelineDelta { job, delta: ResourceDelta::acquire(held) });
         self.allocations.insert(job, Allocation { job, compute_nodes, bb_slices });
         self.allocations.get(&job)
     }
@@ -189,7 +210,17 @@ impl Cluster {
             .unwrap_or_else(|| panic!("releasing unallocated {job}"));
         self.compute.free_job(job);
         self.bb.free(job);
+        let held = Resources {
+            cpu: alloc.compute_nodes.len() as u32,
+            bb: alloc.bb_slices.iter().map(|s| s.bytes).sum(),
+        };
+        self.deltas.push(TimelineDelta { job, delta: ResourceDelta::release(held) });
         alloc
+    }
+
+    /// Take the deltas emitted since the last drain, oldest first.
+    pub fn drain_deltas(&mut self) -> Vec<TimelineDelta> {
+        std::mem::take(&mut self.deltas)
     }
 
     pub fn allocation(&self, job: JobId) -> Option<&Allocation> {
@@ -228,6 +259,24 @@ mod tests {
         assert_eq!(c.free(), Resources::new(86, 700));
         c.release(JobId(1));
         assert_eq!(c.free(), c.capacity());
+    }
+
+    #[test]
+    fn allocation_events_emit_timeline_deltas() {
+        use crate::core::resources::ResourceDelta;
+        let mut c = cluster();
+        let req = Resources::new(10, 500);
+        c.allocate(JobId(1), &req).unwrap();
+        let d = c.drain_deltas();
+        assert_eq!(d, vec![TimelineDelta { job: JobId(1), delta: ResourceDelta::acquire(req) }]);
+        // A failed allocation (insufficient bb) emits nothing.
+        assert!(c.allocate(JobId(2), &Resources::new(4, 1000)).is_none());
+        assert!(c.drain_deltas().is_empty());
+        c.release(JobId(1));
+        let d = c.drain_deltas();
+        assert_eq!(d, vec![TimelineDelta { job: JobId(1), delta: ResourceDelta::release(req) }]);
+        // Drained means drained.
+        assert!(c.drain_deltas().is_empty());
     }
 
     #[test]

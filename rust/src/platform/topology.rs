@@ -203,12 +203,28 @@ impl Topology {
         // node which represents PFS").
         let pfs_router = 0;
         let pfs_node = nodes.len();
-        nodes.push(Node { id: pfs_node, role: NodeRole::Pfs, router: pfs_router, group: 0, chassis: 0 });
+        nodes.push(Node {
+            id: pfs_node,
+            role: NodeRole::Pfs,
+            router: pfs_router,
+            group: 0,
+            chassis: 0,
+        });
         let pfs_link = links.len();
         links.push(Link { id: pfs_link, kind: LinkKind::PfsLink, capacity: cfg.pfs_bw });
         node_uplink[pfs_node] = pfs_link;
 
-        Topology { cfg, nodes, routers, links, router_adj, node_uplink, pfs_node, pfs_link, pfs_router }
+        Topology {
+            cfg,
+            nodes,
+            routers,
+            links,
+            router_adj,
+            node_uplink,
+            pfs_node,
+            pfs_link,
+            pfs_router,
+        }
     }
 
     pub fn compute_nodes(&self) -> impl Iterator<Item = &Node> {

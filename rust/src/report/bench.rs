@@ -1,8 +1,10 @@
 //! Minimal benchmarking harness (the offline build ships no criterion):
 //! warmup + timed iterations, mean / stddev / min / throughput reporting,
-//! and a global registry so `cargo bench` output is one aligned table
-//! per suite.
+//! an aligned table per suite, and machine-readable JSON emission (the
+//! `BENCH_*.json` perf-trajectory files the scheduler bench writes).
 
+use crate::report::json::JsonObject;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// One benchmark's measurements.
@@ -93,6 +95,30 @@ pub fn report(suite: &str, results: &[BenchResult]) {
     }
 }
 
+/// One suite as a JSON object: `{"suite": ..., "results": [...]}` with
+/// seconds-valued timing fields.
+pub fn results_json(suite: &str, results: &[BenchResult]) -> String {
+    let items = results.iter().map(|r| {
+        JsonObject::new()
+            .str("name", &r.name)
+            .num_u("iters", r.iters as u64)
+            .num_f("mean_s", r.mean.as_secs_f64())
+            .num_f("stddev_s", r.stddev.as_secs_f64())
+            .num_f("min_s", r.min.as_secs_f64())
+            .str("note", &r.note)
+            .end()
+    });
+    JsonObject::new()
+        .str("suite", suite)
+        .raw("results", &crate::report::json::array(items))
+        .end()
+}
+
+/// Write a suite's JSON to `path` (the `BENCH_*.json` contract).
+pub fn write_json(path: &Path, suite: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    std::fs::write(path, results_json(suite, results) + "\n")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,6 +142,22 @@ mod tests {
         assert!(r.mean.as_nanos() > 0);
         assert!(r.min <= r.mean);
         assert!(r.note.starts_with("x="));
+    }
+
+    #[test]
+    fn json_emission_shape() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            mean: Duration::from_millis(2),
+            stddev: Duration::from_micros(10),
+            min: Duration::from_millis(1),
+            note: "n=1".into(),
+        };
+        let s = results_json("suite1", &[r]);
+        assert!(s.contains("\"suite\":\"suite1\""), "{s}");
+        assert!(s.contains("\"name\":\"x\""), "{s}");
+        assert!(s.contains("\"mean_s\":"), "{s}");
     }
 
     #[test]

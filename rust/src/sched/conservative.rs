@@ -8,8 +8,7 @@
 //! block moves EASY would allow).
 
 use crate::core::job::JobId;
-use crate::sched::plan::profile::Profile;
-use crate::sched::{SchedView, Scheduler};
+use crate::sched::{SchedCtx, Scheduler};
 
 #[derive(Debug, Default)]
 pub struct Conservative;
@@ -25,13 +24,16 @@ impl Scheduler for Conservative {
         "conservative-bb"
     }
 
-    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<JobId> {
-        let mut profile = Profile::from_view(view);
+    fn schedule(&mut self, ctx: &mut SchedCtx<'_, '_>) -> Vec<JobId> {
+        let view = ctx.view;
+        // The full reservation set is tentative: built in one transaction
+        // on the shared timeline, rolled back when the pass ends.
+        let mut txn = ctx.txn();
         let mut launches = Vec::new();
         for j in view.queue {
             let req = j.request();
-            let t = profile.earliest_fit(req, j.walltime, view.now);
-            profile.reserve(t, j.walltime, req);
+            let t = txn.earliest_fit(req, j.walltime, view.now);
+            txn.reserve(t, j.walltime, req);
             if t == view.now {
                 launches.push(j.id);
             }
@@ -46,7 +48,7 @@ mod tests {
     use crate::core::job::JobRequest;
     use crate::core::resources::Resources;
     use crate::core::time::{Duration, Time};
-    use crate::sched::RunningInfo;
+    use crate::sched::{schedule_once, RunningInfo, SchedView};
 
     fn req(id: u32, procs: u32, bb: u64, wall_mins: u64) -> JobRequest {
         JobRequest {
@@ -73,7 +75,7 @@ mod tests {
         let mut s = Conservative::new();
         // j0 starts now; j1 reserved at 10; j2 reserved at 20 (would
         // delay j1 otherwise) — only j0 launches.
-        assert_eq!(s.schedule(&view), vec![JobId(0)]);
+        assert_eq!(schedule_once(&mut s, &view), vec![JobId(0)]);
     }
 
     #[test]
@@ -94,7 +96,7 @@ mod tests {
             running: &running,
         };
         let mut s = Conservative::new();
-        assert_eq!(s.schedule(&view), vec![JobId(1)]);
+        assert_eq!(schedule_once(&mut s, &view), vec![JobId(1)]);
     }
 
     #[test]
@@ -115,6 +117,6 @@ mod tests {
             running: &running,
         };
         let mut s = Conservative::new();
-        assert!(s.schedule(&view).is_empty());
+        assert!(schedule_once(&mut s, &view).is_empty());
     }
 }

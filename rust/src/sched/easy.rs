@@ -8,14 +8,14 @@
 //! - `sjf-bb`: as `fcfs-bb`, with backfill candidates sorted ascending by
 //!   walltime (line 15–16).
 //!
-//! Reservations are ephemeral: dropped at the end of every scheduling
-//! pass and re-acquired on the next (line 18–19), so the only state this
+//! Reservations are ephemeral: made tentatively inside a
+//! [`crate::sched::timeline::TimelineTxn`] on the shared timeline and
+//! rolled back when the pass ends (line 18–19), so the only state this
 //! struct owns is its configuration.
 
 use crate::core::job::JobId;
 use crate::core::resources::Resources;
-use crate::sched::plan::profile::Profile;
-use crate::sched::{SchedView, Scheduler};
+use crate::sched::{SchedCtx, Scheduler};
 
 #[derive(Debug, Clone, Copy)]
 pub struct Easy {
@@ -50,49 +50,59 @@ impl Scheduler for Easy {
         }
     }
 
-    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<JobId> {
+    fn schedule(&mut self, ctx: &mut SchedCtx<'_, '_>) -> Vec<JobId> {
+        let view = ctx.view;
         let mut free = view.free;
         let mut launches = Vec::new();
-        let mut queue: Vec<usize> = (0..view.queue.len()).collect();
+        let n = view.queue.len();
 
-        // --- FCFS phase: launch the longest feasible prefix. -------------
-        while let Some(&qi) = queue.first() {
-            let req = view.queue[qi].request();
-            if free.fits(&req) {
-                free -= req;
-                launches.push(view.queue[qi].id);
-                queue.remove(0);
-            } else {
+        // --- FCFS phase: launch the longest feasible prefix (index
+        // cursor — no O(Q^2) remove(0) shuffling). -------------------------
+        let mut cursor = 0;
+        while cursor < n {
+            let req = view.queue[cursor].request();
+            if !free.fits(&req) {
                 break;
             }
+            free -= req;
+            launches.push(view.queue[cursor].id);
+            cursor += 1;
         }
-        let Some(&head_qi) = queue.first() else { return launches };
-        queue.remove(0);
+        // No blocked head: nothing to reserve, and no transaction (or
+        // profile work of any kind) is needed this pass.
+        if cursor >= n {
+            return launches;
+        }
 
-        // --- Availability profile including this pass's launches. --------
-        let mut profile = Profile::from_view(view);
-        for &id in &launches {
-            let j = view.queue.iter().find(|j| j.id == id).unwrap();
-            profile.subtract(view.now, view.now + j.walltime, j.request());
+        // Tentative reservations live in a transaction on the shared
+        // timeline; they roll back when `txn` drops at the end of the
+        // pass (Algorithm 1 lines 18-19 as scope exit, not a rebuild).
+        // This pass's launches occupy the profile for the head
+        // reservation and backfill checks below.
+        let mut txn = ctx.txn();
+        for qi in 0..cursor {
+            let j = view.queue[qi];
+            txn.subtract(view.now, view.now + j.walltime, j.request());
         }
 
         // --- Head-job reservation (line 14). ------------------------------
-        let head = view.queue[head_qi];
+        let head = view.queue[cursor];
         let head_req = if self.reserve_bb {
             head.request()
         } else {
             Resources { cpu: head.procs, bb: 0 } // the paper's broken default
         };
-        let t_head = profile.earliest_fit(head_req, head.walltime, view.now);
+        let t_head = txn.earliest_fit(head_req, head.walltime, view.now);
         debug_assert!(t_head > view.now || !self.reserve_bb,
             "head with CPU+BB reservation startable now should have launched in FCFS phase");
-        profile.reserve(t_head, head.walltime, head_req);
+        txn.reserve(t_head, head.walltime, head_req);
 
         // --- Backfill (lines 15-17). --------------------------------------
+        let mut rest: Vec<usize> = (cursor + 1..n).collect();
         if self.sjf {
-            queue.sort_by_key(|&qi| (view.queue[qi].walltime, view.queue[qi].submit, qi));
+            rest.sort_by_key(|&qi| (view.queue[qi].walltime, view.queue[qi].submit, qi));
         }
-        for qi in queue {
+        for qi in rest {
             let j = view.queue[qi];
             let req = j.request();
             if !free.fits(&req) {
@@ -100,8 +110,8 @@ impl Scheduler for Easy {
             }
             // A backfilled job must start *now* without displacing the
             // head reservation (in the dimensions that were reserved).
-            if profile.earliest_fit(req, j.walltime, view.now) == view.now {
-                profile.reserve(view.now, j.walltime, req);
+            if txn.earliest_fit(req, j.walltime, view.now) == view.now {
+                txn.reserve(view.now, j.walltime, req);
                 free -= req;
                 launches.push(j.id);
             }
@@ -115,7 +125,7 @@ mod tests {
     use super::*;
     use crate::core::job::JobRequest;
     use crate::core::time::{Duration, Time};
-    use crate::sched::RunningInfo;
+    use crate::sched::{schedule_once, RunningInfo, SchedView};
 
     fn req(id: u32, procs: u32, bb: u64, wall_mins: u64) -> JobRequest {
         JobRequest {
@@ -163,7 +173,7 @@ mod tests {
         // Without BB awareness job 3 is scheduled right after job 2 ends
         // (t=240, 3 cpus free) and job 4 (walltime 3 min > 240-120) would
         // delay it => nothing may launch.
-        assert!(s.schedule(&view).is_empty());
+        assert!(schedule_once(&mut s, &view).is_empty());
     }
 
     #[test]
@@ -180,7 +190,7 @@ mod tests {
         let mut s = Easy::fcfs_bb();
         // BB-aware reservation puts job 3 after job 1 (t=600): job 4 fits
         // now and finishes at 300 <= 600.
-        assert_eq!(s.schedule(&view), vec![JobId(4)]);
+        assert_eq!(schedule_once(&mut s, &view), vec![JobId(4)]);
     }
 
     #[test]
@@ -194,7 +204,7 @@ mod tests {
             running: &[],
         };
         let mut s = Easy::fcfs_bb();
-        assert_eq!(s.schedule(&view), vec![JobId(0), JobId(1)]);
+        assert_eq!(schedule_once(&mut s, &view), vec![JobId(0), JobId(1)]);
     }
 
     #[test]
@@ -222,10 +232,10 @@ mod tests {
         // Backfill window is 200 min, so both candidates individually fit,
         // but free cpus allow only one: SJF takes job 2 first.
         let mut sjf = Easy::sjf_bb();
-        assert_eq!(sjf.schedule(&view), vec![JobId(2)]);
+        assert_eq!(schedule_once(&mut sjf, &view), vec![JobId(2)]);
         // FCFS order takes job 1 instead.
         let mut fcfs = Easy::fcfs_bb();
-        assert_eq!(fcfs.schedule(&view), vec![JobId(1)]);
+        assert_eq!(schedule_once(&mut fcfs, &view), vec![JobId(1)]);
     }
 
     #[test]
@@ -249,6 +259,37 @@ mod tests {
             running: &running,
         };
         let mut s = Easy::fcfs_bb();
-        assert_eq!(s.schedule(&view), vec![JobId(2)]);
+        assert_eq!(schedule_once(&mut s, &view), vec![JobId(2)]);
+    }
+
+    #[test]
+    fn launch_order_prefix_then_backfill_in_queue_order() {
+        // Guards the index-cursor refactor: launches must come out as
+        // [feasible prefix in queue order] ++ [backfills in queue order]
+        // (FCFS flavour), never reordered by the cursor bookkeeping.
+        let q = [
+            req(0, 2, 0, 10), // prefix
+            req(1, 2, 0, 10), // prefix
+            req(2, 8, 0, 10), // head: blocked (needs whole machine)
+            req(3, 1, 0, 2),  // backfill candidate (short)
+            req(4, 1, 0, 2),  // backfill candidate (short)
+        ];
+        let running = [RunningInfo {
+            id: JobId(9),
+            req: Resources::new(2, 0),
+            expected_end: Time::from_secs(6000),
+        }];
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(8, 0),
+            free: Resources::new(6, 0),
+            queue: &q,
+            running: &running,
+        };
+        let mut s = Easy::fcfs_bb();
+        assert_eq!(
+            schedule_once(&mut s, &view),
+            vec![JobId(0), JobId(1), JobId(3), JobId(4)]
+        );
     }
 }

@@ -3,7 +3,7 @@
 //! not fit both resource dimensions.
 
 use crate::core::job::JobId;
-use crate::sched::{SchedView, Scheduler};
+use crate::sched::{SchedCtx, Scheduler};
 
 #[derive(Debug, Default)]
 pub struct Fcfs;
@@ -19,7 +19,8 @@ impl Scheduler for Fcfs {
         "fcfs"
     }
 
-    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<JobId> {
+    fn schedule(&mut self, ctx: &mut SchedCtx<'_, '_>) -> Vec<JobId> {
+        let view = ctx.view;
         let mut free = view.free;
         let mut launches = Vec::new();
         for j in view.queue {
@@ -41,6 +42,7 @@ mod tests {
     use crate::core::job::JobRequest;
     use crate::core::resources::Resources;
     use crate::core::time::{Duration, Time};
+    use crate::sched::{schedule_once, SchedView};
 
     fn req(id: u32, procs: u32, bb: u64) -> JobRequest {
         JobRequest {
@@ -66,7 +68,7 @@ mod tests {
     fn launches_prefix_that_fits() {
         let q = [req(0, 10, 100), req(1, 20, 100), req(2, 10, 100)];
         let mut s = Fcfs::new();
-        let l = s.schedule(&view(Resources::new(35, 250), &q));
+        let l = schedule_once(&mut s, &view(Resources::new(35, 250), &q));
         assert_eq!(l, vec![JobId(0), JobId(1)]); // third blocked by bb
     }
 
@@ -74,7 +76,7 @@ mod tests {
     fn head_blocker_blocks_everything() {
         let q = [req(0, 96, 0), req(1, 1, 0)];
         let mut s = Fcfs::new();
-        let l = s.schedule(&view(Resources::new(50, 1000), &q));
+        let l = schedule_once(&mut s, &view(Resources::new(50, 1000), &q));
         assert!(l.is_empty(), "fcfs must not skip the head");
     }
 
@@ -82,7 +84,18 @@ mod tests {
     fn bb_dimension_blocks_too() {
         let q = [req(0, 1, 900), req(1, 1, 10)];
         let mut s = Fcfs::new();
-        let l = s.schedule(&view(Resources::new(96, 500), &q));
+        let l = schedule_once(&mut s, &view(Resources::new(96, 500), &q));
         assert!(l.is_empty());
+    }
+
+    #[test]
+    fn launch_order_is_queue_order() {
+        // The index-cursor iteration must preserve strict arrival order
+        // for long feasible prefixes (guards the remove(0) refactor).
+        let q: Vec<JobRequest> = (0..32).map(|i| req(i, 2, 10)).collect();
+        let mut s = Fcfs::new();
+        let l = schedule_once(&mut s, &view(Resources::new(96, 1000), &q));
+        // 32 x 2 cpus = 64 <= 96 and 32 x 10 bb = 320 <= 1000: all fit.
+        assert_eq!(l, (0..32).map(JobId).collect::<Vec<_>>());
     }
 }

@@ -6,7 +6,7 @@
 //! stage-in has not started).
 
 use crate::core::job::JobId;
-use crate::sched::{SchedView, Scheduler};
+use crate::sched::{SchedCtx, Scheduler};
 
 #[derive(Debug, Default)]
 pub struct Filler;
@@ -22,7 +22,8 @@ impl Scheduler for Filler {
         "filler"
     }
 
-    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<JobId> {
+    fn schedule(&mut self, ctx: &mut SchedCtx<'_, '_>) -> Vec<JobId> {
+        let view = ctx.view;
         let mut free = view.free;
         let mut launches = Vec::new();
         for j in view.queue {
@@ -43,6 +44,7 @@ mod tests {
     use crate::core::job::JobRequest;
     use crate::core::resources::Resources;
     use crate::core::time::{Duration, Time};
+    use crate::sched::{schedule_once, SchedView};
 
     fn req(id: u32, procs: u32, bb: u64) -> JobRequest {
         JobRequest {
@@ -65,7 +67,7 @@ mod tests {
             running: &[],
         };
         let mut s = Filler::new();
-        assert_eq!(s.schedule(&view), vec![JobId(1), JobId(3)]);
+        assert_eq!(schedule_once(&mut s, &view), vec![JobId(1), JobId(3)]);
     }
 
     #[test]
@@ -79,6 +81,6 @@ mod tests {
             running: &[],
         };
         let mut s = Filler::new();
-        assert_eq!(s.schedule(&view), vec![JobId(0), JobId(1)]);
+        assert_eq!(schedule_once(&mut s, &view), vec![JobId(0), JobId(1)]);
     }
 }

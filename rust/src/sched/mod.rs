@@ -1,11 +1,17 @@
 //! Scheduling policies (the paper's §3).
 //!
 //! A [`Scheduler`] is invoked by the simulator on every trigger (periodic
-//! tick, job arrival, job completion) with a [`SchedView`] of the cluster
-//! and returns the ordered list of queued jobs to launch *now*. Future
-//! reservations are scheduler-internal state: as in Algorithm 1 line 18,
-//! they are dropped and re-acquired on every invocation, so the simulator
-//! never needs to know about them.
+//! tick, job arrival, job completion) with a [`SchedCtx`] — a read-only
+//! [`SchedView`] of the cluster bundled with the simulator-owned,
+//! incrementally-maintained [`timeline::ResourceTimeline`] and a
+//! lazily-shared id→queue-index map — and returns the ordered list of
+//! queued jobs to launch *now*.
+//!
+//! Future reservations remain ephemeral per-pass state, as in Algorithm 1
+//! line 18 — but instead of each policy rebuilding an availability
+//! profile from the running set every invocation, policies open a
+//! [`timeline::TimelineTxn`] on the shared timeline, reserve tentatively,
+//! and let scope exit roll the reservations back.
 
 pub mod conservative;
 pub mod easy;
@@ -13,10 +19,14 @@ pub mod fcfs;
 pub mod filler;
 pub mod plan;
 pub mod slurm_like;
+pub mod timeline;
 
 use crate::core::job::{JobId, JobRequest};
 use crate::core::resources::Resources;
 use crate::core::time::Time;
+use crate::sched::timeline::{ResourceTimeline, TimelineTxn};
+use std::cell::OnceCell;
+use std::collections::HashMap;
 
 /// What a scheduler may know about one running job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,14 +63,104 @@ impl<'a> SchedView<'a> {
     }
 }
 
+/// A lazily built id→queue-index map, shared between one scheduling
+/// pass's [`SchedCtx`] and the simulator's post-pass launch validation:
+/// built at most once per invocation, and not at all on the (common)
+/// passes where nobody resolves a [`JobId`].
+pub type QueueIndex = OnceCell<HashMap<JobId, usize>>;
+
+/// Build the id→queue-index map for a pending queue (queue order ==
+/// pending order).
+pub fn queue_index_map(queue: &[JobRequest]) -> HashMap<JobId, usize> {
+    queue.iter().enumerate().map(|(i, j)| (j.id, i)).collect()
+}
+
+/// Everything one scheduling pass may read and tentatively write: the
+/// snapshot [`SchedView`], the cached [`ResourceTimeline`] (owned and
+/// kept current by the simulator) and a lazily-shared id→queue-index
+/// map so policies never scan the queue to resolve a [`JobId`].
+pub struct SchedCtx<'a, 'b> {
+    pub view: SchedView<'a>,
+    timeline: &'b mut ResourceTimeline,
+    qindex: &'b QueueIndex,
+}
+
+impl<'a, 'b> SchedCtx<'a, 'b> {
+    /// Bundle a view with the timeline; advances the timeline's start to
+    /// `view.now` so past segments are retired exactly once per pass.
+    pub fn new(
+        view: SchedView<'a>,
+        timeline: &'b mut ResourceTimeline,
+        qindex: &'b QueueIndex,
+    ) -> Self {
+        timeline.advance_to(view.now);
+        SchedCtx { view, timeline, qindex }
+    }
+
+    pub fn now(&self) -> Time {
+        self.view.now
+    }
+
+    /// Read access to the shared timeline (plan policies snapshot its
+    /// profile as the scoring base).
+    pub fn timeline(&self) -> &ResourceTimeline {
+        self.timeline
+    }
+
+    /// Open a tentative-reservation transaction. The reservations roll
+    /// back when it drops — do NOT `commit()` on the shared timeline:
+    /// a committed reservation would bypass the simulator's per-job
+    /// accounting and break the incremental == rebuild invariant.
+    pub fn txn(&mut self) -> TimelineTxn<'_> {
+        self.timeline.txn()
+    }
+
+    /// Position of `id` in `view.queue`, O(1) after a one-off O(Q)
+    /// build on first use in this pass.
+    pub fn queue_index(&self, id: JobId) -> Option<usize> {
+        self.qindex.get_or_init(|| queue_index_map(self.view.queue)).get(&id).copied()
+    }
+}
+
+/// Owns the timeline + index a [`SchedCtx`] borrows — the harness tests
+/// and benches use to drive a policy outside the simulator. One harness
+/// corresponds to one queue snapshot: the lazily-built index is cached,
+/// so build a fresh harness when the queue changes.
+pub struct CtxHarness {
+    timeline: ResourceTimeline,
+    qindex: QueueIndex,
+}
+
+impl CtxHarness {
+    /// Rebuild timeline state from a view (the simulator maintains it
+    /// incrementally instead).
+    pub fn from_view(view: &SchedView<'_>) -> CtxHarness {
+        CtxHarness { timeline: ResourceTimeline::from_view(view), qindex: QueueIndex::new() }
+    }
+
+    pub fn ctx<'a>(&mut self, view: SchedView<'a>) -> SchedCtx<'a, '_> {
+        SchedCtx::new(view, &mut self.timeline, &self.qindex)
+    }
+}
+
+/// One-shot convenience: run a single scheduling pass for `view` on a
+/// freshly rebuilt context (test/bench shorthand).
+pub fn schedule_once<S: Scheduler + ?Sized>(s: &mut S, view: &SchedView<'_>) -> Vec<JobId> {
+    let mut h = CtxHarness::from_view(view);
+    let mut ctx = h.ctx(*view);
+    s.schedule(&mut ctx)
+}
+
 /// A scheduling policy.
 pub trait Scheduler {
     /// Static policy name (matches the paper's policy labels).
     fn name(&self) -> &'static str;
     /// Decide which pending jobs to start now, in launch order. Every
     /// returned job must fit the (sequentially updated) free resources;
-    /// the simulator asserts this.
-    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<JobId>;
+    /// the simulator asserts this. Tentative reservations made through
+    /// `ctx.txn()` must be left to roll back — never committed; durable
+    /// timeline changes come only from the simulator's job lifecycle.
+    fn schedule(&mut self, ctx: &mut SchedCtx<'_, '_>) -> Vec<JobId>;
 }
 
 /// Policy registry used by the CLI and the evaluation harness.
@@ -136,10 +236,57 @@ mod tests {
     }
 
     #[test]
+    fn ctx_exposes_index_and_rolls_back_txns() {
+        use crate::core::time::Duration;
+        let queue = [
+            JobRequest {
+                id: JobId(7),
+                submit: Time::ZERO,
+                walltime: Duration::from_secs(100),
+                procs: 2,
+                bb: 0,
+            },
+            JobRequest {
+                id: JobId(9),
+                submit: Time::ZERO,
+                walltime: Duration::from_secs(100),
+                procs: 1,
+                bb: 0,
+            },
+        ];
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(4, 0),
+            free: Resources::new(4, 0),
+            queue: &queue,
+            running: &[],
+        };
+        let mut h = CtxHarness::from_view(&view);
+        let mut ctx = h.ctx(view);
+        assert_eq!(ctx.queue_index(JobId(9)), Some(1));
+        assert_eq!(ctx.queue_index(JobId(8)), None);
+        assert_eq!(ctx.now(), Time::ZERO);
+        let before = ctx.timeline().profile().clone();
+        {
+            let mut txn = ctx.txn();
+            txn.reserve(Time::ZERO, Duration::from_secs(50), Resources::new(4, 0));
+        }
+        assert_eq!(*ctx.timeline().profile(), before);
+    }
+
+    #[test]
     fn releases_sorted() {
         let running = [
-            RunningInfo { id: JobId(1), req: Resources::new(1, 0), expected_end: Time::from_secs(50) },
-            RunningInfo { id: JobId(2), req: Resources::new(2, 0), expected_end: Time::from_secs(10) },
+            RunningInfo {
+                id: JobId(1),
+                req: Resources::new(1, 0),
+                expected_end: Time::from_secs(50),
+            },
+            RunningInfo {
+                id: JobId(2),
+                req: Resources::new(2, 0),
+                expected_end: Time::from_secs(10),
+            },
         ];
         let view = SchedView {
             now: Time::ZERO,

@@ -10,6 +10,14 @@
 //! The scorer is pluggable: the exact profile-based scorer (default,
 //! reproduces the paper), or the discretised batch scorer backed by the
 //! AOT-compiled XLA artifact (L1/L2 layers) for the accelerated path.
+//!
+//! Warm starting: `candidates` is an open set — the plan policy can
+//! append the previous tick's best ordering (surviving jobs first, new
+//! arrivals behind, see [`crate::sched::plan::PlanSched`]) so the search
+//! starts from last tick's plan instead of rescoring cold. This changes
+//! which plans the search visits, so it is off by default to keep
+//! fingerprints comparable with the paper-faithful configuration;
+//! enable it with `--plan-warm-start` / `plan-warm-start = true`.
 
 use crate::stats::rng::Pcg32;
 
@@ -82,18 +90,21 @@ pub fn optimise(
     }
     // --- Exhaustive search for small queues (Algorithm 2 line 2-4). ----
     if n <= params.exhaustive_limit {
-        let mut best_perm: Vec<usize> = (0..n).collect();
-        let mut best = f64::INFINITY;
-        for perm in permutations(n) {
-            let s = scorer.score(&perm);
-            if s < best {
-                best = s;
-                best_perm = perm;
+        // Scored as one batch so prefix-caching scorers can share
+        // placements between overlapping permutations; the winner is the
+        // first strict minimum in enumeration order, exactly as the
+        // previous one-at-a-time loop tie-broke.
+        let perms = permutations(n);
+        let scores = scorer.score_batch(&perms);
+        let mut bi = 0;
+        for (i, &s) in scores.iter().enumerate() {
+            if s < scores[bi] {
+                bi = i;
             }
         }
         return SaOutcome {
-            perm: best_perm,
-            score: best,
+            perm: perms[bi].clone(),
+            score: scores[bi],
             evaluations: scorer.evaluations() - evals0,
             annealed: false,
         };

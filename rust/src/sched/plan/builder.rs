@@ -6,7 +6,7 @@
 use crate::core::job::{JobId, JobRequest};
 use crate::core::resources::Resources;
 use crate::core::time::{Duration, Time};
-use crate::sched::plan::profile::Profile;
+use crate::sched::timeline::{Profile, TimelineTxn};
 
 /// The per-job data the planner needs (a distilled [`JobRequest`]).
 #[derive(Debug, Clone, Copy)]
@@ -32,8 +32,57 @@ pub struct ExecutionPlan {
     pub score: f64,
 }
 
-/// Build the plan for `perm` (a permutation of `0..jobs.len()`) on a copy
-/// of `base`, scoring with exponent `alpha`.
+/// The placement interface the earliest-fit sweep runs against: either
+/// an owned scratch [`Profile`] (the SA scorer) or a [`TimelineTxn`] on
+/// the shared timeline (the policy's final plan — no clone, rolls back
+/// on scope exit).
+pub trait PlaceOps {
+    fn earliest_fit(&self, req: Resources, dur: Duration, not_before: Time) -> Time;
+    fn reserve(&mut self, at: Time, dur: Duration, req: Resources);
+}
+
+impl PlaceOps for Profile {
+    fn earliest_fit(&self, req: Resources, dur: Duration, not_before: Time) -> Time {
+        Profile::earliest_fit(self, req, dur, not_before)
+    }
+    fn reserve(&mut self, at: Time, dur: Duration, req: Resources) {
+        Profile::reserve(self, at, dur, req);
+    }
+}
+
+impl PlaceOps for TimelineTxn<'_> {
+    fn earliest_fit(&self, req: Resources, dur: Duration, not_before: Time) -> Time {
+        TimelineTxn::earliest_fit(self, req, dur, not_before)
+    }
+    fn reserve(&mut self, at: Time, dur: Duration, req: Resources) {
+        TimelineTxn::reserve(self, at, dur, req);
+    }
+}
+
+/// Build the plan for `perm` (a permutation of `0..jobs.len()`) directly
+/// on `ops`, scoring with exponent `alpha`. The reservations are left in
+/// `ops` — pass a transaction (rolls back) or a scratch profile.
+pub fn build_plan_on(
+    ops: &mut impl PlaceOps,
+    jobs: &[PlanJob],
+    perm: &[usize],
+    now: Time,
+    alpha: f64,
+) -> ExecutionPlan {
+    debug_assert_eq!(perm.len(), jobs.len());
+    let mut starts = vec![Time::ZERO; jobs.len()];
+    let mut score = 0.0;
+    for &pi in perm {
+        let j = &jobs[pi];
+        let t = ops.earliest_fit(j.req, j.walltime, now);
+        ops.reserve(t, j.walltime, j.req);
+        starts[pi] = t;
+        score += waiting_penalty(t, j.submit, alpha);
+    }
+    ExecutionPlan { starts, score }
+}
+
+/// Build the plan for `perm` on a copy of `base`.
 pub fn build_plan(
     base: &Profile,
     jobs: &[PlanJob],
@@ -41,18 +90,8 @@ pub fn build_plan(
     now: Time,
     alpha: f64,
 ) -> ExecutionPlan {
-    debug_assert_eq!(perm.len(), jobs.len());
     let mut profile = base.clone();
-    let mut starts = vec![Time::ZERO; jobs.len()];
-    let mut score = 0.0;
-    for &pi in perm {
-        let j = &jobs[pi];
-        let t = profile.earliest_fit(j.req, j.walltime, now);
-        profile.reserve(t, j.walltime, j.req);
-        starts[pi] = t;
-        score += waiting_penalty(t, j.submit, alpha);
-    }
-    ExecutionPlan { starts, score }
+    build_plan_on(&mut profile, jobs, perm, now, alpha)
 }
 
 /// Score only (hot path of the simulated-annealing loop — avoids
@@ -107,6 +146,23 @@ mod tests {
             walltime: Duration::from_secs(wall_s),
             submit: Time::from_secs(submit_s),
         }
+    }
+
+    #[test]
+    fn build_plan_on_txn_matches_profile_and_rolls_back() {
+        use crate::sched::timeline::ResourceTimeline;
+        let mut tl = ResourceTimeline::new(Time::ZERO, Resources::new(4, 10));
+        tl.job_started(JobId(9), Resources::new(2, 3), Time::ZERO, Time::from_secs(50));
+        let base = tl.profile().clone();
+        let jobs = vec![job(0, 3, 5, 100, 0), job(1, 1, 2, 100, 0)];
+        let via_profile = build_plan(&base, &jobs, &[0, 1], Time::ZERO, 1.0);
+        let via_txn = {
+            let mut txn = tl.txn();
+            build_plan_on(&mut txn, &jobs, &[0, 1], Time::ZERO, 1.0)
+        };
+        assert_eq!(via_profile, via_txn);
+        // The txn's tentative placements must have rolled back.
+        assert_eq!(*tl.profile(), base);
     }
 
     #[test]

@@ -1,19 +1,23 @@
-//! Plan-based scheduling (§3.3): availability profiles, execution-plan
-//! construction, the nine initial candidates, simulated annealing
-//! (Algorithm 2), the Zheng et al. baseline, and the policy driver.
+//! Plan-based scheduling (§3.3): execution-plan construction on the
+//! shared [`crate::sched::timeline`] profiles, the nine initial
+//! candidates, simulated annealing (Algorithm 2), the Zheng et al.
+//! baseline, and the policy driver.
+//!
+//! The availability profile itself lives in [`crate::sched::timeline`]
+//! (it is shared with every reservation-based policy, not just the
+//! planner); [`Profile`] is re-exported here for convenience.
 
 pub mod annealing;
 pub mod builder;
 pub mod candidates;
-pub mod profile;
 pub mod scheduler;
 pub mod scorer;
 pub mod zheng;
 
+pub use crate::sched::timeline::Profile;
 pub use annealing::{optimise, permutations, PermScorer, SaOutcome, SaParams};
-pub use builder::{build_plan, score_plan, ExecutionPlan, PlanJob};
+pub use builder::{build_plan, score_plan, ExecutionPlan, PlaceOps, PlanJob};
 pub use candidates::initial_candidates;
-pub use profile::Profile;
 pub use scheduler::{ExternalBatchScorer, PlanSched, ScorerBackend};
 pub use scorer::{DiscreteProblem, ExactScorer, NativeDiscreteScorer};
 pub use zheng::{optimise_zheng, ZhengOutcome, ZhengParams};

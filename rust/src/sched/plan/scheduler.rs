@@ -17,11 +17,11 @@
 use crate::core::job::JobId;
 
 use crate::sched::plan::annealing::{optimise, PermScorer, SaOutcome, SaParams};
-use crate::sched::plan::builder::{build_plan, PlanJob};
+use crate::sched::plan::builder::{build_plan_on, PlanJob};
 use crate::sched::plan::candidates::initial_candidates;
-use crate::sched::plan::profile::Profile;
 use crate::sched::plan::scorer::{DiscreteProblem, ExactScorer, NativeDiscreteScorer};
-use crate::sched::{SchedView, Scheduler};
+use crate::sched::timeline::Profile;
+use crate::sched::{SchedCtx, SchedView, Scheduler};
 use crate::stats::rng::Pcg32;
 
 /// External batch scorer over the discretised problem (implemented by
@@ -58,12 +58,22 @@ pub struct PlanSched {
     pub alpha: f64,
     pub params: SaParams,
     pub backend: ScorerBackend,
+    /// Seed the SA with the previous tick's best ordering as an extra
+    /// candidate (surviving jobs in last-plan order, new arrivals
+    /// appended FCFS). Changes search trajectories, so default off —
+    /// the paper-faithful configuration stays fingerprint-stable.
+    pub warm_start: bool,
+    /// Disable the exact scorer's prefix-checkpoint cache (perf-bench
+    /// baseline; scores are bit-identical either way).
+    pub cold_scoring: bool,
     rng: Pcg32,
     /// Memoisation: if neither the queue nor the running set changed
     /// since the last invocation, no new job can possibly start (free
     /// resources only change on job events), so skip the SA entirely.
     /// This collapses the per-tick cost on quiet periods.
     memo_key: u64,
+    /// The previous best plan's job ordering (warm-start seed).
+    prev_best: Vec<JobId>,
     /// Cumulative SA evaluations (ablation/diagnostics).
     pub total_evaluations: u64,
     pub invocations_planned: u64,
@@ -76,8 +86,11 @@ impl PlanSched {
             alpha,
             params: SaParams::default(),
             backend: ScorerBackend::Exact,
+            warm_start: false,
+            cold_scoring: false,
             rng: Pcg32::seeded(seed),
             memo_key: 0,
+            prev_best: Vec::new(),
             total_evaluations: 0,
             invocations_planned: 0,
             invocations_memoised: 0,
@@ -89,6 +102,16 @@ impl PlanSched {
             self.params.batched = true;
         }
         self.backend = backend;
+        self
+    }
+
+    pub fn with_warm_start(mut self, on: bool) -> PlanSched {
+        self.warm_start = on;
+        self
+    }
+
+    pub fn with_cold_scoring(mut self, on: bool) -> PlanSched {
+        self.cold_scoring = on;
         self
     }
 
@@ -110,23 +133,88 @@ impl PlanSched {
         h
     }
 
-    /// Run the optimisation for the current view, returning the chosen
-    /// permutation. Public for the ablation benches.
-    pub fn optimise_view(&mut self, view: &SchedView<'_>, jobs: &[PlanJob]) -> SaOutcome {
-        let base = Profile::from_view(view);
-        let candidates = initial_candidates(jobs);
+    /// The warm-start candidate: the previous best ordering restricted
+    /// to jobs still queued (via `lookup`: id → current queue index),
+    /// new arrivals appended in queue order. `None` when there is no
+    /// usable previous plan.
+    fn warm_candidate_via(
+        &self,
+        n: usize,
+        lookup: impl Fn(JobId) -> Option<usize>,
+    ) -> Option<Vec<usize>> {
+        if self.prev_best.is_empty() {
+            return None;
+        }
+        let mut perm = Vec::with_capacity(n);
+        let mut used = vec![false; n];
+        for &id in &self.prev_best {
+            if let Some(i) = lookup(id) {
+                if !used[i] {
+                    perm.push(i);
+                    used[i] = true;
+                }
+            }
+        }
+        if perm.is_empty() {
+            return None;
+        }
+        for (i, u) in used.iter().enumerate() {
+            if !u {
+                perm.push(i);
+            }
+        }
+        Some(perm)
+    }
+
+    /// Standalone variant for callers without a [`SchedCtx`] (benches,
+    /// tests): builds its own id→index map. The policy path reuses the
+    /// ctx's precomputed map instead.
+    fn warm_candidate(&self, jobs: &[PlanJob]) -> Option<Vec<usize>> {
+        let index: std::collections::HashMap<JobId, usize> =
+            jobs.iter().enumerate().map(|(i, j)| (j.id, i)).collect();
+        self.warm_candidate_via(jobs.len(), |id| index.get(&id).copied())
+    }
+
+    /// Run the optimisation over `base` (a snapshot of the shared
+    /// timeline's profile), returning the chosen permutation. Public for
+    /// the ablation benches.
+    pub fn optimise_base(
+        &mut self,
+        base: &Profile,
+        now: crate::core::time::Time,
+        jobs: &[PlanJob],
+    ) -> SaOutcome {
+        let warm = if self.warm_start { self.warm_candidate(jobs) } else { None };
+        self.optimise_candidates(base, now, jobs, warm)
+    }
+
+    fn optimise_candidates(
+        &mut self,
+        base: &Profile,
+        now: crate::core::time::Time,
+        jobs: &[PlanJob],
+        warm: Option<Vec<usize>>,
+    ) -> SaOutcome {
+        let mut candidates = initial_candidates(jobs);
+        if let Some(w) = warm {
+            candidates.push(w);
+        }
         let outcome = match &mut self.backend {
             ScorerBackend::Exact => {
-                let mut scorer = ExactScorer::new(&base, jobs, view.now, self.alpha);
+                let mut scorer = if self.cold_scoring {
+                    ExactScorer::cold(base, jobs, now, self.alpha)
+                } else {
+                    ExactScorer::new(base, jobs, now, self.alpha)
+                };
                 optimise(&mut scorer, jobs.len(), &candidates, &self.params, &mut self.rng)
             }
             ScorerBackend::Discrete { t_slots } => {
-                let problem = DiscreteProblem::build(&base, jobs, view.now, *t_slots, self.alpha);
+                let problem = DiscreteProblem::build(base, jobs, now, *t_slots, self.alpha);
                 let mut scorer = NativeDiscreteScorer::new(problem);
                 optimise(&mut scorer, jobs.len(), &candidates, &self.params, &mut self.rng)
             }
             ScorerBackend::External { t_slots, scorer } => {
-                let problem = DiscreteProblem::build(&base, jobs, view.now, *t_slots, self.alpha);
+                let problem = DiscreteProblem::build(base, jobs, now, *t_slots, self.alpha);
                 let mut adapter = ExternalAdapter { problem, scorer: scorer.as_mut(), evals: 0 };
                 optimise(&mut adapter, jobs.len(), &candidates, &self.params, &mut self.rng)
             }
@@ -170,22 +258,40 @@ impl Scheduler for PlanSched {
         }
     }
 
-    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<JobId> {
+    fn schedule(&mut self, ctx: &mut SchedCtx<'_, '_>) -> Vec<JobId> {
+        let view = ctx.view;
         if view.queue.is_empty() {
             return vec![];
         }
-        let key = Self::state_key(view);
+        let key = Self::state_key(&view);
         if key == self.memo_key {
             self.invocations_memoised += 1;
             return vec![];
         }
         let jobs: Vec<PlanJob> = view.queue.iter().map(PlanJob::from_request).collect();
-        let outcome = self.optimise_view(view, &jobs);
+        // One O(breakpoints) snapshot of the shared timeline replaces the
+        // per-invocation O(running · breakpoints) rebuild.
+        let base = ctx.timeline().profile().clone();
+        // `jobs` is 1:1 with `view.queue`, so the ctx's precomputed
+        // id→queue-index map doubles as the warm-start lookup.
+        let warm = if self.warm_start {
+            self.warm_candidate_via(jobs.len(), |id| ctx.queue_index(id))
+        } else {
+            None
+        };
+        let outcome = self.optimise_candidates(&base, view.now, &jobs, warm);
         self.invocations_planned += 1;
+        if self.warm_start {
+            self.prev_best = outcome.perm.iter().map(|&pi| jobs[pi].id).collect();
+        }
 
-        // Final plan is always exact, regardless of search backend.
-        let base = Profile::from_view(view);
-        let plan = build_plan(&base, &jobs, &outcome.perm, view.now, self.alpha);
+        // Final plan is always exact, regardless of search backend:
+        // built on the base snapshot we already own, so the planned
+        // reservations simply die with it — no second profile copy.
+        // (Policies that need tentative reservations *on the shared
+        // timeline itself* use `ctx.txn()` + `build_plan_on` instead.)
+        let mut final_profile = base;
+        let plan = build_plan_on(&mut final_profile, &jobs, &outcome.perm, view.now, self.alpha);
         let mut launches = Vec::new();
         for &pi in &outcome.perm {
             if plan.starts[pi] == view.now {
@@ -222,7 +328,7 @@ mod tests {
     use crate::core::job::JobRequest;
     use crate::core::resources::Resources;
     use crate::core::time::{Duration, Time};
-    use crate::sched::RunningInfo;
+    use crate::sched::{schedule_once, RunningInfo};
 
     fn req(id: u32, procs: u32, bb: u64, wall_mins: u64, submit_s: u64) -> JobRequest {
         JobRequest {
@@ -245,7 +351,7 @@ mod tests {
             running: &[],
         };
         let mut s = PlanSched::new(2.0, 1);
-        let l = s.schedule(&view);
+        let l = schedule_once(&mut s, &view);
         // Exhaustive search: jobs 0+1 in parallel now, job 2 later.
         assert_eq!(l.len(), 2);
         assert!(l.contains(&JobId(0)) && l.contains(&JobId(1)));
@@ -269,7 +375,7 @@ mod tests {
             running: &running,
         };
         let mut s = PlanSched::new(2.0, 1);
-        let l = s.schedule(&view);
+        let l = schedule_once(&mut s, &view);
         assert_eq!(l, vec![JobId(1)]);
     }
 
@@ -289,10 +395,10 @@ mod tests {
             running: &running,
         };
         let mut s = PlanSched::new(2.0, 1);
-        assert!(s.schedule(&mk_view(60)).is_empty());
+        assert!(schedule_once(&mut s, &mk_view(60)).is_empty());
         assert_eq!(s.invocations_planned, 1);
         // Next tick, nothing changed: memoised.
-        assert!(s.schedule(&mk_view(120)).is_empty());
+        assert!(schedule_once(&mut s, &mk_view(120)).is_empty());
         assert_eq!(s.invocations_memoised, 1);
         assert_eq!(s.invocations_planned, 1);
     }
@@ -309,8 +415,63 @@ mod tests {
         };
         let mut s = PlanSched::new(2.0, 1)
             .with_backend(ScorerBackend::Discrete { t_slots: 128 });
-        let l = s.schedule(&view);
+        let l = schedule_once(&mut s, &view);
         assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn warm_start_seeds_from_previous_plan_and_stays_legal() {
+        // A queue too big to exhaust, under heavy contention so only part
+        // launches; the survivors must seed the next tick's candidates.
+        let q: Vec<JobRequest> =
+            (0..10).map(|i| req(i, 2 + (i % 3), 10, 10 + i as u64, 0)).collect();
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(8, 200),
+            free: Resources::new(8, 200),
+            queue: &q,
+            running: &[],
+        };
+        let mut s = PlanSched::new(2.0, 5).with_warm_start(true);
+        let l1 = schedule_once(&mut s, &view);
+        assert!(!l1.is_empty());
+        assert!(!s.prev_best.is_empty(), "warm start must record the plan");
+        // Next tick: the launched jobs are gone from the queue.
+        let q2: Vec<JobRequest> =
+            q.iter().filter(|j| !l1.contains(&j.id)).cloned().collect();
+        let running: Vec<RunningInfo> = l1
+            .iter()
+            .map(|&id| {
+                let j = q.iter().find(|j| j.id == id).unwrap();
+                RunningInfo { id, req: j.request(), expected_end: Time::ZERO + j.walltime }
+            })
+            .collect();
+        let mut free = Resources::new(8, 200);
+        for r in &running {
+            free -= r.req;
+        }
+        let view2 = SchedView {
+            now: Time::from_secs(60),
+            capacity: Resources::new(8, 200),
+            free,
+            queue: &q2,
+            running: &running,
+        };
+        let l2 = schedule_once(&mut s, &view2);
+        // Whatever launches must cumulatively fit.
+        for id in &l2 {
+            let j = q2.iter().find(|j| j.id == *id).unwrap();
+            assert!(free.fits(&j.request()));
+            free -= j.request();
+        }
+        // The warm candidate only references jobs still in the queue.
+        let warm_jobs: Vec<PlanJob> = q2.iter().map(PlanJob::from_request).collect();
+        if let Some(w) = s.warm_candidate(&warm_jobs) {
+            let mut sorted = w.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), warm_jobs.len(), "warm candidate must be a permutation");
+        }
     }
 
     #[test]
@@ -325,7 +486,7 @@ mod tests {
             running: &[],
         };
         let mut s = PlanSched::new(2.0, 42);
-        let l = s.schedule(&view);
+        let l = schedule_once(&mut s, &view);
         // Whatever launches must cumulatively fit.
         let mut free = Resources::new(8, 40);
         for id in &l {

@@ -14,33 +14,139 @@
 
 use crate::core::time::Time;
 use crate::sched::plan::annealing::PermScorer;
-use crate::sched::plan::builder::{score_plan_scratch, PlanJob};
-use crate::sched::plan::profile::Profile;
+use crate::sched::plan::builder::{waiting_penalty, PlanJob};
+use crate::sched::timeline::Profile;
 
 /// Exact, profile-based scorer (the default policy path).
+///
+/// Scoring a permutation places every job at its earliest fit on a
+/// scratch profile — `O(|perm|)` placements. Consecutive SA proposals
+/// are single swaps of the same incumbent, and exhaustive / candidate
+/// batches contain heavily-overlapping orderings, so this scorer keeps a
+/// *prefix checkpoint* per position of the most recently scored
+/// permutation: a new permutation re-places only its suffix after the
+/// longest common prefix. Scores are bit-identical to cold scoring —
+/// checkpointed profiles are exact copies and the penalty sum is
+/// accumulated in the same left-to-right order — so caching can never
+/// change which plan wins.
 pub struct ExactScorer<'a> {
-    pub base: &'a Profile,
     pub jobs: &'a [PlanJob],
     pub now: Time,
     pub alpha: f64,
     evals: u64,
-    /// Reused between evaluations (§Perf: avoids one Vec allocation per
-    /// scored permutation).
-    scratch: Profile,
+    /// `checkpoints[k]` = profile after placing the first `k` jobs of
+    /// `cached`; `checkpoints[0]` is the base. `prefix_scores[k]` is the
+    /// running penalty sum after `k` placements.
+    checkpoints: Vec<Profile>,
+    prefix_scores: Vec<f64>,
+    cached: Vec<usize>,
+    cached_len: usize,
+    /// When false, every score is a cold full placement on one scratch
+    /// (the pre-cache behaviour; kept as the perf-bench baseline).
+    cache_enabled: bool,
 }
 
 impl<'a> ExactScorer<'a> {
-    pub fn new(base: &'a Profile, jobs: &'a [PlanJob], now: Time, alpha: f64) -> Self {
-        let scratch = base.clone();
-        ExactScorer { base, jobs, now, alpha, evals: 0, scratch }
+    pub fn new(base: &Profile, jobs: &'a [PlanJob], now: Time, alpha: f64) -> Self {
+        let n = jobs.len();
+        // Only slot 0 needs real content; every other checkpoint is
+        // reset_from its predecessor before it is ever read, so cheap
+        // placeholders avoid n full profile clones per construction.
+        let mut checkpoints = Vec::with_capacity(n + 1);
+        checkpoints.push(base.clone());
+        let placeholder = || Profile::flat(Time::ZERO, crate::core::resources::Resources::ZERO);
+        checkpoints.resize_with(n + 1, placeholder);
+        ExactScorer {
+            jobs,
+            now,
+            alpha,
+            evals: 0,
+            checkpoints,
+            prefix_scores: vec![0.0; n + 1],
+            cached: vec![usize::MAX; n],
+            cached_len: 0,
+            cache_enabled: true,
+        }
+    }
+
+    /// Cold variant: no prefix reuse (perf baseline, behaviour-identical).
+    pub fn cold(base: &Profile, jobs: &'a [PlanJob], now: Time, alpha: f64) -> Self {
+        let mut s = ExactScorer::new(base, jobs, now, alpha);
+        s.cache_enabled = false;
+        s
+    }
+
+    /// Pre-cache behaviour: one scratch reset + full placement.
+    fn score_cold(&mut self, perm: &[usize]) -> f64 {
+        self.evals += 1;
+        if perm.is_empty() {
+            return 0.0;
+        }
+        let (base, rest) = self.checkpoints.split_at_mut(1);
+        let scratch = &mut rest[0];
+        scratch.reset_from(&base[0]);
+        let mut score = 0.0;
+        for &ji in perm {
+            let j = &self.jobs[ji];
+            let t = scratch.earliest_fit(j.req, j.walltime, self.now);
+            scratch.reserve(t, j.walltime, j.req);
+            score += waiting_penalty(t, j.submit, self.alpha);
+        }
+        score
+    }
+
+    fn score_one(&mut self, perm: &[usize]) -> f64 {
+        if !self.cache_enabled {
+            return self.score_cold(perm);
+        }
+        self.evals += 1;
+        let n = perm.len();
+        debug_assert_eq!(n, self.jobs.len());
+        let mut l = 0;
+        while l < self.cached_len && self.cached[l] == perm[l] {
+            l += 1;
+        }
+        let mut score = self.prefix_scores[l];
+        for k in l..n {
+            let ji = perm[k];
+            let j = &self.jobs[ji];
+            let (placed, rest) = self.checkpoints.split_at_mut(k + 1);
+            let cur = &mut rest[0];
+            cur.reset_from(&placed[k]);
+            let t = cur.earliest_fit(j.req, j.walltime, self.now);
+            cur.reserve(t, j.walltime, j.req);
+            score += waiting_penalty(t, j.submit, self.alpha);
+            self.prefix_scores[k + 1] = score;
+            self.cached[k] = ji;
+        }
+        self.cached_len = n;
+        score
     }
 }
 
 impl PermScorer for ExactScorer<'_> {
     fn score(&mut self, perm: &[usize]) -> f64 {
-        self.evals += 1;
-        score_plan_scratch(self.base, &mut self.scratch, self.jobs, perm, self.now, self.alpha)
+        self.score_one(perm)
     }
+
+    /// Batch scoring evaluates in lexicographic order so permutations
+    /// sharing prefixes (all 120 of an exhaustive n<=5 search, ties
+    /// among the nine sorted candidates) reuse checkpoints; results are
+    /// returned in input order and each is bit-identical to a cold
+    /// evaluation, so callers' argmin tie-breaking is unaffected.
+    fn score_batch(&mut self, perms: &[Vec<usize>]) -> Vec<f64> {
+        if !self.cache_enabled {
+            return perms.iter().map(|p| self.score_one(p)).collect();
+        }
+        let mut order: Vec<usize> = (0..perms.len()).collect();
+        order.sort_by(|&a, &b| perms[a].cmp(&perms[b]));
+        let mut out = vec![0.0; perms.len()];
+        for &i in &order {
+            out[i] = self.score_one(&perms[i]);
+        }
+        out
+    }
+
     fn evaluations(&self) -> u64 {
         self.evals
     }
@@ -216,6 +322,50 @@ mod tests {
         assert_eq!(s.evaluations(), 2);
         // Symmetric jobs: same score either way.
         assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cached_scoring_is_bit_identical_to_cold() {
+        use crate::core::time::Duration;
+        use crate::stats::rng::Pcg32;
+        let mut base = Profile::flat(Time::ZERO, Resources::new(16, 200 << 30));
+        base.subtract(Time::from_secs(100), Time::from_secs(900), Resources::new(6, 50 << 30));
+        let jobs: Vec<PlanJob> = (0..10)
+            .map(|i| PlanJob {
+                id: JobId(i),
+                req: Resources::new(1 + i % 5, ((i as u64 % 7) + 1) << 30),
+                walltime: Duration::from_secs(120 + 60 * i as u64),
+                submit: Time::from_secs((i as u64) * 10),
+            })
+            .collect();
+        let mut cached = ExactScorer::new(&base, &jobs, Time::ZERO, 2.0);
+        let mut cold = ExactScorer::cold(&base, &jobs, Time::ZERO, 2.0);
+        let mut rng = Pcg32::seeded(31);
+        let mut perm: Vec<usize> = (0..jobs.len()).collect();
+        for _ in 0..200 {
+            let i = rng.below(10) as usize;
+            let j = rng.below(10) as usize;
+            perm.swap(i, j);
+            let a = cached.score(&perm);
+            let b = cold.score(&perm);
+            assert_eq!(a.to_bits(), b.to_bits(), "cached diverged on {perm:?}");
+        }
+        // Batch path too (returns in input order).
+        let batch: Vec<Vec<usize>> = (0..20)
+            .map(|_| {
+                let mut p = perm.clone();
+                let i = rng.below(10) as usize;
+                let j = rng.below(10) as usize;
+                p.swap(i, j);
+                p
+            })
+            .collect();
+        let sa = cached.score_batch(&batch);
+        let sb = cold.score_batch(&batch);
+        for (x, y) in sa.iter().zip(&sb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(cached.evaluations(), cold.evaluations());
     }
 
     #[test]

@@ -16,8 +16,7 @@
 
 use crate::core::job::JobId;
 use crate::core::resources::Resources;
-use crate::sched::plan::profile::Profile;
-use crate::sched::{SchedView, Scheduler};
+use crate::sched::{SchedCtx, Scheduler};
 
 #[derive(Debug, Default)]
 pub struct SlurmLike;
@@ -33,28 +32,27 @@ impl Scheduler for SlurmLike {
         "slurm-like"
     }
 
-    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<JobId> {
+    fn schedule(&mut self, ctx: &mut SchedCtx<'_, '_>) -> Vec<JobId> {
+        let view = ctx.view;
         let mut free = view.free;
         let mut launches = Vec::new();
-        let mut profile = Profile::from_view(view);
+        let mut txn = ctx.txn();
         let mut reserved_head = false;
 
         for j in view.queue {
             let req = j.request();
-            if free.fits(&req)
-                && profile.earliest_fit(req, j.walltime, view.now) == view.now
-            {
+            if free.fits(&req) && txn.earliest_fit(req, j.walltime, view.now) == view.now {
                 // Start now (either FCFS order or backfilled past a
                 // delayed burst-buffer job).
-                profile.reserve(view.now, j.walltime, req);
+                txn.reserve(view.now, j.walltime, req);
                 free -= req;
                 launches.push(j.id);
             } else if !reserved_head && j.bb == 0 {
                 // The first blocked *non-BB* job gets the classic EASY
                 // processor reservation; later jobs must not delay it.
                 let cpu_req = Resources { cpu: j.procs, bb: 0 };
-                let t = profile.earliest_fit(cpu_req, j.walltime, view.now);
-                profile.reserve(t, j.walltime, cpu_req);
+                let t = txn.earliest_fit(cpu_req, j.walltime, view.now);
+                txn.reserve(t, j.walltime, cpu_req);
                 reserved_head = true;
             }
             // Blocked burst-buffer jobs: no reservation — Slurm defers
@@ -69,7 +67,7 @@ mod tests {
     use super::*;
     use crate::core::job::JobRequest;
     use crate::core::time::{Duration, Time};
-    use crate::sched::RunningInfo;
+    use crate::sched::{schedule_once, RunningInfo, SchedView};
 
     fn req(id: u32, procs: u32, bb: u64, wall_mins: u64) -> JobRequest {
         JobRequest {
@@ -105,7 +103,7 @@ mod tests {
             expected_end: Time::from_secs(6000),
         }];
         let mut s = SlurmLike::new();
-        let l = s.schedule(&view(Resources::new(6, 50), &q, &running));
+        let l = schedule_once(&mut s, &view(Resources::new(6, 50), &q, &running));
         assert_eq!(l, vec![JobId(1), JobId(2)], "bb head gets no reservation");
     }
 
@@ -120,7 +118,7 @@ mod tests {
             expected_end: Time::from_secs(600),
         }];
         let mut s = SlurmLike::new();
-        let l = s.schedule(&view(Resources::new(2, 100), &q, &running));
+        let l = schedule_once(&mut s, &view(Resources::new(2, 100), &q, &running));
         // Job 1 (60 min) would overlap the reservation at 600s; job 2
         // (5 min) fits before it.
         assert_eq!(l, vec![JobId(2)]);
@@ -130,7 +128,7 @@ mod tests {
     fn launches_fcfs_prefix() {
         let q = [req(0, 2, 10, 10), req(1, 2, 10, 10)];
         let mut s = SlurmLike::new();
-        let l = s.schedule(&view(Resources::new(8, 100), &q, &[]));
+        let l = schedule_once(&mut s, &view(Resources::new(8, 100), &q, &[]));
         assert_eq!(l, vec![JobId(0), JobId(1)]);
     }
 }

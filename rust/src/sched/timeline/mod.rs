@@ -1,0 +1,35 @@
+//! The shared resource-timeline subsystem.
+//!
+//! The paper's Algorithm 1 drops and re-acquires every future
+//! reservation on each scheduler invocation; the seed mirrored that by
+//! rebuilding a [`Profile`] from the running set on every 60 s tick and
+//! every arrival/completion, so scheduler cost scaled with
+//! (invocations × running jobs × queue length). This module replaces
+//! that with one incrementally-maintained two-resource timeline:
+//!
+//! - [`Profile`] — the piecewise-constant free-(processors, burst-buffer)
+//!   function over future time; the placement primitive
+//!   (`earliest_fit` / `reserve`) shared by EASY reservations,
+//!   conservative backfilling and the plan builder.
+//! - [`ResourceTimeline`] — a [`Profile`] that the **simulator** owns
+//!   and maintains by applying deltas on job start/finish (emitted by
+//!   the platform layer) instead of rebuilding each pass; its start is
+//!   advanced to `now` at every scheduler invocation.
+//! - [`TimelineTxn`] — a scoped transaction over the timeline: policies
+//!   tentatively reserve (EASY head reservations, conservative's full
+//!   reservation set, the plan builder's earliest-fit sweep) and the
+//!   reservations roll back automatically when the transaction drops,
+//!   so ephemeral per-pass state never leaks into the durable timeline.
+//!
+//! Invariant (enforced by `tests/timeline.rs` and the simulator's
+//! `validate_timeline` mode): after any sequence of start/finish/advance
+//! operations the incremental timeline is breakpoint-identical to a full
+//! [`Profile::from_view`] rebuild from the running set.
+
+pub mod profile;
+pub mod resource;
+pub mod txn;
+
+pub use profile::Profile;
+pub use resource::ResourceTimeline;
+pub use txn::TimelineTxn;

@@ -7,7 +7,7 @@
 //! job find the earliest point in time when sufficient resources are
 //! available").
 
-use crate::core::resources::Resources;
+use crate::core::resources::{ResourceDelta, Resources};
 use crate::core::time::{Duration, Time};
 use crate::sched::SchedView;
 
@@ -62,10 +62,14 @@ impl Profile {
         }
     }
 
-    /// Subtract `req` over `[from, to)`. Panics on over-subscription —
-    /// callers must only reserve what the profile shows as free.
-    pub fn subtract(&mut self, from: Time, to: Time, req: Resources) {
-        if req.is_zero() || from >= to {
+    /// Apply a signed [`ResourceDelta`] over `[from, to)` — the single
+    /// mutation primitive behind [`Profile::subtract`] and
+    /// [`Profile::add`], and the op the incremental
+    /// [`super::ResourceTimeline`] drives from platform-layer deltas.
+    /// Panics on over-subscription (free going negative): callers must
+    /// only reserve what the profile shows as free.
+    pub fn apply_delta(&mut self, from: Time, to: Time, delta: ResourceDelta) {
+        if delta.is_zero() || from >= to {
             return;
         }
         let from = from.max(self.start());
@@ -77,24 +81,38 @@ impl Profile {
         for i in i0..i1 {
             self.points[i].1 = self.points[i]
                 .1
-                .checked_sub(&req)
+                .checked_apply(delta)
                 .unwrap_or_else(|| panic!("profile over-subscription at {}", self.points[i].0));
         }
         self.coalesce();
     }
 
-    /// Add `req` back over `[from, to)` (used by what-if analyses).
+    /// Subtract `req` over `[from, to)` (tentative or durable reservation).
+    pub fn subtract(&mut self, from: Time, to: Time, req: Resources) {
+        self.apply_delta(from, to, ResourceDelta::acquire(req));
+    }
+
+    /// Add `req` back over `[from, to)` (early completion, what-if undo).
     pub fn add(&mut self, from: Time, to: Time, req: Resources) {
-        if req.is_zero() || from >= to {
+        self.apply_delta(from, to, ResourceDelta::release(req));
+    }
+
+    /// Move the profile start forward to `now`, dropping breakpoints that
+    /// are entirely in the past. No-op when `now` is at or before the
+    /// current start. The canonical form (no equal-value neighbours) is
+    /// preserved: truncation never makes two surviving segments equal.
+    pub fn advance_to(&mut self, now: Time) {
+        if now <= self.start() {
             return;
         }
-        let from = from.max(self.start());
-        let i0 = self.split_at(from);
-        let i1 = if to.is_finite() { self.split_at(to) } else { self.points.len() };
-        for i in i0..i1 {
-            self.points[i].1 += req;
+        let i = match self.points.binary_search_by_key(&now, |&(t, _)| t) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        if i > 0 {
+            self.points.drain(..i);
         }
-        self.coalesce();
+        self.points[0].0 = now;
     }
 
     fn coalesce(&mut self) {
@@ -291,6 +309,36 @@ mod tests {
         assert_eq!(p.min_free(t(0), t(40)), res(2, 20));
         assert_eq!(p.min_free(t(20), t(40)), res(7, 50));
         assert_eq!(p.min_free(t(30), t(40)), res(8, 100));
+    }
+
+    #[test]
+    fn advance_to_truncates_past_segments() {
+        let mut p = Profile::flat(t(0), res(4, 10));
+        p.subtract(t(10), t(20), res(2, 5));
+        p.subtract(t(30), t(40), res(1, 1));
+        p.advance_to(t(15));
+        assert_eq!(p.start(), t(15));
+        assert_eq!(p.free_at(t(15)), res(2, 5));
+        assert_eq!(p.free_at(t(25)), res(4, 10));
+        // Advancing to an exact breakpoint keeps its value.
+        p.advance_to(t(30));
+        assert_eq!(p.free_at(t(30)), res(3, 9));
+        // No-op when not moving forward.
+        p.advance_to(t(5));
+        assert_eq!(p.start(), t(30));
+    }
+
+    #[test]
+    fn apply_delta_clamped_interval_is_noop() {
+        use crate::core::resources::ResourceDelta;
+        let mut p = Profile::flat(t(100), res(4, 10));
+        // Interval entirely before the profile start: must not panic and
+        // must not change anything (regression: `add` used to index past
+        // the front on `to < start`).
+        p.apply_delta(t(0), t(50), ResourceDelta::release(res(1, 1)));
+        p.add(t(0), t(50), res(1, 1));
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.free_at(t(100)), res(4, 10));
     }
 
     #[test]

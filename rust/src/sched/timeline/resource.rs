@@ -1,0 +1,233 @@
+//! The simulator-owned incremental availability timeline.
+
+use crate::core::job::JobId;
+use crate::core::resources::Resources;
+use crate::core::time::{Duration, Time};
+use crate::sched::timeline::profile::Profile;
+use crate::sched::timeline::txn::TimelineTxn;
+use crate::sched::SchedView;
+use std::collections::HashMap;
+
+/// The free-resource timeline of one cluster, maintained incrementally:
+/// a job start subtracts its request over `[start, expected_end)`, a
+/// completion adds the unused tail `[finish, expected_end)` back, and
+/// [`ResourceTimeline::advance_to`] retires segments the clock has
+/// passed. At any instant the timeline equals what a full rebuild from
+/// the running set would produce — without paying for the rebuild on
+/// every scheduler invocation.
+#[derive(Debug, Clone)]
+pub struct ResourceTimeline {
+    profile: Profile,
+    capacity: Resources,
+    /// Per running job: the request held and the walltime-bound end the
+    /// subtraction extends to (needed to add the tail back on an early
+    /// finish).
+    running: HashMap<JobId, (Resources, Time)>,
+}
+
+impl ResourceTimeline {
+    /// A fully-free timeline starting at `start`.
+    pub fn new(start: Time, capacity: Resources) -> ResourceTimeline {
+        ResourceTimeline {
+            profile: Profile::flat(start, capacity),
+            capacity,
+            running: HashMap::new(),
+        }
+    }
+
+    /// Full rebuild from a scheduler view — the oracle the incremental
+    /// maintenance is tested against, and the constructor test/bench
+    /// harnesses use.
+    pub fn from_view(view: &SchedView<'_>) -> ResourceTimeline {
+        let mut running = HashMap::with_capacity(view.running.len());
+        for r in view.running {
+            running.insert(r.id, (r.req, r.expected_end));
+        }
+        ResourceTimeline {
+            profile: Profile::from_view(view),
+            capacity: view.capacity,
+            running,
+        }
+    }
+
+    /// Replace this timeline's contents with a full rebuild (the
+    /// pre-refactor per-invocation behaviour; kept behind
+    /// `SimConfig::rebuild_timeline` as the perf baseline and parity
+    /// check).
+    pub fn rebuild_from_view(&mut self, view: &SchedView<'_>) {
+        *self = ResourceTimeline::from_view(view);
+    }
+
+    pub fn capacity(&self) -> Resources {
+        self.capacity
+    }
+
+    /// The timeline's current start (the last `advance_to` instant).
+    pub fn now(&self) -> Time {
+        self.profile.start()
+    }
+
+    /// Read access to the underlying profile (plan policies snapshot it
+    /// as the base for scoring scratch copies).
+    pub fn profile(&self) -> &Profile {
+        &self.profile
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Retire segments before `now`. Called once per scheduler
+    /// invocation; O(retired breakpoints).
+    pub fn advance_to(&mut self, now: Time) {
+        self.profile.advance_to(now);
+    }
+
+    /// Durable delta: `id` started at `now` holding `req` until (at
+    /// most) `expected_end` — subtract over `[now, expected_end)`.
+    pub fn job_started(&mut self, id: JobId, req: Resources, now: Time, expected_end: Time) {
+        let prev = self.running.insert(id, (req, expected_end));
+        assert!(prev.is_none(), "timeline: {id} started twice");
+        if expected_end > now {
+            self.profile.subtract(now, expected_end, req);
+        }
+    }
+
+    /// Durable delta: `id` finished (completed or killed) at `now` — add
+    /// the unused reservation tail `[now, expected_end)` back.
+    pub fn job_finished(&mut self, id: JobId, now: Time) {
+        let (req, expected_end) = self
+            .running
+            .remove(&id)
+            .unwrap_or_else(|| panic!("timeline: {id} finished but never started"));
+        if expected_end > now.max(self.profile.start()) {
+            self.profile.add(now, expected_end, req);
+        }
+    }
+
+    /// Open a scoped transaction for tentative reservations; everything
+    /// reserved through it rolls back when it drops (unless committed).
+    pub fn txn(&mut self) -> TimelineTxn<'_> {
+        TimelineTxn::new(&mut self.profile)
+    }
+
+    // ----- read-only queries (delegated) ---------------------------------
+
+    pub fn free_at(&self, t: Time) -> Resources {
+        self.profile.free_at(t)
+    }
+
+    pub fn earliest_fit(&self, req: Resources, dur: Duration, not_before: Time) -> Time {
+        self.profile.earliest_fit(req, dur, not_before)
+    }
+
+    pub fn min_free(&self, from: Time, to: Time) -> Resources {
+        self.profile.min_free(from, to)
+    }
+
+    pub fn len(&self) -> usize {
+        self.profile.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profile.is_empty()
+    }
+
+    /// Assert breakpoint-identity with a full rebuild from `view`
+    /// (the `validate_timeline` paranoia mode).
+    pub fn assert_matches_view(&self, view: &SchedView<'_>) {
+        let rebuilt = Profile::from_view(view);
+        assert_eq!(
+            self.profile, rebuilt,
+            "incremental timeline diverged from rebuild at {}",
+            view.now
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::RunningInfo;
+
+    fn res(cpu: u32, bb: u64) -> Resources {
+        Resources::new(cpu, bb)
+    }
+    fn t(s: u64) -> Time {
+        Time::from_secs(s)
+    }
+
+    #[test]
+    fn start_finish_matches_rebuild() {
+        let cap = res(8, 100);
+        let mut tl = ResourceTimeline::new(t(0), cap);
+        tl.job_started(JobId(1), res(3, 40), t(0), t(100));
+        tl.job_started(JobId(2), res(2, 10), t(10), t(50));
+        tl.advance_to(t(20));
+        // Rebuild oracle at t=20.
+        let running = [
+            RunningInfo { id: JobId(1), req: res(3, 40), expected_end: t(100) },
+            RunningInfo { id: JobId(2), req: res(2, 10), expected_end: t(50) },
+        ];
+        let view = SchedView {
+            now: t(20),
+            capacity: cap,
+            free: res(3, 50),
+            queue: &[],
+            running: &running,
+        };
+        tl.assert_matches_view(&view);
+        // Job 2 finishes early at t=30: its tail [30, 50) is returned.
+        tl.job_finished(JobId(2), t(30));
+        assert_eq!(tl.free_at(t(30)), res(5, 60));
+        assert_eq!(tl.free_at(t(100)), cap);
+        assert_eq!(tl.n_running(), 1);
+    }
+
+    #[test]
+    fn finish_at_or_after_expected_end_is_noop_on_profile() {
+        let cap = res(4, 10);
+        let mut tl = ResourceTimeline::new(t(0), cap);
+        tl.job_started(JobId(1), res(2, 5), t(0), t(100));
+        tl.advance_to(t(100));
+        // Walltime kill fires just past the bound: nothing to add back.
+        tl.job_finished(JobId(1), t(100));
+        assert_eq!(tl.free_at(t(100)), cap);
+        assert_eq!(tl.len(), 1);
+        assert_eq!(tl.n_running(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "started twice")]
+    fn double_start_panics() {
+        let mut tl = ResourceTimeline::new(t(0), res(4, 10));
+        tl.job_started(JobId(1), res(1, 1), t(0), t(10));
+        tl.job_started(JobId(1), res(1, 1), t(0), t(10));
+    }
+
+    #[test]
+    fn txn_rolls_back_on_drop() {
+        let cap = res(4, 10);
+        let mut tl = ResourceTimeline::new(t(0), cap);
+        tl.job_started(JobId(1), res(1, 2), t(0), t(50));
+        let before = tl.profile().clone();
+        {
+            let mut txn = tl.txn();
+            let at = txn.earliest_fit(res(3, 8), Duration::from_secs(30), t(0));
+            txn.reserve(at, Duration::from_secs(30), res(3, 8));
+            assert_ne!(txn.free_at(at), before.free_at(at));
+        }
+        assert_eq!(*tl.profile(), before, "txn drop must restore the profile exactly");
+    }
+
+    #[test]
+    fn txn_commit_keeps_reservations() {
+        let mut tl = ResourceTimeline::new(t(0), res(4, 10));
+        {
+            let mut txn = tl.txn();
+            txn.reserve(t(10), Duration::from_secs(10), res(2, 2));
+            txn.commit();
+        }
+        assert_eq!(tl.free_at(t(10)), res(2, 8));
+    }
+}

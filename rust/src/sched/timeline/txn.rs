@@ -1,0 +1,134 @@
+//! Scoped transactions over the shared timeline.
+
+use crate::core::resources::Resources;
+use crate::core::time::{Duration, Time};
+use crate::sched::timeline::profile::Profile;
+
+/// A tentative-reservation scope over a [`Profile`]. Policies reserve
+/// freely through it during one scheduling pass; unless
+/// [`TimelineTxn::commit`] is called, every mutation is rolled back when
+/// the transaction drops — Algorithm 1's "drop all reservations" (line
+/// 18) implemented as scope exit instead of a rebuild on the next pass.
+///
+/// Rollback restores the profile from a snapshot taken at open — one
+/// `O(breakpoints)` memcpy per pass, independent of how many
+/// reservations the pass made (conservative backfilling makes one per
+/// queued job). The restored breakpoint vector is bit-identical to the
+/// pre-transaction state.
+#[derive(Debug)]
+pub struct TimelineTxn<'a> {
+    profile: &'a mut Profile,
+    saved: Profile,
+    committed: bool,
+}
+
+impl<'a> TimelineTxn<'a> {
+    pub(crate) fn new(profile: &'a mut Profile) -> Self {
+        let saved = profile.clone();
+        TimelineTxn { profile, saved, committed: false }
+    }
+
+    /// Keep every reservation made through this transaction.
+    ///
+    /// Only meaningful on a *standalone* profile/timeline (what-if
+    /// analyses, tests). Never commit a txn opened on the simulator's
+    /// shared timeline: the profile would then hold resources its
+    /// per-job running map knows nothing about, breaking the
+    /// incremental == rebuild invariant at the next validation or
+    /// rebuild. Policies always let their transactions roll back.
+    pub fn commit(mut self) {
+        self.committed = true;
+    }
+
+    // ----- queries -------------------------------------------------------
+
+    pub fn start(&self) -> Time {
+        self.profile.start()
+    }
+
+    pub fn free_at(&self, t: Time) -> Resources {
+        self.profile.free_at(t)
+    }
+
+    pub fn earliest_fit(&self, req: Resources, dur: Duration, not_before: Time) -> Time {
+        self.profile.earliest_fit(req, dur, not_before)
+    }
+
+    pub fn min_free(&self, from: Time, to: Time) -> Resources {
+        self.profile.min_free(from, to)
+    }
+
+    pub fn len(&self) -> usize {
+        self.profile.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profile.is_empty()
+    }
+
+    // ----- tentative mutations -------------------------------------------
+
+    pub fn reserve(&mut self, at: Time, dur: Duration, req: Resources) {
+        self.profile.reserve(at, dur, req);
+    }
+
+    pub fn subtract(&mut self, from: Time, to: Time, req: Resources) {
+        self.profile.subtract(from, to, req);
+    }
+
+    pub fn add(&mut self, from: Time, to: Time, req: Resources) {
+        self.profile.add(from, to, req);
+    }
+}
+
+impl Drop for TimelineTxn<'_> {
+    fn drop(&mut self) {
+        if !self.committed {
+            self.profile.reset_from(&self.saved);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn res(cpu: u32, bb: u64) -> Resources {
+        Resources::new(cpu, bb)
+    }
+    fn t(s: u64) -> Time {
+        Time::from_secs(s)
+    }
+    fn d(s: u64) -> Duration {
+        Duration::from_secs(s)
+    }
+
+    #[test]
+    fn nested_reservation_sweep_rolls_back_bit_exactly() {
+        let mut p = Profile::flat(t(0), res(8, 100));
+        p.subtract(t(50), t(150), res(4, 30));
+        let snapshot = p.clone();
+        {
+            let mut txn = TimelineTxn::new(&mut p);
+            // A conservative-style sweep: chained future reservations.
+            let mut not_before = t(0);
+            for i in 0..10u32 {
+                let req = res(1 + i % 4, (5 + i as u64) % 20);
+                let at = txn.earliest_fit(req, d(40), not_before);
+                txn.reserve(at, d(40), req);
+                not_before = at;
+            }
+        }
+        assert_eq!(p, snapshot);
+    }
+
+    #[test]
+    fn queries_see_tentative_state() {
+        let mut p = Profile::flat(t(0), res(4, 10));
+        let mut txn = TimelineTxn::new(&mut p);
+        assert_eq!(txn.earliest_fit(res(4, 10), d(10), t(0)), t(0));
+        txn.reserve(t(0), d(10), res(4, 10));
+        assert_eq!(txn.earliest_fit(res(1, 1), d(5), t(0)), t(10));
+        assert_eq!(txn.free_at(t(0)), res(0, 0));
+    }
+}

@@ -16,10 +16,11 @@ use crate::platform::cluster::Cluster;
 use crate::platform::flows::FlowNetwork;
 use crate::platform::routing::Router;
 use crate::platform::topology::{Topology, TopologyConfig};
-use crate::sched::{RunningInfo, SchedView, Scheduler};
+use crate::sched::timeline::ResourceTimeline;
+use crate::sched::{queue_index_map, QueueIndex, RunningInfo, SchedCtx, SchedView, Scheduler};
 use crate::sim::events::{Event, EventQueue};
 use crate::sim::jobexec::{stage_transfers, FlowKind, RunningJob};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -41,6 +42,15 @@ pub struct SimConfig {
     pub horizon: Option<Time>,
     /// Record per-job node placements for Gantt export (Fig 3).
     pub record_gantt: bool,
+    /// Rebuild the resource timeline from the running set on every
+    /// scheduler invocation instead of using the incrementally
+    /// maintained one — the pre-refactor cost model, kept as the perf
+    /// baseline and the fingerprint-parity reference.
+    pub rebuild_timeline: bool,
+    /// Assert on every invocation that the incremental timeline is
+    /// breakpoint-identical to a full rebuild (test paranoia mode; the
+    /// check runs outside the `sched_wall` timing window).
+    pub validate_timeline: bool,
 }
 
 impl Default for SimConfig {
@@ -53,6 +63,8 @@ impl Default for SimConfig {
             io_enabled: true,
             horizon: None,
             record_gantt: false,
+            rebuild_timeline: false,
+            validate_timeline: false,
         }
     }
 }
@@ -117,6 +129,10 @@ pub struct Simulator {
     router: Router,
     net: FlowNetwork,
     cluster: Cluster,
+    /// The shared availability timeline: owned here, maintained
+    /// incrementally from the platform layer's allocation deltas, read
+    /// (and tentatively written through transactions) by every policy.
+    timeline: ResourceTimeline,
     jobs: Vec<Job>,
     clock: Time,
     queue: EventQueue,
@@ -165,9 +181,11 @@ impl Simulator {
             queue.push(h, Event::Horizon);
         }
         let arrivals_left = jobs.len();
+        let timeline = ResourceTimeline::new(Time::ZERO, cluster.capacity());
         Simulator {
             router: Router::new(&topo),
             net: FlowNetwork::new(caps),
+            timeline,
             cluster,
             topo,
             jobs,
@@ -343,6 +361,15 @@ impl Simulator {
         self.gen_counter += 1;
         let gen = self.gen_counter;
         let rj = RunningJob::new(job.clone(), alloc, self.clock, gen);
+        // Fold the platform layer's allocation delta into the shared
+        // timeline: the job holds its resources until (at most) its
+        // walltime bound. Hard asserts — a stale or wrong-job delta
+        // would silently corrupt every later scheduling decision.
+        let deltas = self.cluster.drain_deltas();
+        assert_eq!(deltas.len(), 1, "exactly one delta per allocation");
+        assert_eq!(deltas[0].job, id);
+        self.timeline
+            .job_started(id, deltas[0].delta.magnitude(), self.clock, rj.kill_time());
         // One microsecond of grace so a job finishing exactly at its
         // walltime (perfect estimate, no I/O) completes rather than dies:
         // the kill event would otherwise win the FIFO tie.
@@ -468,6 +495,12 @@ impl Simulator {
         debug_assert!(rj.all_flow_ids().is_empty());
         self.record(&rj, false);
         self.cluster.release(id);
+        // The release delta only bounds the buffer here: job_finished
+        // already knows the held amount from its own running map.
+        self.cluster.drain_deltas();
+        // Early completion returns the walltime-bound tail to the
+        // timeline.
+        self.timeline.job_finished(id, self.clock);
         self.cfg.event_triggers
     }
 
@@ -480,6 +513,8 @@ impl Simulator {
         }
         self.record(&rj, true);
         self.cluster.release(id);
+        self.cluster.drain_deltas();
+        self.timeline.job_finished(id, self.clock);
         self.killed += 1;
     }
 
@@ -529,30 +564,58 @@ impl Simulator {
             queue: &queue,
             running: &running,
         };
+        if self.cfg.validate_timeline && !self.cfg.rebuild_timeline {
+            // Paranoia mode, outside the timing window: the incremental
+            // timeline must equal a full rebuild.
+            self.timeline.advance_to(self.clock);
+            self.timeline.assert_matches_view(&view);
+        }
+        // The id→queue-index map is lazy: built at most once per pass,
+        // and only when a policy resolves an id or a launch needs
+        // validating — no-launch ticks (the common case) pay nothing.
+        let qindex = QueueIndex::new();
         let t0 = std::time::Instant::now();
-        let launches = self.scheduler.schedule(&view);
+        // Timeline work — advance, or the baseline's full rebuild — is
+        // policy-side cost and stays inside the timed window so
+        // `sched_wall` is comparable across modes.
+        if self.cfg.rebuild_timeline {
+            self.timeline.rebuild_from_view(&view);
+        }
+        let launches = {
+            let mut ctx = SchedCtx::new(view, &mut self.timeline, &qindex);
+            self.scheduler.schedule(&mut ctx)
+        };
         self.sched_wall += t0.elapsed();
         self.sched_invocations += 1;
-        for id in launches {
-            let pos = self
-                .pending
-                .iter()
-                .position(|&p| p == id)
-                .unwrap_or_else(|| panic!("scheduler launched non-pending {id}"));
+        if launches.is_empty() {
+            return;
+        }
+        let qmap = qindex.get_or_init(|| queue_index_map(&queue));
+        let mut launched: HashSet<JobId> = HashSet::with_capacity(launches.len());
+        for &id in &launches {
+            assert!(
+                qmap.contains_key(&id),
+                "scheduler launched non-pending {id}"
+            );
+            assert!(launched.insert(id), "scheduler launched {id} twice");
             let req = self.jobs[id.0 as usize].request();
             assert!(
                 self.cluster.fits_now(&req),
                 "scheduler over-committed: {id} needs {req} but only {} free",
                 self.cluster.free()
             );
-            self.pending.remove(pos);
             self.launch(id);
         }
+        // One O(Q) sweep instead of a remove() per launch.
+        self.pending.retain(|id| !launched.contains(id));
     }
 
     /// Test/diagnostic hooks.
     pub fn clock(&self) -> Time {
         self.clock
+    }
+    pub fn timeline(&self) -> &ResourceTimeline {
+        &self.timeline
     }
     pub fn n_running(&self) -> usize {
         self.running.len()
@@ -666,7 +729,10 @@ mod tests {
     #[test]
     fn deterministic_across_runs() {
         let jobs: Vec<Job> = (0..20)
-            .map(|i| mk_job(i, (i as u64) * 30, 300 + (i as u64 * 37) % 400, 1 + (i % 8), ((i as u64 % 5) + 1) * (1 << 30)))
+            .map(|i| {
+                let bb = ((i as u64 % 5) + 1) * (1 << 30);
+                mk_job(i, (i as u64) * 30, 300 + (i as u64 * 37) % 400, 1 + (i % 8), bb)
+            })
             .collect();
         let r1 = Simulator::new(jobs.clone(), Box::new(Fcfs::new()), cfg(8 * (1 << 30) * 4)).run();
         let r2 = Simulator::new(jobs, Box::new(Fcfs::new()), cfg(8 * (1 << 30) * 4)).run();
@@ -674,6 +740,46 @@ mod tests {
         for (a, b) in r1.records.iter().zip(&r2.records) {
             assert_eq!(a, b);
         }
+    }
+
+    #[test]
+    fn incremental_timeline_matches_rebuild_throughout_a_run() {
+        // validate_timeline asserts breakpoint-identity between the
+        // incremental timeline and a full rebuild at every scheduler
+        // invocation of a busy, killing, I/O-heavy run.
+        let mut jobs: Vec<Job> = (0..30)
+            .map(|i| {
+                mk_job(
+                    i,
+                    (i as u64) * 20,
+                    200 + (i as u64 * 53) % 700,
+                    1 + (i % 10),
+                    ((i as u64 % 4) + 1) * (1 << 30),
+                )
+            })
+            .collect();
+        // A couple of under-estimated walltimes so kills happen too.
+        jobs[3].walltime = Duration::from_secs(100);
+        jobs[11].walltime = Duration::from_secs(150);
+        let mut c = cfg(64 * (1 << 30));
+        c.validate_timeline = true;
+        let res = Simulator::new(jobs, Box::new(Fcfs::new()), c).run();
+        assert_eq!(res.records.len(), 30);
+        assert!(res.killed_jobs >= 2);
+    }
+
+    #[test]
+    fn rebuild_mode_produces_identical_fingerprint() {
+        let jobs: Vec<Job> = (0..25)
+            .map(|i| mk_job(i, (i as u64) * 25, 150 + (i as u64 * 37) % 500, 1 + (i % 6), 0))
+            .collect();
+        let mut inc = cfg(TIB);
+        inc.io_enabled = false;
+        let mut reb = inc.clone();
+        reb.rebuild_timeline = true;
+        let a = Simulator::new(jobs.clone(), Box::new(Fcfs::new()), inc).run();
+        let b = Simulator::new(jobs, Box::new(Fcfs::new()), reb).run();
+        assert_eq!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

@@ -125,7 +125,8 @@ pub fn generate(cfg: &SynthConfig) -> Vec<Job> {
     // Thinning-free approach: accumulate interarrivals scaled by the
     // inverse intensity at the current time-of-week.
     let mean_intensity = 0.649; // integral of week_intensity over a week / 168
-    let base_rate = cfg.n_jobs as f64 / (span_hours * 3600.0) / mean_intensity; // jobs/s at intensity 1
+    // jobs/s at intensity 1
+    let base_rate = cfg.n_jobs as f64 / (span_hours * 3600.0) / mean_intensity;
     let max_bb_total = (cfg.bb_capacity as f64 * cfg.max_bb_capacity_fraction) as u64;
 
     let mut jobs = Vec::with_capacity(cfg.n_jobs);

@@ -1,0 +1,99 @@
+//! Fingerprint-parity tests for the timeline refactor: every policy must
+//! produce a byte-identical `SimResult::fingerprint()` whether the
+//! availability timeline is maintained incrementally (the new default)
+//! or rebuilt from the running set on every invocation (the
+//! pre-refactor semantics, kept behind `SimConfig::rebuild_timeline`).
+//! A third pass runs with `validate_timeline`, which asserts
+//! breakpoint-identity between the two representations at every single
+//! scheduler invocation.
+
+use bbsched::campaign::CampaignSpec;
+use bbsched::coordinator::{run_policy_opts, PlanBackendKind, SchedOpts};
+use bbsched::sched::Policy;
+use bbsched::sim::simulator::SimConfig;
+use bbsched::workload::{load_source, WorkloadSource};
+
+/// All evaluated policies plus the two §3.2 extensions.
+fn all_policies() -> Vec<Policy> {
+    let mut ps = Policy::ALL.to_vec();
+    ps.push(Policy::SlurmLike);
+    ps.push(Policy::ConservativeBb);
+    ps
+}
+
+fn parity_over(source: &WorkloadSource, seed: u64, io_enabled: bool, policies: &[Policy]) {
+    let (jobs, bb_capacity) = load_source(source, seed, 1.0).expect("workload");
+    let base = SimConfig { bb_capacity, io_enabled, ..SimConfig::default() };
+    for &policy in policies {
+        let incremental = base.clone();
+        let rebuild = SimConfig { rebuild_timeline: true, ..base.clone() };
+        let validate = SimConfig { validate_timeline: true, ..base.clone() };
+        // Cold scoring is behaviour-identical too: use it on the rebuild
+        // pass so the whole pre-refactor configuration is covered.
+        let cold = SchedOpts { plan_cold_scoring: true, ..SchedOpts::default() };
+        let a = run_policy_opts(
+            jobs.clone(),
+            policy,
+            &incremental,
+            seed,
+            PlanBackendKind::Exact,
+            SchedOpts::default(),
+        );
+        let b = run_policy_opts(jobs.clone(), policy, &rebuild, seed, PlanBackendKind::Exact, cold);
+        let c = run_policy_opts(
+            jobs.clone(),
+            policy,
+            &validate,
+            seed,
+            PlanBackendKind::Exact,
+            SchedOpts::default(),
+        );
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "{}: incremental vs rebuild fingerprints diverged",
+            policy.name()
+        );
+        assert_eq!(
+            a.fingerprint(),
+            c.fingerprint(),
+            "{}: validate pass changed behaviour",
+            policy.name()
+        );
+        assert_eq!(a.records, b.records, "{}: records diverged", policy.name());
+    }
+}
+
+/// The `smoke` campaign built-in, exactly as CI runs it, across every
+/// policy (the built-in's grid only lists two; parity must hold for
+/// all).
+#[test]
+fn fingerprint_parity_on_smoke_builtin() {
+    let spec = CampaignSpec::builtin("smoke").expect("builtin");
+    for source in &spec.sources {
+        for &seed in &spec.seeds {
+            parity_over(source, seed, spec.io_enabled, &all_policies());
+        }
+    }
+}
+
+/// The `paper-eval` built-in's configuration (io on, synthetic twin) at
+/// a CI-sized scale; the full-scale variant below is `#[ignore]`d.
+#[test]
+fn fingerprint_parity_on_paper_eval_scaled() {
+    let source = WorkloadSource::Synth { scale: 0.01 };
+    parity_over(&source, 1, true, &all_policies());
+}
+
+/// Full paper-eval parity (hours of CPU): run explicitly with
+/// `cargo test --release --test parity -- --ignored`.
+#[test]
+#[ignore = "full-scale paper-eval grid; run explicitly"]
+fn fingerprint_parity_on_paper_eval_full() {
+    let spec = CampaignSpec::builtin("paper-eval").expect("builtin");
+    for source in &spec.sources {
+        for &seed in &spec.seeds {
+            parity_over(source, seed, spec.io_enabled, &spec.policies);
+        }
+    }
+}

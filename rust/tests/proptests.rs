@@ -12,8 +12,8 @@ use bbsched::platform::flows::FlowNetwork;
 use bbsched::sched::plan::annealing::{optimise, PermScorer, SaParams};
 use bbsched::sched::plan::builder::{build_plan, PlanJob};
 use bbsched::sched::plan::candidates::initial_candidates;
-use bbsched::sched::plan::profile::Profile;
 use bbsched::sched::plan::scorer::{DiscreteProblem, ExactScorer, NativeDiscreteScorer};
+use bbsched::sched::timeline::Profile;
 use bbsched::stats::rng::Pcg32;
 
 const CASES: u64 = 200;

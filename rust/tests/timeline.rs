@@ -1,0 +1,160 @@
+//! Property-style tests of the incremental resource timeline: after any
+//! randomized sequence of start / finish / advance / tentative-reserve /
+//! rollback operations, the incrementally-maintained
+//! [`ResourceTimeline`] must be breakpoint-identical to a full
+//! `Profile::from_view`-style rebuild from the surviving running set.
+
+use bbsched::core::job::{JobId, JobRequest};
+use bbsched::core::resources::Resources;
+use bbsched::core::time::{Duration, Time};
+use bbsched::sched::timeline::{Profile, ResourceTimeline};
+use bbsched::sched::{RunningInfo, SchedView};
+use bbsched::stats::rng::Pcg32;
+
+const CAPACITY: Resources = Resources { cpu: 96, bb: 1 << 40 };
+
+/// Rebuild oracle: a view assembled from the shadow running set.
+fn rebuild(now: Time, running: &[(JobId, Resources, Time)]) -> Profile {
+    let infos: Vec<RunningInfo> = running
+        .iter()
+        .map(|&(id, req, end)| RunningInfo { id, req, expected_end: end })
+        .collect();
+    let mut free = CAPACITY;
+    for r in &infos {
+        if r.expected_end > now {
+            free = free.checked_sub(&r.req).unwrap_or(Resources::ZERO);
+        }
+    }
+    let view = SchedView { now, capacity: CAPACITY, free, queue: &[], running: &infos };
+    Profile::from_view(&view)
+}
+
+#[test]
+fn incremental_equals_rebuild_over_random_histories() {
+    for seed in 0..20u64 {
+        // Seeds spread out so histories differ meaningfully.
+        let mut rng = Pcg32::seeded(seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(7));
+        run_history(&mut rng, 400);
+    }
+}
+
+fn run_history(rng: &mut Pcg32, steps: u32) {
+    let mut tl = ResourceTimeline::new(Time::ZERO, CAPACITY);
+    // Shadow state: (id, req, expected_end) of jobs currently running.
+    let mut running: Vec<(JobId, Resources, Time)> = Vec::new();
+    let mut now = Time::ZERO;
+    let mut next_id = 0u32;
+    let mut free = CAPACITY;
+
+    for step in 0..steps {
+        match rng.below(10) {
+            // 0-4: try to start a job.
+            0..=4 => {
+                let req = Resources::new(
+                    1 + rng.below(24),
+                    ((rng.below(64) as u64) + 1) << 30,
+                );
+                if free.fits(&req) {
+                    let dur = Duration::from_secs(60 + rng.below(7200) as u64);
+                    let end = now + dur;
+                    tl.job_started(JobId(next_id), req, now, end);
+                    running.push((JobId(next_id), req, end));
+                    free -= req;
+                    next_id += 1;
+                }
+            }
+            // 5-6: finish a random running job (possibly early, possibly
+            // exactly at / past its bound via a prior advance).
+            5 | 6 => {
+                if !running.is_empty() {
+                    let i = rng.below(running.len() as u32) as usize;
+                    let (id, req, _end) = running.swap_remove(i);
+                    tl.job_finished(id, now);
+                    free += req;
+                }
+            }
+            // 7-8: advance the clock (drops expired reservations from
+            // the profile; overdue jobs are force-finished first so the
+            // shadow set mirrors the simulator's kill-before-invoke
+            // guarantee).
+            7 | 8 => {
+                now = now + Duration::from_secs(30 + rng.below(1800) as u64);
+                let mut i = 0;
+                while i < running.len() {
+                    if running[i].2 <= now {
+                        let (id, req, _) = running.swap_remove(i);
+                        tl.job_finished(id, now);
+                        free += req;
+                    } else {
+                        i += 1;
+                    }
+                }
+                tl.advance_to(now);
+            }
+            // 9: a tentative reservation sweep that must roll back.
+            _ => {
+                let before = tl.profile().clone();
+                {
+                    let mut txn = tl.txn();
+                    for _ in 0..rng.below(6) {
+                        let req = Resources::new(1 + rng.below(8), (rng.below(32) as u64) << 30);
+                        let dur = Duration::from_secs(60 + rng.below(3600) as u64);
+                        let at = txn.earliest_fit(req, dur, now);
+                        txn.reserve(at, dur, req);
+                    }
+                }
+                assert_eq!(*tl.profile(), before, "step {step}: txn rollback not exact");
+            }
+        }
+        // The invariant: incremental == rebuild, breakpoint for
+        // breakpoint.
+        let oracle = rebuild(now, &running);
+        assert_eq!(
+            *tl.profile(),
+            oracle,
+            "step {step}: incremental timeline diverged from rebuild (now={now}, {} running)",
+            running.len()
+        );
+    }
+}
+
+#[test]
+fn timeline_from_view_round_trips_through_queries() {
+    // from_view and incremental construction agree on derived queries.
+    let running = [
+        RunningInfo {
+            id: JobId(1),
+            req: Resources::new(40, 600 << 30),
+            expected_end: Time::from_secs(4000),
+        },
+        RunningInfo {
+            id: JobId(2),
+            req: Resources::new(20, 100 << 30),
+            expected_end: Time::from_secs(900),
+        },
+    ];
+    let view = SchedView {
+        now: Time::from_secs(100),
+        capacity: CAPACITY,
+        free: Resources::new(36, (1 << 40) - (700 << 30)),
+        queue: &[],
+        running: &running,
+    };
+    let tl = ResourceTimeline::from_view(&view);
+    let mut inc = ResourceTimeline::new(Time::ZERO, CAPACITY);
+    inc.job_started(JobId(1), running[0].req, Time::ZERO, running[0].expected_end);
+    inc.job_started(JobId(2), running[1].req, Time::from_secs(50), running[1].expected_end);
+    inc.advance_to(Time::from_secs(100));
+    assert_eq!(tl.profile(), inc.profile());
+    let req = JobRequest {
+        id: JobId(9),
+        submit: Time::ZERO,
+        walltime: Duration::from_secs(1200),
+        procs: 50,
+        bb: 200 << 30,
+    };
+    assert_eq!(
+        tl.earliest_fit(req.request(), req.walltime, view.now),
+        inc.earliest_fit(req.request(), req.walltime, view.now),
+    );
+}

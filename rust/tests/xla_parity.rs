@@ -12,9 +12,9 @@ use bbsched::core::job::JobId;
 use bbsched::core::resources::Resources;
 use bbsched::core::time::{Duration, Time};
 use bbsched::sched::plan::builder::PlanJob;
-use bbsched::sched::plan::profile::Profile;
 use bbsched::sched::plan::scheduler::ExternalBatchScorer;
 use bbsched::sched::plan::scorer::{DiscreteProblem, NativeDiscreteScorer};
+use bbsched::sched::timeline::Profile;
 use bbsched::runtime::scorer::XlaScorer;
 use bbsched::stats::rng::Pcg32;
 use std::path::Path;
