@@ -3,10 +3,14 @@
 //!
 //! The paper's evaluation (Figs 5-12) is a grid of (scheduler x workload
 //! seed x bb-factor) simulations; this module turns that one-shot loop
-//! into a reusable, scenario-driven campaign layer:
+//! into a reusable, scenario-driven campaign layer over the full
+//! scenario space (policy x seed x workload family x estimate model x
+//! burst-buffer architecture x sizing factor):
 //!
-//! - [`spec`]: the `[section]`/`key = value` campaign format, built-in
-//!   specs (`paper-eval`, `smoke`), and grid enumeration.
+//! - [`spec`]: the `[section]`/`key = value` campaign format
+//!   (`[campaign]`/`[grid]`/`[workload]`/`[scenario]`/`[sim]`), built-in
+//!   specs (`paper-eval`, `smoke`, `stress-suite`, `bb-sweep`), and grid
+//!   enumeration.
 //! - [`runner`]: grid execution on the shared work-stealing pool
 //!   ([`crate::pool::parallel_map`], also the engine under
 //!   `coordinator::run_many`), per-run fault isolation, and in-order

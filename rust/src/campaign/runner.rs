@@ -13,10 +13,10 @@
 use crate::campaign::progress::Progress;
 use crate::campaign::spec::{CampaignSpec, RunSpec};
 use crate::coordinator::{run_policy_opts, SchedOpts};
+use crate::core::time::Duration;
 use crate::metrics::summary::{summarize, PolicySummary};
 use crate::report::json::JsonObject;
 use crate::sim::simulator::SimConfig;
-use crate::workload::load_source;
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
@@ -104,10 +104,11 @@ pub fn execute_run(spec: &CampaignSpec, run: &RunSpec) -> RunOutcome {
     let t0 = Instant::now();
     let label = run.label();
     let result = catch_unwind(AssertUnwindSafe(|| -> Result<_, String> {
-        let (jobs, bb_capacity) = load_source(&run.source, run.seed, run.bb_factor)?;
+        let (jobs, bb_capacity) = run.scenario().materialise(run.seed)?;
         let sim_cfg = SimConfig {
             bb_capacity,
             io_enabled: spec.io_enabled,
+            tick: Duration::from_secs(spec.tick_s),
             ..SimConfig::default()
         };
         let opts = SchedOpts { plan_warm_start: spec.plan_warm_start, ..SchedOpts::default() };

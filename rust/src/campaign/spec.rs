@@ -1,18 +1,26 @@
 //! Declarative campaign specifications: a hand-rolled `[section]` +
 //! `key = value` format (no external deps, same philosophy as the CLI's
-//! `Args` parser) describing a grid of independent simulator runs.
+//! `Args` parser) describing a grid of independent simulator runs over
+//! the scenario space.
 //!
 //! ```text
-//! # smoke.campaign — tiny 2x1 grid for CI
+//! # stress.campaign — workload families x BB architectures
 //! [campaign]
-//! name = smoke
-//! out-dir = results/smoke
+//! name = stress
+//! out-dir = results/stress
 //!
 //! [grid]
-//! policies = fcfs, sjf-bb
+//! policies = fcfs-bb, sjf-bb
 //! seeds = 1
-//! scales = 0.003
 //! bb-factors = 1.0
+//!
+//! [workload]
+//! families = paper, storm:4, io-mix:3, heavy-tail:1.6
+//! scales = 0.01
+//! estimates = paper, x4
+//!
+//! [scenario]
+//! bb-archs = shared, per-node
 //!
 //! [sim]
 //! io = false
@@ -21,13 +29,16 @@
 //!
 //! Lists are comma-separated; `#` starts a comment; unknown sections or
 //! keys are hard errors (exit code 2 at the CLI) so typos cannot
-//! silently shrink a grid. `swfs` (real trace paths) and `scales`
-//! (synthetic-twin sizes) are mutually exclusive workload axes.
+//! silently shrink a grid. The legacy `[grid]` keys `scales`/`swfs`
+//! remain accepted (they predate the `[workload]` section) and are
+//! mutually exclusive with each other and with their `[workload]`
+//! counterparts.
 
 use crate::coordinator::PlanBackendKind;
+use crate::platform::{BbArch, PlatformSpec};
 use crate::report::json::JsonObject;
 use crate::sched::Policy;
-use crate::workload::WorkloadSource;
+use crate::workload::{EstimateModel, Family, Scenario, WorkloadSpec};
 use std::fmt;
 use std::path::PathBuf;
 
@@ -66,7 +77,12 @@ pub struct CampaignSpec {
     /// Grid axes. The cross product of these is the run list.
     pub policies: Vec<Policy>,
     pub seeds: Vec<u64>,
-    pub sources: Vec<WorkloadSource>,
+    /// Workload axes (`[workload]` section): family x scale x estimate.
+    pub families: Vec<Family>,
+    pub scales: Vec<f64>,
+    pub estimates: Vec<EstimateModel>,
+    /// Platform axes (`[scenario]` section + `[grid]` bb-factors).
+    pub bb_archs: Vec<BbArch>,
     pub bb_factors: Vec<f64>,
     /// Shared simulator settings.
     pub io_enabled: bool,
@@ -75,6 +91,8 @@ pub struct CampaignSpec {
     /// (`[sim] plan-warm-start`). Off by default: it changes search
     /// trajectories, so the paper-faithful grids stay fingerprint-stable.
     pub plan_warm_start: bool,
+    /// Scheduler tick period in seconds (`[sim] tick-s`; paper: 60).
+    pub tick_s: u64,
 }
 
 /// One cell of the campaign grid.
@@ -84,20 +102,33 @@ pub struct RunSpec {
     pub index: usize,
     pub policy: Policy,
     pub seed: u64,
-    pub source: WorkloadSource,
+    pub workload: WorkloadSpec,
+    pub bb_arch: BbArch,
     pub bb_factor: f64,
 }
 
 impl RunSpec {
-    /// Stable human-readable run id, e.g. `plan-2+s1+x0.003+bb1`.
+    /// Stable human-readable run id, e.g. `plan-2+s1+x0.003+bb1` (the
+    /// shared architecture is omitted so paper-faithful labels are
+    /// unchanged; per-node runs read `...+pernode+bb1`).
     pub fn label(&self) -> String {
         format!(
-            "{}+s{}+{}+bb{}",
+            "{}+s{}+{}{}+bb{}",
             self.policy.name(),
             self.seed,
-            self.source.label(),
+            self.workload.label(),
+            self.bb_arch.label_segment(),
             self.bb_factor
         )
+    }
+
+    /// The scenario half of this run (workload + platform), the
+    /// materialisation input and the per-scenario aggregation key.
+    pub fn scenario(&self) -> Scenario {
+        Scenario {
+            workload: self.workload.clone(),
+            platform: PlatformSpec { bb_arch: self.bb_arch, bb_factor: self.bb_factor },
+        }
     }
 
     /// The identity fields every machine-readable record for this run
@@ -108,43 +139,84 @@ impl RunSpec {
             .str("label", &self.label())
             .str("policy", &self.policy.name())
             .num_u("seed", self.seed)
-            .str("workload", &self.source.label())
+            .str("workload", &self.workload.label())
+            .str("bb_arch", self.bb_arch.name())
             .num_f("bb_factor", self.bb_factor)
     }
 }
 
 /// Names accepted by [`CampaignSpec::builtin`].
-pub const BUILTINS: &[&str] = &["paper-eval", "smoke"];
+pub const BUILTINS: &[&str] = &["paper-eval", "smoke", "stress-suite", "bb-sweep"];
 
 impl CampaignSpec {
-    /// The paper's full evaluation grid (Figs 5-12 inputs): every policy
-    /// of the evaluated set over three workload seeds at paper scale.
-    pub fn paper_eval() -> CampaignSpec {
+    fn base(name: &str) -> CampaignSpec {
         CampaignSpec {
-            name: "paper-eval".to_string(),
-            out_dir: PathBuf::from("results/paper-eval"),
-            policies: Policy::ALL.to_vec(),
-            seeds: vec![1, 2, 3],
-            sources: vec![WorkloadSource::Synth { scale: 1.0 }],
+            name: name.to_string(),
+            out_dir: PathBuf::from("results").join(name),
+            policies: Vec::new(),
+            seeds: vec![1],
+            families: vec![Family::PaperTwin],
+            scales: vec![1.0],
+            estimates: vec![EstimateModel::Paper],
+            bb_archs: vec![BbArch::Shared],
             bb_factors: vec![1.0],
             io_enabled: true,
             plan_backend: PlanBackendKind::Exact,
             plan_warm_start: false,
+            tick_s: 60,
+        }
+    }
+
+    /// The paper's full evaluation grid (Figs 5-12 inputs): every policy
+    /// of the evaluated set over three workload seeds at paper scale.
+    pub fn paper_eval() -> CampaignSpec {
+        CampaignSpec {
+            policies: Policy::ALL.to_vec(),
+            seeds: vec![1, 2, 3],
+            ..CampaignSpec::base("paper-eval")
         }
     }
 
     /// A seconds-scale grid exercising the whole pipeline (CI smoke).
     pub fn smoke() -> CampaignSpec {
         CampaignSpec {
-            name: "smoke".to_string(),
-            out_dir: PathBuf::from("results/smoke"),
             policies: vec![Policy::Fcfs, Policy::SjfBb],
-            seeds: vec![1],
-            sources: vec![WorkloadSource::Synth { scale: 0.003 }],
-            bb_factors: vec![1.0],
+            scales: vec![0.003],
             io_enabled: false,
-            plan_backend: PlanBackendKind::Exact,
-            plan_warm_start: false,
+            ..CampaignSpec::base("smoke")
+        }
+    }
+
+    /// The robustness tentpole: every synthetic workload family x two
+    /// estimate-quality regimes x both burst-buffer architectures, for
+    /// the three headline policies. The grid the scenario engine exists
+    /// to serve; scale it down via a spec file for CI.
+    pub fn stress_suite() -> CampaignSpec {
+        CampaignSpec {
+            policies: vec![Policy::FcfsBb, Policy::SjfBb, Policy::Plan(2)],
+            families: vec![
+                Family::PaperTwin,
+                Family::ArrivalStorm { intensity: 4.0 },
+                Family::IoMix { factor: 3.0 },
+                Family::HeavyTailBb { sigma: 1.6 },
+            ],
+            scales: vec![0.05],
+            estimates: vec![EstimateModel::Paper, EstimateModel::Sloppy { factor: 4.0 }],
+            bb_archs: vec![BbArch::Shared, BbArch::PerNode],
+            ..CampaignSpec::base("stress-suite")
+        }
+    }
+
+    /// Burst-buffer sizing sweep: the paper's capacity rule from 1/4 to
+    /// 4x, under both architectures (the sensitivity axis the paper's
+    /// unpublished METACENTRUM fit leaves open).
+    pub fn bb_sweep() -> CampaignSpec {
+        CampaignSpec {
+            policies: vec![Policy::FcfsBb, Policy::SjfBb, Policy::Plan(2)],
+            scales: vec![0.1],
+            bb_archs: vec![BbArch::Shared, BbArch::PerNode],
+            bb_factors: vec![0.25, 0.5, 1.0, 2.0, 4.0],
+            ..CampaignSpec::base("bb-sweep")
         }
     }
 
@@ -153,6 +225,8 @@ impl CampaignSpec {
         match name {
             "paper-eval" => Some(CampaignSpec::paper_eval()),
             "smoke" => Some(CampaignSpec::smoke()),
+            "stress-suite" => Some(CampaignSpec::stress_suite()),
+            "bb-sweep" => Some(CampaignSpec::bb_sweep()),
             _ => None,
         }
     }
@@ -163,13 +237,28 @@ impl CampaignSpec {
         let mut out_dir: Option<PathBuf> = None;
         let mut policies: Vec<Policy> = Vec::new();
         let mut seeds: Vec<u64> = vec![1];
-        let mut scales: Option<Vec<f64>> = None;
+        let mut grid_scales: Option<Vec<f64>> = None;
         let mut swfs: Option<Vec<PathBuf>> = None;
+        let mut families: Option<Vec<Family>> = None;
+        let mut wl_scales: Option<Vec<f64>> = None;
+        let mut estimates: Option<Vec<EstimateModel>> = None;
+        let mut bb_archs: Option<Vec<BbArch>> = None;
         let mut bb_factors: Vec<f64> = vec![1.0];
         let mut io_enabled = true;
         let mut plan_warm_start = false;
         let mut backend_name = "exact".to_string();
         let mut t_slots = 256usize;
+        let mut tick_s = 60u64;
+
+        let parse_scales = |ln: usize, key: &str, value: &str| {
+            parse_list(ln, key, value, |s| {
+                let v: f64 = s.parse().map_err(|_| format!("invalid scale `{s}`"))?;
+                if !v.is_finite() || v <= 0.0 {
+                    return Err(format!("scale must be positive, got `{s}`"));
+                }
+                Ok(v)
+            })
+        };
 
         let mut section = "campaign".to_string();
         for (i, raw) in text.lines().enumerate() {
@@ -187,10 +276,13 @@ impl CampaignSpec {
                     return Err(SpecError::at(ln, format!("malformed section header `{line}`")));
                 };
                 let sec = sec.trim();
-                if !["campaign", "grid", "sim"].contains(&sec) {
+                if !["campaign", "grid", "workload", "scenario", "sim"].contains(&sec) {
                     return Err(SpecError::at(
                         ln,
-                        format!("unknown section [{sec}] (expected [campaign], [grid] or [sim])"),
+                        format!(
+                            "unknown section [{sec}] (expected [campaign], [grid], \
+                             [workload], [scenario] or [sim])"
+                        ),
                     ));
                 }
                 section = sec.to_string();
@@ -218,23 +310,26 @@ impl CampaignSpec {
                         s.parse::<u64>().map_err(|_| format!("invalid seed `{s}`"))
                     })?;
                 }
-                ("grid", "scales") => {
-                    scales = Some(parse_list(ln, key, value, |s| {
-                        let v: f64 =
-                            s.parse().map_err(|_| format!("invalid scale `{s}`"))?;
-                        if !v.is_finite() || v <= 0.0 {
-                            return Err(format!("scale must be positive, got `{s}`"));
-                        }
-                        Ok(v)
-                    })?);
-                }
+                ("grid", "scales") => grid_scales = Some(parse_scales(ln, key, value)?),
+                ("workload", "scales") => wl_scales = Some(parse_scales(ln, key, value)?),
                 ("grid", "swfs") => {
                     swfs = Some(parse_list(ln, key, value, |s| Ok(PathBuf::from(s)))?);
                 }
+                ("workload", "families") => {
+                    families = Some(parse_list(ln, key, value, Family::parse)?);
+                }
+                ("workload", "estimates") => {
+                    estimates = Some(parse_list(ln, key, value, EstimateModel::parse)?);
+                }
+                ("scenario", "bb-archs") => {
+                    bb_archs = Some(parse_list(ln, key, value, |s| {
+                        BbArch::parse(s)
+                            .ok_or_else(|| format!("unknown bb-arch `{s}` (shared|per-node)"))
+                    })?);
+                }
                 ("grid", "bb-factors") => {
                     bb_factors = parse_list(ln, key, value, |s| {
-                        let v: f64 =
-                            s.parse().map_err(|_| format!("invalid bb-factor `{s}`"))?;
+                        let v: f64 = s.parse().map_err(|_| format!("invalid bb-factor `{s}`"))?;
                         if !v.is_finite() || v <= 0.0 {
                             return Err(format!("bb-factor must be positive, got `{s}`"));
                         }
@@ -257,13 +352,15 @@ impl CampaignSpec {
                     backend_name = value.to_string();
                 }
                 ("sim", "t-slots") => {
-                    t_slots = value
-                        .parse::<usize>()
-                        .ok()
-                        .filter(|&v| v > 0)
-                        .ok_or_else(|| {
+                    t_slots =
+                        value.parse::<usize>().ok().filter(|&v| v > 0).ok_or_else(|| {
                             SpecError::at(ln, format!("invalid t-slots `{value}`"))
                         })?;
+                }
+                ("sim", "tick-s") => {
+                    tick_s = value.parse::<u64>().ok().filter(|&v| v > 0).ok_or_else(|| {
+                        SpecError::at(ln, format!("invalid tick-s `{value}`"))
+                    })?;
                 }
                 (sec, key) => {
                     return Err(SpecError::at(ln, format!("unknown key `{key}` in [{sec}]")));
@@ -274,20 +371,31 @@ impl CampaignSpec {
         if policies.is_empty() {
             return Err(SpecError::at(0, "grid declares no policies (set [grid] policies = ...)"));
         }
-        if scales.is_some() && swfs.is_some() {
+        if grid_scales.is_some() && swfs.is_some() {
             return Err(SpecError::at(
                 0,
                 "scales and swfs are mutually exclusive workload axes",
             ));
         }
-        let sources: Vec<WorkloadSource> = match (swfs, scales) {
-            (Some(paths), _) => {
-                paths.into_iter().map(|path| WorkloadSource::Swf { path }).collect()
+        if grid_scales.is_some() && wl_scales.is_some() {
+            return Err(SpecError::at(
+                0,
+                "[grid] scales (legacy) and [workload] scales are mutually exclusive",
+            ));
+        }
+        if swfs.is_some() && families.is_some() {
+            return Err(SpecError::at(
+                0,
+                "[grid] swfs (legacy) and [workload] families are mutually exclusive",
+            ));
+        }
+        let families = match (families, swfs) {
+            (Some(f), None) => f,
+            (None, Some(paths)) => {
+                paths.into_iter().map(|path| Family::SwfReplay { path }).collect()
             }
-            (None, Some(scales)) => {
-                scales.into_iter().map(|scale| WorkloadSource::Synth { scale }).collect()
-            }
-            (None, None) => vec![WorkloadSource::Synth { scale: 1.0 }],
+            (None, None) => vec![Family::PaperTwin],
+            (Some(_), Some(_)) => unreachable!("checked above"),
         };
         let plan_backend = match backend_name.as_str() {
             "exact" => PlanBackendKind::Exact,
@@ -300,40 +408,56 @@ impl CampaignSpec {
             name,
             policies,
             seeds,
-            sources,
+            families,
+            scales: wl_scales.or(grid_scales).unwrap_or_else(|| vec![1.0]),
+            estimates: estimates.unwrap_or_else(|| vec![EstimateModel::Paper]),
+            bb_archs: bb_archs.unwrap_or_else(|| vec![BbArch::Shared]),
             bb_factors,
             io_enabled,
             plan_backend,
             plan_warm_start,
+            tick_s,
         })
     }
 
     /// Render back to the text format (round-trips through [`parse`]).
     pub fn to_text(&self) -> String {
+        let list = |items: Vec<String>| items.join(", ");
         let mut s = String::new();
         s.push_str("[campaign]\n");
         s.push_str(&format!("name = {}\n", self.name));
         s.push_str(&format!("out-dir = {}\n\n", self.out_dir.display()));
         s.push_str("[grid]\n");
-        let names: Vec<String> = self.policies.iter().map(|p| p.name()).collect();
-        s.push_str(&format!("policies = {}\n", names.join(", ")));
-        let seeds: Vec<String> = self.seeds.iter().map(|v| v.to_string()).collect();
-        s.push_str(&format!("seeds = {}\n", seeds.join(", ")));
-        let mut scales = Vec::new();
-        let mut swfs = Vec::new();
-        for src in &self.sources {
-            match src {
-                WorkloadSource::Synth { scale } => scales.push(format!("{scale}")),
-                WorkloadSource::Swf { path } => swfs.push(path.display().to_string()),
-            }
-        }
-        if !swfs.is_empty() {
-            s.push_str(&format!("swfs = {}\n", swfs.join(", ")));
-        } else {
-            s.push_str(&format!("scales = {}\n", scales.join(", ")));
-        }
-        let bbs: Vec<String> = self.bb_factors.iter().map(|v| v.to_string()).collect();
-        s.push_str(&format!("bb-factors = {}\n\n", bbs.join(", ")));
+        s.push_str(&format!(
+            "policies = {}\n",
+            list(self.policies.iter().map(|p| p.name()).collect())
+        ));
+        s.push_str(&format!(
+            "seeds = {}\n",
+            list(self.seeds.iter().map(|v| v.to_string()).collect())
+        ));
+        s.push_str(&format!(
+            "bb-factors = {}\n\n",
+            list(self.bb_factors.iter().map(|v| v.to_string()).collect())
+        ));
+        s.push_str("[workload]\n");
+        s.push_str(&format!(
+            "families = {}\n",
+            list(self.families.iter().map(|f| f.spec_token()).collect())
+        ));
+        s.push_str(&format!(
+            "scales = {}\n",
+            list(self.scales.iter().map(|v| v.to_string()).collect())
+        ));
+        s.push_str(&format!(
+            "estimates = {}\n\n",
+            list(self.estimates.iter().map(|e| e.spec_token()).collect())
+        ));
+        s.push_str("[scenario]\n");
+        s.push_str(&format!(
+            "bb-archs = {}\n\n",
+            list(self.bb_archs.iter().map(|a| a.name().to_string()).collect())
+        ));
         s.push_str("[sim]\n");
         s.push_str(&format!("io = {}\n", self.io_enabled));
         s.push_str(&format!("plan-warm-start = {}\n", self.plan_warm_start));
@@ -346,29 +470,58 @@ impl CampaignSpec {
                 s.push_str(&format!("plan-backend = xla\nt-slots = {t_slots}\n"));
             }
         }
+        if self.tick_s != 60 {
+            s.push_str(&format!("tick-s = {}\n", self.tick_s));
+        }
         s
+    }
+
+    /// The workload axis materialised: family-major, then scale, then
+    /// estimate (the enumeration order within one (policy, seed) cell).
+    pub fn workloads(&self) -> Vec<WorkloadSpec> {
+        let mut out =
+            Vec::with_capacity(self.families.len() * self.scales.len() * self.estimates.len());
+        for family in &self.families {
+            for &scale in &self.scales {
+                for &estimate in &self.estimates {
+                    out.push(WorkloadSpec { family: family.clone(), scale, estimate });
+                }
+            }
+        }
+        out
     }
 
     /// The grid size (`enumerate().len()` without materialising it).
     pub fn n_runs(&self) -> usize {
-        self.policies.len() * self.seeds.len() * self.sources.len() * self.bb_factors.len()
+        self.policies.len()
+            * self.seeds.len()
+            * self.families.len()
+            * self.scales.len()
+            * self.estimates.len()
+            * self.bb_archs.len()
+            * self.bb_factors.len()
     }
 
     /// Materialise the run list in the deterministic enumeration order:
-    /// policy (outermost), seed, workload source, bb-factor (innermost).
+    /// policy (outermost), seed, workload (family, scale, estimate),
+    /// bb-arch, bb-factor (innermost).
     pub fn enumerate(&self) -> Vec<RunSpec> {
+        let workloads = self.workloads();
         let mut runs = Vec::with_capacity(self.n_runs());
         for &policy in &self.policies {
             for &seed in &self.seeds {
-                for source in &self.sources {
-                    for &bb_factor in &self.bb_factors {
-                        runs.push(RunSpec {
-                            index: runs.len(),
-                            policy,
-                            seed,
-                            source: source.clone(),
-                            bb_factor,
-                        });
+                for workload in &workloads {
+                    for &bb_arch in &self.bb_archs {
+                        for &bb_factor in &self.bb_factors {
+                            runs.push(RunSpec {
+                                index: runs.len(),
+                                policy,
+                                seed,
+                                workload: workload.clone(),
+                                bb_arch,
+                                bb_factor,
+                            });
+                        }
                     }
                 }
             }
@@ -391,15 +544,11 @@ fn parse_list<T>(
     value: &str,
     item: impl Fn(&str) -> Result<T, String>,
 ) -> Result<Vec<T>, SpecError> {
-    let items: Vec<&str> =
-        value.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    let items: Vec<&str> = value.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
     if items.is_empty() {
         return Err(SpecError::at(ln, format!("{key} must list at least one value")));
     }
-    items
-        .into_iter()
-        .map(|s| item(s).map_err(|msg| SpecError::at(ln, msg)))
-        .collect()
+    items.into_iter().map(|s| item(s).map_err(|msg| SpecError::at(ln, msg))).collect()
 }
 
 #[cfg(test)]
@@ -431,10 +580,41 @@ t-slots = 128
         assert_eq!(spec.out_dir, PathBuf::from("/tmp/demo"));
         assert_eq!(spec.policies, vec![Policy::Fcfs, Policy::SjfBb, Policy::Plan(2)]);
         assert_eq!(spec.seeds, vec![1, 2]);
+        assert_eq!(spec.families, vec![Family::PaperTwin]);
+        assert_eq!(spec.scales, vec![0.01, 0.02]);
+        assert_eq!(spec.estimates, vec![EstimateModel::Paper]);
+        assert_eq!(spec.bb_archs, vec![BbArch::Shared]);
         assert_eq!(spec.bb_factors, vec![0.5, 1.0]);
         assert!(!spec.io_enabled);
         assert_eq!(spec.plan_backend, PlanBackendKind::Discrete { t_slots: 128 });
         assert_eq!(spec.n_runs(), 3 * 2 * 2 * 2);
+    }
+
+    #[test]
+    fn parses_workload_and_scenario_sections() {
+        let spec = CampaignSpec::parse(
+            "[grid]\npolicies = fcfs-bb, sjf-bb\nbb-factors = 0.5, 1\n\
+             [workload]\nfamilies = paper, storm:4, io-mix:3, heavy-tail:1.6\n\
+             scales = 0.01\nestimates = paper, exact, x10\n\
+             [scenario]\nbb-archs = shared, per-node\n\
+             [sim]\ntick-s = 30\n",
+        )
+        .unwrap();
+        assert_eq!(spec.families.len(), 4);
+        assert_eq!(spec.families[1], Family::ArrivalStorm { intensity: 4.0 });
+        assert_eq!(
+            spec.estimates,
+            vec![EstimateModel::Paper, EstimateModel::Exact, EstimateModel::Sloppy { factor: 10.0 }]
+        );
+        assert_eq!(spec.bb_archs, vec![BbArch::Shared, BbArch::PerNode]);
+        assert_eq!(spec.tick_s, 30);
+        assert_eq!(spec.n_runs(), 2 * 1 * 4 * 1 * 3 * 2 * 2);
+        // Workload enumeration is family-major, then scale, then estimate.
+        let w = spec.workloads();
+        assert_eq!(w.len(), 12);
+        assert_eq!(w[0].label(), "x0.01");
+        assert_eq!(w[1].label(), "x0.01-exact");
+        assert_eq!(w[3].label(), "storm4-x0.01");
     }
 
     #[test]
@@ -443,8 +623,12 @@ t-slots = 128
         assert_eq!(spec.name, "campaign");
         assert_eq!(spec.out_dir, PathBuf::from("results/campaign"));
         assert_eq!(spec.seeds, vec![1]);
-        assert_eq!(spec.sources, vec![WorkloadSource::Synth { scale: 1.0 }]);
+        assert_eq!(spec.families, vec![Family::PaperTwin]);
+        assert_eq!(spec.scales, vec![1.0]);
+        assert_eq!(spec.estimates, vec![EstimateModel::Paper]);
+        assert_eq!(spec.bb_archs, vec![BbArch::Shared]);
         assert_eq!(spec.bb_factors, vec![1.0]);
+        assert_eq!(spec.tick_s, 60);
         assert!(spec.io_enabled);
     }
 
@@ -460,6 +644,14 @@ t-slots = 128
         assert_eq!(err.line, 2);
         let err = CampaignSpec::parse("[grid]\npolicies = fcfs\nscales = -1\n").unwrap_err();
         assert_eq!(err.line, 3);
+        let err =
+            CampaignSpec::parse("[grid]\npolicies = fcfs\n[workload]\nfamilies = warp\n")
+                .unwrap_err();
+        assert_eq!(err.line, 4);
+        let err =
+            CampaignSpec::parse("[grid]\npolicies = fcfs\n[scenario]\nbb-archs = raid\n")
+                .unwrap_err();
+        assert_eq!(err.line, 4);
         let err = CampaignSpec::parse("").unwrap_err();
         assert_eq!(err.line, 0); // no policies
     }
@@ -479,17 +671,42 @@ t-slots = 128
     fn unknown_keys_are_rejected() {
         let err = CampaignSpec::parse("[grid]\npolicies = fcfs\nturbo = yes\n").unwrap_err();
         assert!(err.msg.contains("unknown key"), "{err}");
+        // Section-scoped: estimates only belongs to [workload].
+        let err = CampaignSpec::parse("[grid]\npolicies = fcfs\nestimates = x4\n").unwrap_err();
+        assert!(err.msg.contains("unknown key"), "{err}");
     }
 
     #[test]
-    fn scales_and_swfs_conflict() {
+    fn legacy_axis_conflicts_are_rejected() {
         let err =
             CampaignSpec::parse("[grid]\npolicies = fcfs\nscales = 1\nswfs = a.swf\n").unwrap_err();
+        assert!(err.msg.contains("mutually exclusive"), "{err}");
+        let err = CampaignSpec::parse(
+            "[grid]\npolicies = fcfs\nscales = 1\n[workload]\nscales = 0.5\n",
+        )
+        .unwrap_err();
+        assert!(err.msg.contains("mutually exclusive"), "{err}");
+        let err = CampaignSpec::parse(
+            "[grid]\npolicies = fcfs\nswfs = a.swf\n[workload]\nfamilies = paper\n",
+        )
+        .unwrap_err();
         assert!(err.msg.contains("mutually exclusive"), "{err}");
     }
 
     #[test]
-    fn enumeration_order_is_policy_seed_source_bb() {
+    fn legacy_swfs_become_replay_families() {
+        let spec = CampaignSpec::parse("[grid]\npolicies = fcfs\nswfs = traces/kth.swf\n").unwrap();
+        assert_eq!(
+            spec.families,
+            vec![Family::SwfReplay { path: PathBuf::from("traces/kth.swf") }]
+        );
+        // Default scale 1.0 = replay everything (legacy behaviour).
+        assert_eq!(spec.scales, vec![1.0]);
+        assert_eq!(spec.enumerate()[0].label(), "fcfs+s1+kth+bb1");
+    }
+
+    #[test]
+    fn enumeration_order_is_policy_seed_workload_arch_bb() {
         let spec = CampaignSpec::parse(
             "[grid]\npolicies = fcfs, sjf-bb\nseeds = 1, 2\nscales = 0.01\nbb-factors = 1, 2\n",
         )
@@ -503,6 +720,22 @@ t-slots = 128
         for (i, r) in runs.iter().enumerate() {
             assert_eq!(r.index, i);
         }
+        // The arch axis slots between workload and bb-factor.
+        let spec = CampaignSpec::parse(
+            "[grid]\npolicies = fcfs\nscales = 0.01\nbb-factors = 1, 2\n\
+             [scenario]\nbb-archs = shared, per-node\n",
+        )
+        .unwrap();
+        let labels: Vec<String> = spec.enumerate().iter().map(|r| r.label()).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "fcfs+s1+x0.01+bb1",
+                "fcfs+s1+x0.01+bb2",
+                "fcfs+s1+x0.01+pernode+bb1",
+                "fcfs+s1+x0.01+pernode+bb2",
+            ]
+        );
     }
 
     #[test]
@@ -513,5 +746,32 @@ t-slots = 128
             assert_eq!(spec, reparsed, "builtin {name} does not round-trip");
         }
         assert!(CampaignSpec::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn stress_suite_covers_families_and_architectures() {
+        let spec = CampaignSpec::stress_suite();
+        assert!(spec.families.len() >= 4, "stress-suite must sweep >= 4 families");
+        assert!(spec.bb_archs.len() >= 2, "stress-suite must sweep >= 2 architectures");
+        assert!(spec.estimates.len() >= 2);
+        let runs = spec.enumerate();
+        assert_eq!(runs.len(), spec.n_runs());
+        // Every (family, arch) pair appears in the grid.
+        for fam in &spec.families {
+            for &arch in &spec.bb_archs {
+                assert!(
+                    runs.iter().any(|r| r.workload.family == *fam && r.bb_arch == arch),
+                    "missing {fam:?} x {arch:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bb_sweep_spans_the_sizing_axis() {
+        let spec = CampaignSpec::bb_sweep();
+        assert!(spec.bb_factors.len() >= 5);
+        assert_eq!(spec.bb_archs, vec![BbArch::Shared, BbArch::PerNode]);
+        assert_eq!(spec.n_runs(), 3 * 5 * 2);
     }
 }

@@ -16,9 +16,15 @@
 //!   by L2.
 //! - [`runtime`]: loads the AOT artifacts via PJRT and serves scores to
 //!   the simulated-annealing loop.
-//! - [`campaign`]: declarative experiment grids (scheduler x seed x
-//!   scale x bb-factor) executed on a work-stealing thread pool with a
-//!   deterministic, machine-readable output contract.
+//! - [`campaign`]: declarative experiment grids over the scenario space
+//!   (scheduler x seed x workload family x estimate model x BB
+//!   architecture x bb-factor) executed on a work-stealing thread pool
+//!   with a deterministic, machine-readable output contract.
+//! - [`workload::scenario`]: the composable scenario engine — workload
+//!   families (paper twin, arrival storms, I/O mixes, heavy-tailed BB,
+//!   SWF replay), walltime-estimate models (exact → x10-sloppy) and
+//!   burst-buffer architectures ([`platform::BbArch`]: shared pool vs
+//!   per-node), all materialised deterministically from a seed.
 //!
 //! Scheduling data path (the `sched::timeline` subsystem):
 //! - [`sched::timeline::ResourceTimeline`] — one piecewise-constant

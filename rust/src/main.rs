@@ -22,14 +22,16 @@ use bbsched::coordinator::{
     run_eval, run_policy, run_policy_opts, EvalParams, PlanBackendKind, SchedOpts,
 };
 use bbsched::core::job::Job;
+use bbsched::core::time::Duration;
+use bbsched::platform::{BbArch, PlatformSpec};
 use bbsched::report::csv;
 use bbsched::report::json::{summary_fields, JsonObject};
-use bbsched::report::{fmt_f, render_table};
+use bbsched::report::{fmt_f, render_table, scenario as scenario_report};
 use bbsched::sched::Policy;
 use bbsched::sim::simulator::SimConfig;
 use bbsched::stats::descriptive::letter_name;
 use bbsched::stats::{ks_p_value, ks_statistic, LogNormal};
-use bbsched::workload::{load_source, BbModel, WorkloadSource};
+use bbsched::workload::{load_scenario, BbModel, EstimateModel, Family, WorkloadSpec};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -75,17 +77,40 @@ impl Args {
     }
 }
 
-fn load_workload(args: &Args) -> (Vec<Job>, u64) {
-    let seed = args.u64("seed", 1);
+/// A scenario-flag usage error: report and exit with the spec-error
+/// code (same contract as a bad campaign spec).
+fn usage_fail(e: &str) -> ! {
+    eprintln!("error: {e}");
+    std::process::exit(EXIT_SPEC_ERROR);
+}
+
+/// Build the scenario halves from the CLI flags shared by `simulate`,
+/// `eval`, `gantt` and `workload`: `--swf`/`--family`/`--scale`/
+/// `--estimate` for the workload, `--bb-arch`/`--bb-factor` for the
+/// platform.
+fn scenario_from_args(args: &Args) -> (WorkloadSpec, PlatformSpec) {
+    let family = match (args.get("swf"), args.get("family")) {
+        (Some(_), Some(_)) => usage_fail("--swf and --family are mutually exclusive"),
+        (Some(path), None) => Family::SwfReplay { path: PathBuf::from(path) },
+        (None, Some(spec)) => Family::parse(spec).unwrap_or_else(|e| usage_fail(&e)),
+        (None, None) => Family::PaperTwin,
+    };
+    let estimate = EstimateModel::parse(args.get("estimate").unwrap_or("paper"))
+        .unwrap_or_else(|e| usage_fail(&e));
+    let bb_arch = BbArch::parse(args.get("bb-arch").unwrap_or("shared"))
+        .unwrap_or_else(|| usage_fail("unknown --bb-arch (shared|per-node)"));
+    let workload = WorkloadSpec { family, scale: args.f64("scale", 1.0), estimate };
     // Burst-buffer pressure knob: scales the paper's capacity rule
     // (capacity = expected demand at full load). The METACENTRUM fit the
     // paper used is unpublished; EXPERIMENTS.md sweeps this factor.
-    let bb_factor = args.f64("bb-factor", 1.0);
-    let source = match args.get("swf") {
-        Some(path) => WorkloadSource::Swf { path: PathBuf::from(path) },
-        None => WorkloadSource::Synth { scale: args.f64("scale", 1.0) },
-    };
-    match load_source(&source, seed, bb_factor) {
+    let platform = PlatformSpec { bb_arch, bb_factor: args.f64("bb-factor", 1.0) };
+    (workload, platform)
+}
+
+fn load_workload(args: &Args) -> (Vec<Job>, u64) {
+    let seed = args.u64("seed", 1);
+    let (workload, platform) = scenario_from_args(args);
+    match load_scenario(&workload, &platform, seed) {
         Ok(out) => out,
         Err(e) => {
             eprintln!("error: {e}");
@@ -95,9 +120,16 @@ fn load_workload(args: &Args) -> (Vec<Job>, u64) {
 }
 
 fn sim_config(args: &Args, bb_capacity: u64) -> SimConfig {
+    let tick_s = args.u64("tick-s", 60);
+    if tick_s == 0 {
+        // A zero tick re-queues the scheduler at the same instant
+        // forever; reject like the spec parser does.
+        usage_fail("--tick-s must be positive");
+    }
     SimConfig {
         bb_capacity,
         io_enabled: !args.flag("no-io"),
+        tick: Duration::from_secs(tick_s),
         record_gantt: args.flag("gantt") || args.get("gantt-out").is_some(),
         ..SimConfig::default()
     }
@@ -325,7 +357,8 @@ fn cmd_campaign(args: &Args) -> i32 {
         spec.out_dir = PathBuf::from(dir);
     }
     if let Some(path) = args.get("swf") {
-        spec.sources = vec![WorkloadSource::Swf { path: PathBuf::from(path) }];
+        spec.families = vec![Family::SwfReplay { path: PathBuf::from(path) }];
+        spec.scales = vec![1.0];
     }
     let json = args.flag("json");
     let runs = spec.enumerate();
@@ -352,7 +385,8 @@ fn cmd_campaign(args: &Args) -> i32 {
                         r.index.to_string(),
                         r.policy.name(),
                         r.seed.to_string(),
-                        r.source.label(),
+                        r.workload.label(),
+                        r.bb_arch.name().to_string(),
                         fmt_f(r.bb_factor),
                     ]
                 })
@@ -361,7 +395,7 @@ fn cmd_campaign(args: &Args) -> i32 {
                 "{}",
                 render_table(
                     &format!("campaign `{}` (dry run, {} runs)", spec.name, runs.len()),
-                    &["run", "policy", "seed", "workload", "bb-factor"],
+                    &["run", "policy", "seed", "workload", "bb-arch", "bb-factor"],
                     &rows,
                 )
             );
@@ -407,6 +441,14 @@ fn cmd_campaign(args: &Args) -> i32 {
         eprintln!("error: writing {}: {e}", nd_path.display());
         persist_ok = false;
     }
+    // Per-scenario aggregation: every policy's seed-averaged metrics,
+    // grouped by (workload x architecture x sizing) scenario.
+    let groups = scenario_report::aggregate(&result.outcomes);
+    let scen_path = spec.out_dir.join("scenario_summary.csv");
+    if let Err(e) = scenario_report::write_csv(&scen_path, &groups) {
+        eprintln!("error: writing {}: {e}", scen_path.display());
+        persist_ok = false;
+    }
     eprintln!("campaign results -> {}", spec.out_dir.display());
 
     // --- Human summary table (stdout stays NDJSON-only under --json). ------
@@ -423,6 +465,11 @@ fn cmd_campaign(args: &Args) -> i32 {
                 .end()
         );
     } else {
+        // The per-scenario comparison view first (only when the grid
+        // actually sweeps more than one scenario).
+        if groups.len() > 1 {
+            print!("{}", scenario_report::render(&groups));
+        }
         let rows: Vec<Vec<String>> = result
             .outcomes
             .iter()
@@ -654,7 +701,11 @@ fn main() {
                  \x20 --scale F        fraction of the paper workload (default 1.0 = 28453 jobs)\n\
                  \x20 --seed N         workload + scheduler seed\n\
                  \x20 --swf PATH       use a real SWF log instead of the synthetic twin\n\
+                 \x20 --family SPEC    workload family: paper|storm[:K]|io-mix[:K]|heavy-tail[:S]\n\
+                 \x20 --estimate E     walltime estimates: paper|exact|xK (e.g. x10)\n\
+                 \x20 --bb-arch A      burst-buffer architecture: shared|per-node\n\
                  \x20 --no-io          disable I/O side effects (pure scheduling)\n\
+                 \x20 --tick-s N       scheduler tick period in seconds (default 60)\n\
                  \x20 --policy NAME    fcfs|fcfs-easy|filler|fcfs-bb|sjf-bb|plan-1|plan-2\n\
                  \x20 --plan-backend B exact|discrete|xla (SA scorer backend)\n\
                  \x20 --plan-warm-start seed the plan SA from the previous tick's plan\n\
@@ -663,8 +714,8 @@ fn main() {
                  \x20 --parts N --part-weeks W   split shape (default 16 x 3)\n\
                  \x20 --json           machine-readable output (simulate, campaign)\n\n\
                  campaign flags:\n\
-                 \x20 --spec FILE      campaign spec ([campaign]/[grid]/[sim] sections)\n\
-                 \x20 --builtin NAME   built-in spec: paper-eval (default) | smoke\n\
+                 \x20 --spec FILE      campaign spec ([campaign]/[grid]/[workload]/[scenario]/[sim])\n\
+                 \x20 --builtin NAME   paper-eval (default) | smoke | stress-suite | bb-sweep\n\
                  \x20 --jobs N         worker threads (default: all cores)\n\
                  \x20 --dry-run        enumerate the grid without simulating\n\
                  \x20 --quiet          suppress per-run progress on stderr\n\n\

@@ -5,6 +5,9 @@
 //! - [`flows`]: fluid max-min-fair network model (I/O contention).
 //! - [`burst_buffer`]: shared burst-buffer pool with striping.
 //! - [`cluster`]: compute-node allocation + aggregate resource view.
+//! - [`BbArch`]/[`PlatformSpec`]: the burst-buffer architecture axis the
+//!   scenario engine sweeps (the paper's shared pool vs a per-node
+//!   variant).
 
 pub mod burst_buffer;
 pub mod cluster;
@@ -17,3 +20,86 @@ pub use cluster::{Allocation, Cluster, ComputePool};
 pub use flows::{Flow, FlowId, FlowNetwork};
 pub use routing::Router;
 pub use topology::{Link, LinkId, LinkKind, Node, NodeId, NodeRole, Topology, TopologyConfig};
+
+/// Burst-buffer architecture variants the scenario engine sweeps.
+///
+/// The paper evaluates one architecture: a *shared* pool striped across
+/// dedicated storage nodes, where any job may claim any fraction of the
+/// total capacity. Related work ("Scheduling Beyond CPUs", Kopanski's
+/// thesis) shows scheduler rankings shift when the buffer is node-local
+/// instead, so the scenario engine models both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BbArch {
+    /// The paper's platform: one shared pool, any job can use any
+    /// storage node (requests contend on aggregate capacity).
+    #[default]
+    Shared,
+    /// Node-local burst buffers (e.g. on-node NVMe): a job can only use
+    /// the buffers of the compute nodes it was allocated, so its usable
+    /// request is capped at `procs x per-node capacity` and the
+    /// aggregate capacity constraint can never bind beyond the node
+    /// allocation itself. Modelled by clamping each job's request at
+    /// workload materialisation (transfers still route through the
+    /// dedicated storage nodes — the fluid network is unchanged).
+    PerNode,
+}
+
+impl BbArch {
+    /// Stable spec/CSV token (`bb-archs = shared, per-node`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BbArch::Shared => "shared",
+            BbArch::PerNode => "per-node",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BbArch> {
+        match s {
+            "shared" => Some(BbArch::Shared),
+            "per-node" | "pernode" => Some(BbArch::PerNode),
+            _ => None,
+        }
+    }
+
+    /// Short label segment for run names; the default (shared) is
+    /// omitted so paper-faithful run labels are unchanged.
+    pub fn label_segment(&self) -> &'static str {
+        match self {
+            BbArch::Shared => "",
+            BbArch::PerNode => "+pernode",
+        }
+    }
+}
+
+/// The platform half of a scenario: burst-buffer architecture plus the
+/// capacity sizing factor (the `bb-factors` sweep — the paper's
+/// capacity rule scaled up or down).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlatformSpec {
+    pub bb_arch: BbArch,
+    /// Multiplier on the paper's capacity rule (expected aggregate
+    /// demand at full machine load). 1.0 = the paper's sizing.
+    pub bb_factor: f64,
+}
+
+impl Default for PlatformSpec {
+    fn default() -> PlatformSpec {
+        PlatformSpec { bb_arch: BbArch::Shared, bb_factor: 1.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bb_arch_round_trips() {
+        for arch in [BbArch::Shared, BbArch::PerNode] {
+            assert_eq!(BbArch::parse(arch.name()), Some(arch));
+        }
+        assert_eq!(BbArch::parse("pernode"), Some(BbArch::PerNode));
+        assert_eq!(BbArch::parse("raid"), None);
+        assert_eq!(BbArch::Shared.label_segment(), "");
+        assert_eq!(BbArch::PerNode.label_segment(), "+pernode");
+    }
+}

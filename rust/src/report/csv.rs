@@ -105,8 +105,9 @@ pub fn write_gantt(path: &Path, gantt: &[GanttEntry]) -> std::io::Result<()> {
 }
 
 /// RFC 4180 field escaping: quote when a field contains a comma, quote
-/// or newline (labels and error messages are free-form text).
-fn csv_escape(field: &str) -> String {
+/// or newline (labels and error messages are free-form text). Shared
+/// with the per-scenario summary writer.
+pub(crate) fn csv_escape(field: &str) -> String {
     if field.contains([',', '"', '\n', '\r']) {
         format!("\"{}\"", field.replace('"', "\"\""))
     } else {
@@ -117,9 +118,9 @@ fn csv_escape(field: &str) -> String {
 /// Campaign results: one row per grid cell, in enumeration order.
 pub fn write_campaign(path: &Path, outcomes: &[RunOutcome]) -> std::io::Result<()> {
     let mut s = String::from(
-        "run,label,policy,seed,workload,bb_factor,ok,n_jobs,n_killed,mean_wait_h,mean_bsld,\
-         median_wait_h,max_wait_h,makespan_h,fingerprint,sched_invocations,sched_wall_s,wall_s,\
-         error\n",
+        "run,label,policy,seed,workload,bb_arch,bb_factor,ok,n_jobs,n_killed,mean_wait_h,\
+         mean_bsld,median_wait_h,max_wait_h,makespan_h,fingerprint,sched_invocations,\
+         sched_wall_s,wall_s,error\n",
     );
     for o in outcomes {
         let (n_jobs, n_killed, wait, bsld, median, max, makespan) = match &o.summary {
@@ -135,12 +136,13 @@ pub fn write_campaign(path: &Path, outcomes: &[RunOutcome]) -> std::io::Result<(
             None => Default::default(),
         };
         s.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:016x},{},{:.6},{:.6},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:016x},{},{:.6},{:.6},{}\n",
             o.run.index,
             csv_escape(&o.label),
             o.run.policy.name(),
             o.run.seed,
-            csv_escape(&o.run.source.label()),
+            csv_escape(&o.run.workload.label()),
+            o.run.bb_arch.name(),
             o.run.bb_factor,
             o.ok(),
             n_jobs,

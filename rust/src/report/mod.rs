@@ -1,9 +1,11 @@
 //! Reporting: ASCII tables for the terminal, CSV series for every figure,
-//! Gantt export, and hand-rolled JSON for `--json` machine output.
+//! Gantt export, per-scenario campaign aggregation, and hand-rolled JSON
+//! for `--json` machine output.
 
 pub mod bench;
 pub mod csv;
 pub mod json;
+pub mod scenario;
 pub mod table;
 
 pub use json::JsonObject;

@@ -1,0 +1,237 @@
+//! Per-scenario aggregation of campaign results: group the grid's
+//! outcomes by scenario (workload family x estimate x architecture x
+//! sizing), aggregate each policy over its seeds, and emit one
+//! comparison table/CSV per scenario — the robustness view ("which
+//! policy wins *where*") the flat per-run stream does not show.
+
+use crate::campaign::runner::RunOutcome;
+use crate::report::{fmt_f, render_table};
+use std::io::Write;
+use std::path::Path;
+
+/// One policy's aggregate within one scenario (over its seeds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyAgg {
+    pub policy: String,
+    pub n_runs: usize,
+    pub n_failed: usize,
+    /// Means over the scenario's successful seeds.
+    pub mean_wait_h: f64,
+    pub mean_bsld: f64,
+    /// Killed jobs summed over successful seeds.
+    pub n_killed: usize,
+}
+
+/// All policies' aggregates for one scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioGroup {
+    /// Scenario identity, e.g. `storm4-x0.05+pernode+bb1`.
+    pub scenario: String,
+    pub per_policy: Vec<PolicyAgg>,
+}
+
+impl ScenarioGroup {
+    /// Name of the policy with the lowest aggregated mean wait (ties
+    /// break to the first in enumeration order); `None` when every run
+    /// of the scenario failed.
+    pub fn best_policy(&self) -> Option<&str> {
+        self.per_policy
+            .iter()
+            .filter(|p| p.n_runs > p.n_failed)
+            .min_by(|a, b| a.mean_wait_h.total_cmp(&b.mean_wait_h))
+            .map(|p| p.policy.as_str())
+    }
+}
+
+/// Group outcomes by scenario and aggregate each policy over its seeds.
+/// Both group order and per-policy order are first-appearance in the
+/// (deterministic) enumeration order, so the output is as reproducible
+/// as the run stream itself.
+pub fn aggregate(outcomes: &[RunOutcome]) -> Vec<ScenarioGroup> {
+    // (scenario label, per-policy run lists), both in first-appearance order.
+    type PerPolicy<'a> = Vec<(String, Vec<&'a RunOutcome>)>;
+    let mut groups: Vec<(String, PerPolicy<'_>)> = Vec::new();
+    for o in outcomes {
+        let key = o.run.scenario().label();
+        let gi = match groups.iter().position(|(k, _)| *k == key) {
+            Some(i) => i,
+            None => {
+                groups.push((key, Vec::new()));
+                groups.len() - 1
+            }
+        };
+        let policies = &mut groups[gi].1;
+        let policy = o.run.policy.name();
+        match policies.iter_mut().find(|(p, _)| *p == policy) {
+            Some((_, runs)) => runs.push(o),
+            None => policies.push((policy, vec![o])),
+        }
+    }
+    groups
+        .into_iter()
+        .map(|(scenario, policies)| ScenarioGroup {
+            scenario,
+            per_policy: policies
+                .into_iter()
+                .map(|(policy, runs)| {
+                    let ok: Vec<_> = runs
+                        .iter()
+                        .filter_map(|o| o.summary.as_ref().filter(|_| o.ok()))
+                        .collect();
+                    // All-failed policies get NaN means, not a
+                    // best-looking 0.0 (downstream sorts must not rank
+                    // them as winners).
+                    let n = ok.len() as f64;
+                    PolicyAgg {
+                        policy,
+                        n_runs: runs.len(),
+                        n_failed: runs.iter().filter(|o| !o.ok()).count(),
+                        mean_wait_h: ok.iter().map(|s| s.mean_wait_h).sum::<f64>() / n,
+                        mean_bsld: ok.iter().map(|s| s.mean_bsld).sum::<f64>() / n,
+                        n_killed: ok.iter().map(|s| s.n_killed).sum(),
+                    }
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+/// Render one comparison table per scenario (stdout human output).
+pub fn render(groups: &[ScenarioGroup]) -> String {
+    let mut out = String::new();
+    for g in groups {
+        let best = g.best_policy().unwrap_or("-").to_string();
+        let rows: Vec<Vec<String>> = g
+            .per_policy
+            .iter()
+            .map(|p| {
+                vec![
+                    if p.policy == best { format!("{} *", p.policy) } else { p.policy.clone() },
+                    format!("{}/{}", p.n_runs - p.n_failed, p.n_runs),
+                    fmt_f(p.mean_wait_h),
+                    fmt_f(p.mean_bsld),
+                    p.n_killed.to_string(),
+                ]
+            })
+            .collect();
+        out.push_str(&render_table(
+            &format!("scenario {} (* = best mean wait)", g.scenario),
+            &["policy", "ok", "mean wait [h]", "mean bsld", "killed"],
+            &rows,
+        ));
+        out.push('\n');
+    }
+    out
+}
+
+/// `scenario_summary.csv`: one row per (scenario, policy) aggregate.
+pub fn write_csv(path: &Path, groups: &[ScenarioGroup]) -> std::io::Result<()> {
+    let mut s =
+        String::from("scenario,policy,n_runs,n_failed,mean_wait_h,mean_bsld,n_killed,best\n");
+    for g in groups {
+        let best = g.best_policy().unwrap_or("").to_string();
+        for p in &g.per_policy {
+            s.push_str(&format!(
+                "{},{},{},{},{:.6},{:.6},{},{}\n",
+                crate::report::csv::csv_escape(&g.scenario),
+                p.policy,
+                p.n_runs,
+                p.n_failed,
+                p.mean_wait_h,
+                p.mean_bsld,
+                p.n_killed,
+                p.policy == best
+            ));
+        }
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(s.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::CampaignSpec;
+    use crate::metrics::summary::PolicySummary;
+
+    fn outcome(run: crate::campaign::RunSpec, wait: f64, ok: bool) -> RunOutcome {
+        let label = run.label();
+        let policy = run.policy.name();
+        RunOutcome {
+            run,
+            label,
+            summary: ok.then(|| PolicySummary {
+                policy,
+                n_jobs: 10,
+                n_killed: 1,
+                mean_wait_h: wait,
+                wait_ci95: 0.0,
+                mean_bsld: wait * 2.0,
+                bsld_ci95: 0.0,
+                median_wait_h: wait,
+                max_wait_h: wait,
+                makespan_h: 1.0,
+            }),
+            fingerprint: 7,
+            sched_invocations: 1,
+            sched_wall_s: 0.0,
+            wall_s: 0.0,
+            error: (!ok).then(|| "boom".to_string()),
+        }
+    }
+
+    #[test]
+    fn aggregates_policies_within_scenarios() {
+        // 2 policies x 2 seeds x 1 workload: one scenario, seed-averaged.
+        let spec = CampaignSpec::parse(
+            "[grid]\npolicies = fcfs, sjf-bb\nseeds = 1, 2\nscales = 0.01\n",
+        )
+        .unwrap();
+        let runs = spec.enumerate();
+        let outcomes: Vec<RunOutcome> = runs
+            .iter()
+            .map(|r| outcome(r.clone(), if r.policy.name() == "fcfs" { 4.0 } else { 2.0 }, true))
+            .collect();
+        let groups = aggregate(&outcomes);
+        assert_eq!(groups.len(), 1);
+        let g = &groups[0];
+        assert_eq!(g.scenario, "x0.01+bb1");
+        assert_eq!(g.per_policy.len(), 2);
+        assert_eq!(g.per_policy[0].n_runs, 2);
+        assert!((g.per_policy[0].mean_wait_h - 4.0).abs() < 1e-12);
+        assert_eq!(g.best_policy(), Some("sjf-bb"));
+        let csv_dir = std::env::temp_dir().join(format!("bbsched_scen_{}", std::process::id()));
+        write_csv(&csv_dir.join("scenario_summary.csv"), &groups).unwrap();
+        let text = std::fs::read_to_string(csv_dir.join("scenario_summary.csv")).unwrap();
+        assert!(text.contains("x0.01+bb1,sjf-bb,2,0,"));
+        assert!(text.contains(",true\n"));
+        std::fs::remove_dir_all(&csv_dir).ok();
+    }
+
+    #[test]
+    fn scenarios_stay_separate_and_failures_do_not_win() {
+        let spec = CampaignSpec::parse(
+            "[grid]\npolicies = fcfs, sjf-bb\nscales = 0.01\n\
+             [scenario]\nbb-archs = shared, per-node\n",
+        )
+        .unwrap();
+        let runs = spec.enumerate();
+        // fcfs fails everywhere; sjf-bb succeeds.
+        let outcomes: Vec<RunOutcome> = runs
+            .iter()
+            .map(|r| outcome(r.clone(), 1.0, r.policy.name() != "fcfs"))
+            .collect();
+        let groups = aggregate(&outcomes);
+        assert_eq!(groups.len(), 2, "one group per architecture");
+        assert_eq!(groups[0].scenario, "x0.01+bb1");
+        assert_eq!(groups[1].scenario, "x0.01+pernode+bb1");
+        for g in &groups {
+            assert_eq!(g.per_policy[0].n_failed, 1);
+            assert_eq!(g.best_policy(), Some("sjf-bb"));
+        }
+        assert!(render(&groups).contains("sjf-bb *"));
+    }
+}

@@ -1,87 +1,32 @@
 //! Workload models: SWF log ingestion, the KTH-SP2 statistical twin
-//! generator, the log-normal burst-buffer request model, and the
-//! 16-part splitter for the robustness figures.
+//! generator, the log-normal burst-buffer request model, the 16-part
+//! splitter for the robustness figures — and the composable scenario
+//! engine ([`scenario`]) that turns them into a swept scenario space
+//! (workload families x estimate models x burst-buffer architectures).
 
 pub mod bbmodel;
+pub mod scenario;
 pub mod split;
 pub mod swf;
 pub mod synth;
 
 pub use bbmodel::BbModel;
+pub use scenario::{EstimateModel, Family, Scenario, WorkloadSpec};
 pub use split::split_workload;
 pub use swf::{parse_swf, records_to_jobs, SwfConvert, SwfRecord};
 pub use synth::{generate, SynthConfig};
 
 use crate::core::job::Job;
-use std::path::PathBuf;
+use crate::platform::PlatformSpec;
 
-/// Where one run's jobs come from — the unit the campaign grid sweeps.
-#[derive(Debug, Clone, PartialEq)]
-pub enum WorkloadSource {
-    /// The KTH-SP2 statistical twin at a fraction of the paper's size
-    /// (`scale = 1.0` is the full 28,453-job trace).
-    Synth { scale: f64 },
-    /// A real SWF trace, converted with the paper's §4.1 supplement rules.
-    Swf { path: PathBuf },
-}
-
-impl WorkloadSource {
-    /// Short label used in run names and progress lines.
-    pub fn label(&self) -> String {
-        match self {
-            WorkloadSource::Synth { scale } => format!("x{scale}"),
-            WorkloadSource::Swf { path } => path
-                .file_stem()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_else(|| "swf".to_string()),
-        }
-    }
-}
-
-/// Materialise a workload: the jobs plus the burst-buffer capacity the
-/// simulator must be configured with. `bb_factor` scales the paper's
-/// capacity rule (capacity = expected demand at full load); the
-/// METACENTRUM fit the paper used is unpublished, so EXPERIMENTS.md
-/// sweeps this factor. Shared by the CLI and the campaign runner.
-pub fn load_source(
-    source: &WorkloadSource,
+/// Materialise a workload on a platform: the jobs plus the burst-buffer
+/// capacity the simulator must be configured with. Thin wrapper over
+/// [`Scenario::materialise`] for callers that hold the two halves
+/// separately (the CLI and the campaign runner).
+pub fn load_scenario(
+    workload: &WorkloadSpec,
+    platform: &PlatformSpec,
     seed: u64,
-    bb_factor: f64,
 ) -> Result<(Vec<Job>, u64), String> {
-    match source {
-        WorkloadSource::Swf { path } => {
-            let text = std::fs::read_to_string(path)
-                .map_err(|e| format!("reading SWF file {}: {e}", path.display()))?;
-            let (records, skipped) = parse_swf(&text);
-            if skipped > 0 {
-                eprintln!("note: skipped {skipped} malformed SWF lines");
-            }
-            let bb_model = BbModel::default();
-            let bb_capacity = (bb_model.capacity_for(96) as f64 * bb_factor) as u64;
-            let jobs = records_to_jobs(
-                &records,
-                &SwfConvert {
-                    max_procs: 96,
-                    walltime_factor_min: 1.25,
-                    max_bb_total: (bb_capacity as f64 * 0.8) as u64,
-                    bb_model,
-                    seed,
-                },
-            );
-            Ok((jobs, bb_capacity))
-        }
-        WorkloadSource::Synth { scale } => {
-            if !scale.is_finite() || *scale <= 0.0 {
-                return Err(format!("synthetic workload scale must be positive, got {scale}"));
-            }
-            let mut cfg = if (scale - 1.0).abs() < 1e-9 {
-                SynthConfig::paper(seed)
-            } else {
-                SynthConfig::scaled(seed, *scale)
-            };
-            cfg.bb_capacity = (cfg.bb_capacity as f64 * bb_factor) as u64;
-            let jobs = generate(&cfg);
-            Ok((jobs, cfg.bb_capacity))
-        }
-    }
+    Scenario { workload: workload.clone(), platform: *platform }.materialise(seed)
 }

@@ -1,0 +1,632 @@
+//! The composable scenario engine: workload families x estimate models
+//! x burst-buffer architectures.
+//!
+//! The paper's conclusions rest on a single statistical twin of KTH-SP2
+//! with one log-normal burst-buffer model and one shared-pool
+//! architecture. Related work (Kopanski's thesis, arXiv 2111.10200;
+//! "Scheduling Beyond CPUs for HPC", arXiv 2012.05439) shows scheduler
+//! rankings shift with I/O intensity, walltime-estimate accuracy and
+//! multi-resource sizing — so every robustness claim this repository
+//! makes runs over a *scenario space* instead of the single hard-coded
+//! experiment:
+//!
+//! - [`Family`]: how jobs are generated — the paper twin, bursty arrival
+//!   storms, I/O-intensity mixes, heavy-tailed burst-buffer variants, or
+//!   SWF replay with scaling/filtering knobs.
+//! - [`EstimateModel`]: how loose user walltime estimates are, from the
+//!   twin's calibrated looseness through near-exact to x10-sloppy.
+//! - [`crate::platform::PlatformSpec`]: the platform half — burst-buffer
+//!   architecture ([`crate::platform::BbArch`]: the paper's shared pool
+//!   or a per-node variant) and the capacity sizing factor.
+//!
+//! A [`Scenario`] is one point in that space; [`Scenario::materialise`]
+//! turns it into (jobs, burst-buffer capacity) deterministically from a
+//! seed. One fixed rule keeps the axes orthogonal: the burst-buffer
+//! *capacity* always comes from the paper's rule (default model's
+//! expected demand at full load) times `bb_factor` — families change
+//! demand, the platform changes supply, and neither silently rescales
+//! the other.
+
+use crate::core::job::Job;
+use crate::core::time::{Duration, Time};
+use crate::platform::{BbArch, PlatformSpec};
+use crate::stats::rng::Pcg32;
+use crate::workload::bbmodel::BbModel;
+use crate::workload::swf::{parse_swf, records_to_jobs, SwfConvert};
+use crate::workload::synth::{generate, io_headroom, SynthConfig};
+use std::path::PathBuf;
+
+/// Default arrival-storm compression (arrivals land 4x closer to their
+/// window start than in the twin).
+pub const DEFAULT_STORM_INTENSITY: f64 = 4.0;
+/// Default I/O-mix multiplier on every job's burst-buffer request.
+pub const DEFAULT_IO_MIX_FACTOR: f64 = 3.0;
+/// Default ln-space sigma for the heavy-tailed burst-buffer variant
+/// (the paper's model uses 1.0).
+pub const DEFAULT_HEAVY_TAIL_SIGMA: f64 = 1.6;
+
+/// Storm window: arrivals are compressed toward the start of 6-hour
+/// windows, creating periodic submission storms (campaign behaviour).
+const STORM_WINDOW_S: f64 = 6.0 * 3600.0;
+
+/// Walltime cap shared with the synthetic twin (5 days).
+const MAX_WALLTIME_S: u64 = 120 * 3600;
+
+/// How one scenario's jobs are generated.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Family {
+    /// The KTH-SP2 statistical twin exactly as the paper uses it.
+    PaperTwin,
+    /// The twin with arrivals compressed toward 6-hour window starts:
+    /// `intensity` = how much closer to the window start each arrival
+    /// lands (1.0 = the twin; 4.0 = 4x compression). Queue depth spikes
+    /// periodically, stressing backfill depth and plan length.
+    ArrivalStorm { intensity: f64 },
+    /// The twin with every burst-buffer request multiplied by `factor`
+    /// (clamped to the schedulable maximum). Walltime estimates are NOT
+    /// rescaled, so `factor > 1` also models under-budgeted staging
+    /// time — the I/O-pressure regime where BB-aware reservations
+    /// matter most; `factor < 1` de-intensifies I/O.
+    IoMix { factor: f64 },
+    /// The twin with the burst-buffer request model's ln-space sigma
+    /// replaced by `sigma` (paper: 1.0): a heavier per-job tail under
+    /// the *paper's* capacity, so a few whales dominate the pool.
+    HeavyTailBb { sigma: f64 },
+    /// Replay a real SWF trace (scale < 1 keeps the first fraction of
+    /// jobs — the filtering knob).
+    SwfReplay { path: PathBuf },
+}
+
+impl Family {
+    /// Parse a spec token: `paper`, `storm[:K]`, `io-mix[:K]`,
+    /// `heavy-tail[:S]`, `swf:PATH`.
+    pub fn parse(s: &str) -> Result<Family, String> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n.trim(), Some(a.trim())),
+            None => (s.trim(), None),
+        };
+        let num = |what: &str, default: f64, min: f64| -> Result<f64, String> {
+            match arg {
+                None => Ok(default),
+                Some(a) => {
+                    let v: f64 = a
+                        .parse()
+                        .map_err(|_| format!("invalid {what} `{a}` in family `{s}`"))?;
+                    if !v.is_finite() || v < min || (min == 0.0 && v == 0.0) {
+                        let bound =
+                            if min == 0.0 { "positive".to_string() } else { format!(">= {min}") };
+                        return Err(format!("{what} must be {bound}, got `{a}`"));
+                    }
+                    Ok(v)
+                }
+            }
+        };
+        match name {
+            "paper" => {
+                if arg.is_some() {
+                    return Err(format!("family `paper` takes no parameter (got `{s}`)"));
+                }
+                Ok(Family::PaperTwin)
+            }
+            "storm" => Ok(Family::ArrivalStorm {
+                intensity: num("storm intensity", DEFAULT_STORM_INTENSITY, 1.0)?,
+            }),
+            "io-mix" | "iomix" => Ok(Family::IoMix {
+                factor: num("io-mix factor", DEFAULT_IO_MIX_FACTOR, 0.0)?,
+            }),
+            "heavy-tail" | "heavytail" => Ok(Family::HeavyTailBb {
+                sigma: num("heavy-tail sigma", DEFAULT_HEAVY_TAIL_SIGMA, 0.0)?,
+            }),
+            "swf" => match arg {
+                Some(path) if !path.is_empty() => {
+                    Ok(Family::SwfReplay { path: PathBuf::from(path) })
+                }
+                _ => Err("family `swf` needs a path: `swf:traces/kth.swf`".to_string()),
+            },
+            other => Err(format!(
+                "unknown workload family `{other}` (paper|storm[:K]|io-mix[:K]|heavy-tail[:S]|swf:PATH)"
+            )),
+        }
+    }
+
+    /// Canonical spec token (round-trips through [`Family::parse`]).
+    pub fn spec_token(&self) -> String {
+        match self {
+            Family::PaperTwin => "paper".to_string(),
+            Family::ArrivalStorm { intensity } => format!("storm:{intensity}"),
+            Family::IoMix { factor } => format!("io-mix:{factor}"),
+            Family::HeavyTailBb { sigma } => format!("heavy-tail:{sigma}"),
+            Family::SwfReplay { path } => format!("swf:{}", path.display()),
+        }
+    }
+
+    /// Short label fragment ("" for the paper twin, so paper-faithful
+    /// run labels are byte-identical to the pre-scenario format).
+    fn label_fragment(&self) -> String {
+        match self {
+            Family::PaperTwin => String::new(),
+            Family::ArrivalStorm { intensity } => format!("storm{intensity}-"),
+            Family::IoMix { factor } => format!("iomix{factor}-"),
+            Family::HeavyTailBb { sigma } => format!("ht{sigma}-"),
+            Family::SwfReplay { .. } => String::new(),
+        }
+    }
+}
+
+/// How loose the user walltime estimates are.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EstimateModel {
+    /// Whatever the family generates (the twin's calibrated looseness:
+    /// 15% near-exact, log-normal median 2x otherwise).
+    Paper,
+    /// Near-exact estimates: walltime = 1.05 x compute time plus the
+    /// I/O headroom for the job's actual request. The regime where
+    /// backfilling has perfect information.
+    Exact,
+    /// Sloppy estimates: per-job log-normal factor with median `factor`
+    /// (sigma 0.8, clamped to [1.25, 10 x factor]) plus I/O headroom.
+    /// `x10` models the worst published estimate quality.
+    Sloppy { factor: f64 },
+}
+
+impl EstimateModel {
+    /// Parse a spec token: `paper`, `exact`, or `xK` (e.g. `x4`, `x10`).
+    pub fn parse(s: &str) -> Result<EstimateModel, String> {
+        match s {
+            "paper" => Ok(EstimateModel::Paper),
+            "exact" => Ok(EstimateModel::Exact),
+            _ => {
+                let Some(rest) = s.strip_prefix('x') else {
+                    return Err(format!("unknown estimate model `{s}` (paper|exact|xK)"));
+                };
+                let factor: f64 = rest
+                    .parse()
+                    .map_err(|_| format!("invalid estimate factor in `{s}`"))?;
+                if !factor.is_finite() || factor < 1.0 {
+                    return Err(format!("estimate factor must be >= 1, got `{s}`"));
+                }
+                Ok(EstimateModel::Sloppy { factor })
+            }
+        }
+    }
+
+    /// Canonical spec token (round-trips through [`EstimateModel::parse`]).
+    pub fn spec_token(&self) -> String {
+        match self {
+            EstimateModel::Paper => "paper".to_string(),
+            EstimateModel::Exact => "exact".to_string(),
+            EstimateModel::Sloppy { factor } => format!("x{factor}"),
+        }
+    }
+
+    /// Label suffix ("" for the paper model).
+    fn label_suffix(&self) -> String {
+        match self {
+            EstimateModel::Paper => String::new(),
+            EstimateModel::Exact => "-exact".to_string(),
+            EstimateModel::Sloppy { factor } => format!("-estx{factor}"),
+        }
+    }
+}
+
+/// The workload half of a scenario: family x size x estimate quality.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub family: Family,
+    /// Fraction of the paper-scale trace (1.0 = 28,453 jobs / 48 weeks
+    /// for synthetic families; for SWF replay, the kept job fraction).
+    pub scale: f64,
+    pub estimate: EstimateModel,
+}
+
+impl WorkloadSpec {
+    /// The paper's workload at a fraction of its size (the pre-scenario
+    /// `Synth { scale }` source).
+    pub fn paper_twin(scale: f64) -> WorkloadSpec {
+        WorkloadSpec { family: Family::PaperTwin, scale, estimate: EstimateModel::Paper }
+    }
+
+    /// A real SWF trace, converted with the paper's §4.1 supplement
+    /// rules (the pre-scenario `Swf { path }` source).
+    pub fn swf(path: PathBuf) -> WorkloadSpec {
+        WorkloadSpec {
+            family: Family::SwfReplay { path },
+            scale: 1.0,
+            estimate: EstimateModel::Paper,
+        }
+    }
+
+    /// Short label used in run names and progress lines. Paper-twin
+    /// specs keep the pre-scenario `x{scale}` form.
+    pub fn label(&self) -> String {
+        let base = match &self.family {
+            Family::SwfReplay { path } => {
+                let stem = path
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| "swf".to_string());
+                if (self.scale - 1.0).abs() < 1e-9 {
+                    stem
+                } else {
+                    format!("{stem}-x{}", self.scale)
+                }
+            }
+            fam => format!("{}x{}", fam.label_fragment(), self.scale),
+        };
+        format!("{base}{}", self.estimate.label_suffix())
+    }
+}
+
+/// One point of the scenario space: a workload on a platform.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub workload: WorkloadSpec,
+    pub platform: PlatformSpec,
+}
+
+impl Scenario {
+    /// Scenario identity label (workload + architecture + sizing) — the
+    /// grouping key for per-scenario aggregation across seeds/policies.
+    pub fn label(&self) -> String {
+        format!(
+            "{}{}+bb{}",
+            self.workload.label(),
+            self.platform.bb_arch.label_segment(),
+            self.platform.bb_factor
+        )
+    }
+
+    /// Materialise the scenario: the job list plus the burst-buffer
+    /// capacity the simulator must be configured with. Deterministic in
+    /// `seed`; shared by the CLI and the campaign runner.
+    pub fn materialise(&self, seed: u64) -> Result<(Vec<Job>, u64), String> {
+        let scale = self.workload.scale;
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(format!("workload scale must be positive, got {scale}"));
+        }
+        let bb_factor = self.platform.bb_factor;
+        if !bb_factor.is_finite() || bb_factor <= 0.0 {
+            return Err(format!("bb-factor must be positive, got {bb_factor}"));
+        }
+        // The one capacity rule (see module docs): the paper's default
+        // model's expected demand at full load, scaled by the platform.
+        let default_model = BbModel::default();
+        let bb_capacity = (default_model.capacity_for(96) as f64 * bb_factor) as u64;
+        let max_bb_total = (bb_capacity as f64 * 0.8) as u64;
+
+        let mut jobs = match &self.workload.family {
+            Family::SwfReplay { path } => {
+                // Replay cannot upscale: scale > 1 would silently
+                // duplicate the 1.0 cell under a distinct label.
+                if scale > 1.0 {
+                    return Err(format!(
+                        "SWF replay scale must be <= 1 (kept job fraction), got {scale}"
+                    ));
+                }
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| format!("reading SWF file {}: {e}", path.display()))?;
+                let (records, skipped) = parse_swf(&text);
+                if skipped > 0 {
+                    eprintln!("note: skipped {skipped} malformed SWF lines");
+                }
+                let mut jobs = records_to_jobs(
+                    &records,
+                    &SwfConvert {
+                        max_procs: 96,
+                        walltime_factor_min: 1.25,
+                        max_bb_total,
+                        bb_model: default_model,
+                        seed,
+                    },
+                );
+                if scale < 1.0 {
+                    let keep = ((jobs.len() as f64 * scale).ceil() as usize).max(1);
+                    jobs.truncate(keep);
+                }
+                jobs
+            }
+            family => {
+                let mut cfg = if (scale - 1.0).abs() < 1e-9 {
+                    SynthConfig::paper(seed)
+                } else {
+                    SynthConfig::scaled(seed, scale)
+                };
+                cfg.bb_capacity = bb_capacity;
+                if let Family::HeavyTailBb { sigma } = family {
+                    cfg.bb_model.lognorm.sigma = *sigma;
+                }
+                let mut jobs = generate(&cfg);
+                match family {
+                    Family::ArrivalStorm { intensity } => {
+                        compress_arrivals(&mut jobs, *intensity);
+                    }
+                    Family::IoMix { factor } => scale_bb(&mut jobs, *factor, max_bb_total),
+                    _ => {}
+                }
+                jobs
+            }
+        };
+
+        // Platform clamp before the estimate transform so walltime
+        // headroom reflects the request the job actually gets.
+        if self.platform.bb_arch == BbArch::PerNode {
+            clamp_per_node(&mut jobs, bb_capacity, 96);
+        }
+        apply_estimate(&mut jobs, self.workload.estimate, seed);
+
+        // Transforms may have reordered arrivals; restore the sorted,
+        // densely-id'd canonical form every consumer assumes.
+        jobs.sort_by_key(|j| (j.submit, j.id.0));
+        for (i, j) in jobs.iter_mut().enumerate() {
+            j.id = crate::core::job::JobId(i as u32);
+            j.validate().map_err(|e| format!("scenario produced invalid job: {e}"))?;
+        }
+        Ok((jobs, bb_capacity))
+    }
+}
+
+/// Compress each arrival toward the start of its 6-hour window by
+/// `intensity`, creating periodic submission storms.
+fn compress_arrivals(jobs: &mut [Job], intensity: f64) {
+    debug_assert!(intensity >= 1.0);
+    for j in jobs.iter_mut() {
+        let t = j.submit.as_secs_f64();
+        let w = (t / STORM_WINDOW_S).floor() * STORM_WINDOW_S;
+        j.submit = Time::from_secs_f64(w + (t - w) / intensity);
+    }
+}
+
+/// Multiply every burst-buffer request, clamped to the schedulable
+/// maximum (so every job stays launchable).
+fn scale_bb(jobs: &mut [Job], factor: f64, max_bb_total: u64) {
+    for j in jobs.iter_mut() {
+        j.bb = (((j.bb as f64) * factor) as u64).clamp(1, max_bb_total);
+    }
+}
+
+/// Per-node burst buffers: a job can only use the node-local buffers of
+/// its own allocation, so its usable request caps at
+/// `procs x (capacity / compute nodes)`.
+fn clamp_per_node(jobs: &mut [Job], bb_capacity: u64, n_compute: u32) {
+    let per_node = bb_capacity / n_compute as u64;
+    for j in jobs.iter_mut() {
+        j.bb = j.bb.min(j.procs as u64 * per_node).max(1);
+    }
+}
+
+/// Re-derive walltime estimates under the chosen model. `Paper` leaves
+/// the family's estimates untouched.
+fn apply_estimate(jobs: &mut [Job], est: EstimateModel, seed: u64) {
+    let cap = Duration::from_secs(MAX_WALLTIME_S);
+    match est {
+        EstimateModel::Paper => {}
+        EstimateModel::Exact => {
+            for j in jobs.iter_mut() {
+                j.walltime =
+                    (j.compute_time.mul_f64(1.05) + io_headroom(j.bb, j.phases)).min(cap);
+            }
+        }
+        EstimateModel::Sloppy { factor } => {
+            // A dedicated stream so estimate noise never perturbs the
+            // family's own generation stream.
+            let mut rng = Pcg32::new(seed, 0xe571_0a7e_57a7_e5ed);
+            for j in jobs.iter_mut() {
+                let f = rng.lognormal(factor.ln(), 0.8).clamp(1.25, factor * 10.0);
+                j.walltime = (j.compute_time.mul_f64(f) + io_headroom(j.bb, j.phases)).min(cap);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::resources::GIB;
+
+    fn scenario(family: Family, scale: f64) -> Scenario {
+        Scenario {
+            workload: WorkloadSpec { family, scale, estimate: EstimateModel::Paper },
+            platform: PlatformSpec::default(),
+        }
+    }
+
+    #[test]
+    fn family_tokens_round_trip() {
+        let fams = [
+            Family::PaperTwin,
+            Family::ArrivalStorm { intensity: 4.0 },
+            Family::IoMix { factor: 0.25 },
+            Family::HeavyTailBb { sigma: 1.6 },
+            Family::SwfReplay { path: PathBuf::from("traces/kth.swf") },
+        ];
+        for f in fams {
+            assert_eq!(Family::parse(&f.spec_token()), Ok(f.clone()), "{f:?}");
+        }
+        // Defaults fill in without an argument.
+        assert_eq!(
+            Family::parse("storm"),
+            Ok(Family::ArrivalStorm { intensity: DEFAULT_STORM_INTENSITY })
+        );
+        assert_eq!(
+            Family::parse("heavy-tail"),
+            Ok(Family::HeavyTailBb { sigma: DEFAULT_HEAVY_TAIL_SIGMA })
+        );
+        assert!(Family::parse("paper:2").is_err());
+        assert!(Family::parse("storm:0.5").is_err()); // < 1 would stretch
+        assert!(Family::parse("swf").is_err());
+        assert!(Family::parse("warp").is_err());
+    }
+
+    #[test]
+    fn estimate_tokens_round_trip() {
+        let models =
+            [EstimateModel::Paper, EstimateModel::Exact, EstimateModel::Sloppy { factor: 10.0 }];
+        for e in models {
+            assert_eq!(EstimateModel::parse(&e.spec_token()), Ok(e));
+        }
+        assert!(EstimateModel::parse("x0.5").is_err());
+        assert!(EstimateModel::parse("sharp").is_err());
+    }
+
+    #[test]
+    fn paper_twin_matches_the_legacy_pipeline_bit_for_bit() {
+        // The scenario engine must not perturb the paper-faithful path:
+        // same jobs and capacity as driving the generator directly.
+        let (jobs, cap) = scenario(Family::PaperTwin, 0.003).materialise(1).unwrap();
+        let cfg = SynthConfig::scaled(1, 0.003);
+        assert_eq!(cap, cfg.bb_capacity);
+        assert_eq!(jobs, generate(&cfg));
+    }
+
+    #[test]
+    fn labels_are_stable_and_paper_compatible() {
+        assert_eq!(WorkloadSpec::paper_twin(0.003).label(), "x0.003");
+        let w = WorkloadSpec {
+            family: Family::ArrivalStorm { intensity: 4.0 },
+            scale: 0.01,
+            estimate: EstimateModel::Sloppy { factor: 10.0 },
+        };
+        assert_eq!(w.label(), "storm4-x0.01-estx10");
+        let s = Scenario {
+            workload: WorkloadSpec::paper_twin(0.01),
+            platform: PlatformSpec { bb_arch: BbArch::PerNode, bb_factor: 0.5 },
+        };
+        assert_eq!(s.label(), "x0.01+pernode+bb0.5");
+    }
+
+    #[test]
+    fn storm_compresses_arrivals_into_windows() {
+        let (base, _) = scenario(Family::PaperTwin, 0.01).materialise(3).unwrap();
+        let (storm, _) =
+            scenario(Family::ArrivalStorm { intensity: 4.0 }, 0.01).materialise(3).unwrap();
+        assert_eq!(base.len(), storm.len());
+        // Every storm arrival sits in the first quarter of its window.
+        for j in &storm {
+            let t = j.submit.as_secs_f64();
+            let off = t - (t / STORM_WINDOW_S).floor() * STORM_WINDOW_S;
+            assert!(off <= STORM_WINDOW_S / 4.0 + 1e-6, "offset {off}");
+        }
+        // Same total span order of magnitude (compression is within
+        // windows, not global).
+        let span = |js: &[Job]| js.last().unwrap().submit.as_secs_f64();
+        assert!(span(&storm) >= span(&base) * 0.8);
+    }
+
+    #[test]
+    fn io_mix_scales_requests_within_clamp() {
+        let (base, cap) = scenario(Family::PaperTwin, 0.01).materialise(5).unwrap();
+        let (mix, _) = scenario(Family::IoMix { factor: 3.0 }, 0.01).materialise(5).unwrap();
+        let max_total = (cap as f64 * 0.8) as u64;
+        let sum = |js: &[Job]| js.iter().map(|j| j.bb as u128).sum::<u128>();
+        assert!(sum(&mix) > sum(&base), "io-mix must increase aggregate demand");
+        assert!(mix.iter().all(|j| j.bb >= 1 && j.bb <= max_total));
+        // De-intensifying shrinks demand.
+        let (lean, _) = scenario(Family::IoMix { factor: 0.25 }, 0.01).materialise(5).unwrap();
+        assert!(sum(&lean) < sum(&base));
+    }
+
+    #[test]
+    fn heavy_tail_fattens_the_upper_quantiles() {
+        let (base, _) = scenario(Family::PaperTwin, 0.02).materialise(7).unwrap();
+        let (ht, _) =
+            scenario(Family::HeavyTailBb { sigma: 1.8 }, 0.02).materialise(7).unwrap();
+        let q90 = |js: &[Job]| {
+            let mut v: Vec<u64> = js.iter().map(|j| j.bb / j.procs as u64).collect();
+            v.sort_unstable();
+            v[(v.len() as f64 * 0.9) as usize] as f64 / GIB as f64
+        };
+        assert!(q90(&ht) > q90(&base), "ht q90 {} <= base q90 {}", q90(&ht), q90(&base));
+    }
+
+    #[test]
+    fn per_node_arch_caps_requests_by_allocation() {
+        let spec = Scenario {
+            workload: WorkloadSpec::paper_twin(0.01),
+            platform: PlatformSpec { bb_arch: BbArch::PerNode, bb_factor: 1.0 },
+        };
+        let (jobs, cap) = spec.materialise(9).unwrap();
+        let per_node = cap / 96;
+        for j in &jobs {
+            let cap_j = j.procs as u64 * per_node;
+            assert!(j.bb <= cap_j, "{}: {} > {}x{per_node}", j.id, j.bb, j.procs);
+        }
+        // The aggregate constraint can therefore never bind beyond the
+        // node allocation: sum over any <=96-proc set fits capacity.
+        assert!(jobs.iter().all(|j| j.bb <= cap));
+    }
+
+    #[test]
+    fn estimate_models_reshape_walltimes() {
+        let exact = Scenario {
+            workload: WorkloadSpec {
+                family: Family::PaperTwin,
+                scale: 0.01,
+                estimate: EstimateModel::Exact,
+            },
+            platform: PlatformSpec::default(),
+        };
+        let (jobs, _) = exact.materialise(11).unwrap();
+        for j in &jobs {
+            assert!(j.walltime > j.compute_time);
+            // Near-exact: within 5% + the I/O headroom.
+            let slack = j.walltime.as_secs_f64()
+                - j.compute_time.as_secs_f64() * 1.05
+                - io_headroom(j.bb, j.phases).as_secs_f64();
+            assert!(slack.abs() < 1.0, "slack {slack}");
+        }
+        let sloppy = Scenario {
+            workload: WorkloadSpec {
+                family: Family::PaperTwin,
+                scale: 0.01,
+                estimate: EstimateModel::Sloppy { factor: 10.0 },
+            },
+            platform: PlatformSpec::default(),
+        };
+        let (sj, _) = sloppy.materialise(11).unwrap();
+        let mean_factor = sj
+            .iter()
+            .map(|j| {
+                (j.walltime.as_secs_f64() - io_headroom(j.bb, j.phases).as_secs_f64()).max(0.0)
+                    / j.compute_time.as_secs_f64()
+            })
+            .sum::<f64>()
+            / sj.len() as f64;
+        // Median 10 with a 120 h cap: the mean factor must still be far
+        // above the paper model's ~2.
+        assert!(mean_factor > 4.0, "mean sloppy factor {mean_factor}");
+    }
+
+    #[test]
+    fn materialise_is_deterministic_per_family() {
+        let fams = [
+            Family::PaperTwin,
+            Family::ArrivalStorm { intensity: 4.0 },
+            Family::IoMix { factor: 3.0 },
+            Family::HeavyTailBb { sigma: 1.6 },
+        ];
+        for fam in fams {
+            let a = scenario(fam.clone(), 0.005).materialise(42).unwrap();
+            let b = scenario(fam.clone(), 0.005).materialise(42).unwrap();
+            assert_eq!(a, b, "{fam:?}");
+            let c = scenario(fam.clone(), 0.005).materialise(43).unwrap();
+            assert_ne!(a.0, c.0, "{fam:?} ignores the seed");
+        }
+    }
+
+    #[test]
+    fn invalid_parameters_error_cleanly() {
+        assert!(scenario(Family::PaperTwin, 0.0).materialise(1).is_err());
+        assert!(scenario(Family::PaperTwin, f64::NAN).materialise(1).is_err());
+        let bad_platform = Scenario {
+            workload: WorkloadSpec::paper_twin(0.01),
+            platform: PlatformSpec { bb_arch: BbArch::Shared, bb_factor: 0.0 },
+        };
+        assert!(bad_platform.materialise(1).is_err());
+        let missing = scenario(Family::SwfReplay { path: PathBuf::from("/nope.swf") }, 1.0);
+        assert!(missing.materialise(1).unwrap_err().contains("reading SWF file"));
+        // Replay upscaling would duplicate the x1 cell under a new
+        // label; rejected before the file is even opened.
+        let upscale = scenario(Family::SwfReplay { path: PathBuf::from("/nope.swf") }, 2.0);
+        assert!(upscale.materialise(1).unwrap_err().contains("must be <= 1"));
+    }
+}

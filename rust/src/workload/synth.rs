@@ -113,9 +113,18 @@ fn sample_walltime(rng: &mut Pcg32, runtime: Duration, bb: u64, phases: u32) -> 
     } else {
         rng.lognormal((2.0f64).ln(), 0.8).clamp(1.25, 20.0)
     };
+    (runtime.mul_f64(factor) + io_headroom(bb, phases)).min(Duration::from_secs(120 * 3600))
+}
+
+/// The I/O headroom users (and the paper's Batsim profiles) budget on
+/// top of a compute estimate: time for the bytes each Fig-4 stage moves
+/// (stage-in + (phases-1) checkpoints + stage-out) at a conservative
+/// quarter of a 10 Gbit/s uplink. Shared with the scenario engine's
+/// walltime-estimate models so every estimate family keeps jobs
+/// survivable under ordinary I/O stretching.
+pub fn io_headroom(bb: u64, phases: u32) -> Duration {
     let stages = (phases + 1) as f64; // stage-in + checkpoints + stage-out
-    let io_headroom = Duration::from_secs_f64(stages * bb as f64 / (1.25e9 / 4.0));
-    (runtime.mul_f64(factor) + io_headroom).min(Duration::from_secs(120 * 3600))
+    Duration::from_secs_f64(stages * bb as f64 / (1.25e9 / 4.0))
 }
 
 /// Generate the synthetic trace (sorted by submit time).

@@ -8,8 +8,9 @@ use bbsched::campaign::{
     EXIT_SPEC_ERROR,
 };
 use bbsched::coordinator::PlanBackendKind;
+use bbsched::platform::BbArch;
 use bbsched::sched::Policy;
-use bbsched::workload::WorkloadSource;
+use bbsched::workload::WorkloadSpec;
 use std::sync::Mutex;
 
 /// A seconds-scale grid: 3 policies x 2 seeds x 1 scale x 2 bb-factors.
@@ -57,7 +58,8 @@ fn grid_enumeration_covers_the_cross_product() {
     let mut seen = std::collections::HashSet::new();
     for r in &runs {
         assert!(seen.insert((r.policy.name(), r.seed, r.bb_factor.to_bits())));
-        assert_eq!(r.source, WorkloadSource::Synth { scale: 0.002 });
+        assert_eq!(r.workload, WorkloadSpec::paper_twin(0.002));
+        assert_eq!(r.bb_arch, BbArch::Shared);
     }
     // Indexes are dense and in order.
     for (i, r) in runs.iter().enumerate() {
@@ -127,6 +129,56 @@ fn builtin_specs_exist_and_enumerate() {
     let smoke = CampaignSpec::builtin("smoke").unwrap();
     assert!(smoke.n_runs() >= 2);
     assert!(CampaignSpec::builtin("bogus").is_none());
+    // The scenario tentpole: stress-suite must enumerate at least 4
+    // workload families crossed with at least 2 BB architectures.
+    let stress = CampaignSpec::builtin("stress-suite").unwrap();
+    let runs = stress.enumerate();
+    let families: std::collections::HashSet<String> =
+        runs.iter().map(|r| r.workload.family.spec_token()).collect();
+    let archs: std::collections::HashSet<&str> = runs.iter().map(|r| r.bb_arch.name()).collect();
+    assert!(families.len() >= 4, "stress-suite families: {families:?}");
+    assert!(archs.len() >= 2, "stress-suite archs: {archs:?}");
+    let sweep = CampaignSpec::builtin("bb-sweep").unwrap();
+    assert!(sweep.bb_factors.len() >= 5);
+    assert!(sweep.bb_archs.len() >= 2);
+}
+
+/// The acceptance contract of the scenario engine: a scaled-down
+/// stress grid — every synthetic family x both architectures x a
+/// sloppy-estimate variant — completes with zero failures and is
+/// record-for-record byte-identical between 1 and 4 workers.
+#[test]
+fn scenario_grid_is_deterministic_across_workers() {
+    let spec = CampaignSpec::parse(
+        "[campaign]\n\
+         name = stress-tiny\n\
+         [grid]\n\
+         policies = fcfs-bb, sjf-bb\n\
+         seeds = 1\n\
+         [workload]\n\
+         families = paper, storm:4, io-mix:3, heavy-tail:1.6\n\
+         scales = 0.002\n\
+         estimates = paper, x4\n\
+         [scenario]\n\
+         bb-archs = shared, per-node\n\
+         [sim]\n\
+         io = false\n",
+    )
+    .unwrap();
+    assert_eq!(spec.n_runs(), 2 * 4 * 2 * 2);
+
+    let run_with = |jobs: usize| -> Vec<String> {
+        let progress = Progress::quiet(spec.n_runs());
+        let result = run_campaign(&spec, jobs, &progress, |_| {});
+        assert_eq!(exit_code(&result.outcomes), EXIT_OK, "a scenario run failed");
+        result.outcomes.iter().map(|o| o.deterministic_line()).collect()
+    };
+    let seq = run_with(1);
+    let par = run_with(4);
+    assert_eq!(seq, par, "scenario grid differs between --jobs 1 and --jobs 4");
+    for line in &seq {
+        assert!(line.contains("\"ok\":true"), "unexpected record: {line}");
+    }
 }
 
 #[test]

@@ -1,0 +1,97 @@
+//! Golden fingerprint tests: per-policy `SimResult::fingerprint()`
+//! values for the `smoke` builtin's workload, committed under
+//! `tests/golden/`, so behavioural drift from future refactors fails
+//! loudly instead of silently. The parity tests prove *internal*
+//! consistency (incremental == rebuild within one build); this file
+//! pins behaviour *across* builds.
+//!
+//! Contract:
+//! - First run on a checkout without the golden file *blesses* it
+//!   (writes the current fingerprints) and passes — commit the file.
+//! - Every later run compares byte-for-byte and fails on any drift.
+//! - An intentional behaviour change re-blesses with
+//!   `BBSCHED_BLESS=1 cargo test --test golden` and commits the diff,
+//!   which makes the change visible in review.
+//!
+//! CI runs this test twice in one job and diffs the golden directory
+//! against the checkout, so drift is caught even before the first
+//! blessed file lands.
+
+use bbsched::campaign::CampaignSpec;
+use bbsched::coordinator::{run_policy, PlanBackendKind};
+use bbsched::platform::PlatformSpec;
+use bbsched::sched::Policy;
+use bbsched::sim::simulator::SimConfig;
+use bbsched::workload::load_scenario;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/smoke_fingerprints.txt")
+}
+
+/// Every policy, not just the builtin's two: the golden file is the
+/// behavioural pin for the whole policy set.
+fn all_policies() -> Vec<Policy> {
+    let mut ps = Policy::ALL.to_vec();
+    ps.push(Policy::SlurmLike);
+    ps.push(Policy::ConservativeBb);
+    ps
+}
+
+#[test]
+fn smoke_builtin_fingerprints_match_golden() {
+    let spec = CampaignSpec::builtin("smoke").expect("builtin");
+    let mut current = String::from(
+        "# Per-policy SimResult fingerprints on the `smoke` builtin workload.\n\
+         # Regenerate intentionally with: BBSCHED_BLESS=1 cargo test --test golden\n",
+    );
+    for workload in &spec.workloads() {
+        for &seed in &spec.seeds {
+            let (jobs, bb_capacity) =
+                load_scenario(workload, &PlatformSpec::default(), seed).expect("workload");
+            let cfg = SimConfig {
+                bb_capacity,
+                io_enabled: spec.io_enabled,
+                ..SimConfig::default()
+            };
+            for policy in all_policies() {
+                let res =
+                    run_policy(jobs.clone(), policy, &cfg, seed, PlanBackendKind::Exact);
+                writeln!(
+                    current,
+                    "{}+s{seed}+{} {:016x}",
+                    policy.name(),
+                    workload.label(),
+                    res.fingerprint()
+                )
+                .unwrap();
+            }
+        }
+    }
+
+    let path = golden_path();
+    let bless = std::env::var("BBSCHED_BLESS").is_ok();
+    if bless || !path.exists() {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).unwrap();
+        }
+        std::fs::write(&path, &current).unwrap();
+        if !bless {
+            eprintln!(
+                "golden: no committed fingerprints found; blessed this run's values -> {}\n\
+                 golden: commit the file so future refactors are pinned against it",
+                path.display()
+            );
+        }
+        return;
+    }
+    let golden = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        current, golden,
+        "per-policy fingerprints drifted from {}.\n\
+         If the behaviour change is intentional, re-bless with\n\
+         `BBSCHED_BLESS=1 cargo test --test golden` and commit the diff.",
+        path.display()
+    );
+}

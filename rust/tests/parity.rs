@@ -9,9 +9,10 @@
 
 use bbsched::campaign::CampaignSpec;
 use bbsched::coordinator::{run_policy_opts, PlanBackendKind, SchedOpts};
+use bbsched::platform::PlatformSpec;
 use bbsched::sched::Policy;
 use bbsched::sim::simulator::SimConfig;
-use bbsched::workload::{load_source, WorkloadSource};
+use bbsched::workload::{load_scenario, WorkloadSpec};
 
 /// All evaluated policies plus the two §3.2 extensions.
 fn all_policies() -> Vec<Policy> {
@@ -21,8 +22,9 @@ fn all_policies() -> Vec<Policy> {
     ps
 }
 
-fn parity_over(source: &WorkloadSource, seed: u64, io_enabled: bool, policies: &[Policy]) {
-    let (jobs, bb_capacity) = load_source(source, seed, 1.0).expect("workload");
+fn parity_over(workload: &WorkloadSpec, seed: u64, io_enabled: bool, policies: &[Policy]) {
+    let (jobs, bb_capacity) =
+        load_scenario(workload, &PlatformSpec::default(), seed).expect("workload");
     let base = SimConfig { bb_capacity, io_enabled, ..SimConfig::default() };
     for &policy in policies {
         let incremental = base.clone();
@@ -70,9 +72,9 @@ fn parity_over(source: &WorkloadSource, seed: u64, io_enabled: bool, policies: &
 #[test]
 fn fingerprint_parity_on_smoke_builtin() {
     let spec = CampaignSpec::builtin("smoke").expect("builtin");
-    for source in &spec.sources {
+    for workload in &spec.workloads() {
         for &seed in &spec.seeds {
-            parity_over(source, seed, spec.io_enabled, &all_policies());
+            parity_over(workload, seed, spec.io_enabled, &all_policies());
         }
     }
 }
@@ -81,19 +83,20 @@ fn fingerprint_parity_on_smoke_builtin() {
 /// a CI-sized scale; the full-scale variant below is `#[ignore]`d.
 #[test]
 fn fingerprint_parity_on_paper_eval_scaled() {
-    let source = WorkloadSource::Synth { scale: 0.01 };
-    parity_over(&source, 1, true, &all_policies());
+    let workload = WorkloadSpec::paper_twin(0.01);
+    parity_over(&workload, 1, true, &all_policies());
 }
 
 /// Full paper-eval parity (hours of CPU): run explicitly with
-/// `cargo test --release --test parity -- --ignored`.
+/// `cargo test --release --test parity -- --ignored` (CI runs it on the
+/// weekly schedule).
 #[test]
 #[ignore = "full-scale paper-eval grid; run explicitly"]
 fn fingerprint_parity_on_paper_eval_full() {
     let spec = CampaignSpec::builtin("paper-eval").expect("builtin");
-    for source in &spec.sources {
+    for workload in &spec.workloads() {
         for &seed in &spec.seeds {
-            parity_over(source, seed, spec.io_enabled, &spec.policies);
+            parity_over(workload, seed, spec.io_enabled, &spec.policies);
         }
     }
 }

@@ -5,16 +5,22 @@
 //! random cases per property; any failure reports its seed so the case
 //! replays deterministically (set `BBSCHED_PROP_SEED` to rerun one).
 
-use bbsched::core::job::JobId;
+use bbsched::coordinator::{run_policy, PlanBackendKind};
+use bbsched::core::job::{JobId, JobRequest};
 use bbsched::core::resources::Resources;
 use bbsched::core::time::{Duration, Time};
 use bbsched::platform::flows::FlowNetwork;
+use bbsched::platform::{BbArch, PlatformSpec};
+use bbsched::sched::easy::Easy;
 use bbsched::sched::plan::annealing::{optimise, PermScorer, SaParams};
 use bbsched::sched::plan::builder::{build_plan, PlanJob};
 use bbsched::sched::plan::candidates::initial_candidates;
 use bbsched::sched::plan::scorer::{DiscreteProblem, ExactScorer, NativeDiscreteScorer};
 use bbsched::sched::timeline::Profile;
+use bbsched::sched::{schedule_once, Policy, RunningInfo, SchedView, Scheduler};
+use bbsched::sim::simulator::SimConfig;
 use bbsched::stats::rng::Pcg32;
+use bbsched::workload::{EstimateModel, Family, Scenario, WorkloadSpec};
 
 const CASES: u64 = 200;
 
@@ -195,6 +201,194 @@ fn prop_flow_fairness_feasible_and_bottlenecked() {
                 );
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scenario-driven invariants: the properties below must hold for every
+// workload family x burst-buffer architecture the scenario engine can
+// produce, not just the paper twin.
+// ---------------------------------------------------------------------
+
+/// The synthetic scenario space swept by the simulation properties
+/// (SWF replay is excluded: it needs a trace file on disk).
+fn scenario_space() -> Vec<(Family, BbArch)> {
+    let families = [
+        Family::PaperTwin,
+        Family::ArrivalStorm { intensity: 4.0 },
+        Family::IoMix { factor: 3.0 },
+        Family::HeavyTailBb { sigma: 1.6 },
+    ];
+    let mut out = Vec::new();
+    for f in &families {
+        for arch in [BbArch::Shared, BbArch::PerNode] {
+            out.push((f.clone(), arch));
+        }
+    }
+    out
+}
+
+fn tiny_scenario(family: Family, arch: BbArch, estimate: EstimateModel) -> Scenario {
+    Scenario {
+        workload: WorkloadSpec { family, scale: 0.002, estimate },
+        platform: PlatformSpec { bb_arch: arch, bb_factor: 1.0 },
+    }
+}
+
+/// PROPERTY: under every workload family and BB architecture, the
+/// simulator never oversubscribes processors or burst buffers — at
+/// every job-start instant the concurrently-running set fits capacity —
+/// and no compute node is double-booked.
+#[test]
+fn prop_scenario_no_oversubscription() {
+    for (family, arch) in scenario_space() {
+        for seed in [1u64, 2] {
+            let (jobs, bb_capacity) =
+                tiny_scenario(family.clone(), arch, EstimateModel::Paper)
+                    .materialise(seed)
+                    .unwrap();
+            let n_jobs = jobs.len();
+            let cfg = SimConfig {
+                bb_capacity,
+                io_enabled: false, // pure scheduling; I/O covered below
+                record_gantt: true,
+                ..SimConfig::default()
+            };
+            let res = run_policy(jobs, Policy::SjfBb, &cfg, seed, PlanBackendKind::Exact);
+            assert_eq!(res.records.len(), n_jobs, "{family:?}/{arch:?}: lost records");
+            // Aggregate two-dimensional capacity at every start event.
+            for r in &res.records {
+                let (mut cpu, mut bb) = (0u64, 0u128);
+                for s in &res.records {
+                    if s.start <= r.start && r.start < s.finish {
+                        cpu += s.procs as u64;
+                        bb += s.bb as u128;
+                    }
+                }
+                assert!(cpu <= 96, "{family:?}/{arch:?} seed {seed}: {cpu} cpus at {}", r.start);
+                assert!(
+                    bb <= bb_capacity as u128,
+                    "{family:?}/{arch:?} seed {seed}: bb oversubscribed at {}",
+                    r.start
+                );
+            }
+            // Per-node: no compute node hosts two jobs at once.
+            let mut per_node: std::collections::HashMap<usize, Vec<(Time, Time)>> =
+                Default::default();
+            for g in &res.gantt {
+                for &n in &g.compute_nodes {
+                    per_node.entry(n).or_default().push((g.start, g.finish));
+                }
+            }
+            for (node, mut spans) in per_node {
+                spans.sort();
+                for w in spans.windows(2) {
+                    assert!(
+                        w[0].1 <= w[1].0,
+                        "{family:?}/{arch:?}: node {node} double-booked {w:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY (EASY, Algorithm 1): backfilling never delays the head
+/// job's reservation. After launching the policy's backfills, the
+/// earliest feasible start of the blocked head — in the dimensions the
+/// flavour reserves — equals what it was without any backfill.
+#[test]
+fn prop_easy_never_delays_head() {
+    for seed in seeds().into_iter().take(150) {
+        let mut rng = Pcg32::seeded(seed ^ 0xea5b_f111);
+        let capacity = Resources::new(8 + rng.below(88), 1 + rng.next_u64() % (1 << 40));
+        let now = Time::from_secs(1_000);
+        // Running set: sequentially-feasible requests.
+        let mut free = capacity;
+        let mut running = Vec::new();
+        for i in 0..rng.below(6) {
+            if free.cpu == 0 {
+                break;
+            }
+            let req =
+                Resources::new(1 + rng.below(free.cpu), rng.next_u64() % (free.bb + 1));
+            free = free - req;
+            running.push(RunningInfo {
+                id: JobId(1000 + i),
+                req,
+                expected_end: now + Duration::from_secs(60 + rng.below(8_000) as u64),
+            });
+        }
+        let queue: Vec<JobRequest> = (0..1 + rng.below(10))
+            .map(|i| JobRequest {
+                id: JobId(i),
+                submit: Time::ZERO,
+                walltime: Duration::from_secs(60 + rng.below(6_000) as u64),
+                procs: 1 + rng.below(capacity.cpu),
+                bb: rng.next_u64() % (capacity.bb + 1),
+            })
+            .collect();
+        let view = SchedView { now, capacity, free, queue: &queue, running: &running };
+
+        for mut policy in [Easy::fcfs_easy(), Easy::fcfs_bb(), Easy::sjf_bb()] {
+            let launches = schedule_once(&mut policy, &view);
+            let launched: std::collections::HashSet<JobId> = launches.iter().copied().collect();
+            // Head = first queued job that did not launch.
+            let Some(head_idx) = queue.iter().position(|j| !launched.contains(&j.id)) else {
+                continue; // everything launched: no reservation to protect
+            };
+            let head = queue[head_idx];
+            let head_req = if policy.reserve_bb {
+                head.request()
+            } else {
+                Resources { cpu: head.procs, bb: 0 }
+            };
+            // Reconstruct the profile as the policy saw it: running jobs
+            // plus this pass's FCFS-prefix launches.
+            let mut profile = Profile::from_view(&view);
+            for j in &queue[..head_idx] {
+                profile.subtract(now, now + j.walltime, j.request());
+            }
+            let before = profile.earliest_fit(head_req, head.walltime, now);
+            // Apply the backfills (launches behind the head in queue
+            // order) and re-ask.
+            for j in &queue[head_idx + 1..] {
+                if launched.contains(&j.id) {
+                    profile.subtract(now, now + j.walltime, j.request());
+                }
+            }
+            let after = profile.earliest_fit(head_req, head.walltime, now);
+            assert_eq!(
+                after, before,
+                "seed {seed} {}: backfill moved the head reservation {before} -> {after}",
+                policy.name()
+            );
+        }
+    }
+}
+
+/// PROPERTY: the incrementally-maintained resource timeline equals a
+/// full rebuild at every scheduler invocation, under every workload
+/// family, both BB architectures, I/O stretching and sloppy estimates
+/// (`validate_timeline` asserts breakpoint-identity inside the run).
+#[test]
+fn prop_incremental_timeline_matches_rebuild_under_scenarios() {
+    for (family, arch) in scenario_space() {
+        // Sloppy estimates force walltime kills and early completions —
+        // both timeline-mutation paths — on top of the family's shape.
+        let (jobs, bb_capacity) =
+            tiny_scenario(family.clone(), arch, EstimateModel::Sloppy { factor: 4.0 })
+                .materialise(3)
+                .unwrap();
+        let n_jobs = jobs.len();
+        let cfg = SimConfig {
+            bb_capacity,
+            io_enabled: true,
+            validate_timeline: true,
+            ..SimConfig::default()
+        };
+        let res = run_policy(jobs, Policy::FcfsBb, &cfg, 3, PlanBackendKind::Exact);
+        assert_eq!(res.records.len(), n_jobs, "{family:?}/{arch:?}");
     }
 }
 
