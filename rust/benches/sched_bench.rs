@@ -7,18 +7,28 @@
 //!   the running set on every invocation, cold plan scoring.
 //!
 //! Both modes are fingerprint-identical by construction (asserted here);
-//! only the wall-clock differs. Emits `BENCH_sched.json` (override the
-//! path with `BENCH_OUT`) to feed the perf trajectory.
+//! only the wall-clock differs.
+//!
+//! A second suite sweeps the plan-optimiser knob ablation on a `storm:4`
+//! backlog workload — {cold, delta, delta+warm, delta+warm+window} —
+//! where `cold` disables the prefix/delta cache (the bit-exactness
+//! oracle: its fingerprint must equal `delta`'s), `warm` seeds SA from
+//! the previous tick's plan and `window` bounds the SA problem to the
+//! first 32 queued jobs. Everything lands in one `BENCH_sched.json`
+//! (override the path with `BENCH_OUT`) — the perf trajectory the CI
+//! `bench-gate` job enforces a regression threshold over.
 //!
 //! Usage: `cargo bench --bench sched_bench` (full ~10k-job workload) or
 //! `cargo bench --bench sched_bench -- --quick` (CI smoke size).
 
 use bbsched::coordinator::{run_policy_opts, PlanBackendKind, SchedOpts};
+use bbsched::platform::{BbArch, PlatformSpec};
 use bbsched::report::bench::{fmt_dur, write_json, BenchResult};
 use bbsched::report::{fmt_f, render_table};
 use bbsched::sched::Policy;
 use bbsched::sim::simulator::SimConfig;
 use bbsched::workload::synth::{generate, SynthConfig};
+use bbsched::workload::{EstimateModel, Family, Scenario, WorkloadSpec};
 use std::time::Duration;
 
 struct Row {
@@ -97,6 +107,65 @@ fn main() {
         });
     }
 
+    // --- Plan-optimiser ablation on a storm backlog. ----------------------
+    // Windowing only bites when queues pile up, so the sweep runs on the
+    // arrival-storm family (window W=32, the plan-perf campaign's value).
+    let storm = Scenario {
+        workload: WorkloadSpec {
+            family: Family::ArrivalStorm { intensity: 4.0 },
+            scale,
+            estimate: EstimateModel::Paper,
+        },
+        platform: PlatformSpec { bb_arch: BbArch::Shared, bb_factor: 1.0 },
+    };
+    let (storm_jobs, storm_bb) = storm.materialise(1).expect("storm workload");
+    let storm_sim =
+        SimConfig { bb_capacity: storm_bb, io_enabled: false, ..SimConfig::default() };
+    let ablation: [(&str, SchedOpts); 4] = [
+        ("cold", SchedOpts { plan_cold_scoring: true, ..SchedOpts::default() }),
+        ("delta", SchedOpts::default()),
+        ("delta+warm", SchedOpts { plan_warm_start: true, ..SchedOpts::default() }),
+        (
+            "delta+warm+window",
+            SchedOpts { plan_warm_start: true, plan_window: 32, ..SchedOpts::default() },
+        ),
+    ];
+    eprintln!("plan ablation: {} storm jobs, plan-2 x {} configs", storm_jobs.len(), 4);
+    let mut plan_rows: Vec<(String, Duration, u64, f64, u64)> = Vec::new();
+    for (cfg, opts) in ablation {
+        let res = run_policy_opts(
+            storm_jobs.clone(),
+            Policy::Plan(2),
+            &storm_sim,
+            1,
+            PlanBackendKind::Exact,
+            opts,
+        );
+        let mean_wait_h = {
+            let s = bbsched::metrics::summary::summarize("plan-2", &res.records);
+            s.mean_wait_h
+        };
+        eprintln!(
+            "  {:>18}: sched_wall {} ({} invocations, mean wait {:.3} h)",
+            cfg,
+            fmt_dur(res.sched_wall),
+            res.sched_invocations,
+            mean_wait_h,
+        );
+        plan_rows.push((
+            cfg.to_string(),
+            res.sched_wall,
+            res.sched_invocations,
+            mean_wait_h,
+            res.fingerprint(),
+        ));
+    }
+    // Delta scoring is a pure cache: bit-identical to the cold oracle.
+    assert_eq!(
+        plan_rows[0].4, plan_rows[1].4,
+        "delta scoring must be behaviour-identical to the cold scorer"
+    );
+
     // --- Table. -----------------------------------------------------------
     let table: Vec<Vec<String>> = rows
         .iter()
@@ -118,9 +187,32 @@ fn main() {
             &table,
         )
     );
+    let baseline_wall = plan_rows[0].1;
+    let plan_table: Vec<Vec<String>> = plan_rows
+        .iter()
+        .map(|(cfg, wall, inv, wait, fp)| {
+            vec![
+                cfg.clone(),
+                inv.to_string(),
+                fmt_dur(*wall),
+                fmt_f(baseline_wall.as_secs_f64() / wall.as_secs_f64().max(1e-12)),
+                fmt_f(*wait),
+                format!("{fp:016x}"),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            &format!("plan-2 ablation, storm:4 workload ({} jobs)", storm_jobs.len()),
+            &["config", "invocations", "sched_wall", "speedup vs cold", "mean wait [h]",
+              "fingerprint"],
+            &plan_table,
+        )
+    );
 
     // --- BENCH_sched.json (the perf-trajectory contract). -----------------
-    let results: Vec<BenchResult> = rows
+    let mut results: Vec<BenchResult> = rows
         .iter()
         .map(|r| BenchResult {
             name: r.policy.clone(),
@@ -138,6 +230,19 @@ fn main() {
             ),
         })
         .collect();
+    results.extend(plan_rows.iter().map(|(cfg, wall, inv, wait, fp)| BenchResult {
+        name: format!("plan-2-storm/{cfg}"),
+        iters: 1,
+        mean: *wall,
+        stddev: Duration::ZERO,
+        min: *wall,
+        note: format!(
+            "invocations={inv} mean_wait_h={wait:.6} fingerprint={fp:016x} jobs={} \
+             speedup_vs_cold={:.3}",
+            storm_jobs.len(),
+            baseline_wall.as_secs_f64() / wall.as_secs_f64().max(1e-12),
+        ),
+    }));
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_sched.json".to_string());
     write_json(std::path::Path::new(&out), "sched_wall", &results).expect("write bench json");
     println!("bench json -> {out}");

@@ -9,6 +9,12 @@
 //! record stream for `--jobs N` is byte-identical to `--jobs 1` apart
 //! from the explicitly wall-clock fields, which the deterministic
 //! projection ([`RunOutcome::deterministic_line`]) excludes.
+//!
+//! Exception: a per-run `timeout-s` budget makes *whether a borderline
+//! run completes* wall-clock-dependent (an oversubscribed worker pool
+//! can push a cell past its budget), so the byte-identical guarantee is
+//! stated only for campaigns without a timeout — or with one generous
+//! enough that no cell is borderline.
 
 use crate::campaign::progress::Progress;
 use crate::campaign::spec::{CampaignSpec, RunSpec};
@@ -98,12 +104,13 @@ impl CampaignResult {
     }
 }
 
-/// Execute one grid cell, turning panics and workload errors into a
-/// failed outcome instead of tearing the campaign down.
-pub fn execute_run(spec: &CampaignSpec, run: &RunSpec) -> RunOutcome {
-    let t0 = Instant::now();
-    let label = run.label();
-    let result = catch_unwind(AssertUnwindSafe(|| -> Result<_, String> {
+/// (summary, fingerprint, sched_invocations, sched_wall_s) of one
+/// successful simulation.
+type RunMetrics = (PolicySummary, u64, u64, f64);
+
+/// The panic-isolated simulation of one grid cell.
+fn simulate_cell(spec: &CampaignSpec, run: &RunSpec) -> Result<RunMetrics, String> {
+    let result = catch_unwind(AssertUnwindSafe(|| -> Result<RunMetrics, String> {
         let (jobs, bb_capacity) = run.scenario().materialise(run.seed)?;
         let sim_cfg = SimConfig {
             bb_capacity,
@@ -111,14 +118,53 @@ pub fn execute_run(spec: &CampaignSpec, run: &RunSpec) -> RunOutcome {
             tick: Duration::from_secs(spec.tick_s),
             ..SimConfig::default()
         };
-        let opts = SchedOpts { plan_warm_start: spec.plan_warm_start, ..SchedOpts::default() };
+        let opts = SchedOpts {
+            plan_warm_start: spec.plan_warm_start,
+            plan_window: run.plan_window,
+            ..SchedOpts::default()
+        };
         let res = run_policy_opts(jobs, run.policy, &sim_cfg, run.seed, spec.plan_backend, opts);
         let summary = summarize(&run.policy.name(), &res.records);
         Ok((summary, res.fingerprint(), res.sched_invocations, res.sched_wall.as_secs_f64()))
     }));
-    let flat = match result {
+    match result {
         Ok(inner) => inner,
         Err(payload) => Err(panic_message(payload)),
+    }
+}
+
+/// Execute one grid cell, turning panics, workload errors and timeouts
+/// into a failed outcome instead of tearing the campaign down.
+pub fn execute_run(spec: &CampaignSpec, run: &RunSpec) -> RunOutcome {
+    let t0 = Instant::now();
+    let label = run.label();
+    let flat = match spec.timeout_s {
+        None => simulate_cell(spec, run),
+        Some(limit) => {
+            // The simulator has no cancellation points, so a budgeted
+            // run executes on its own thread; on timeout the campaign
+            // records a failure and the pool moves on, while the
+            // detached thread winds the abandoned simulation down in
+            // the background (its result is dropped on send). Those
+            // abandoned threads keep burning cores, so a tight budget
+            // on a wide pool can starve later borderline cells into
+            // cascading timeouts — size budgets generously; a
+            // simulator-level cancellation hook is the ROADMAP fix.
+            let (tx, rx) = std::sync::mpsc::channel();
+            let (spec2, run2) = (spec.clone(), run.clone());
+            std::thread::spawn(move || {
+                let _ = tx.send(simulate_cell(&spec2, &run2));
+            });
+            match rx.recv_timeout(std::time::Duration::from_secs_f64(limit)) {
+                Ok(flat) => flat,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    Err(format!("timeout: run exceeded {limit}s"))
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    Err("timeout worker vanished without a result".to_string())
+                }
+            }
+        }
     };
     match flat {
         Ok((summary, fingerprint, sched_invocations, sched_wall_s)) => RunOutcome {
@@ -202,6 +248,33 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn per_run_timeout_marks_the_run_failed() {
+        let mut spec = CampaignSpec::smoke();
+        // 1 µs: any real simulation (workload build alone) overruns it,
+        // so this is deterministic without a sleep hook.
+        spec.timeout_s = Some(1e-6);
+        let run = spec.enumerate().into_iter().next().unwrap();
+        let o = execute_run(&spec, &run);
+        assert!(!o.ok());
+        assert!(o.summary.is_none());
+        assert!(o.error.as_deref().unwrap().contains("timeout"), "{:?}", o.error);
+        // Without the budget the same cell succeeds.
+        spec.timeout_s = None;
+        let o = execute_run(&spec, &run);
+        assert!(o.ok(), "{:?}", o.error);
+    }
+
+    #[test]
+    fn generous_timeout_does_not_fail_fast_runs() {
+        let mut spec = CampaignSpec::smoke();
+        spec.timeout_s = Some(300.0);
+        let run = spec.enumerate().into_iter().next().unwrap();
+        let o = execute_run(&spec, &run);
+        assert!(o.ok(), "{:?}", o.error);
+        assert!(o.summary.is_some());
+    }
 
     #[test]
     fn stream_state_reorders() {

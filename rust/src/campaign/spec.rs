@@ -84,6 +84,19 @@ pub struct CampaignSpec {
     /// Platform axes (`[scenario]` section + `[grid]` bb-factors).
     pub bb_archs: Vec<BbArch>,
     pub bb_factors: Vec<f64>,
+    /// Plan-policy queue windows (`[grid] plan-windows`, or the scalar
+    /// `[sim] plan-window`); `0` = unwindowed. A grid axis so windowed
+    /// and unwindowed runs can be ablated in one campaign — but only
+    /// plan policies sweep it; other policies get the single `0` cell
+    /// (see [`CampaignSpec::enumerate`]), never duplicate runs.
+    pub plan_windows: Vec<usize>,
+    /// Per-run wall-clock budget in seconds (`[campaign] timeout-s` /
+    /// `--timeout-s`); a run exceeding it is marked failed (exit-code-1
+    /// path) instead of wedging the worker pool. `None` = no limit.
+    /// NOTE: a budget makes borderline runs' outcomes wall-clock- (and
+    /// so worker-count-)dependent — the `--jobs N == --jobs 1`
+    /// byte-identical guarantee is stated for campaigns without one.
+    pub timeout_s: Option<f64>,
     /// Shared simulator settings.
     pub io_enabled: bool,
     pub plan_backend: PlanBackendKind,
@@ -105,20 +118,29 @@ pub struct RunSpec {
     pub workload: WorkloadSpec,
     pub bb_arch: BbArch,
     pub bb_factor: f64,
+    /// Plan-policy queue window (0 = unwindowed — the legacy behaviour).
+    pub plan_window: usize,
 }
 
 impl RunSpec {
     /// Stable human-readable run id, e.g. `plan-2+s1+x0.003+bb1` (the
     /// shared architecture is omitted so paper-faithful labels are
-    /// unchanged; per-node runs read `...+pernode+bb1`).
+    /// unchanged; per-node runs read `...+pernode+bb1`, windowed plan
+    /// runs append `+wW`).
     pub fn label(&self) -> String {
+        let window = if self.plan_window > 0 {
+            format!("+w{}", self.plan_window)
+        } else {
+            String::new()
+        };
         format!(
-            "{}+s{}+{}{}+bb{}",
+            "{}+s{}+{}{}+bb{}{}",
             self.policy.name(),
             self.seed,
             self.workload.label(),
             self.bb_arch.label_segment(),
-            self.bb_factor
+            self.bb_factor,
+            window
         )
     }
 
@@ -142,11 +164,12 @@ impl RunSpec {
             .str("workload", &self.workload.label())
             .str("bb_arch", self.bb_arch.name())
             .num_f("bb_factor", self.bb_factor)
+            .num_u("plan_window", self.plan_window as u64)
     }
 }
 
 /// Names accepted by [`CampaignSpec::builtin`].
-pub const BUILTINS: &[&str] = &["paper-eval", "smoke", "stress-suite", "bb-sweep"];
+pub const BUILTINS: &[&str] = &["paper-eval", "smoke", "stress-suite", "bb-sweep", "plan-perf"];
 
 impl CampaignSpec {
     fn base(name: &str) -> CampaignSpec {
@@ -160,6 +183,8 @@ impl CampaignSpec {
             estimates: vec![EstimateModel::Paper],
             bb_archs: vec![BbArch::Shared],
             bb_factors: vec![1.0],
+            plan_windows: vec![0],
+            timeout_s: None,
             io_enabled: true,
             plan_backend: PlanBackendKind::Exact,
             plan_warm_start: false,
@@ -220,6 +245,23 @@ impl CampaignSpec {
         }
     }
 
+    /// The plan-optimiser performance grid: both plan policies on the
+    /// paper twin and a storm backlog, unwindowed vs windowed, with
+    /// warm start on — the (warm, window) cost/quality ablation that
+    /// `benches/sched_bench.rs` measures for wall-clock, run here at
+    /// campaign scale for the metric side.
+    pub fn plan_perf() -> CampaignSpec {
+        CampaignSpec {
+            policies: vec![Policy::Plan(1), Policy::Plan(2)],
+            families: vec![Family::PaperTwin, Family::ArrivalStorm { intensity: 4.0 }],
+            scales: vec![0.05],
+            plan_windows: vec![0, 32],
+            plan_warm_start: true,
+            io_enabled: false,
+            ..CampaignSpec::base("plan-perf")
+        }
+    }
+
     /// Look up a built-in spec by name (see [`BUILTINS`]).
     pub fn builtin(name: &str) -> Option<CampaignSpec> {
         match name {
@@ -227,6 +269,7 @@ impl CampaignSpec {
             "smoke" => Some(CampaignSpec::smoke()),
             "stress-suite" => Some(CampaignSpec::stress_suite()),
             "bb-sweep" => Some(CampaignSpec::bb_sweep()),
+            "plan-perf" => Some(CampaignSpec::plan_perf()),
             _ => None,
         }
     }
@@ -244,6 +287,9 @@ impl CampaignSpec {
         let mut estimates: Option<Vec<EstimateModel>> = None;
         let mut bb_archs: Option<Vec<BbArch>> = None;
         let mut bb_factors: Vec<f64> = vec![1.0];
+        let mut plan_windows: Option<Vec<usize>> = None;
+        let mut sim_plan_window: Option<usize> = None;
+        let mut timeout_s: Option<f64> = None;
         let mut io_enabled = true;
         let mut plan_warm_start = false;
         let mut backend_name = "exact".to_string();
@@ -300,6 +346,18 @@ impl CampaignSpec {
                     name = value.to_string();
                 }
                 ("campaign", "out-dir") => out_dir = Some(PathBuf::from(value)),
+                ("campaign", "timeout-s") => {
+                    let v: f64 = value.parse().map_err(|_| {
+                        SpecError::at(ln, format!("invalid timeout-s `{value}`"))
+                    })?;
+                    if !v.is_finite() || v <= 0.0 {
+                        return Err(SpecError::at(
+                            ln,
+                            format!("timeout-s must be positive, got `{value}`"),
+                        ));
+                    }
+                    timeout_s = Some(v);
+                }
                 ("grid", "policies") => {
                     policies = parse_list(ln, key, value, |s| {
                         Policy::parse(s).ok_or_else(|| format!("unknown policy `{s}`"))
@@ -325,6 +383,16 @@ impl CampaignSpec {
                     bb_archs = Some(parse_list(ln, key, value, |s| {
                         BbArch::parse(s)
                             .ok_or_else(|| format!("unknown bb-arch `{s}` (shared|per-node)"))
+                    })?);
+                }
+                ("grid", "plan-windows") => {
+                    plan_windows = Some(parse_list(ln, key, value, |s| {
+                        s.parse::<usize>().map_err(|_| format!("invalid plan-window `{s}`"))
+                    })?);
+                }
+                ("sim", "plan-window") => {
+                    sim_plan_window = Some(value.parse::<usize>().map_err(|_| {
+                        SpecError::at(ln, format!("invalid plan-window `{value}`"))
                     })?);
                 }
                 ("grid", "bb-factors") => {
@@ -389,6 +457,12 @@ impl CampaignSpec {
                 "[grid] swfs (legacy) and [workload] families are mutually exclusive",
             ));
         }
+        if plan_windows.is_some() && sim_plan_window.is_some() {
+            return Err(SpecError::at(
+                0,
+                "[grid] plan-windows (axis) and [sim] plan-window (scalar) are mutually exclusive",
+            ));
+        }
         let families = match (families, swfs) {
             (Some(f), None) => f,
             (None, Some(paths)) => {
@@ -413,6 +487,10 @@ impl CampaignSpec {
             estimates: estimates.unwrap_or_else(|| vec![EstimateModel::Paper]),
             bb_archs: bb_archs.unwrap_or_else(|| vec![BbArch::Shared]),
             bb_factors,
+            plan_windows: plan_windows
+                .or_else(|| sim_plan_window.map(|w| vec![w]))
+                .unwrap_or_else(|| vec![0]),
+            timeout_s,
             io_enabled,
             plan_backend,
             plan_warm_start,
@@ -426,7 +504,11 @@ impl CampaignSpec {
         let mut s = String::new();
         s.push_str("[campaign]\n");
         s.push_str(&format!("name = {}\n", self.name));
-        s.push_str(&format!("out-dir = {}\n\n", self.out_dir.display()));
+        s.push_str(&format!("out-dir = {}\n", self.out_dir.display()));
+        if let Some(t) = self.timeout_s {
+            s.push_str(&format!("timeout-s = {t}\n"));
+        }
+        s.push('\n');
         s.push_str("[grid]\n");
         s.push_str(&format!(
             "policies = {}\n",
@@ -437,9 +519,16 @@ impl CampaignSpec {
             list(self.seeds.iter().map(|v| v.to_string()).collect())
         ));
         s.push_str(&format!(
-            "bb-factors = {}\n\n",
+            "bb-factors = {}\n",
             list(self.bb_factors.iter().map(|v| v.to_string()).collect())
         ));
+        if self.plan_windows != [0] {
+            s.push_str(&format!(
+                "plan-windows = {}\n",
+                list(self.plan_windows.iter().map(|v| v.to_string()).collect())
+            ));
+        }
+        s.push('\n');
         s.push_str("[workload]\n");
         s.push_str(&format!(
             "families = {}\n",
@@ -491,9 +580,22 @@ impl CampaignSpec {
         out
     }
 
+    /// The window values a policy actually sweeps: only plan policies
+    /// read the knob, so every other policy gets the single unwindowed
+    /// cell instead of byte-identical duplicates per window.
+    fn windows_for(&self, policy: Policy) -> &[usize] {
+        if matches!(policy, Policy::Plan(_)) {
+            &self.plan_windows
+        } else {
+            &[0]
+        }
+    }
+
     /// The grid size (`enumerate().len()` without materialising it).
     pub fn n_runs(&self) -> usize {
-        self.policies.len()
+        let window_cells: usize =
+            self.policies.iter().map(|&p| self.windows_for(p).len()).sum();
+        window_cells
             * self.seeds.len()
             * self.families.len()
             * self.scales.len()
@@ -504,7 +606,8 @@ impl CampaignSpec {
 
     /// Materialise the run list in the deterministic enumeration order:
     /// policy (outermost), seed, workload (family, scale, estimate),
-    /// bb-arch, bb-factor (innermost).
+    /// bb-arch, bb-factor, plan-window (innermost; non-plan policies
+    /// get the single `0` cell regardless of the axis).
     pub fn enumerate(&self) -> Vec<RunSpec> {
         let workloads = self.workloads();
         let mut runs = Vec::with_capacity(self.n_runs());
@@ -513,14 +616,17 @@ impl CampaignSpec {
                 for workload in &workloads {
                     for &bb_arch in &self.bb_archs {
                         for &bb_factor in &self.bb_factors {
-                            runs.push(RunSpec {
-                                index: runs.len(),
-                                policy,
-                                seed,
-                                workload: workload.clone(),
-                                bb_arch,
-                                bb_factor,
-                            });
+                            for &plan_window in self.windows_for(policy) {
+                                runs.push(RunSpec {
+                                    index: runs.len(),
+                                    policy,
+                                    seed,
+                                    workload: workload.clone(),
+                                    bb_arch,
+                                    bb_factor,
+                                    plan_window,
+                                });
+                            }
                         }
                     }
                 }
@@ -665,6 +771,86 @@ t-slots = 128
         let reparsed = CampaignSpec::parse(&spec.to_text()).unwrap();
         assert_eq!(spec, reparsed);
         assert!(!CampaignSpec::smoke().plan_warm_start);
+    }
+
+    #[test]
+    fn plan_window_axis_scalar_and_conflicts() {
+        // Axis form: a real grid dimension, innermost in enumeration.
+        let spec = CampaignSpec::parse(
+            "[grid]\npolicies = plan-2\nscales = 0.01\nplan-windows = 0, 32\n",
+        )
+        .unwrap();
+        assert_eq!(spec.plan_windows, vec![0, 32]);
+        assert_eq!(spec.n_runs(), 2);
+        let labels: Vec<String> = spec.enumerate().iter().map(|r| r.label()).collect();
+        assert_eq!(labels, vec!["plan-2+s1+x0.01+bb1", "plan-2+s1+x0.01+bb1+w32"]);
+        let reparsed = CampaignSpec::parse(&spec.to_text()).unwrap();
+        assert_eq!(spec, reparsed);
+        // Scalar form: one window for the whole campaign.
+        let spec =
+            CampaignSpec::parse("[grid]\npolicies = plan-2\n[sim]\nplan-window = 16\n").unwrap();
+        assert_eq!(spec.plan_windows, vec![16]);
+        // Both at once is an error, like the legacy scale conflicts.
+        let err = CampaignSpec::parse(
+            "[grid]\npolicies = plan-2\nplan-windows = 8\n[sim]\nplan-window = 16\n",
+        )
+        .unwrap_err();
+        assert!(err.msg.contains("mutually exclusive"), "{err}");
+        // Bad values are line-anchored errors.
+        let err =
+            CampaignSpec::parse("[grid]\npolicies = plan-2\nplan-windows = minus\n").unwrap_err();
+        assert_eq!(err.line, 3);
+    }
+
+    #[test]
+    fn plan_window_axis_does_not_multiply_non_plan_policies() {
+        // fcfs ignores the knob, so it gets one (unwindowed) cell while
+        // plan-2 sweeps the axis — no byte-identical duplicate runs.
+        let spec = CampaignSpec::parse(
+            "[grid]\npolicies = fcfs, plan-2\nscales = 0.01\nplan-windows = 0, 32\n",
+        )
+        .unwrap();
+        assert_eq!(spec.n_runs(), 1 + 2);
+        let runs = spec.enumerate();
+        assert_eq!(runs.len(), spec.n_runs());
+        let labels: Vec<String> = runs.iter().map(|r| r.label()).collect();
+        assert_eq!(
+            labels,
+            vec!["fcfs+s1+x0.01+bb1", "plan-2+s1+x0.01+bb1", "plan-2+s1+x0.01+bb1+w32"]
+        );
+        for (i, r) in runs.iter().enumerate() {
+            assert_eq!(r.index, i);
+        }
+    }
+
+    #[test]
+    fn timeout_parses_and_rejects_nonpositive() {
+        let spec = CampaignSpec::parse(
+            "[campaign]\ntimeout-s = 2.5\n[grid]\npolicies = fcfs\n",
+        )
+        .unwrap();
+        assert_eq!(spec.timeout_s, Some(2.5));
+        let reparsed = CampaignSpec::parse(&spec.to_text()).unwrap();
+        assert_eq!(spec, reparsed);
+        for bad in ["0", "-1", "nan", "soon"] {
+            let text = format!("[campaign]\ntimeout-s = {bad}\n[grid]\npolicies = fcfs\n");
+            let err = CampaignSpec::parse(&text).unwrap_err();
+            assert_eq!(err.line, 2, "timeout-s = {bad}");
+        }
+        assert_eq!(CampaignSpec::smoke().timeout_s, None);
+    }
+
+    #[test]
+    fn plan_perf_builtin_ablates_window_and_warm_start() {
+        let spec = CampaignSpec::builtin("plan-perf").unwrap();
+        assert!(spec.plan_warm_start);
+        assert!(spec.plan_windows.contains(&0) && spec.plan_windows.iter().any(|&w| w > 0));
+        assert!(spec.families.len() >= 2, "needs paper + storm");
+        let runs = spec.enumerate();
+        assert_eq!(runs.len(), spec.n_runs());
+        // Windowed and unwindowed variants of the same cell both appear.
+        assert!(runs.iter().any(|r| r.plan_window == 0));
+        assert!(runs.iter().any(|r| r.plan_window > 0));
     }
 
     #[test]

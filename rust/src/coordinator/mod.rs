@@ -33,6 +33,10 @@ pub struct SchedOpts {
     /// Plan policies: disable the exact scorer's prefix cache (perf
     /// baseline; behaviour-identical).
     pub plan_cold_scoring: bool,
+    /// Plan policies: queue window `W` (0 = off) — optimise only the
+    /// first `W` queued jobs and append the tail greedily
+    /// ([`crate::sched::plan::window`]).
+    pub plan_window: usize,
 }
 
 /// Instantiate a scheduler for a policy (default options).
@@ -62,7 +66,8 @@ pub fn make_scheduler_opts(
         Policy::Plan(alpha) => {
             let sched = PlanSched::new(alpha as f64, seed)
                 .with_warm_start(opts.plan_warm_start)
-                .with_cold_scoring(opts.plan_cold_scoring);
+                .with_cold_scoring(opts.plan_cold_scoring)
+                .with_window(opts.plan_window);
             let sched = match plan_backend {
                 PlanBackendKind::Exact => sched,
                 PlanBackendKind::Discrete { t_slots } => {

@@ -43,7 +43,18 @@
 //!   every-invocation equality assertion; `tests/parity.rs` proves all
 //!   policies fingerprint-identical across modes, and
 //!   `benches/sched_bench.rs` emits `BENCH_sched.json` with the
-//!   per-policy `sched_wall` trajectory.
+//!   per-policy `sched_wall` trajectory (enforced by the CI
+//!   `bench-gate` job against the committed baseline).
+//!
+//! Plan-optimisation hot path ([`sched::plan`]):
+//! - Delta scoring — SA neighbour moves re-score from their first
+//!   changed position through the
+//!   [`sched::plan::PermScorer::score_proposal`] /
+//!   [`sched::plan::PermScorer::note_incumbent`] protocol, with
+//!   `ExactScorer::cold` kept as the bit-exactness oracle.
+//! - Opt-in cost knobs that change trajectories: warm start
+//!   (`--plan-warm-start`) and queue windowing ([`sched::plan::window`],
+//!   `--plan-window` / campaign `plan-windows` axis).
 
 pub mod campaign;
 pub mod coordinator;

@@ -157,7 +157,11 @@ fn cmd_simulate(args: &Args) {
         cfg.io_enabled
     );
     let t0 = std::time::Instant::now();
-    let opts = SchedOpts { plan_warm_start: args.flag("plan-warm-start"), ..SchedOpts::default() };
+    let opts = SchedOpts {
+        plan_warm_start: args.flag("plan-warm-start"),
+        plan_window: args.usize("plan-window", 0),
+        ..SchedOpts::default()
+    };
     let res = run_policy_opts(jobs, policy, &cfg, args.u64("seed", 1), plan_backend(args), opts);
     let summary = bbsched::metrics::summary::summarize(&policy.name(), &res.records);
     if args.flag("json") {
@@ -360,6 +364,15 @@ fn cmd_campaign(args: &Args) -> i32 {
         spec.families = vec![Family::SwfReplay { path: PathBuf::from(path) }];
         spec.scales = vec![1.0];
     }
+    if let Some(v) = args.get("timeout-s") {
+        match v.parse::<f64>() {
+            Ok(t) if t.is_finite() && t > 0.0 => spec.timeout_s = Some(t),
+            _ => {
+                eprintln!("error: --timeout-s must be a positive number, got `{v}`");
+                return EXIT_SPEC_ERROR;
+            }
+        }
+    }
     let json = args.flag("json");
     let runs = spec.enumerate();
 
@@ -388,6 +401,7 @@ fn cmd_campaign(args: &Args) -> i32 {
                         r.workload.label(),
                         r.bb_arch.name().to_string(),
                         fmt_f(r.bb_factor),
+                        if r.plan_window > 0 { r.plan_window.to_string() } else { "-".into() },
                     ]
                 })
                 .collect();
@@ -395,7 +409,7 @@ fn cmd_campaign(args: &Args) -> i32 {
                 "{}",
                 render_table(
                     &format!("campaign `{}` (dry run, {} runs)", spec.name, runs.len()),
-                    &["run", "policy", "seed", "workload", "bb-arch", "bb-factor"],
+                    &["run", "policy", "seed", "workload", "bb-arch", "bb-factor", "window"],
                     &rows,
                 )
             );
@@ -709,14 +723,16 @@ fn main() {
                  \x20 --policy NAME    fcfs|fcfs-easy|filler|fcfs-bb|sjf-bb|plan-1|plan-2\n\
                  \x20 --plan-backend B exact|discrete|xla (SA scorer backend)\n\
                  \x20 --plan-warm-start seed the plan SA from the previous tick's plan\n\
+                 \x20 --plan-window W  optimise only the first W queued jobs, greedy tail (0 = off)\n\
                  \x20 --out-dir DIR    where eval writes figure CSVs (default results/)\n\
                  \x20 --no-parts       skip the 16-part Figs 11-12 pass\n\
                  \x20 --parts N --part-weeks W   split shape (default 16 x 3)\n\
                  \x20 --json           machine-readable output (simulate, campaign)\n\n\
                  campaign flags:\n\
                  \x20 --spec FILE      campaign spec ([campaign]/[grid]/[workload]/[scenario]/[sim])\n\
-                 \x20 --builtin NAME   paper-eval (default) | smoke | stress-suite | bb-sweep\n\
+                 \x20 --builtin NAME   paper-eval (default) | smoke | stress-suite | bb-sweep | plan-perf\n\
                  \x20 --jobs N         worker threads (default: all cores)\n\
+                 \x20 --timeout-s T    per-run wall-clock budget; overruns are marked failed\n\
                  \x20 --dry-run        enumerate the grid without simulating\n\
                  \x20 --quiet          suppress per-run progress on stderr\n\n\
                  exit codes: 0 = ok, 1 = some campaign run failed, 2 = spec/usage error"

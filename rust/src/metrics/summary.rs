@@ -19,6 +19,9 @@ pub struct PolicySummary {
     pub bsld_ci95: f64,
     /// Median waiting (hours) — plan-based may trade median for tail.
     pub median_wait_h: f64,
+    /// 95th-percentile waiting (hours) — the tail the per-scenario
+    /// aggregation reports alongside the mean.
+    pub p95_wait_h: f64,
     /// Maximum waiting time in hours (starvation indicator).
     pub max_wait_h: f64,
     pub makespan_h: f64,
@@ -44,6 +47,7 @@ pub fn summarize(policy: &str, records: &[JobRecord]) -> PolicySummary {
         mean_bsld: mean(&bslds),
         bsld_ci95: ci95_half_width(&bslds),
         median_wait_h: median,
+        p95_wait_h: crate::stats::descriptive::quantile_sorted(&sorted, 0.95),
         max_wait_h: sorted.last().copied().unwrap_or(0.0),
         makespan_h: makespan,
     }
@@ -80,6 +84,8 @@ mod tests {
         assert_eq!(s.n_jobs, 3);
         assert!((s.mean_wait_h - 1.0).abs() < 1e-9);
         assert!((s.median_wait_h - 1.0).abs() < 1e-9);
+        // Type-7 quantile on [0, 1, 2] at q=0.95: 1.9.
+        assert!((s.p95_wait_h - 1.9).abs() < 1e-9);
         assert!((s.max_wait_h - 2.0).abs() < 1e-9);
         assert!((s.makespan_h - 3.0).abs() < 1e-9);
         assert!(s.wait_ci95 > 0.0);

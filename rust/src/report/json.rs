@@ -122,6 +122,7 @@ pub fn summary_fields(
         .num_f("mean_bsld", s.mean_bsld)
         .num_f("bsld_ci95", s.bsld_ci95)
         .num_f("median_wait_h", s.median_wait_h)
+        .num_f("p95_wait_h", s.p95_wait_h)
         .num_f("max_wait_h", s.max_wait_h)
         .num_f("makespan_h", s.makespan_h)
 }

@@ -18,6 +18,10 @@ pub struct PolicyAgg {
     /// Means over the scenario's successful seeds.
     pub mean_wait_h: f64,
     pub mean_bsld: f64,
+    /// Tail view (ROADMAP's "means only" deferral): the seed-averaged
+    /// per-run p95 waiting time, and the worst single wait any seed saw.
+    pub p95_wait_h: f64,
+    pub max_wait_h: f64,
     /// Killed jobs summed over successful seeds.
     pub n_killed: usize,
 }
@@ -61,7 +65,14 @@ pub fn aggregate(outcomes: &[RunOutcome]) -> Vec<ScenarioGroup> {
             }
         };
         let policies = &mut groups[gi].1;
-        let policy = o.run.policy.name();
+        // A windowed plan run is a different configuration, not another
+        // seed of the same policy — keep it a separate aggregate row
+        // (unwindowed names stay unchanged).
+        let policy = if o.run.plan_window > 0 {
+            format!("{}+w{}", o.run.policy.name(), o.run.plan_window)
+        } else {
+            o.run.policy.name()
+        };
         match policies.iter_mut().find(|(p, _)| *p == policy) {
             Some((_, runs)) => runs.push(o),
             None => policies.push((policy, vec![o])),
@@ -88,6 +99,13 @@ pub fn aggregate(outcomes: &[RunOutcome]) -> Vec<ScenarioGroup> {
                         n_failed: runs.iter().filter(|o| !o.ok()).count(),
                         mean_wait_h: ok.iter().map(|s| s.mean_wait_h).sum::<f64>() / n,
                         mean_bsld: ok.iter().map(|s| s.mean_bsld).sum::<f64>() / n,
+                        p95_wait_h: ok.iter().map(|s| s.p95_wait_h).sum::<f64>() / n,
+                        // NaN when every seed failed, like the means —
+                        // a plain fold(max) would report a winning 0.0.
+                        max_wait_h: ok
+                            .iter()
+                            .map(|s| s.max_wait_h)
+                            .fold(f64::NAN, |a, b| if a.is_nan() { b } else { a.max(b) }),
                         n_killed: ok.iter().map(|s| s.n_killed).sum(),
                     }
                 })
@@ -110,13 +128,16 @@ pub fn render(groups: &[ScenarioGroup]) -> String {
                     format!("{}/{}", p.n_runs - p.n_failed, p.n_runs),
                     fmt_f(p.mean_wait_h),
                     fmt_f(p.mean_bsld),
+                    fmt_f(p.p95_wait_h),
+                    fmt_f(p.max_wait_h),
                     p.n_killed.to_string(),
                 ]
             })
             .collect();
         out.push_str(&render_table(
             &format!("scenario {} (* = best mean wait)", g.scenario),
-            &["policy", "ok", "mean wait [h]", "mean bsld", "killed"],
+            &["policy", "ok", "mean wait [h]", "mean bsld", "p95 wait [h]", "max wait [h]",
+              "killed"],
             &rows,
         ));
         out.push('\n');
@@ -126,19 +147,23 @@ pub fn render(groups: &[ScenarioGroup]) -> String {
 
 /// `scenario_summary.csv`: one row per (scenario, policy) aggregate.
 pub fn write_csv(path: &Path, groups: &[ScenarioGroup]) -> std::io::Result<()> {
-    let mut s =
-        String::from("scenario,policy,n_runs,n_failed,mean_wait_h,mean_bsld,n_killed,best\n");
+    let mut s = String::from(
+        "scenario,policy,n_runs,n_failed,mean_wait_h,mean_bsld,p95_wait_h,max_wait_h,\
+         n_killed,best\n",
+    );
     for g in groups {
         let best = g.best_policy().unwrap_or("").to_string();
         for p in &g.per_policy {
             s.push_str(&format!(
-                "{},{},{},{},{:.6},{:.6},{},{}\n",
+                "{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{}\n",
                 crate::report::csv::csv_escape(&g.scenario),
                 p.policy,
                 p.n_runs,
                 p.n_failed,
                 p.mean_wait_h,
                 p.mean_bsld,
+                p.p95_wait_h,
+                p.max_wait_h,
                 p.n_killed,
                 p.policy == best
             ));
@@ -172,7 +197,8 @@ mod tests {
                 mean_bsld: wait * 2.0,
                 bsld_ci95: 0.0,
                 median_wait_h: wait,
-                max_wait_h: wait,
+                p95_wait_h: wait * 3.0,
+                max_wait_h: wait * 4.0,
                 makespan_h: 1.0,
             }),
             fingerprint: 7,
@@ -202,13 +228,38 @@ mod tests {
         assert_eq!(g.per_policy.len(), 2);
         assert_eq!(g.per_policy[0].n_runs, 2);
         assert!((g.per_policy[0].mean_wait_h - 4.0).abs() < 1e-12);
+        // Tail columns: p95 is seed-averaged, max is the worst seed.
+        assert!((g.per_policy[0].p95_wait_h - 12.0).abs() < 1e-12);
+        assert!((g.per_policy[0].max_wait_h - 16.0).abs() < 1e-12);
         assert_eq!(g.best_policy(), Some("sjf-bb"));
         let csv_dir = std::env::temp_dir().join(format!("bbsched_scen_{}", std::process::id()));
         write_csv(&csv_dir.join("scenario_summary.csv"), &groups).unwrap();
         let text = std::fs::read_to_string(csv_dir.join("scenario_summary.csv")).unwrap();
+        let header = text.lines().next().unwrap();
+        assert_eq!(
+            header,
+            "scenario,policy,n_runs,n_failed,mean_wait_h,mean_bsld,p95_wait_h,max_wait_h,\
+             n_killed,best"
+        );
         assert!(text.contains("x0.01+bb1,sjf-bb,2,0,"));
+        assert!(text.contains("12.000000,16.000000"), "tail columns missing:\n{text}");
         assert!(text.contains(",true\n"));
         std::fs::remove_dir_all(&csv_dir).ok();
+    }
+
+    #[test]
+    fn windowed_plan_runs_aggregate_as_their_own_configuration() {
+        let spec = CampaignSpec::parse(
+            "[grid]\npolicies = plan-2\nscales = 0.01\nplan-windows = 0, 8\n",
+        )
+        .unwrap();
+        let outcomes: Vec<RunOutcome> =
+            spec.enumerate().iter().map(|r| outcome(r.clone(), 1.0, true)).collect();
+        let groups = aggregate(&outcomes);
+        assert_eq!(groups.len(), 1, "same scenario either way");
+        let names: Vec<&str> =
+            groups[0].per_policy.iter().map(|p| p.policy.as_str()).collect();
+        assert_eq!(names, vec!["plan-2", "plan-2+w8"]);
     }
 
     #[test]

@@ -11,6 +11,14 @@
 //! reproduces the paper), or the discretised batch scorer backed by the
 //! AOT-compiled XLA artifact (L1/L2 layers) for the accelerated path.
 //!
+//! Neighbour moves go through the delta-scoring protocol
+//! ([`PermScorer::score_proposal`] + [`PermScorer::note_incumbent`]):
+//! SA moves are swaps / single-job relocations of the incumbent, so a
+//! prefix-caching scorer re-scores only from the move's first changed
+//! position instead of replaying the whole plan. The protocol is
+//! score-transparent — backends must return bit-identical values either
+//! way — so trajectories and fingerprints are unchanged.
+//!
 //! Warm starting: `candidates` is an open set — the plan policy can
 //! append the previous tick's best ordering (surviving jobs first, new
 //! arrivals behind, see [`crate::sched::plan::PlanSched`]) so the search
@@ -28,6 +36,21 @@ pub trait PermScorer {
     /// execution per batch.
     fn score_batch(&mut self, perms: &[Vec<usize>]) -> Vec<f64> {
         perms.iter().map(|p| self.score(p)).collect()
+    }
+    /// Score a neighbour move derived from the current incumbent (set
+    /// via [`PermScorer::note_incumbent`]) without disturbing any
+    /// incumbent-anchored caches. Delta-scoring backends re-place only
+    /// from the first changed position; the default is a plain
+    /// [`PermScorer::score`]. Must return bit-identical scores either
+    /// way.
+    fn score_proposal(&mut self, perm: &[usize]) -> f64 {
+        self.score(perm)
+    }
+    /// Tell the scorer that `perm` is the new incumbent all subsequent
+    /// [`PermScorer::score_proposal`] calls derive from. Never counts as
+    /// an evaluation; the default is a no-op.
+    fn note_incumbent(&mut self, perm: &[usize]) {
+        let _ = perm;
     }
     /// Total single-permutation evaluations so far (ablation metric).
     fn evaluations(&self) -> u64;
@@ -140,6 +163,9 @@ pub fn optimise(
     let mut temp = s_worst - s_best; // Ben-Ameur-style initial temperature
     let mut p = p_best.clone();
     let mut s = s_best;
+    // Anchor delta-scoring backends at the starting incumbent so the
+    // first proposals already re-score only from their changed suffix.
+    scorer.note_incumbent(&p);
     for _ in 0..params.n_cooling {
         if params.batched {
             // Propose M neighbours of the current P, score them as one
@@ -154,13 +180,17 @@ pub fn optimise(
                     p_new, s_new, &mut p, &mut s, &mut p_best, &mut s_best, temp, rng,
                 );
             }
+            scorer.note_incumbent(&p);
         } else {
             for _ in 0..params.m_const {
                 let p_new = random_swap(&p, rng);
-                let s_new = scorer.score(&p_new);
-                accept(
+                let s_new = scorer.score_proposal(&p_new);
+                let accepted = accept(
                     p_new, s_new, &mut p, &mut s, &mut p_best, &mut s_best, temp, rng,
                 );
+                if accepted {
+                    scorer.note_incumbent(&p);
+                }
             }
         }
         temp *= params.cooling_rate;
@@ -173,7 +203,8 @@ pub fn optimise(
     }
 }
 
-/// The accept rule of Algorithm 2 lines 16-20.
+/// The accept rule of Algorithm 2 lines 16-20. Returns whether `p_new`
+/// replaced the incumbent (so delta-scoring callers re-anchor).
 #[allow(clippy::too_many_arguments)]
 fn accept(
     p_new: Vec<usize>,
@@ -184,15 +215,19 @@ fn accept(
     s_best: &mut f64,
     temp: f64,
     rng: &mut Pcg32,
-) {
+) -> bool {
     if s_new < *s_best {
         *s_best = s_new;
         *p_best = p_new.clone();
         *s = s_new;
         *p = p_new;
+        true
     } else if s_new < *s || rng.f64() < ((*s - s_new) / temp).exp() {
         *s = s_new;
         *p = p_new;
+        true
+    } else {
+        false
     }
 }
 

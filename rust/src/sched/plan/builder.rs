@@ -158,7 +158,14 @@ mod tests {
         let via_profile = build_plan(&base, &jobs, &[0, 1], Time::ZERO, 1.0);
         let via_txn = {
             let mut txn = tl.txn();
-            build_plan_on(&mut txn, &jobs, &[0, 1], Time::ZERO, 1.0)
+            let first = build_plan_on(&mut txn, &jobs, &[0, 1], Time::ZERO, 1.0);
+            // One txn can evaluate several alternative plans: rollback
+            // restores the snapshot in place, so a rebuilt plan on the
+            // same txn matches a fresh one bit-for-bit.
+            txn.rollback();
+            let again = build_plan_on(&mut txn, &jobs, &[0, 1], Time::ZERO, 1.0);
+            assert_eq!(first, again);
+            again
         };
         assert_eq!(via_profile, via_txn);
         // The txn's tentative placements must have rolled back.

@@ -2,6 +2,15 @@
 //! nine criteria seeds the simulated annealing with a diverse population,
 //! from which the best/worst scores also set the initial temperature
 //! (Ben-Ameur 2004).
+//!
+//! The candidate set is open: the policy may append a warm-start
+//! permutation (the previous tick's plan) behind the nine sorts. Under
+//! queue windowing ([`crate::sched::plan::window`]) the candidates are
+//! generated over the window's job slice only — the tail is appended
+//! greedily after the search and never enters the candidate space.
+//! Candidate batches are scored in lexicographic order (see
+//! [`crate::sched::plan::ExactScorer::score_batch`]) so sorts that agree
+//! on a prefix share placements.
 
 use crate::sched::plan::builder::PlanJob;
 

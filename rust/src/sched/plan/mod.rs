@@ -12,6 +12,7 @@ pub mod builder;
 pub mod candidates;
 pub mod scheduler;
 pub mod scorer;
+pub mod window;
 pub mod zheng;
 
 pub use crate::sched::timeline::Profile;

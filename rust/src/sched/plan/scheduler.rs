@@ -66,6 +66,12 @@ pub struct PlanSched {
     /// Disable the exact scorer's prefix-checkpoint cache (perf-bench
     /// baseline; scores are bit-identical either way).
     pub cold_scoring: bool,
+    /// Queue window `W` (0 = off): optimise only the first `W` queued
+    /// jobs (FCFS base order) and append the rest greedily — see
+    /// [`crate::sched::plan::window`]. `W >= queue length` is exactly
+    /// the unwindowed path; a truncating window changes trajectories,
+    /// so, like warm start, it defaults off.
+    pub window: usize,
     rng: Pcg32,
     /// Memoisation: if neither the queue nor the running set changed
     /// since the last invocation, no new job can possibly start (free
@@ -88,6 +94,7 @@ impl PlanSched {
             backend: ScorerBackend::Exact,
             warm_start: false,
             cold_scoring: false,
+            window: 0,
             rng: Pcg32::seeded(seed),
             memo_key: 0,
             prev_best: Vec::new(),
@@ -112,6 +119,12 @@ impl PlanSched {
 
     pub fn with_cold_scoring(mut self, on: bool) -> PlanSched {
         self.cold_scoring = on;
+        self
+    }
+
+    /// Set the queue window `W` (0 disables windowing).
+    pub fn with_window(mut self, window: usize) -> PlanSched {
+        self.window = window;
         self
     }
 
@@ -268,22 +281,24 @@ impl Scheduler for PlanSched {
             self.invocations_memoised += 1;
             return vec![];
         }
-        let jobs: Vec<PlanJob> = view.queue.iter().map(PlanJob::from_request).collect();
+        // Queue windowing: only the first `w` jobs (FCFS base order)
+        // enter the SA search; `w == queue.len()` is the unwindowed
+        // path, bit-identical to pre-window behaviour.
+        let w = super::window::effective(self.window, view.queue.len());
+        let jobs: Vec<PlanJob> = view.queue[..w].iter().map(PlanJob::from_request).collect();
         // One O(breakpoints) snapshot of the shared timeline replaces the
         // per-invocation O(running · breakpoints) rebuild.
         let base = ctx.timeline().profile().clone();
-        // `jobs` is 1:1 with `view.queue`, so the ctx's precomputed
-        // id→queue-index map doubles as the warm-start lookup.
+        // The window is a queue prefix, so the ctx's precomputed
+        // id→queue-index map doubles as the warm-start lookup (indices
+        // past the window are new arrivals from the search's viewpoint).
         let warm = if self.warm_start {
-            self.warm_candidate_via(jobs.len(), |id| ctx.queue_index(id))
+            self.warm_candidate_via(jobs.len(), |id| ctx.queue_index(id).filter(|&i| i < w))
         } else {
             None
         };
         let outcome = self.optimise_candidates(&base, view.now, &jobs, warm);
         self.invocations_planned += 1;
-        if self.warm_start {
-            self.prev_best = outcome.perm.iter().map(|&pi| jobs[pi].id).collect();
-        }
 
         // Final plan is always exact, regardless of search backend:
         // built on the base snapshot we already own, so the planned
@@ -297,6 +312,26 @@ impl Scheduler for PlanSched {
             if plan.starts[pi] == view.now {
                 launches.push(jobs[pi].id);
             }
+        }
+        // Greedy tail: jobs past the window are placed in queue order on
+        // the profile already carrying the window plan's reservations.
+        let tail: Vec<PlanJob> = view.queue[w..].iter().map(PlanJob::from_request).collect();
+        let tail_starts = super::window::append_tail(&mut final_profile, &tail, view.now);
+        for (j, &t) in tail.iter().zip(&tail_starts) {
+            if t == view.now {
+                launches.push(j.id);
+            }
+        }
+        if self.warm_start {
+            // Remember the full plan order (window perm, then the greedy
+            // tail) so survivors seed the next tick even across window
+            // boundary shifts.
+            self.prev_best = outcome
+                .perm
+                .iter()
+                .map(|&pi| jobs[pi].id)
+                .chain(tail.iter().map(|j| j.id))
+                .collect();
         }
         // Remember the state *after* our launches: queue minus launches.
         // (Cheap recomputation: hash the surviving ids.)
@@ -472,6 +507,55 @@ mod tests {
             sorted.dedup();
             assert_eq!(sorted.len(), warm_jobs.len(), "warm candidate must be a permutation");
         }
+    }
+
+    #[test]
+    fn window_geq_queue_is_identical_and_truncating_window_stays_feasible() {
+        let q: Vec<JobRequest> =
+            (0..14).map(|i| req(i, 1 + (i % 5), (i as u64 % 4) * 12, 8 + i as u64, 0)).collect();
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(10, 60),
+            free: Resources::new(10, 60),
+            queue: &q,
+            running: &[],
+        };
+        // W >= queue length: same launches as no window (same RNG path).
+        let l_off = schedule_once(&mut PlanSched::new(2.0, 9), &view);
+        let l_big = schedule_once(&mut PlanSched::new(2.0, 9).with_window(64), &view);
+        assert_eq!(l_off, l_big);
+        // Truncating window: whatever launches must cumulatively fit,
+        // and gap-filling tail jobs may launch too.
+        let l_win = schedule_once(&mut PlanSched::new(2.0, 9).with_window(4), &view);
+        let mut free = Resources::new(10, 60);
+        for id in &l_win {
+            let j = q.iter().find(|j| j.id == *id).unwrap();
+            assert!(free.fits(&j.request()), "windowed launch oversubscribes");
+            free -= j.request();
+        }
+        assert!(!l_win.is_empty());
+    }
+
+    #[test]
+    fn windowed_tail_backfills_idle_resources() {
+        // Window of 1 traps the big head job; the tail's small job fits
+        // now and must launch greedily.
+        let q = [req(0, 8, 0, 30, 0), req(1, 1, 0, 5, 1)];
+        let running = [RunningInfo {
+            id: JobId(9),
+            req: Resources::new(3, 0),
+            expected_end: Time::from_secs(900),
+        }];
+        let view = SchedView {
+            now: Time::from_secs(60),
+            capacity: Resources::new(10, 10),
+            free: Resources::new(7, 10),
+            queue: &q,
+            running: &running,
+        };
+        let mut s = PlanSched::new(2.0, 1).with_window(1);
+        let l = schedule_once(&mut s, &view);
+        assert_eq!(l, vec![JobId(1)]);
     }
 
     #[test]

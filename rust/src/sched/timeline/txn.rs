@@ -68,6 +68,20 @@ impl<'a> TimelineTxn<'a> {
 
     // ----- tentative mutations -------------------------------------------
 
+    /// Roll every tentative reservation back to the open-time snapshot
+    /// *without* ending the transaction. A policy pass that evaluates
+    /// several alternative plans *on the shared timeline* (via
+    /// [`crate::sched::plan::builder::build_plan_on`], whose `PlaceOps`
+    /// is implemented for transactions) can reuse one transaction
+    /// across them instead of re-opening — and re-snapshotting — per
+    /// plan. (The SA hot path does NOT come through here: the exact
+    /// scorer's delta scoring runs on its own checkpoint profiles.)
+    /// Restoration is the same `O(breakpoints)` `reset_from` the drop
+    /// path uses, so the restored state is bit-identical.
+    pub fn rollback(&mut self) {
+        self.profile.reset_from(&self.saved);
+    }
+
     pub fn reserve(&mut self, at: Time, dur: Duration, req: Resources) {
         self.profile.reserve(at, dur, req);
     }
@@ -118,6 +132,28 @@ mod tests {
                 txn.reserve(at, d(40), req);
                 not_before = at;
             }
+        }
+        assert_eq!(p, snapshot);
+    }
+
+    #[test]
+    fn rollback_reuses_one_txn_across_tentative_plans() {
+        let mut p = Profile::flat(t(0), res(8, 100));
+        p.subtract(t(30), t(90), res(2, 10));
+        let snapshot = p.clone();
+        {
+            let mut txn = TimelineTxn::new(&mut p);
+            for round in 0..5u64 {
+                // A different tentative plan each round...
+                let at = txn.earliest_fit(res(4, 20), d(60), t(round * 7));
+                txn.reserve(at, d(60), res(4, 20));
+                txn.reserve(t(200 + round), d(10), res(1, 1));
+                // ...rolled back in place, bit-exactly.
+                txn.rollback();
+                assert_eq!(txn.free_at(t(0)), res(8, 100));
+            }
+            // Reservations after the last rollback still roll back on drop.
+            txn.reserve(t(0), d(10), res(8, 100));
         }
         assert_eq!(p, snapshot);
     }

@@ -188,3 +188,64 @@ fn run_labels_are_stable() {
     assert_eq!(runs[1].label(), "fcfs+s1+x0.002+bb1");
     assert_eq!(runs[4].label(), "fcfs-bb+s1+x0.002+bb0.75");
 }
+
+/// The per-run timeout contract: an overrunning run is marked failed
+/// (flipping the campaign exit code to 1) instead of wedging the pool,
+/// and the rest of the grid still executes.
+#[test]
+fn per_run_timeout_fails_the_run_not_the_campaign() {
+    let spec = CampaignSpec::parse(
+        "[campaign]\n\
+         name = budget\n\
+         timeout-s = 0.000001\n\
+         [grid]\n\
+         policies = fcfs, sjf-bb\n\
+         scales = 0.002\n\
+         [sim]\n\
+         io = false\n",
+    )
+    .unwrap();
+    let progress = Progress::quiet(spec.n_runs());
+    let result = run_campaign(&spec, 2, &progress, |_| {});
+    assert_eq!(result.outcomes.len(), 2, "every cell must still produce an outcome");
+    for o in &result.outcomes {
+        assert!(!o.ok());
+        assert!(o.error.as_deref().unwrap().contains("timeout"), "{:?}", o.error);
+    }
+    assert_eq!(exit_code(&result.outcomes), EXIT_RUN_FAILED);
+}
+
+/// The plan-window axis: windowed and unwindowed runs of the same cell
+/// coexist in one grid, stay deterministic across workers, and a
+/// window >= queue length leaves the fingerprint unchanged.
+#[test]
+fn plan_window_axis_runs_and_preserves_fingerprints_when_oversized() {
+    let spec = CampaignSpec::parse(
+        "[campaign]\n\
+         name = windowed\n\
+         [grid]\n\
+         policies = plan-2\n\
+         scales = 0.002\n\
+         plan-windows = 0, 4, 100000\n\
+         [sim]\n\
+         io = false\n",
+    )
+    .unwrap();
+    assert_eq!(spec.n_runs(), 3);
+    let run_with = |jobs: usize| -> Vec<String> {
+        let progress = Progress::quiet(spec.n_runs());
+        let result = run_campaign(&spec, jobs, &progress, |_| {});
+        assert_eq!(exit_code(&result.outcomes), EXIT_OK);
+        result.outcomes.iter().map(|o| o.deterministic_line()).collect()
+    };
+    let seq = run_with(1);
+    assert_eq!(seq, run_with(3), "windowed grid not deterministic across workers");
+    let fp = |line: &str| -> String {
+        let key = "\"fingerprint\":\"";
+        let at = line.find(key).unwrap() + key.len();
+        line[at..at + 16].to_string()
+    };
+    // plan-windows enumerate innermost in spec order: 0, 4, 100000.
+    assert_eq!(fp(&seq[0]), fp(&seq[2]), "oversized window must not change behaviour");
+    assert!(seq[1].contains("+w4"), "windowed label missing: {}", seq[1]);
+}

@@ -5,7 +5,7 @@
 //! random cases per property; any failure reports its seed so the case
 //! replays deterministically (set `BBSCHED_PROP_SEED` to rerun one).
 
-use bbsched::coordinator::{run_policy, PlanBackendKind};
+use bbsched::coordinator::{run_policy, run_policy_opts, PlanBackendKind, SchedOpts};
 use bbsched::core::job::{JobId, JobRequest};
 use bbsched::core::resources::Resources;
 use bbsched::core::time::{Duration, Time};
@@ -389,6 +389,108 @@ fn prop_incremental_timeline_matches_rebuild_under_scenarios() {
         };
         let res = run_policy(jobs, Policy::FcfsBb, &cfg, 3, PlanBackendKind::Exact);
         assert_eq!(res.records.len(), n_jobs, "{family:?}/{arch:?}");
+    }
+}
+
+/// PROPERTY: delta-scored SA is bit-identical to the cold scorer. Two
+/// layers: (a) a full `optimise` run with identical RNGs returns the
+/// same permutation, score bits and evaluation count whether the scorer
+/// caches or not; (b) over explicit random move sequences (swaps and
+/// single-job relocations with arbitrary accept interleavings), every
+/// proposal's delta score matches the cold oracle bit-for-bit.
+#[test]
+fn prop_delta_scoring_bit_identical_to_cold() {
+    for seed in seeds().into_iter().take(80) {
+        let mut rng = Pcg32::seeded(seed ^ 0xde17a);
+        let capacity = Resources::new(8 + rng.below(88), 1 + rng.next_u64() % (1 << 40));
+        let now = Time::from_secs(1_000);
+        let base = random_profile(&mut rng, capacity, now);
+        let n = 6 + rng.below(9) as usize; // always the SA path (n > 5)
+        let jobs = random_jobs(&mut rng, capacity, n);
+        let cands = initial_candidates(&jobs);
+
+        // (a) End-to-end: whole SA runs agree exactly.
+        let params = SaParams::default();
+        let mut delta_scorer = ExactScorer::new(&base, &jobs, now, 2.0);
+        let out_delta =
+            optimise(&mut delta_scorer, n, &cands, &params, &mut Pcg32::seeded(seed));
+        let mut cold_scorer = ExactScorer::cold(&base, &jobs, now, 2.0);
+        let out_cold =
+            optimise(&mut cold_scorer, n, &cands, &params, &mut Pcg32::seeded(seed));
+        assert_eq!(out_delta.perm, out_cold.perm, "seed {seed}: plans diverged");
+        assert_eq!(
+            out_delta.score.to_bits(),
+            out_cold.score.to_bits(),
+            "seed {seed}: scores diverged"
+        );
+        assert_eq!(out_delta.evaluations, out_cold.evaluations, "seed {seed}");
+
+        // (b) Explicit move sequences through the proposal protocol.
+        let mut delta = ExactScorer::new(&base, &jobs, now, 2.0);
+        let mut cold = ExactScorer::cold(&base, &jobs, now, 2.0);
+        let mut incumbent: Vec<usize> = (0..n).collect();
+        delta.note_incumbent(&incumbent);
+        for step in 0..40 {
+            let mut prop = incumbent.clone();
+            let i = rng.below(n as u32) as usize;
+            let j = rng.below(n as u32) as usize;
+            if rng.below(2) == 0 {
+                prop.swap(i, j);
+            } else {
+                let job = prop.remove(i);
+                prop.insert(j.min(prop.len()), job);
+            }
+            let a = delta.score_proposal(&prop);
+            let b = cold.score_proposal(&prop);
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "seed {seed} step {step}: proposal score diverged on {prop:?}"
+            );
+            if rng.below(2) == 0 {
+                incumbent = prop;
+                delta.note_incumbent(&incumbent);
+                cold.note_incumbent(&incumbent);
+            }
+        }
+        assert_eq!(delta.evaluations(), cold.evaluations(), "seed {seed}");
+    }
+}
+
+/// PROPERTY: a plan window >= the queue length is the unwindowed code
+/// path — whole-simulation fingerprints are identical — and a genuinely
+/// truncating window still yields a complete, feasible schedule (the
+/// simulator asserts launch feasibility internally).
+#[test]
+fn prop_window_geq_queue_is_identity() {
+    for family in [Family::PaperTwin, Family::ArrivalStorm { intensity: 4.0 }] {
+        let (jobs, bb_capacity) =
+            tiny_scenario(family.clone(), BbArch::Shared, EstimateModel::Paper)
+                .materialise(1)
+                .unwrap();
+        let n_jobs = jobs.len();
+        let cfg = SimConfig { bb_capacity, io_enabled: false, ..SimConfig::default() };
+        let run = |window: usize| {
+            run_policy_opts(
+                jobs.clone(),
+                Policy::Plan(2),
+                &cfg,
+                1,
+                PlanBackendKind::Exact,
+                SchedOpts { plan_window: window, ..SchedOpts::default() },
+            )
+        };
+        let off = run(0);
+        // Far past any queue length this tiny trace can reach.
+        let oversized = run(n_jobs + 10_000);
+        assert_eq!(
+            off.fingerprint(),
+            oversized.fingerprint(),
+            "{family:?}: oversized window changed behaviour"
+        );
+        // Truncating window: every job still completes.
+        let windowed = run(3);
+        assert_eq!(windowed.records.len(), n_jobs, "{family:?}: windowed run lost jobs");
     }
 }
 

@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""CI perf gate over BENCH_sched.json.
+
+Compares the current bench run against the committed baseline and fails
+(exit 1) when any benchmark's sched_wall mean regresses past the
+threshold. Contract details:
+
+- Baseline absent (or unreadable / empty results): skip with a notice
+  and exit 0 — the gate arms itself only once a real baseline is
+  committed (numbers must come from an actual bench run, never
+  fabricated).
+- Benchmarks are matched by `name`; names present on only one side are
+  reported but never fail the gate (the ablation sweep may grow).
+- Workload-size guard: every result's `note` carries `jobs=N`; entries
+  whose baseline and current job counts differ by more than 1.5x are
+  incomparable (e.g. a full-size baseline vs CI's `--quick` run) and
+  are skipped with a notice — commit the baseline from the same
+  `--quick` configuration CI runs to arm the gate for real.
+- Means below --min-s are ignored: quick-mode timings of trivially fast
+  policies are scheduler-noise, not signal.
+
+Usage:
+  bench_gate.py --baseline BENCH_sched.json \
+                --current  BENCH_sched.current.json \
+                [--threshold 1.25] [--min-s 0.05]
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+
+
+def load(path):
+    """name -> (mean_s, jobs-or-None) from a BENCH_*.json suite."""
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    out = {}
+    for r in doc.get("results", []):
+        m = re.search(r"\bjobs=(\d+)\b", r.get("note", ""))
+        out[r["name"]] = (float(r["mean_s"]), int(m.group(1)) if m else None)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=1.25,
+        help="fail when current mean > baseline mean * threshold",
+    )
+    ap.add_argument(
+        "--min-s",
+        type=float,
+        default=0.05,
+        help="ignore benchmarks whose baseline mean is below this (noise floor)",
+    )
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"bench-gate: no committed baseline at {args.baseline}; skipping gate")
+        print("bench-gate: commit a real bench run to arm the regression threshold")
+        return 0
+    try:
+        baseline = load(args.baseline)
+    except (json.JSONDecodeError, KeyError, ValueError) as e:
+        print(f"bench-gate: baseline {args.baseline} unreadable ({e}); skipping gate")
+        return 0
+    if not baseline:
+        print(f"bench-gate: baseline {args.baseline} has no results; skipping gate")
+        return 0
+    current = load(args.current)
+
+    regressions = []
+    compared = 0
+    for name in sorted(baseline):
+        base, base_jobs = baseline[name]
+        if name not in current:
+            print(f"bench-gate: {name}: missing from current run (skipped)")
+            continue
+        cur, cur_jobs = current[name]
+        if base_jobs and cur_jobs and not (1 / 1.5 <= cur_jobs / base_jobs <= 1.5):
+            print(
+                f"bench-gate: {name}: workload sizes differ (baseline jobs={base_jobs}, "
+                f"current jobs={cur_jobs}) — incomparable, skipped"
+            )
+            continue
+        if base < args.min_s:
+            print(f"bench-gate: {name}: baseline {base:.4f}s below noise floor (skipped)")
+            continue
+        ratio = cur / base if base > 0 else float("inf")
+        verdict = "REGRESSED" if ratio > args.threshold else "ok"
+        print(f"bench-gate: {name}: {base:.4f}s -> {cur:.4f}s ({ratio:.2f}x) {verdict}")
+        compared += 1
+        if ratio > args.threshold:
+            regressions.append((name, base, cur, ratio))
+    for name in sorted(set(current) - set(baseline)):
+        print(f"bench-gate: {name}: new benchmark, no baseline yet")
+    if compared == 0:
+        print(
+            "bench-gate: WARNING — no comparable benchmarks between baseline and current "
+            "(size-mismatched baseline?); the gate is NOT protecting anything. Commit a "
+            "baseline from the same --quick configuration CI runs."
+        )
+        return 0
+
+    if regressions:
+        print(
+            f"bench-gate: FAIL — {len(regressions)} benchmark(s) regressed past "
+            f"{args.threshold:.2f}x:"
+        )
+        for name, base, cur, ratio in regressions:
+            print(f"  {name}: {base:.4f}s -> {cur:.4f}s ({ratio:.2f}x)")
+        return 1
+    print("bench-gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
