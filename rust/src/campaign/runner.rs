@@ -114,6 +114,9 @@ fn simulate_cell(spec: &CampaignSpec, run: &RunSpec) -> Result<RunMetrics, Strin
         let (jobs, bb_capacity) = run.scenario().materialise(run.seed)?;
         let sim_cfg = SimConfig {
             bb_capacity,
+            // The per-node arch is a real allocator constraint, not just
+            // a workload transform — the simulator must know.
+            bb_placement: run.bb_arch.placement(),
             io_enabled: spec.io_enabled,
             tick: Duration::from_secs(spec.tick_s),
             ..SimConfig::default()

@@ -213,9 +213,12 @@ impl CampaignSpec {
     }
 
     /// The robustness tentpole: every synthetic workload family x two
-    /// estimate-quality regimes x both burst-buffer architectures, for
-    /// the three headline policies. The grid the scenario engine exists
-    /// to serve; scale it down via a spec file for CI.
+    /// estimate-quality regimes x all three burst-buffer architectures
+    /// (shared pool, real per-node placement, and the legacy per-node
+    /// clamp approximation — keeping both per-node variants makes the
+    /// approximation error itself a measurable column), for the three
+    /// headline policies. The grid the scenario engine exists to serve;
+    /// scale it down via a spec file for CI.
     pub fn stress_suite() -> CampaignSpec {
         CampaignSpec {
             policies: vec![Policy::FcfsBb, Policy::SjfBb, Policy::Plan(2)],
@@ -227,7 +230,7 @@ impl CampaignSpec {
             ],
             scales: vec![0.05],
             estimates: vec![EstimateModel::Paper, EstimateModel::Sloppy { factor: 4.0 }],
-            bb_archs: vec![BbArch::Shared, BbArch::PerNode],
+            bb_archs: vec![BbArch::Shared, BbArch::PerNode, BbArch::PerNodeClamp],
             ..CampaignSpec::base("stress-suite")
         }
     }
@@ -381,8 +384,9 @@ impl CampaignSpec {
                 }
                 ("scenario", "bb-archs") => {
                     bb_archs = Some(parse_list(ln, key, value, |s| {
-                        BbArch::parse(s)
-                            .ok_or_else(|| format!("unknown bb-arch `{s}` (shared|per-node)"))
+                        BbArch::parse(s).ok_or_else(|| {
+                            format!("unknown bb-arch `{s}` (shared|per-node|per-node-clamp)")
+                        })
                     })?);
                 }
                 ("grid", "plan-windows") => {
@@ -935,10 +939,34 @@ t-slots = 128
     }
 
     #[test]
+    fn all_three_bb_archs_parse_and_enumerate() {
+        let spec = CampaignSpec::parse(
+            "[grid]\npolicies = fcfs\nscales = 0.01\n\
+             [scenario]\nbb-archs = shared, per-node, per-node-clamp\n",
+        )
+        .unwrap();
+        assert_eq!(
+            spec.bb_archs,
+            vec![BbArch::Shared, BbArch::PerNode, BbArch::PerNodeClamp]
+        );
+        assert_eq!(spec.n_runs(), 3);
+        let labels: Vec<String> = spec.enumerate().iter().map(|r| r.label()).collect();
+        assert_eq!(
+            labels,
+            vec!["fcfs+s1+x0.01+bb1", "fcfs+s1+x0.01+pernode+bb1", "fcfs+s1+x0.01+pnclamp+bb1"]
+        );
+        let reparsed = CampaignSpec::parse(&spec.to_text()).unwrap();
+        assert_eq!(spec, reparsed);
+    }
+
+    #[test]
     fn stress_suite_covers_families_and_architectures() {
         let spec = CampaignSpec::stress_suite();
         assert!(spec.families.len() >= 4, "stress-suite must sweep >= 4 families");
-        assert!(spec.bb_archs.len() >= 2, "stress-suite must sweep >= 2 architectures");
+        assert!(
+            spec.bb_archs.len() >= 3,
+            "stress-suite must sweep shared + both per-node variants"
+        );
         assert!(spec.estimates.len() >= 2);
         let runs = spec.enumerate();
         assert_eq!(runs.len(), spec.n_runs());

@@ -23,8 +23,23 @@
 //! - [`workload::scenario`]: the composable scenario engine — workload
 //!   families (paper twin, arrival storms, I/O mixes, heavy-tailed BB,
 //!   SWF replay), walltime-estimate models (exact → x10-sloppy) and
-//!   burst-buffer architectures ([`platform::BbArch`]: shared pool vs
-//!   per-node), all materialised deterministically from a seed.
+//!   burst-buffer architectures ([`platform::BbArch`]: shared pool,
+//!   per-node *placement*, legacy per-node clamp), all materialised
+//!   deterministically from a seed.
+//! - [`platform::placement`]: locality-aware per-node burst-buffer
+//!   placement — a [`platform::Placement`] policy on the pool (a job's
+//!   bytes are carved into per-group demands co-located with its
+//!   compute allocation; group-local exhaustion fails allocation even
+//!   when aggregate free bytes suffice), a shared group-selection rule
+//!   ([`platform::placement::choose_groups`]) so the scheduler-side
+//!   [`platform::PlaceProbe`] predicts the allocator exactly, and
+//!   per-group free-bytes timelines
+//!   ([`sched::timeline::GroupBbTimelines`]) behind the conservative
+//!   reservation probes (`earliest_fit_placed` / `reserve_placed`).
+//!   Policies gate every "launch now" decision through the probe
+//!   (`SchedCtx::try_place_now`), which is a no-op under the paper's
+//!   shared architecture — shared runs are bit-identical to the
+//!   placement-free engine.
 //!
 //! Scheduling data path (the `sched::timeline` subsystem):
 //! - [`sched::timeline::ResourceTimeline`] — one piecewise-constant

@@ -23,7 +23,7 @@ use bbsched::coordinator::{
 };
 use bbsched::core::job::Job;
 use bbsched::core::time::Duration;
-use bbsched::platform::{BbArch, PlatformSpec};
+use bbsched::platform::{BbArch, Placement, PlatformSpec};
 use bbsched::report::csv;
 use bbsched::report::json::{summary_fields, JsonObject};
 use bbsched::report::{fmt_f, render_table, scenario as scenario_report};
@@ -98,7 +98,7 @@ fn scenario_from_args(args: &Args) -> (WorkloadSpec, PlatformSpec) {
     let estimate = EstimateModel::parse(args.get("estimate").unwrap_or("paper"))
         .unwrap_or_else(|e| usage_fail(&e));
     let bb_arch = BbArch::parse(args.get("bb-arch").unwrap_or("shared"))
-        .unwrap_or_else(|| usage_fail("unknown --bb-arch (shared|per-node)"));
+        .unwrap_or_else(|| usage_fail("unknown --bb-arch (shared|per-node|per-node-clamp)"));
     let workload = WorkloadSpec { family, scale: args.f64("scale", 1.0), estimate };
     // Burst-buffer pressure knob: scales the paper's capacity rule
     // (capacity = expected demand at full load). The METACENTRUM fit the
@@ -107,11 +107,12 @@ fn scenario_from_args(args: &Args) -> (WorkloadSpec, PlatformSpec) {
     (workload, platform)
 }
 
-fn load_workload(args: &Args) -> (Vec<Job>, u64) {
+/// (jobs, bb capacity, placement mode the simulator must run with).
+fn load_workload(args: &Args) -> (Vec<Job>, u64, Placement) {
     let seed = args.u64("seed", 1);
     let (workload, platform) = scenario_from_args(args);
     match load_scenario(&workload, &platform, seed) {
-        Ok(out) => out,
+        Ok((jobs, cap)) => (jobs, cap, platform.bb_arch.placement()),
         Err(e) => {
             eprintln!("error: {e}");
             std::process::exit(EXIT_SPEC_ERROR);
@@ -119,7 +120,7 @@ fn load_workload(args: &Args) -> (Vec<Job>, u64) {
     }
 }
 
-fn sim_config(args: &Args, bb_capacity: u64) -> SimConfig {
+fn sim_config(args: &Args, bb_capacity: u64, bb_placement: Placement) -> SimConfig {
     let tick_s = args.u64("tick-s", 60);
     if tick_s == 0 {
         // A zero tick re-queues the scheduler at the same instant
@@ -128,6 +129,7 @@ fn sim_config(args: &Args, bb_capacity: u64) -> SimConfig {
     }
     SimConfig {
         bb_capacity,
+        bb_placement,
         io_enabled: !args.flag("no-io"),
         tick: Duration::from_secs(tick_s),
         record_gantt: args.flag("gantt") || args.get("gantt-out").is_some(),
@@ -147,8 +149,8 @@ fn plan_backend(args: &Args) -> PlanBackendKind {
 fn cmd_simulate(args: &Args) {
     let policy = Policy::parse(args.get("policy").unwrap_or("sjf-bb"))
         .expect("unknown policy (fcfs|fcfs-easy|filler|fcfs-bb|sjf-bb|plan-N)");
-    let (jobs, bb_capacity) = load_workload(args);
-    let cfg = sim_config(args, bb_capacity);
+    let (jobs, bb_capacity, placement) = load_workload(args);
+    let cfg = sim_config(args, bb_capacity, placement);
     eprintln!(
         "simulating {} jobs under {} (bb capacity {:.1} GiB, io={})",
         jobs.len(),
@@ -209,8 +211,8 @@ fn cmd_simulate(args: &Args) {
 }
 
 fn cmd_eval(args: &Args) {
-    let (jobs, bb_capacity) = load_workload(args);
-    let cfg = sim_config(args, bb_capacity);
+    let (jobs, bb_capacity, placement) = load_workload(args);
+    let cfg = sim_config(args, bb_capacity, placement);
     let out_dir = PathBuf::from(args.get("out-dir").unwrap_or("results"));
     let policies: Vec<Policy> = match args.get("policies") {
         Some(list) => list
@@ -530,10 +532,10 @@ fn cmd_campaign(args: &Args) -> i32 {
 
 fn cmd_gantt(args: &Args) {
     let policy = Policy::parse(args.get("policy").unwrap_or("fcfs-easy")).expect("policy");
-    let (mut jobs, bb_capacity) = load_workload(args);
+    let (mut jobs, bb_capacity, placement) = load_workload(args);
     let first_n = args.usize("first-n", 3500);
     jobs.truncate(first_n);
-    let mut cfg = sim_config(args, bb_capacity);
+    let mut cfg = sim_config(args, bb_capacity, placement);
     cfg.record_gantt = true;
     let res = run_policy(jobs, policy, &cfg, args.u64("seed", 1), plan_backend(args));
     let out = args.get("out").unwrap_or("results/fig03_gantt.csv").to_string();
@@ -627,7 +629,7 @@ fn cmd_ablation(args: &Args) {
 }
 
 fn cmd_workload(args: &Args) {
-    let (jobs, bb_capacity) = load_workload(args);
+    let (jobs, bb_capacity, _placement) = load_workload(args);
     let procs: Vec<f64> = jobs.iter().map(|j| j.procs as f64).collect();
     let bb_pp: Vec<f64> = jobs
         .iter()
@@ -717,7 +719,7 @@ fn main() {
                  \x20 --swf PATH       use a real SWF log instead of the synthetic twin\n\
                  \x20 --family SPEC    workload family: paper|storm[:K]|io-mix[:K]|heavy-tail[:S]\n\
                  \x20 --estimate E     walltime estimates: paper|exact|xK (e.g. x10)\n\
-                 \x20 --bb-arch A      burst-buffer architecture: shared|per-node\n\
+                 \x20 --bb-arch A      burst-buffer arch: shared|per-node|per-node-clamp\n\
                  \x20 --no-io          disable I/O side effects (pure scheduling)\n\
                  \x20 --tick-s N       scheduler tick period in seconds (default 60)\n\
                  \x20 --policy NAME    fcfs|fcfs-easy|filler|fcfs-bb|sjf-bb|plan-1|plan-2\n\

@@ -1,13 +1,19 @@
-//! Shared burst-buffer storage manager.
+//! Burst-buffer storage manager.
 //!
 //! Total capacity is split evenly across the storage nodes (the paper:
-//! "We divide this capacity equally among the storage nodes"). A job's
-//! burst-buffer request is *striped* across storage nodes, preferring
-//! nodes with the most free space (balances load and keeps per-node
-//! spill-over rare), with ties broken by locality to the job's compute
-//! allocation.
+//! "We divide this capacity equally among the storage nodes"). Under the
+//! default [`Placement::Striped`] policy a job's request is *striped*
+//! across storage nodes, preferring nodes with the most free space
+//! (balances load and keeps per-node spill-over rare), with ties broken
+//! by locality to the job's compute allocation — aggregate capacity is
+//! the only hard constraint. Under [`Placement::PerNode`] the request
+//! arrives pre-carved into per-group demands
+//! ([`crate::platform::placement::per_node_shares`]) and each demand
+//! must fit inside its group's storage nodes, so group-local exhaustion
+//! fails an allocation that aggregate free bytes would admit.
 
 use crate::core::job::JobId;
+use crate::platform::placement::{group_totals, Placement};
 use std::collections::HashMap;
 
 /// One slice of a job's burst-buffer allocation on one storage node.
@@ -32,14 +38,24 @@ struct StorageNode {
 #[derive(Debug)]
 pub struct BurstBufferPool {
     nodes: Vec<StorageNode>,
+    placement: Placement,
     allocations: HashMap<JobId, Vec<BbSlice>>,
 }
 
 impl BurstBufferPool {
     /// `storage` = (topology node id, group) per storage node;
     /// `total_capacity` bytes are divided equally (remainder to the first
-    /// nodes so the sum is exact).
+    /// nodes so the sum is exact). Placement defaults to the paper's
+    /// shared striping; see [`BurstBufferPool::with_placement`].
     pub fn new(storage: &[(usize, usize)], total_capacity: u64) -> BurstBufferPool {
+        BurstBufferPool::with_placement(storage, total_capacity, Placement::Striped)
+    }
+
+    pub fn with_placement(
+        storage: &[(usize, usize)],
+        total_capacity: u64,
+        placement: Placement,
+    ) -> BurstBufferPool {
         assert!(!storage.is_empty(), "no storage nodes");
         let n = storage.len() as u64;
         let base = total_capacity / n;
@@ -54,7 +70,11 @@ impl BurstBufferPool {
                 used: 0,
             })
             .collect();
-        BurstBufferPool { nodes, allocations: HashMap::new() }
+        BurstBufferPool { nodes, placement, allocations: HashMap::new() }
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
     }
 
     pub fn total_capacity(&self) -> u64 {
@@ -74,11 +94,106 @@ impl BurstBufferPool {
         self.nodes[idx].node_id
     }
 
-    /// Can `bytes` be allocated right now (aggregate check — striping
-    /// makes per-node fragmentation impossible unless a single slice
-    /// would exceed a node, which striping avoids by splitting)?
+    /// Can `bytes` be allocated right now under *striped* placement
+    /// (aggregate check — striping makes per-node fragmentation
+    /// impossible: any demand up to the aggregate free splits across
+    /// nodes)? Per-node placement instead asks
+    /// [`BurstBufferPool::can_allocate_grouped`] with carved demands.
     pub fn can_allocate(&self, bytes: u64) -> bool {
         self.total_free() >= bytes
+    }
+
+    /// Free bytes per storage *group*, sorted by group id. The
+    /// scheduler-side [`crate::platform::PlaceProbe`] snapshots this.
+    pub fn free_by_group(&self) -> Vec<(usize, u64)> {
+        group_totals(self.nodes.iter().map(|n| (n.group, n.capacity - n.used)))
+    }
+
+    /// Total capacity per storage group, sorted by group id (static).
+    pub fn group_capacities(&self) -> Vec<(usize, u64)> {
+        group_totals(self.nodes.iter().map(|n| (n.group, n.capacity)))
+    }
+
+    /// The smallest single group's capacity: the per-node-placement
+    /// schedulability bound (a job whose request exceeds it could be
+    /// forever unplaceable when its compute lands in that group, so the
+    /// scenario engine clamps requests here).
+    pub fn min_group_capacity(&self) -> u64 {
+        self.group_capacities().iter().map(|&(_, c)| c).min().unwrap_or(0)
+    }
+
+    /// Can every `(group, bytes)` demand be carved from its group's
+    /// storage right now? Demands listing the same group more than once
+    /// are summed first, so the answer matches what
+    /// [`BurstBufferPool::allocate_grouped`] will actually carve.
+    pub fn can_allocate_grouped(&self, demands: &[(usize, u64)]) -> bool {
+        let free = self.free_by_group();
+        group_totals(demands.iter().copied()).iter().all(|&(g, bytes)| {
+            free.iter().find(|&&(fg, _)| fg == g).map(|&(_, f)| f).unwrap_or(0) >= bytes
+        })
+    }
+
+    /// Per-node placement: allocate each `(group, bytes)` demand from
+    /// storage nodes of that group only, striping most-free-first within
+    /// the group. All-or-nothing: on any group-local shortfall nothing
+    /// is left allocated and `None` is returned — the fragmentation
+    /// failure mode shared striping can never exhibit.
+    pub fn allocate_grouped(
+        &mut self,
+        job: JobId,
+        demands: &[(usize, u64)],
+    ) -> Option<Vec<BbSlice>> {
+        assert!(
+            !self.allocations.contains_key(&job),
+            "double burst-buffer allocation for {job}"
+        );
+        if !self.can_allocate_grouped(demands) {
+            return None;
+        }
+        // Normalise duplicate-group entries into one demand per group,
+        // matching the feasibility check above (all-or-nothing holds
+        // for any demand shape, not just the allocator's canonical
+        // sorted-unique form).
+        let demands = group_totals(demands.iter().copied());
+        let mut slices = Vec::new();
+        for &(group, bytes) in &demands {
+            if bytes == 0 {
+                continue;
+            }
+            let mut order: Vec<usize> = (0..self.nodes.len())
+                .filter(|&i| self.nodes[i].group == group)
+                .collect();
+            order.sort_by(|&a, &b| {
+                let fa = self.nodes[a].capacity - self.nodes[a].used;
+                let fb = self.nodes[b].capacity - self.nodes[b].used;
+                fb.cmp(&fa).then(a.cmp(&b))
+            });
+            let mut left = bytes;
+            for idx in order {
+                if left == 0 {
+                    break;
+                }
+                let free = self.nodes[idx].capacity - self.nodes[idx].used;
+                if free == 0 {
+                    continue;
+                }
+                let take = free.min(left);
+                self.nodes[idx].used += take;
+                slices.push(BbSlice { storage_idx: idx, bytes: take });
+                left -= take;
+            }
+            // can_allocate_grouped guaranteed the group-local fit.
+            debug_assert_eq!(left, 0, "group {group} shortfall despite feasibility check");
+        }
+        self.allocations.insert(job, slices.clone());
+        Some(slices)
+    }
+
+    /// Aggregate a slice list into per-group byte totals, sorted by
+    /// group id (what [`crate::platform::cluster::TimelineDelta`]
+    /// carries in per-node mode).
+    pub fn slices_by_group(&self, slices: &[BbSlice]) -> Vec<(usize, u64)> {
+        group_totals(slices.iter().map(|s| (self.nodes[s.storage_idx].group, s.bytes)))
     }
 
     /// Allocate `bytes` for `job`, preferring storage nodes in
@@ -163,9 +278,15 @@ impl BurstBufferPool {
 mod tests {
     use super::*;
 
+    /// 4 storage nodes in 2 groups, 400 bytes total => 100 each.
+    const STORAGE: [(usize, usize); 4] = [(10, 0), (20, 0), (30, 1), (40, 1)];
+
     fn pool() -> BurstBufferPool {
-        // 4 storage nodes in 2 groups, 400 bytes total => 100 each.
-        BurstBufferPool::new(&[(10, 0), (20, 0), (30, 1), (40, 1)], 400)
+        BurstBufferPool::new(&STORAGE, 400)
+    }
+
+    fn pernode_pool() -> BurstBufferPool {
+        BurstBufferPool::with_placement(&STORAGE, 400, Placement::PerNode)
     }
 
     #[test]
@@ -230,5 +351,65 @@ mod tests {
     fn double_free_panics() {
         let mut p = pool();
         p.free(JobId(9));
+    }
+
+    #[test]
+    fn group_views_are_sorted_and_exact() {
+        let p = pool();
+        assert_eq!(p.group_capacities(), vec![(0, 200), (1, 200)]);
+        assert_eq!(p.free_by_group(), vec![(0, 200), (1, 200)]);
+        assert_eq!(p.min_group_capacity(), 200);
+        // Remainder bytes land on the first nodes (group 0 here).
+        let q = BurstBufferPool::new(&[(0, 0), (1, 1), (2, 1)], 100);
+        assert_eq!(q.group_capacities(), vec![(0, 34), (1, 66)]);
+        assert_eq!(q.min_group_capacity(), 34);
+    }
+
+    #[test]
+    fn grouped_allocation_is_group_local() {
+        let mut p = pernode_pool();
+        assert_eq!(p.placement(), Placement::PerNode);
+        let s = p.allocate_grouped(JobId(1), &[(0, 150), (1, 30)]).unwrap();
+        assert_eq!(p.slices_by_group(&s), vec![(0, 150), (1, 30)]);
+        // Every slice sits in the demanded group.
+        assert_eq!(p.free_by_group(), vec![(0, 50), (1, 170)]);
+        p.free(JobId(1));
+        assert_eq!(p.free_by_group(), vec![(0, 200), (1, 200)]);
+    }
+
+    #[test]
+    fn grouped_allocation_fragments_all_or_nothing() {
+        let mut p = pernode_pool();
+        p.allocate_grouped(JobId(1), &[(0, 180)]).unwrap();
+        // Aggregate free is 220, but group 0 holds only 20: a demand of
+        // (0, 50)+(1, 10) must fail leaving no residue — fragmentation.
+        assert!(p.can_allocate(60));
+        assert!(!p.can_allocate_grouped(&[(0, 50), (1, 10)]));
+        assert!(p.allocate_grouped(JobId(2), &[(0, 50), (1, 10)]).is_none());
+        assert_eq!(p.free_by_group(), vec![(0, 20), (1, 200)]);
+        assert!(p.slices(JobId(2)).is_none());
+        // The same bytes fit when carved within group capacity.
+        assert!(p.allocate_grouped(JobId(2), &[(0, 20), (1, 40)]).is_some());
+    }
+
+    #[test]
+    fn grouped_duplicate_demands_are_summed() {
+        let mut p = pernode_pool();
+        // Each group holds 200 bytes: 120 + 100 on group 0 must be
+        // judged as 220 (> 200), not entry-by-entry.
+        assert!(!p.can_allocate_grouped(&[(0, 120), (0, 100)]));
+        assert!(p.allocate_grouped(JobId(1), &[(0, 120), (0, 100)]).is_none());
+        assert_eq!(p.total_free(), 400, "failed grouped alloc must leave no residue");
+        // Within capacity, the summed demand is carved in full.
+        let s = p.allocate_grouped(JobId(2), &[(0, 60), (0, 60)]).unwrap();
+        assert_eq!(s.iter().map(|sl| sl.bytes).sum::<u64>(), 120);
+        assert_eq!(p.slices_by_group(&s), vec![(0, 120)]);
+    }
+
+    #[test]
+    fn grouped_zero_demand_is_legal() {
+        let mut p = pool();
+        assert_eq!(p.allocate_grouped(JobId(7), &[]).unwrap(), vec![]);
+        p.free(JobId(7));
     }
 }

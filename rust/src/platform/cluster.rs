@@ -9,6 +9,9 @@
 use crate::core::job::JobId;
 use crate::core::resources::{ResourceDelta, Resources};
 use crate::platform::burst_buffer::{BbSlice, BurstBufferPool};
+use crate::platform::placement::{
+    choose_groups, group_totals, per_node_shares, PlaceProbe, Placement,
+};
 use crate::platform::topology::{NodeRole, Topology};
 use std::collections::HashMap;
 
@@ -17,10 +20,15 @@ use std::collections::HashMap;
 /// shared [`crate::sched::timeline::ResourceTimeline`] (the amounts come
 /// from the *actual* allocation, so the timeline can never drift from
 /// the cluster's own accounting).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TimelineDelta {
     pub job: JobId,
     pub delta: ResourceDelta,
+    /// Per-storage-group burst-buffer bytes the delta moves, sorted by
+    /// group id. Empty under shared striping (the aggregate in `delta`
+    /// is the whole story); in per-node placement mode it feeds the
+    /// timeline's per-group free-bytes profiles.
+    pub bb_groups: Vec<(usize, u64)>,
 }
 
 /// A job's physical allocation.
@@ -62,53 +70,53 @@ impl ComputePool {
         self.free_count
     }
 
-    /// Allocate `count` compute nodes for `job`. Locality policy:
-    /// 1. pick the group with the fewest free nodes still >= count
-    ///    (best fit keeps big holes available);
-    /// 2. otherwise take nodes from groups in descending free order
-    ///    (spreads the spill over the least-loaded groups).
-    /// Returns topology node ids, or `None` if not enough free nodes.
+    /// Free compute nodes per group, sorted by group id — the input of
+    /// [`choose_groups`] and the scheduler-side [`PlaceProbe`].
+    pub fn free_by_group(&self) -> Vec<(usize, u32)> {
+        group_totals(
+            self.nodes.iter().filter(|&&(_, _, busy)| !busy).map(|&(_, g, _)| (g, 1u32)),
+        )
+    }
+
+    /// Allocate `count` compute nodes for `job`. The locality policy
+    /// (best-fit single group, else spill largest-first) lives in
+    /// [`choose_groups`] so the scheduler-side probe predicts the same
+    /// decision. Returns topology node ids, or `None` if not enough
+    /// free nodes.
     pub fn allocate(&mut self, job: JobId, count: u32) -> Option<Vec<usize>> {
+        let plan = choose_groups(&self.free_by_group(), count)?;
+        Some(self.allocate_planned(job, &plan))
+    }
+
+    /// Realise a group plan previously chosen against the *current*
+    /// free state (per-node callers compute it once to carve the
+    /// burst-buffer demands, then hand it here instead of paying for a
+    /// second `choose_groups`). Panics if the plan does not match the
+    /// free state.
+    pub fn allocate_planned(&mut self, job: JobId, plan: &[(usize, u32)]) -> Vec<usize> {
         assert!(!self.by_job.contains_key(&job), "double node allocation for {job}");
-        if count == 0 || count > self.free_count {
-            return None;
-        }
-        // Free nodes per group.
-        let mut groups: HashMap<usize, Vec<usize>> = HashMap::new();
-        for (i, &(_, g, busy)) in self.nodes.iter().enumerate() {
-            if !busy {
-                groups.entry(g).or_default().push(i);
-            }
-        }
+        let count: u32 = plan.iter().map(|&(_, n)| n).sum();
         let mut picked: Vec<usize> = Vec::with_capacity(count as usize);
-        // Best-fit single group.
-        if let Some((_, idxs)) = groups
-            .iter()
-            .filter(|(_, v)| v.len() >= count as usize)
-            .min_by_key(|(g, v)| (v.len(), **g))
-        {
-            picked.extend(idxs.iter().take(count as usize));
-        } else {
-            // Spill: largest groups first.
-            let mut order: Vec<(&usize, &Vec<usize>)> = groups.iter().collect();
-            order.sort_by_key(|(g, v)| (std::cmp::Reverse(v.len()), **g));
-            for (_, idxs) in order {
-                for &i in idxs {
-                    if picked.len() == count as usize {
-                        break;
-                    }
+        for &(group, take) in plan {
+            let mut taken = 0u32;
+            for (i, &(_, g, busy)) in self.nodes.iter().enumerate() {
+                if taken == take {
+                    break;
+                }
+                if g == group && !busy {
                     picked.push(i);
+                    taken += 1;
                 }
             }
+            assert_eq!(taken, take, "group {group} short of free nodes for the plan");
         }
-        debug_assert_eq!(picked.len(), count as usize);
         for &i in &picked {
             self.nodes[i].2 = true;
         }
         self.free_count -= count;
         let node_ids: Vec<usize> = picked.iter().map(|&i| self.nodes[i].0).collect();
         self.by_job.insert(job, picked);
-        Some(node_ids)
+        node_ids
     }
 
     /// Free `job`'s nodes. Panics if it holds none.
@@ -151,7 +159,16 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// The paper's shared-pool platform (striped placement).
     pub fn new(topo: &Topology, bb_total_capacity: u64) -> Cluster {
+        Cluster::with_placement(topo, bb_total_capacity, Placement::Striped)
+    }
+
+    pub fn with_placement(
+        topo: &Topology,
+        bb_total_capacity: u64,
+        placement: Placement,
+    ) -> Cluster {
         let storage: Vec<(usize, usize)> = topo
             .nodes
             .iter()
@@ -160,10 +177,14 @@ impl Cluster {
             .collect();
         Cluster {
             compute: ComputePool::new(topo),
-            bb: BurstBufferPool::new(&storage, bb_total_capacity),
+            bb: BurstBufferPool::with_placement(&storage, bb_total_capacity, placement),
             allocations: HashMap::new(),
             deltas: Vec::new(),
         }
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.bb.placement()
     }
 
     pub fn capacity(&self) -> Resources {
@@ -174,20 +195,62 @@ impl Cluster {
         Resources { cpu: self.compute.free(), bb: self.bb.total_free() }
     }
 
+    /// Aggregate fit at `now`. Necessary in both placement modes;
+    /// sufficient only under shared striping — per-node mode must also
+    /// pass [`Cluster::can_place`].
     pub fn fits_now(&self, req: &Resources) -> bool {
         self.free().fits(req)
     }
 
+    /// A placement probe over the current free state — the exact mirror
+    /// of what [`Cluster::allocate`] would decide, at group granularity
+    /// (see [`PlaceProbe`]). Handed to schedulers each invocation.
+    pub fn probe(&self) -> PlaceProbe {
+        match self.placement() {
+            Placement::Striped => PlaceProbe::Shared,
+            Placement::PerNode => PlaceProbe::PerNode {
+                compute_free: self.compute.free_by_group(),
+                bb_free: self.bb.free_by_group(),
+            },
+        }
+    }
+
+    /// Full feasibility at `now`: aggregate fit plus (in per-node mode)
+    /// placement feasibility. Equals `fits_now` under shared striping.
+    pub fn can_place(&self, req: &Resources) -> bool {
+        self.fits_now(req) && self.probe().can_place(req)
+    }
+
     /// Atomically allocate both dimensions; either both succeed or
-    /// neither. Burst buffers are placed preferring the groups hosting
-    /// the job's compute nodes.
+    /// neither. Under shared striping, burst buffers are placed
+    /// preferring the groups hosting the job's compute nodes; under
+    /// per-node placement, the request is carved into per-group demands
+    /// co-located with the compute allocation
+    /// ([`per_node_shares`]), and any group-local shortfall fails the
+    /// whole allocation even when aggregate free bytes suffice.
     pub fn allocate(&mut self, job: JobId, req: &Resources) -> Option<&Allocation> {
         if !self.fits_now(req) {
             return None;
         }
-        let compute_nodes = self.compute.allocate(job, req.cpu)?;
-        let groups = self.compute.groups_of(&compute_nodes);
-        let bb_slices = match self.bb.allocate(job, req.bb, &groups) {
+        // Per-node mode chooses the group plan once: it both carves the
+        // bb demands and drives the compute allocation. Striped mode
+        // keeps the single-pass `allocate` path.
+        let (compute_nodes, demands) = match self.placement() {
+            Placement::Striped => (self.compute.allocate(job, req.cpu)?, None),
+            Placement::PerNode => {
+                let plan = choose_groups(&self.compute.free_by_group(), req.cpu)?;
+                let demands = per_node_shares(req.bb, &plan);
+                (self.compute.allocate_planned(job, &plan), Some(demands))
+            }
+        };
+        let bb_result = match demands {
+            None => {
+                let groups = self.compute.groups_of(&compute_nodes);
+                self.bb.allocate(job, req.bb, &groups)
+            }
+            Some(demands) => self.bb.allocate_grouped(job, &demands),
+        };
+        let bb_slices = match bb_result {
             Some(s) => s,
             None => {
                 self.compute.free_job(job);
@@ -198,7 +261,15 @@ impl Cluster {
             cpu: compute_nodes.len() as u32,
             bb: bb_slices.iter().map(|s| s.bytes).sum(),
         };
-        self.deltas.push(TimelineDelta { job, delta: ResourceDelta::acquire(held) });
+        let bb_groups = match self.placement() {
+            Placement::Striped => Vec::new(),
+            Placement::PerNode => self.bb.slices_by_group(&bb_slices),
+        };
+        self.deltas.push(TimelineDelta {
+            job,
+            delta: ResourceDelta::acquire(held),
+            bb_groups,
+        });
         self.allocations.insert(job, Allocation { job, compute_nodes, bb_slices });
         self.allocations.get(&job)
     }
@@ -208,13 +279,21 @@ impl Cluster {
             .allocations
             .remove(&job)
             .unwrap_or_else(|| panic!("releasing unallocated {job}"));
+        let bb_groups = match self.placement() {
+            Placement::Striped => Vec::new(),
+            Placement::PerNode => self.bb.slices_by_group(&alloc.bb_slices),
+        };
         self.compute.free_job(job);
         self.bb.free(job);
         let held = Resources {
             cpu: alloc.compute_nodes.len() as u32,
             bb: alloc.bb_slices.iter().map(|s| s.bytes).sum(),
         };
-        self.deltas.push(TimelineDelta { job, delta: ResourceDelta::release(held) });
+        self.deltas.push(TimelineDelta {
+            job,
+            delta: ResourceDelta::release(held),
+            bb_groups,
+        });
         alloc
     }
 
@@ -268,13 +347,27 @@ mod tests {
         let req = Resources::new(10, 500);
         c.allocate(JobId(1), &req).unwrap();
         let d = c.drain_deltas();
-        assert_eq!(d, vec![TimelineDelta { job: JobId(1), delta: ResourceDelta::acquire(req) }]);
+        assert_eq!(
+            d,
+            vec![TimelineDelta {
+                job: JobId(1),
+                delta: ResourceDelta::acquire(req),
+                bb_groups: vec![],
+            }]
+        );
         // A failed allocation (insufficient bb) emits nothing.
         assert!(c.allocate(JobId(2), &Resources::new(4, 1000)).is_none());
         assert!(c.drain_deltas().is_empty());
         c.release(JobId(1));
         let d = c.drain_deltas();
-        assert_eq!(d, vec![TimelineDelta { job: JobId(1), delta: ResourceDelta::release(req) }]);
+        assert_eq!(
+            d,
+            vec![TimelineDelta {
+                job: JobId(1),
+                delta: ResourceDelta::release(req),
+                bb_groups: vec![],
+            }]
+        );
         // Drained means drained.
         assert!(c.drain_deltas().is_empty());
     }
@@ -307,6 +400,87 @@ mod tests {
             alloc.compute_nodes.iter().map(|&n| topo.nodes[n].group).collect();
         assert!(groups.len() > 1);
         assert_eq!(c.free().cpu, 16);
+    }
+
+    /// Per-node placement on the paper topology: 3 groups x 32 compute
+    /// nodes, 4 storage nodes/group, 1200 bytes => 400 bytes per group.
+    fn pernode_cluster() -> Cluster {
+        let topo = Topology::build(TopologyConfig::default());
+        Cluster::with_placement(&topo, 1200, Placement::PerNode)
+    }
+
+    #[test]
+    fn pernode_aggregate_feasible_but_placement_infeasible() {
+        // The deterministic fragmentation regression: after one job
+        // drains most of group 0's storage, a second small job that the
+        // best-fit compute policy also sends to group 0 cannot place its
+        // bytes — even though aggregate free capacity is plentiful.
+        let mut c = pernode_cluster();
+        assert!(c.allocate(JobId(1), &Resources::new(4, 350)).is_some());
+        let d = c.drain_deltas();
+        assert_eq!(d[0].bb_groups, vec![(0, 350)], "slices must be group-0-local");
+        let req = Resources::new(4, 300);
+        assert!(c.fits_now(&req), "aggregate free (850) admits the request");
+        assert!(!c.can_place(&req), "group 0 holds only 50 free bytes");
+        assert!(c.allocate(JobId(2), &req).is_none());
+        assert!(c.drain_deltas().is_empty(), "failed allocation emits no delta");
+        assert_eq!(c.free().cpu, 92, "compute must not leak on placement failure");
+        // Releasing the hog makes the same request placeable again.
+        c.release(JobId(1));
+        assert!(c.can_place(&req));
+        assert!(c.allocate(JobId(2), &req).is_some());
+    }
+
+    #[test]
+    fn pernode_spilled_job_spreads_demand_across_groups() {
+        let mut c = pernode_cluster();
+        // 64 nodes spill over two 32-node groups; 600 bytes split evenly.
+        let alloc = c.allocate(JobId(1), &Resources::new(64, 600)).unwrap().clone();
+        assert_eq!(alloc.compute_nodes.len(), 64);
+        let d = c.drain_deltas();
+        let total: u64 = d[0].bb_groups.iter().map(|&(_, b)| b).sum();
+        assert_eq!(total, 600);
+        assert_eq!(d[0].bb_groups.len(), 2, "demand lands in the two compute groups");
+        for &(_, b) in &d[0].bb_groups {
+            assert!(b <= 400, "no group may exceed its 400-byte capacity");
+        }
+        c.release(JobId(1));
+        let d = c.drain_deltas();
+        assert_eq!(d[0].bb_groups.iter().map(|&(_, b)| b).sum::<u64>(), 600);
+    }
+
+    #[test]
+    fn probe_predicts_allocation_outcomes_exactly() {
+        // Sequentially: whatever the probe accepts must allocate, and
+        // whatever it rejects must fail — the contract the simulator's
+        // launch-time assertion relies on.
+        let mut c = pernode_cluster();
+        let mut probe = c.probe();
+        let reqs = [
+            Resources::new(4, 350),
+            Resources::new(4, 300), // fragmented out (group 0 drained)
+            Resources::new(30, 390),
+            Resources::new(30, 390),
+            Resources::new(30, 400), // no group has 400 free any more
+            Resources::new(2, 40),   // best fit sends it to a drained group
+            Resources::new(2, 10),   // ... but 10 bytes still fit there
+        ];
+        for (i, req) in reqs.iter().enumerate() {
+            let predicted = probe.try_place(req);
+            let actual = c.allocate(JobId(i as u32), req).is_some();
+            assert_eq!(predicted, actual, "probe diverged from allocator on job {i}");
+        }
+    }
+
+    #[test]
+    fn shared_placement_never_fragments() {
+        // The same fragmentation sequence under striping: everything
+        // that fits in aggregate allocates (pre-PR behaviour).
+        let mut c = cluster();
+        assert!(c.allocate(JobId(1), &Resources::new(4, 350)).is_some());
+        assert!(c.can_place(&Resources::new(4, 300)));
+        assert!(c.allocate(JobId(2), &Resources::new(4, 300)).is_some());
+        assert!(c.drain_deltas().iter().all(|d| d.bb_groups.is_empty()));
     }
 
     #[test]

@@ -3,21 +3,27 @@
 //! - [`topology`]: Dragonfly graph (nodes, routers, links, PFS).
 //! - [`routing`]: minimal-path routes with caching.
 //! - [`flows`]: fluid max-min-fair network model (I/O contention).
-//! - [`burst_buffer`]: shared burst-buffer pool with striping.
+//! - [`burst_buffer`]: burst-buffer pool (shared striping or per-node
+//!   placement).
+//! - [`placement`]: the locality-aware placement policy — group
+//!   selection, per-group demand carving, and the scheduler-side
+//!   [`PlaceProbe`].
 //! - [`cluster`]: compute-node allocation + aggregate resource view.
 //! - [`BbArch`]/[`PlatformSpec`]: the burst-buffer architecture axis the
-//!   scenario engine sweeps (the paper's shared pool vs a per-node
-//!   variant).
+//!   scenario engine sweeps (the paper's shared pool, a real per-node
+//!   placement platform, and the legacy request-clamp approximation).
 
 pub mod burst_buffer;
 pub mod cluster;
 pub mod flows;
+pub mod placement;
 pub mod routing;
 pub mod topology;
 
 pub use burst_buffer::{BbSlice, BurstBufferPool};
 pub use cluster::{Allocation, Cluster, ComputePool};
 pub use flows::{Flow, FlowId, FlowNetwork};
+pub use placement::{PlaceProbe, Placement};
 pub use routing::Router;
 pub use topology::{Link, LinkId, LinkKind, Node, NodeId, NodeRole, Topology, TopologyConfig};
 
@@ -27,29 +33,39 @@ pub use topology::{Link, LinkId, LinkKind, Node, NodeId, NodeRole, Topology, Top
 /// dedicated storage nodes, where any job may claim any fraction of the
 /// total capacity. Related work ("Scheduling Beyond CPUs", Kopanski's
 /// thesis) shows scheduler rankings shift when the buffer is node-local
-/// instead, so the scenario engine models both.
+/// instead, so the scenario engine models that too — as a real
+/// placement constraint in the allocator ([`BbArch::PerNode`]), with
+/// the earlier request-clamp approximation kept as
+/// [`BbArch::PerNodeClamp`] for comparison.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum BbArch {
     /// The paper's platform: one shared pool, any job can use any
     /// storage node (requests contend on aggregate capacity).
     #[default]
     Shared,
-    /// Node-local burst buffers (e.g. on-node NVMe): a job can only use
-    /// the buffers of the compute nodes it was allocated, so its usable
-    /// request is capped at `procs x per-node capacity` and the
-    /// aggregate capacity constraint can never bind beyond the node
-    /// allocation itself. Modelled by clamping each job's request at
-    /// workload materialisation (transfers still route through the
-    /// dedicated storage nodes — the fluid network is unchanged).
+    /// Per-node placement ([`Placement::PerNode`]): a job's request is
+    /// carved into per-compute-node slices that must live on storage
+    /// co-located with its compute allocation (same Dragonfly group).
+    /// Aggregate feasibility becomes necessary but not sufficient — a
+    /// job can fail to allocate from group-local fragmentation, which
+    /// is exactly the effect the clamp approximation hides.
     PerNode,
+    /// The legacy approximation (PR 3's `per-node`): the *workload
+    /// generator* clamps each request at `procs x per-node capacity`,
+    /// the platform stays a shared pool, and the allocator can never
+    /// fragment. Kept as a scenario token so the approximation error is
+    /// itself measurable.
+    PerNodeClamp,
 }
 
 impl BbArch {
-    /// Stable spec/CSV token (`bb-archs = shared, per-node`).
+    /// Stable spec/CSV token
+    /// (`bb-archs = shared, per-node, per-node-clamp`).
     pub fn name(&self) -> &'static str {
         match self {
             BbArch::Shared => "shared",
             BbArch::PerNode => "per-node",
+            BbArch::PerNodeClamp => "per-node-clamp",
         }
     }
 
@@ -57,6 +73,7 @@ impl BbArch {
         match s {
             "shared" => Some(BbArch::Shared),
             "per-node" | "pernode" => Some(BbArch::PerNode),
+            "per-node-clamp" | "pernode-clamp" => Some(BbArch::PerNodeClamp),
             _ => None,
         }
     }
@@ -67,6 +84,17 @@ impl BbArch {
         match self {
             BbArch::Shared => "",
             BbArch::PerNode => "+pernode",
+            BbArch::PerNodeClamp => "+pnclamp",
+        }
+    }
+
+    /// The burst-buffer placement policy the simulator must run with.
+    /// Only the real per-node architecture constrains the allocator;
+    /// the clamp approximation keeps the shared pool.
+    pub fn placement(&self) -> Placement {
+        match self {
+            BbArch::Shared | BbArch::PerNodeClamp => Placement::Striped,
+            BbArch::PerNode => Placement::PerNode,
         }
     }
 }
@@ -94,12 +122,18 @@ mod tests {
 
     #[test]
     fn bb_arch_round_trips() {
-        for arch in [BbArch::Shared, BbArch::PerNode] {
+        for arch in [BbArch::Shared, BbArch::PerNode, BbArch::PerNodeClamp] {
             assert_eq!(BbArch::parse(arch.name()), Some(arch));
         }
         assert_eq!(BbArch::parse("pernode"), Some(BbArch::PerNode));
+        assert_eq!(BbArch::parse("pernode-clamp"), Some(BbArch::PerNodeClamp));
         assert_eq!(BbArch::parse("raid"), None);
         assert_eq!(BbArch::Shared.label_segment(), "");
         assert_eq!(BbArch::PerNode.label_segment(), "+pernode");
+        assert_eq!(BbArch::PerNodeClamp.label_segment(), "+pnclamp");
+        // Only the placement arch constrains the allocator.
+        assert_eq!(BbArch::Shared.placement(), Placement::Striped);
+        assert_eq!(BbArch::PerNodeClamp.placement(), Placement::Striped);
+        assert_eq!(BbArch::PerNode.placement(), Placement::PerNode);
     }
 }

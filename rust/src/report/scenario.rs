@@ -266,7 +266,7 @@ mod tests {
     fn scenarios_stay_separate_and_failures_do_not_win() {
         let spec = CampaignSpec::parse(
             "[grid]\npolicies = fcfs, sjf-bb\nscales = 0.01\n\
-             [scenario]\nbb-archs = shared, per-node\n",
+             [scenario]\nbb-archs = shared, per-node, per-node-clamp\n",
         )
         .unwrap();
         let runs = spec.enumerate();
@@ -276,9 +276,10 @@ mod tests {
             .map(|r| outcome(r.clone(), 1.0, r.policy.name() != "fcfs"))
             .collect();
         let groups = aggregate(&outcomes);
-        assert_eq!(groups.len(), 2, "one group per architecture");
+        assert_eq!(groups.len(), 3, "one group per architecture");
         assert_eq!(groups[0].scenario, "x0.01+bb1");
         assert_eq!(groups[1].scenario, "x0.01+pernode+bb1");
+        assert_eq!(groups[2].scenario, "x0.01+pnclamp+bb1");
         for g in &groups {
             assert_eq!(g.per_policy[0].n_failed, 1);
             assert_eq!(g.best_policy(), Some("sjf-bb"));

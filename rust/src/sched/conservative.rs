@@ -27,14 +27,19 @@ impl Scheduler for Conservative {
     fn schedule(&mut self, ctx: &mut SchedCtx<'_, '_>) -> Vec<JobId> {
         let view = ctx.view;
         // The full reservation set is tentative: built in one transaction
-        // on the shared timeline, rolled back when the pass ends.
-        let mut txn = ctx.txn();
+        // on the shared timeline, rolled back when the pass ends. The
+        // placed variants make every reservation group-aware in
+        // per-node mode (conservative: the bytes must fit one group),
+        // and the probe gates the actual launches — a job reserved at
+        // `now` that the exact placement rejects simply stays queued
+        // and is re-planned next pass.
+        let (mut txn, probe) = ctx.txn_and_probe();
         let mut launches = Vec::new();
         for j in view.queue {
             let req = j.request();
-            let t = txn.earliest_fit(req, j.walltime, view.now);
-            txn.reserve(t, j.walltime, req);
-            if t == view.now {
+            let t = txn.earliest_fit_placed(req, j.walltime, view.now);
+            txn.reserve_placed(t, j.walltime, req);
+            if t == view.now && probe.try_place(&req) {
                 launches.push(j.id);
             }
         }

@@ -25,7 +25,10 @@ impl Scheduler for Fcfs {
         let mut launches = Vec::new();
         for j in view.queue {
             let req = j.request();
-            if free.fits(&req) {
+            // Aggregate fit plus the placement gate (per-node mode: a
+            // placement-blocked head blocks the queue like any blocked
+            // head — strict FCFS has no lookahead either way).
+            if free.fits(&req) && ctx.try_place_now(&req) {
                 free -= req;
                 launches.push(j.id);
             } else {

@@ -28,7 +28,9 @@ impl Scheduler for Filler {
         let mut launches = Vec::new();
         for j in view.queue {
             let req = j.request();
-            if free.fits(&req) {
+            // Placement-blocked jobs (per-node mode) are skipped like
+            // any other blocked job — the filler has no reservations.
+            if free.fits(&req) && ctx.try_place_now(&req) {
                 free -= req;
                 launches.push(j.id);
             }

@@ -24,6 +24,7 @@ pub mod timeline;
 use crate::core::job::{JobId, JobRequest};
 use crate::core::resources::Resources;
 use crate::core::time::Time;
+use crate::platform::PlaceProbe;
 use crate::sched::timeline::{ResourceTimeline, TimelineTxn};
 use std::cell::OnceCell;
 use std::collections::HashMap;
@@ -77,24 +78,36 @@ pub fn queue_index_map(queue: &[JobRequest]) -> HashMap<JobId, usize> {
 
 /// Everything one scheduling pass may read and tentatively write: the
 /// snapshot [`SchedView`], the cached [`ResourceTimeline`] (owned and
-/// kept current by the simulator) and a lazily-shared id→queue-index
-/// map so policies never scan the queue to resolve a [`JobId`].
+/// kept current by the simulator), a lazily-shared id→queue-index map
+/// so policies never scan the queue to resolve a [`JobId`], and the
+/// placement probe ([`PlaceProbe`]) gating "launch now" decisions in
+/// per-node burst-buffer mode (always-true under shared striping).
 pub struct SchedCtx<'a, 'b> {
     pub view: SchedView<'a>,
     timeline: &'b mut ResourceTimeline,
     qindex: &'b QueueIndex,
+    probe: PlaceProbe,
 }
 
 impl<'a, 'b> SchedCtx<'a, 'b> {
     /// Bundle a view with the timeline; advances the timeline's start to
     /// `view.now` so past segments are retired exactly once per pass.
+    /// The probe defaults to shared placement (accepts everything);
+    /// the simulator attaches the real one via [`SchedCtx::with_probe`].
     pub fn new(
         view: SchedView<'a>,
         timeline: &'b mut ResourceTimeline,
         qindex: &'b QueueIndex,
     ) -> Self {
         timeline.advance_to(view.now);
-        SchedCtx { view, timeline, qindex }
+        SchedCtx { view, timeline, qindex, probe: PlaceProbe::Shared }
+    }
+
+    /// Attach the cluster's placement probe for this pass (a snapshot
+    /// of the free state at `view.now`; see [`PlaceProbe`]).
+    pub fn with_probe(mut self, probe: PlaceProbe) -> Self {
+        self.probe = probe;
+        self
     }
 
     pub fn now(&self) -> Time {
@@ -113,6 +126,29 @@ impl<'a, 'b> SchedCtx<'a, 'b> {
     /// accounting and break the incremental == rebuild invariant.
     pub fn txn(&mut self) -> TimelineTxn<'_> {
         self.timeline.txn()
+    }
+
+    /// The transaction plus the placement probe, borrowed together —
+    /// for policies that interleave tentative reservations with launch
+    /// decisions (EASY backfill, conservative) while the txn is open.
+    pub fn txn_and_probe(&mut self) -> (TimelineTxn<'_>, &mut PlaceProbe) {
+        (self.timeline.txn(), &mut self.probe)
+    }
+
+    /// Gate a "launch now" decision on placement feasibility and, on
+    /// success, book the job so later decisions in the same pass see
+    /// its resources taken. Always true under shared placement — the
+    /// aggregate checks policies already make stay authoritative there.
+    pub fn try_place_now(&mut self, req: &Resources) -> bool {
+        self.probe.try_place(req)
+    }
+
+    /// [`SchedCtx::try_place_now`] that also returns the booked
+    /// per-group shares (empty under shared placement) — for policies
+    /// that mirror this pass's launches into a reservation transaction
+    /// (EASY's prefix phase).
+    pub fn try_place_now_shares(&mut self, req: &Resources) -> Option<Vec<(usize, u64)>> {
+        self.probe.try_place_shares(req)
     }
 
     /// Position of `id` in `view.queue`, O(1) after a one-off O(Q)
@@ -156,10 +192,12 @@ pub trait Scheduler {
     /// Static policy name (matches the paper's policy labels).
     fn name(&self) -> &'static str;
     /// Decide which pending jobs to start now, in launch order. Every
-    /// returned job must fit the (sequentially updated) free resources;
-    /// the simulator asserts this. Tentative reservations made through
-    /// `ctx.txn()` must be left to roll back — never committed; durable
-    /// timeline changes come only from the simulator's job lifecycle.
+    /// returned job must fit the (sequentially updated) free resources
+    /// AND pass the placement probe (`ctx.try_place_now` — a no-op gate
+    /// under shared striping); the simulator asserts both. Tentative
+    /// reservations made through `ctx.txn()` must be left to roll back
+    /// — never committed; durable timeline changes come only from the
+    /// simulator's job lifecycle.
     fn schedule(&mut self, ctx: &mut SchedCtx<'_, '_>) -> Vec<JobId>;
 }
 

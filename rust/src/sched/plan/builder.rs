@@ -33,12 +33,27 @@ pub struct ExecutionPlan {
 }
 
 /// The placement interface the earliest-fit sweep runs against: either
-/// an owned scratch [`Profile`] (the SA scorer) or a [`TimelineTxn`] on
-/// the shared timeline (the policy's final plan — no clone, rolls back
-/// on scope exit).
+/// an owned scratch [`Profile`] (the SA scorer, and the policy's final
+/// plan on its owned snapshot) or a [`TimelineTxn`] on the shared
+/// timeline (no clone, rolls back on scope exit).
+///
+/// The `_placed` pair is the conservative per-node feasibility probe:
+/// on a scalar [`Profile`] it degenerates to the aggregate operations
+/// (the defaults below), while a [`TimelineTxn`] opened on a per-node
+/// timeline additionally requires/books single-group byte feasibility —
+/// so txn-backed plan construction is placement-aware without the SA
+/// hot path paying for group scans.
 pub trait PlaceOps {
     fn earliest_fit(&self, req: Resources, dur: Duration, not_before: Time) -> Time;
     fn reserve(&mut self, at: Time, dur: Duration, req: Resources);
+    /// Placement-aware earliest fit; aggregate by default.
+    fn earliest_fit_placed(&self, req: Resources, dur: Duration, not_before: Time) -> Time {
+        self.earliest_fit(req, dur, not_before)
+    }
+    /// Placement-aware reservation; aggregate by default.
+    fn reserve_placed(&mut self, at: Time, dur: Duration, req: Resources) {
+        self.reserve(at, dur, req);
+    }
 }
 
 impl PlaceOps for Profile {
@@ -57,11 +72,18 @@ impl PlaceOps for TimelineTxn<'_> {
     fn reserve(&mut self, at: Time, dur: Duration, req: Resources) {
         TimelineTxn::reserve(self, at, dur, req);
     }
+    fn earliest_fit_placed(&self, req: Resources, dur: Duration, not_before: Time) -> Time {
+        TimelineTxn::earliest_fit_placed(self, req, dur, not_before)
+    }
+    fn reserve_placed(&mut self, at: Time, dur: Duration, req: Resources) {
+        TimelineTxn::reserve_placed(self, at, dur, req);
+    }
 }
 
 /// Build the plan for `perm` (a permutation of `0..jobs.len()`) directly
 /// on `ops`, scoring with exponent `alpha`. The reservations are left in
-/// `ops` — pass a transaction (rolls back) or a scratch profile.
+/// `ops` — pass a transaction (rolls back, placement-aware in per-node
+/// mode) or a scratch profile (aggregate).
 pub fn build_plan_on(
     ops: &mut impl PlaceOps,
     jobs: &[PlanJob],
@@ -74,8 +96,8 @@ pub fn build_plan_on(
     let mut score = 0.0;
     for &pi in perm {
         let j = &jobs[pi];
-        let t = ops.earliest_fit(j.req, j.walltime, now);
-        ops.reserve(t, j.walltime, j.req);
+        let t = ops.earliest_fit_placed(j.req, j.walltime, now);
+        ops.reserve_placed(t, j.walltime, j.req);
         starts[pi] = t;
         score += waiting_penalty(t, j.submit, alpha);
     }

@@ -307,9 +307,14 @@ impl Scheduler for PlanSched {
         // timeline itself* use `ctx.txn()` + `build_plan_on` instead.)
         let mut final_profile = base;
         let plan = build_plan_on(&mut final_profile, &jobs, &outcome.perm, view.now, self.alpha);
+        // The placement probe gates every "starts now" launch: in
+        // per-node mode a plan slot at `now` that the exact placement
+        // rejects stays an implicit future reservation (re-derived next
+        // pass, like every other planned start). Always-true under the
+        // paper's shared architecture.
         let mut launches = Vec::new();
         for &pi in &outcome.perm {
-            if plan.starts[pi] == view.now {
+            if plan.starts[pi] == view.now && ctx.try_place_now(&jobs[pi].req) {
                 launches.push(jobs[pi].id);
             }
         }
@@ -318,7 +323,7 @@ impl Scheduler for PlanSched {
         let tail: Vec<PlanJob> = view.queue[w..].iter().map(PlanJob::from_request).collect();
         let tail_starts = super::window::append_tail(&mut final_profile, &tail, view.now);
         for (j, &t) in tail.iter().zip(&tail_starts) {
-            if t == view.now {
+            if t == view.now && ctx.try_place_now(&j.req) {
                 launches.push(j.id);
             }
         }

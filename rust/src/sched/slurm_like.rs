@@ -36,14 +36,20 @@ impl Scheduler for SlurmLike {
         let view = ctx.view;
         let mut free = view.free;
         let mut launches = Vec::new();
-        let mut txn = ctx.txn();
+        let (mut txn, probe) = ctx.txn_and_probe();
         let mut reserved_head = false;
 
         for j in view.queue {
             let req = j.request();
-            if free.fits(&req) && txn.earliest_fit(req, j.walltime, view.now) == view.now {
+            if free.fits(&req)
+                && txn.earliest_fit(req, j.walltime, view.now) == view.now
+                && probe.try_place(&req)
+            {
                 // Start now (either FCFS order or backfilled past a
-                // delayed burst-buffer job).
+                // delayed burst-buffer job). The probe gate only binds
+                // in per-node mode; a placement-blocked BB job falls
+                // through reservation-less, exactly like Slurm defers
+                // jobs whose stage-in cannot begin.
                 txn.reserve(view.now, j.walltime, req);
                 free -= req;
                 launches.push(j.id);

@@ -1,0 +1,201 @@
+//! Per-storage-group free-bytes timelines — the vector half of the
+//! resource timeline under per-node burst-buffer placement.
+//!
+//! The scalar [`super::Profile`] answers "how many aggregate bytes are
+//! free over `[t, t+d)`"; under [`crate::platform::Placement::PerNode`]
+//! that is necessary but not sufficient, because a job's bytes must be
+//! carved group-locally next to its compute allocation. This structure
+//! maintains one free-bytes step function per storage group (driven by
+//! the same job start/finish deltas, which carry per-group amounts in
+//! per-node mode) and offers the *conservative* feasibility question
+//! reservations need: "is there a single group able to host `bb` bytes
+//! throughout the window?" — conservative because the compute
+//! allocator's best-fit rule concentrates any job that fits one group
+//! into one group, while spilling jobs (which may split their demand)
+//! are judged more strictly than necessary.
+//!
+//! Each group's step function reuses [`Profile`] with a `cpu`-component
+//! of zero, so all the interval machinery (split/coalesce/min-scan) is
+//! shared rather than re-implemented.
+
+use crate::core::resources::Resources;
+use crate::core::time::Time;
+use crate::sched::timeline::profile::Profile;
+
+/// One free-bytes profile per storage group, sorted by group id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupBbTimelines {
+    entries: Vec<(usize, Profile)>,
+}
+
+fn bytes(bb: u64) -> Resources {
+    Resources { cpu: 0, bb }
+}
+
+impl GroupBbTimelines {
+    /// Fully-free group timelines from static `(group, capacity)` pairs.
+    pub fn new(start: Time, caps: &[(usize, u64)]) -> GroupBbTimelines {
+        let mut entries: Vec<(usize, Profile)> = caps
+            .iter()
+            .map(|&(g, cap)| (g, Profile::flat(start, bytes(cap))))
+            .collect();
+        entries.sort_by_key(|&(g, _)| g);
+        GroupBbTimelines { entries }
+    }
+
+    pub fn advance_to(&mut self, now: Time) {
+        for (_, p) in &mut self.entries {
+            p.advance_to(now);
+        }
+    }
+
+    /// Apply a job's per-group demands over `[from, to)`.
+    /// `release = false` subtracts (job start), `true` adds the unused
+    /// tail back (early finish). Demands in unknown groups panic — the
+    /// platform and the timeline must agree on the group set.
+    pub fn apply(&mut self, demands: &[(usize, u64)], from: Time, to: Time, release: bool) {
+        for &(g, bb) in demands {
+            let p = self.profile_mut(g);
+            if release {
+                p.add(from, to, bytes(bb));
+            } else {
+                p.subtract(from, to, bytes(bb));
+            }
+        }
+    }
+
+    fn profile_mut(&mut self, group: usize) -> &mut Profile {
+        &mut self
+            .entries
+            .iter_mut()
+            .find(|(g, _)| *g == group)
+            .unwrap_or_else(|| panic!("unknown storage group {group}"))
+            .1
+    }
+
+    /// Is there a single group whose free bytes stay `>= bb` throughout
+    /// `[from, to)`? (`bb == 0` is trivially placeable.)
+    pub fn single_group_fits(&self, bb: u64, from: Time, to: Time) -> bool {
+        bb == 0 || self.entries.iter().any(|(_, p)| p.min_free(from, to).bb >= bb)
+    }
+
+    /// Do these per-group shares fit the model throughout `[from, to)` —
+    /// i.e. can the carving be booked without touching bytes some other
+    /// tentative booking (a head reservation) already holds?
+    pub fn fits_shares(&self, shares: &[(usize, u64)], from: Time, to: Time) -> bool {
+        shares.iter().all(|&(g, bb)| {
+            self.entries
+                .iter()
+                .find(|&&(eg, _)| eg == g)
+                .is_some_and(|(_, p)| p.min_free(from, to).bb >= bb)
+        })
+    }
+
+    /// The group a conservative reservation of `bb` bytes over
+    /// `[from, to)` books: the feasible group with the most headroom
+    /// (ties to the lowest group id). `None` when no single group fits.
+    pub fn best_group(&self, bb: u64, from: Time, to: Time) -> Option<usize> {
+        self.entries
+            .iter()
+            .filter_map(|(g, p)| {
+                let free = p.min_free(from, to).bb;
+                (free >= bb).then_some((free, *g))
+            })
+            .max_by_key(|&(free, g)| (free, std::cmp::Reverse(g)))
+            .map(|(_, g)| g)
+    }
+
+    /// Subtract a reservation's bytes from one group over `[from, to)`.
+    pub fn reserve_in(&mut self, group: usize, bb: u64, from: Time, to: Time) {
+        self.profile_mut(group).subtract(from, to, bytes(bb));
+    }
+
+    /// Tentative mirror-booking of a launch's shares, saturating at
+    /// each group's window minimum: other *tentative* bookings (a head
+    /// reservation placed by [`GroupBbTimelines::best_group`]) may
+    /// already hold some of the same bytes in the model, and a
+    /// conservative model must not double-count them into negative
+    /// free. The durable path ([`GroupBbTimelines::apply`]) stays
+    /// exact — real allocations can never over-subtract.
+    pub fn book_saturating(&mut self, shares: &[(usize, u64)], from: Time, to: Time) {
+        for &(g, bb) in shares {
+            let p = self.profile_mut(g);
+            let take = bb.min(p.min_free(from, to).bb);
+            if take > 0 {
+                p.subtract(from, to, bytes(take));
+            }
+        }
+    }
+
+    /// The earliest breakpoint strictly after `t` across all groups —
+    /// the only instants where single-group feasibility can change.
+    /// Binary search per group, so this call is O(groups · log
+    /// breakpoints). (A full `earliest_fit_placed` sweep re-runs the
+    /// aggregate earliest-fit once per group breakpoint it skips, so
+    /// its worst case is O(breakpoints²) — acceptable because group
+    /// breakpoints are bounded by running jobs, and noted in the
+    /// ROADMAP's per-node deferrals.)
+    pub fn next_breakpoint_after(&self, t: Time) -> Option<Time> {
+        self.entries
+            .iter()
+            .filter_map(|(_, p)| {
+                let bps = p.breakpoints();
+                let i = bps.partition_point(|&(bt, _)| bt <= t);
+                bps.get(i).map(|&(bt, _)| bt)
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: u64) -> Time {
+        Time::from_secs(s)
+    }
+
+    #[test]
+    fn single_group_feasibility_over_windows() {
+        let mut g = GroupBbTimelines::new(t(0), &[(0, 100), (1, 100)]);
+        g.apply(&[(0, 80)], t(0), t(50), false);
+        g.apply(&[(1, 60)], t(20), t(90), false);
+        // [0, 20): group 0 has 20, group 1 has 100.
+        assert!(g.single_group_fits(90, t(0), t(20)));
+        // [20, 50): 20 vs 40.
+        assert!(g.single_group_fits(40, t(20), t(50)));
+        assert!(!g.single_group_fits(41, t(20), t(50)));
+        // Whole horizon: min 20 vs min 40.
+        assert!(!g.single_group_fits(41, t(0), t(200)));
+        assert!(g.single_group_fits(100, t(90), t(200)));
+        assert!(g.single_group_fits(0, t(0), t(1000)));
+        // Early-finish tail return restores feasibility.
+        g.apply(&[(1, 60)], t(40), t(90), true);
+        assert!(g.single_group_fits(100, t(40), t(200)));
+    }
+
+    #[test]
+    fn best_group_prefers_headroom_then_lowest_id() {
+        let mut g = GroupBbTimelines::new(t(0), &[(0, 100), (1, 100), (2, 100)]);
+        g.apply(&[(0, 30)], t(0), t(50), false);
+        assert_eq!(g.best_group(50, t(0), t(50)), Some(1), "1 and 2 tie, lowest id");
+        assert_eq!(g.best_group(80, t(0), t(50)), Some(1));
+        g.reserve_in(1, 90, t(0), t(50));
+        assert_eq!(g.best_group(80, t(0), t(50)), Some(2));
+        assert_eq!(g.best_group(101, t(0), t(50)), None);
+    }
+
+    #[test]
+    fn breakpoints_and_advance() {
+        let mut g = GroupBbTimelines::new(t(0), &[(0, 10), (1, 10)]);
+        g.apply(&[(0, 5)], t(10), t(20), false);
+        g.apply(&[(1, 5)], t(15), t(30), false);
+        assert_eq!(g.next_breakpoint_after(t(0)), Some(t(10)));
+        assert_eq!(g.next_breakpoint_after(t(10)), Some(t(15)));
+        assert_eq!(g.next_breakpoint_after(t(20)), Some(t(30)));
+        assert_eq!(g.next_breakpoint_after(t(30)), None);
+        g.advance_to(t(16));
+        assert!(!g.single_group_fits(10, t(16), t(18)));
+        assert!(g.single_group_fits(10, t(30), t(40)));
+    }
+}

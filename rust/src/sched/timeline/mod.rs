@@ -26,10 +26,20 @@
 //! operations the incremental timeline is breakpoint-identical to a full
 //! [`Profile::from_view`] rebuild from the running set.
 
+//! Per-node burst-buffer placement adds a vector half:
+//! [`GroupBbTimelines`] tracks free bytes per storage group alongside
+//! the scalar profile, backing the conservative placement-aware
+//! queries (`earliest_fit_placed` / `reserve_placed`) on
+//! [`ResourceTimeline`] and [`TimelineTxn`]. Shared-placement runs
+//! never construct it, so their behaviour is bit-identical to the
+//! scalar-only engine.
+
+pub mod groups;
 pub mod profile;
 pub mod resource;
 pub mod txn;
 
+pub use groups::GroupBbTimelines;
 pub use profile::Profile;
 pub use resource::ResourceTimeline;
 pub use txn::TimelineTxn;

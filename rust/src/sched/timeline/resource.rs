@@ -3,6 +3,7 @@
 use crate::core::job::JobId;
 use crate::core::resources::Resources;
 use crate::core::time::{Duration, Time};
+use crate::sched::timeline::groups::GroupBbTimelines;
 use crate::sched::timeline::profile::Profile;
 use crate::sched::timeline::txn::TimelineTxn;
 use crate::sched::SchedView;
@@ -15,15 +16,31 @@ use std::collections::HashMap;
 /// passed. At any instant the timeline equals what a full rebuild from
 /// the running set would produce — without paying for the rebuild on
 /// every scheduler invocation.
+///
+/// Under per-node burst-buffer placement the scalar profile is joined
+/// by per-storage-group free-bytes timelines
+/// ([`GroupBbTimelines`], fed by the platform deltas' per-group
+/// amounts), which back the conservative placement-aware queries
+/// ([`ResourceTimeline::earliest_fit_placed`]) EASY/conservative
+/// reservations use. They are maintained *only* incrementally: a
+/// [`SchedView`] does not carry group information, so `from_view`
+/// rebuilds start without them (shared semantics) and
+/// `rebuild_from_view` preserves the ones already maintained.
 #[derive(Debug, Clone)]
 pub struct ResourceTimeline {
     profile: Profile,
     capacity: Resources,
-    /// Per running job: the request held and the walltime-bound end the
+    /// Per-group free-bytes timelines (`None` = shared placement, where
+    /// the scalar profile is the whole story).
+    groups: Option<GroupBbTimelines>,
+    /// Per running job: the request held, the walltime-bound end the
     /// subtraction extends to (needed to add the tail back on an early
-    /// finish).
-    running: HashMap<JobId, (Resources, Time)>,
+    /// finish), and the per-group byte demands (empty in shared mode).
+    running: HashMap<JobId, RunningEntry>,
 }
+
+/// (held request, walltime-bound end, per-group byte demands).
+type RunningEntry = (Resources, Time, Vec<(usize, u64)>);
 
 impl ResourceTimeline {
     /// A fully-free timeline starting at `start`.
@@ -31,31 +48,52 @@ impl ResourceTimeline {
         ResourceTimeline {
             profile: Profile::flat(start, capacity),
             capacity,
+            groups: None,
             running: HashMap::new(),
+        }
+    }
+
+    /// A fully-free timeline that also tracks per-group free bytes —
+    /// the per-node-placement variant the simulator constructs from
+    /// [`crate::platform::BurstBufferPool::group_capacities`].
+    pub fn with_per_node(
+        start: Time,
+        capacity: Resources,
+        group_caps: &[(usize, u64)],
+    ) -> ResourceTimeline {
+        ResourceTimeline {
+            groups: Some(GroupBbTimelines::new(start, group_caps)),
+            ..ResourceTimeline::new(start, capacity)
         }
     }
 
     /// Full rebuild from a scheduler view — the oracle the incremental
     /// maintenance is tested against, and the constructor test/bench
-    /// harnesses use.
+    /// harnesses use. Views carry no placement data, so the rebuilt
+    /// timeline has shared (aggregate-only) semantics.
     pub fn from_view(view: &SchedView<'_>) -> ResourceTimeline {
         let mut running = HashMap::with_capacity(view.running.len());
         for r in view.running {
-            running.insert(r.id, (r.req, r.expected_end));
+            running.insert(r.id, (r.req, r.expected_end, Vec::new()));
         }
         ResourceTimeline {
             profile: Profile::from_view(view),
             capacity: view.capacity,
+            groups: None,
             running,
         }
     }
 
-    /// Replace this timeline's contents with a full rebuild (the
-    /// pre-refactor per-invocation behaviour; kept behind
-    /// `SimConfig::rebuild_timeline` as the perf baseline and parity
-    /// check).
+    /// Replace the scalar profile with a full rebuild (the pre-refactor
+    /// per-invocation behaviour; kept behind `SimConfig::rebuild_timeline`
+    /// as the perf baseline and parity check). The per-job bookkeeping
+    /// and the per-group timelines — which a view cannot reconstruct —
+    /// stay incrementally maintained, so rebuild-mode runs keep the
+    /// same placement-aware behaviour as incremental ones.
     pub fn rebuild_from_view(&mut self, view: &SchedView<'_>) {
-        *self = ResourceTimeline::from_view(view);
+        debug_assert_eq!(self.running.len(), view.running.len());
+        self.profile = Profile::from_view(view);
+        self.capacity = view.capacity;
     }
 
     pub fn capacity(&self) -> Resources {
@@ -81,34 +119,66 @@ impl ResourceTimeline {
     /// invocation; O(retired breakpoints).
     pub fn advance_to(&mut self, now: Time) {
         self.profile.advance_to(now);
+        if let Some(g) = &mut self.groups {
+            g.advance_to(now);
+        }
     }
 
     /// Durable delta: `id` started at `now` holding `req` until (at
     /// most) `expected_end` — subtract over `[now, expected_end)`.
+    /// Shared-placement shorthand for [`ResourceTimeline::job_started_placed`].
     pub fn job_started(&mut self, id: JobId, req: Resources, now: Time, expected_end: Time) {
-        let prev = self.running.insert(id, (req, expected_end));
+        self.job_started_placed(id, req, &[], now, expected_end);
+    }
+
+    /// Durable delta with placement: `bb_groups` is the per-group byte
+    /// carving the platform delta reported (empty under shared
+    /// striping). Feeds the per-group timelines when present.
+    pub fn job_started_placed(
+        &mut self,
+        id: JobId,
+        req: Resources,
+        bb_groups: &[(usize, u64)],
+        now: Time,
+        expected_end: Time,
+    ) {
+        let prev = self.running.insert(id, (req, expected_end, bb_groups.to_vec()));
         assert!(prev.is_none(), "timeline: {id} started twice");
         if expected_end > now {
             self.profile.subtract(now, expected_end, req);
+            if let Some(g) = &mut self.groups {
+                g.apply(bb_groups, now, expected_end, false);
+            }
         }
     }
 
     /// Durable delta: `id` finished (completed or killed) at `now` — add
     /// the unused reservation tail `[now, expected_end)` back.
     pub fn job_finished(&mut self, id: JobId, now: Time) {
-        let (req, expected_end) = self
+        let (req, expected_end, bb_groups) = self
             .running
             .remove(&id)
             .unwrap_or_else(|| panic!("timeline: {id} finished but never started"));
         if expected_end > now.max(self.profile.start()) {
             self.profile.add(now, expected_end, req);
+            if let Some(g) = &mut self.groups {
+                // Profile::add clamps the interval to each group
+                // profile's own start, like the scalar add above.
+                g.apply(&bb_groups, now, expected_end, true);
+            }
         }
     }
 
     /// Open a scoped transaction for tentative reservations; everything
     /// reserved through it rolls back when it drops (unless committed).
     pub fn txn(&mut self) -> TimelineTxn<'_> {
-        TimelineTxn::new(&mut self.profile)
+        TimelineTxn::new(&mut self.profile, self.groups.as_mut())
+    }
+
+    /// Read access to the per-group free-bytes timelines (per-node
+    /// placement mode only).
+    pub fn groups(&self) -> Option<&GroupBbTimelines> {
+        self.groups.as_ref()
     }
 
     // ----- read-only queries (delegated) ---------------------------------
@@ -119,6 +189,19 @@ impl ResourceTimeline {
 
     pub fn earliest_fit(&self, req: Resources, dur: Duration, not_before: Time) -> Time {
         self.profile.earliest_fit(req, dur, not_before)
+    }
+
+    /// Placement-aware earliest fit: like [`ResourceTimeline::earliest_fit`],
+    /// but in per-node mode the window must additionally admit the
+    /// request's bytes inside a single storage group (the conservative
+    /// per-node feasibility probe reservations use). Identical to the
+    /// aggregate query under shared placement, for zero-byte requests,
+    /// and whenever no single group could *ever* host the bytes (the
+    /// aggregate answer is then the only defensible fallback; actual
+    /// launches are still gated by the exact
+    /// [`crate::platform::PlaceProbe`]).
+    pub fn earliest_fit_placed(&self, req: Resources, dur: Duration, not_before: Time) -> Time {
+        earliest_fit_placed_on(&self.profile, self.groups.as_ref(), req, dur, not_before)
     }
 
     pub fn min_free(&self, from: Time, to: Time) -> Resources {
@@ -134,7 +217,9 @@ impl ResourceTimeline {
     }
 
     /// Assert breakpoint-identity with a full rebuild from `view`
-    /// (the `validate_timeline` paranoia mode).
+    /// (the `validate_timeline` paranoia mode). The scalar profile is
+    /// the comparable part; per-group timelines have no view-side
+    /// oracle (views carry no placement data).
     pub fn assert_matches_view(&self, view: &SchedView<'_>) {
         let rebuilt = Profile::from_view(view);
         assert_eq!(
@@ -142,6 +227,39 @@ impl ResourceTimeline {
             "incremental timeline diverged from rebuild at {}",
             view.now
         );
+    }
+}
+
+/// The placement-aware earliest-fit sweep shared by
+/// [`ResourceTimeline::earliest_fit_placed`] and
+/// [`TimelineTxn::earliest_fit_placed`]: take the aggregate earliest
+/// fit, then advance over group-profile breakpoints until a single
+/// group admits the bytes throughout the window. Group feasibility only
+/// changes at group breakpoints, so the scan terminates after at most
+/// one pass over them; if it runs dry (no single group can ever host
+/// the bytes) the aggregate answer is returned as the conservative
+/// fallback.
+pub(crate) fn earliest_fit_placed_on(
+    profile: &Profile,
+    groups: Option<&GroupBbTimelines>,
+    req: Resources,
+    dur: Duration,
+    not_before: Time,
+) -> Time {
+    let mut t = profile.earliest_fit(req, dur, not_before);
+    let Some(groups) = groups else { return t };
+    if req.bb == 0 {
+        return t;
+    }
+    let fallback = t;
+    loop {
+        if groups.single_group_fits(req.bb, t, t + dur) {
+            return t;
+        }
+        match groups.next_breakpoint_after(t) {
+            Some(next) => t = profile.earliest_fit(req, dur, next),
+            None => return fallback,
+        }
     }
 }
 
@@ -218,6 +336,58 @@ mod tests {
             assert_ne!(txn.free_at(at), before.free_at(at));
         }
         assert_eq!(*tl.profile(), before, "txn drop must restore the profile exactly");
+    }
+
+    #[test]
+    fn per_node_timeline_tracks_group_feasibility() {
+        let cap = res(8, 200);
+        let mut tl = ResourceTimeline::with_per_node(t(0), cap, &[(0, 100), (1, 100)]);
+        // Job 1 holds 90 bytes in group 0 until t=100.
+        tl.job_started_placed(JobId(1), res(2, 90), &[(0, 90)], t(0), t(100));
+        // Job 2 holds 80 bytes in group 1 until t=50.
+        tl.job_started_placed(JobId(2), res(2, 80), &[(1, 80)], t(0), t(50));
+        // Aggregate admits 30 bytes now (free 30), and so does the
+        // placed query? No single group has 30 free before t=50.
+        let req = res(1, 30);
+        assert_eq!(tl.earliest_fit(req, Duration::from_secs(10), t(0)), t(0));
+        assert_eq!(
+            tl.earliest_fit_placed(req, Duration::from_secs(10), t(0)),
+            t(50),
+            "no single group frees 30 bytes before job 2 ends"
+        );
+        // Zero-byte requests never consult groups.
+        assert_eq!(tl.earliest_fit_placed(res(1, 0), Duration::from_secs(10), t(0)), t(0));
+        // An early finish returns the tail to its group.
+        tl.job_finished(JobId(2), t(20));
+        assert_eq!(tl.earliest_fit_placed(req, Duration::from_secs(10), t(0)), t(20));
+        // Oversized-for-any-group requests fall back to the aggregate
+        // answer (conservative; launches stay probe-gated).
+        tl.job_finished(JobId(1), t(30));
+        assert_eq!(
+            tl.earliest_fit_placed(res(1, 150), Duration::from_secs(10), t(0)),
+            tl.earliest_fit(res(1, 150), Duration::from_secs(10), t(0)),
+        );
+    }
+
+    #[test]
+    fn per_node_txn_reservations_roll_back_group_state() {
+        let cap = res(8, 200);
+        let mut tl = ResourceTimeline::with_per_node(t(0), cap, &[(0, 100), (1, 100)]);
+        tl.job_started_placed(JobId(1), res(2, 60), &[(0, 60)], t(0), t(100));
+        let before = tl.clone();
+        {
+            let mut txn = tl.txn();
+            let at = txn.earliest_fit_placed(res(1, 90), Duration::from_secs(40), t(0));
+            assert_eq!(at, t(0), "group 1 has 100 free");
+            txn.reserve_placed(at, Duration::from_secs(40), res(1, 90));
+            // The booked group now constrains the next placed query.
+            assert_eq!(
+                txn.earliest_fit_placed(res(1, 90), Duration::from_secs(10), t(0)),
+                t(40)
+            );
+        }
+        assert_eq!(*tl.profile(), *before.profile());
+        assert_eq!(tl.groups(), before.groups(), "group profiles must roll back too");
     }
 
     #[test]

@@ -2,30 +2,39 @@
 
 use crate::core::resources::Resources;
 use crate::core::time::{Duration, Time};
+use crate::sched::timeline::groups::GroupBbTimelines;
 use crate::sched::timeline::profile::Profile;
+use crate::sched::timeline::resource::earliest_fit_placed_on;
 
-/// A tentative-reservation scope over a [`Profile`]. Policies reserve
-/// freely through it during one scheduling pass; unless
+/// A tentative-reservation scope over a [`Profile`] (plus, in per-node
+/// placement mode, the per-group free-bytes timelines). Policies
+/// reserve freely through it during one scheduling pass; unless
 /// [`TimelineTxn::commit`] is called, every mutation is rolled back when
 /// the transaction drops — Algorithm 1's "drop all reservations" (line
 /// 18) implemented as scope exit instead of a rebuild on the next pass.
 ///
-/// Rollback restores the profile from a snapshot taken at open — one
+/// Rollback restores the profile(s) from snapshots taken at open — one
 /// `O(breakpoints)` memcpy per pass, independent of how many
 /// reservations the pass made (conservative backfilling makes one per
-/// queued job). The restored breakpoint vector is bit-identical to the
-/// pre-transaction state.
+/// queued job). The restored breakpoint vectors are bit-identical to
+/// the pre-transaction state.
 #[derive(Debug)]
 pub struct TimelineTxn<'a> {
     profile: &'a mut Profile,
     saved: Profile,
+    groups: Option<&'a mut GroupBbTimelines>,
+    saved_groups: Option<GroupBbTimelines>,
     committed: bool,
 }
 
 impl<'a> TimelineTxn<'a> {
-    pub(crate) fn new(profile: &'a mut Profile) -> Self {
+    pub(crate) fn new(
+        profile: &'a mut Profile,
+        groups: Option<&'a mut GroupBbTimelines>,
+    ) -> Self {
         let saved = profile.clone();
-        TimelineTxn { profile, saved, committed: false }
+        let saved_groups = groups.as_deref().cloned();
+        TimelineTxn { profile, saved, groups, saved_groups, committed: false }
     }
 
     /// Keep every reservation made through this transaction.
@@ -54,8 +63,30 @@ impl<'a> TimelineTxn<'a> {
         self.profile.earliest_fit(req, dur, not_before)
     }
 
+    /// Placement-aware earliest fit (the conservative per-node probe):
+    /// identical to [`TimelineTxn::earliest_fit`] under shared
+    /// placement; in per-node mode the window must also admit the bytes
+    /// inside a single storage group (see
+    /// [`crate::sched::timeline::ResourceTimeline::earliest_fit_placed`]).
+    pub fn earliest_fit_placed(&self, req: Resources, dur: Duration, not_before: Time) -> Time {
+        earliest_fit_placed_on(&*self.profile, self.groups.as_deref(), req, dur, not_before)
+    }
+
     pub fn min_free(&self, from: Time, to: Time) -> Resources {
         self.profile.min_free(from, to)
+    }
+
+    /// Can this per-group carving be booked over `[from, to)` without
+    /// eating bytes an earlier tentative booking (the head reservation)
+    /// already holds in the model? Trivially true under shared
+    /// placement or for empty shares.
+    pub fn fits_placed(&self, shares: &[(usize, u64)], from: Time, to: Time) -> bool {
+        shares.is_empty()
+            || self
+                .groups
+                .as_deref()
+                .map(|g| g.fits_shares(shares, from, to))
+                .unwrap_or(true)
     }
 
     pub fn len(&self) -> usize {
@@ -80,14 +111,61 @@ impl<'a> TimelineTxn<'a> {
     /// path uses, so the restored state is bit-identical.
     pub fn rollback(&mut self) {
         self.profile.reset_from(&self.saved);
+        if let (Some(g), Some(saved)) = (self.groups.as_deref_mut(), &self.saved_groups) {
+            g.clone_from(saved);
+        }
     }
 
     pub fn reserve(&mut self, at: Time, dur: Duration, req: Resources) {
         self.profile.reserve(at, dur, req);
     }
 
+    /// Placement-aware reservation: the aggregate reservation plus, in
+    /// per-node mode, booking the request's bytes in the single most
+    /// roomy group able to host them over the window — so chained
+    /// reservations (conservative backfilling, EASY head) see each
+    /// other's group pressure. When no single group fits (the
+    /// [`TimelineTxn::earliest_fit_placed`] fallback case) only the
+    /// aggregate is booked.
+    pub fn reserve_placed(&mut self, at: Time, dur: Duration, req: Resources) {
+        self.profile.reserve(at, dur, req);
+        if req.bb == 0 {
+            return;
+        }
+        if let Some(g) = self.groups.as_deref_mut() {
+            if let Some(group) = g.best_group(req.bb, at, at + dur) {
+                g.reserve_in(group, req.bb, at, at + dur);
+            }
+        }
+    }
+
     pub fn subtract(&mut self, from: Time, to: Time, req: Resources) {
         self.profile.subtract(from, to, req);
+    }
+
+    /// Subtract a booking whose per-group byte carving is already known
+    /// (the [`crate::platform::PlaceProbe`] reported it when it
+    /// accepted the launch): the aggregate subtraction plus the same
+    /// bytes mirrored into the group timelines, so placed queries later
+    /// in the pass do not mistake this pass's launches for free group
+    /// capacity. The group half saturates at the model's window minimum
+    /// — a tentative head reservation may already hold some of the same
+    /// bytes, and double-counting must neither panic nor go negative.
+    /// `shares` is empty under shared placement, where this equals
+    /// [`TimelineTxn::subtract`].
+    pub fn subtract_placed(
+        &mut self,
+        from: Time,
+        to: Time,
+        req: Resources,
+        shares: &[(usize, u64)],
+    ) {
+        self.profile.subtract(from, to, req);
+        if !shares.is_empty() {
+            if let Some(g) = self.groups.as_deref_mut() {
+                g.book_saturating(shares, from, to);
+            }
+        }
     }
 
     pub fn add(&mut self, from: Time, to: Time, req: Resources) {
@@ -98,7 +176,7 @@ impl<'a> TimelineTxn<'a> {
 impl Drop for TimelineTxn<'_> {
     fn drop(&mut self) {
         if !self.committed {
-            self.profile.reset_from(&self.saved);
+            self.rollback();
         }
     }
 }
@@ -123,7 +201,7 @@ mod tests {
         p.subtract(t(50), t(150), res(4, 30));
         let snapshot = p.clone();
         {
-            let mut txn = TimelineTxn::new(&mut p);
+            let mut txn = TimelineTxn::new(&mut p, None);
             // A conservative-style sweep: chained future reservations.
             let mut not_before = t(0);
             for i in 0..10u32 {
@@ -142,7 +220,7 @@ mod tests {
         p.subtract(t(30), t(90), res(2, 10));
         let snapshot = p.clone();
         {
-            let mut txn = TimelineTxn::new(&mut p);
+            let mut txn = TimelineTxn::new(&mut p, None);
             for round in 0..5u64 {
                 // A different tentative plan each round...
                 let at = txn.earliest_fit(res(4, 20), d(60), t(round * 7));
@@ -161,7 +239,7 @@ mod tests {
     #[test]
     fn queries_see_tentative_state() {
         let mut p = Profile::flat(t(0), res(4, 10));
-        let mut txn = TimelineTxn::new(&mut p);
+        let mut txn = TimelineTxn::new(&mut p, None);
         assert_eq!(txn.earliest_fit(res(4, 10), d(10), t(0)), t(0));
         txn.reserve(t(0), d(10), res(4, 10));
         assert_eq!(txn.earliest_fit(res(1, 1), d(5), t(0)), t(10));

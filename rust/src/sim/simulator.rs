@@ -14,6 +14,7 @@ use crate::core::job::{Job, JobId, JobRecord, JobRequest, JobState};
 use crate::core::time::{Duration, Time};
 use crate::platform::cluster::Cluster;
 use crate::platform::flows::FlowNetwork;
+use crate::platform::placement::Placement;
 use crate::platform::routing::Router;
 use crate::platform::topology::{Topology, TopologyConfig};
 use crate::sched::timeline::ResourceTimeline;
@@ -26,8 +27,14 @@ use std::collections::{HashMap, HashSet};
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     pub topo: TopologyConfig,
-    /// Total shared burst-buffer capacity in bytes.
+    /// Total burst-buffer capacity in bytes.
     pub bb_capacity: u64,
+    /// How the burst-buffer pool places a job's bytes: the paper's
+    /// shared striping (default), or per-node placement where a job's
+    /// bytes must be carved group-locally next to its compute nodes and
+    /// allocation can fail from fragmentation (the `per-node` scenario
+    /// arch — set this from [`crate::platform::BbArch::placement`]).
+    pub bb_placement: Placement,
     /// Scheduler tick period (paper: 1 minute).
     pub tick: Duration,
     /// Also invoke the scheduler on arrivals/completions (Batsim-style
@@ -58,6 +65,7 @@ impl Default for SimConfig {
         SimConfig {
             topo: TopologyConfig::default(),
             bb_capacity: 0, // must be set by the caller (workload-dependent)
+            bb_placement: Placement::Striped,
             tick: Duration::from_secs(60),
             event_triggers: true,
             io_enabled: true,
@@ -76,6 +84,10 @@ pub struct GanttEntry {
     pub start: Time,
     pub finish: Time,
     pub compute_nodes: Vec<usize>,
+    /// Burst-buffer placement: (storage topology node id, bytes) per
+    /// slice the job held — lets invariant tests audit per-storage-node
+    /// occupancy and slice locality over the whole run.
+    pub bb_nodes: Vec<(usize, u64)>,
 }
 
 /// Everything a simulation run produces.
@@ -165,11 +177,21 @@ impl Simulator {
         }
         let topo = Topology::build(cfg.topo.clone());
         let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity).collect();
-        let cluster = Cluster::new(&topo, cfg.bb_capacity);
+        let cluster = Cluster::with_placement(&topo, cfg.bb_capacity, cfg.bb_placement);
+        // Every job must be schedulable on an empty machine — in
+        // per-node mode that includes placement feasibility (an
+        // unplaceable job would pend forever and the simulation would
+        // tick without end), so the workload layer's per-node clamp is
+        // enforced loudly here.
+        let empty_probe = cluster.probe();
         for j in &jobs {
             assert!(
                 cluster.capacity().fits(&j.request()),
                 "job {} requests more than cluster capacity", j.id
+            );
+            assert!(
+                empty_probe.can_place(&j.request()),
+                "job {} is placement-infeasible even on an empty cluster", j.id
             );
         }
         let mut queue = EventQueue::new();
@@ -181,7 +203,14 @@ impl Simulator {
             queue.push(h, Event::Horizon);
         }
         let arrivals_left = jobs.len();
-        let timeline = ResourceTimeline::new(Time::ZERO, cluster.capacity());
+        let timeline = match cfg.bb_placement {
+            Placement::Striped => ResourceTimeline::new(Time::ZERO, cluster.capacity()),
+            Placement::PerNode => ResourceTimeline::with_per_node(
+                Time::ZERO,
+                cluster.capacity(),
+                &cluster.bb.group_capacities(),
+            ),
+        };
         Simulator {
             router: Router::new(&topo),
             net: FlowNetwork::new(caps),
@@ -365,11 +394,17 @@ impl Simulator {
         // timeline: the job holds its resources until (at most) its
         // walltime bound. Hard asserts — a stale or wrong-job delta
         // would silently corrupt every later scheduling decision.
-        let deltas = self.cluster.drain_deltas();
+        let mut deltas = self.cluster.drain_deltas();
         assert_eq!(deltas.len(), 1, "exactly one delta per allocation");
-        assert_eq!(deltas[0].job, id);
-        self.timeline
-            .job_started(id, deltas[0].delta.magnitude(), self.clock, rj.kill_time());
+        let delta = deltas.pop().unwrap();
+        assert_eq!(delta.job, id);
+        self.timeline.job_started_placed(
+            id,
+            delta.delta.magnitude(),
+            &delta.bb_groups,
+            self.clock,
+            rj.kill_time(),
+        );
         // One microsecond of grace so a job finishing exactly at its
         // walltime (perfect estimate, no I/O) completes rather than dies:
         // the kill event would otherwise win the FIFO tie.
@@ -535,6 +570,12 @@ impl Simulator {
                 start: rj.start,
                 finish: self.clock,
                 compute_nodes: rj.alloc.compute_nodes.clone(),
+                bb_nodes: rj
+                    .alloc
+                    .bb_slices
+                    .iter()
+                    .map(|s| (self.cluster.bb.storage_node_id(s.storage_idx), s.bytes))
+                    .collect(),
             });
         }
     }
@@ -582,7 +623,8 @@ impl Simulator {
             self.timeline.rebuild_from_view(&view);
         }
         let launches = {
-            let mut ctx = SchedCtx::new(view, &mut self.timeline, &qindex);
+            let mut ctx = SchedCtx::new(view, &mut self.timeline, &qindex)
+                .with_probe(self.cluster.probe());
             self.scheduler.schedule(&mut ctx)
         };
         self.sched_wall += t0.elapsed();
@@ -603,6 +645,13 @@ impl Simulator {
                 self.cluster.fits_now(&req),
                 "scheduler over-committed: {id} needs {req} but only {} free",
                 self.cluster.free()
+            );
+            // Per-node mode: the policy's probe mirrors the allocator,
+            // so a launch that fails here is a policy bug (it skipped
+            // the `try_place_now` gate), not a legal race.
+            assert!(
+                self.cluster.can_place(&req),
+                "scheduler launched {id} but its burst buffer is placement-infeasible"
             );
             self.launch(id);
         }
@@ -790,6 +839,71 @@ mod tests {
         let res = Simulator::new(jobs, Box::new(Fcfs::new()), c).run();
         assert_eq!(res.gantt.len(), 1);
         assert_eq!(res.gantt[0].compute_nodes.len(), 3);
+    }
+
+    #[test]
+    fn per_node_placement_serialises_fragmented_jobs() {
+        // Default topology: 3 groups, 1200 bytes of BB => 400 per group.
+        // Job 0 parks 350 bytes in group 0; job 1 wants 300 bytes and
+        // best-fit also sends its 4 nodes to group 0 — aggregate free
+        // (850) admits it, placement does not. Under shared striping
+        // they overlap; under per-node placement job 1 must wait for
+        // job 0 to release its group.
+        let jobs = vec![mk_job(0, 0, 600, 4, 350), mk_job(1, 10, 100, 4, 300)];
+        let mut shared = cfg(1200);
+        shared.io_enabled = false;
+        let mut pernode = shared.clone();
+        pernode.bb_placement = Placement::PerNode;
+        let s = Simulator::new(jobs.clone(), Box::new(Fcfs::new()), shared).run();
+        assert!(
+            s.records[1].start < s.records[0].finish,
+            "shared striping must overlap the jobs"
+        );
+        let p = Simulator::new(jobs, Box::new(Fcfs::new()), pernode).run();
+        assert_eq!(p.records.len(), 2);
+        assert!(p.records.iter().all(|r| !r.killed));
+        assert!(
+            p.records[1].start >= p.records[0].finish,
+            "per-node placement must serialise on group-0 storage: {:?}",
+            p.records
+        );
+    }
+
+    #[test]
+    fn per_node_run_with_validation_and_io_completes() {
+        // The incremental == rebuild scalar invariant (and the group
+        // timelines) must survive a busy per-node run with kills and
+        // real I/O. 400 bytes per group; requests stay placeable.
+        let mut jobs: Vec<Job> = (0..24)
+            .map(|i| {
+                mk_job(
+                    i,
+                    (i as u64) * 20,
+                    150 + (i as u64 * 53) % 500,
+                    1 + (i % 8),
+                    ((i as u64 % 5) + 1) * 60,
+                )
+            })
+            .collect();
+        jobs[5].walltime = Duration::from_secs(100); // force a kill
+        let mut c = cfg(1200);
+        c.bb_placement = Placement::PerNode;
+        c.validate_timeline = true;
+        let res = Simulator::new(jobs, Box::new(Fcfs::new()), c).run();
+        assert_eq!(res.records.len(), 24);
+        assert!(res.killed_jobs >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "placement-infeasible even on an empty cluster")]
+    fn per_node_rejects_unplaceable_workloads_loudly() {
+        // 500 bytes cannot fit any single 400-byte group for a 4-node
+        // job, so the workload is unschedulable — caught at
+        // construction instead of ticking forever.
+        let jobs = vec![mk_job(0, 0, 60, 4, 500)];
+        let mut c = cfg(1200);
+        c.bb_placement = Placement::PerNode;
+        let _ = Simulator::new(jobs, Box::new(Fcfs::new()), c);
     }
 
     #[test]

@@ -16,8 +16,10 @@
 //! - [`EstimateModel`]: how loose user walltime estimates are, from the
 //!   twin's calibrated looseness through near-exact to x10-sloppy.
 //! - [`crate::platform::PlatformSpec`]: the platform half — burst-buffer
-//!   architecture ([`crate::platform::BbArch`]: the paper's shared pool
-//!   or a per-node variant) and the capacity sizing factor.
+//!   architecture ([`crate::platform::BbArch`]: the paper's shared
+//!   pool, real per-node *placement* where the allocator can fragment,
+//!   or the legacy per-node request clamp) and the capacity sizing
+//!   factor.
 //!
 //! A [`Scenario`] is one point in that space; [`Scenario::materialise`]
 //! turns it into (jobs, burst-buffer capacity) deterministically from a
@@ -29,7 +31,8 @@
 
 use crate::core::job::Job;
 use crate::core::time::{Duration, Time};
-use crate::platform::{BbArch, PlatformSpec};
+use crate::platform::topology::{Topology, TopologyConfig};
+use crate::platform::{BbArch, BurstBufferPool, NodeRole, PlatformSpec};
 use crate::stats::rng::Pcg32;
 use crate::workload::bbmodel::BbModel;
 use crate::workload::swf::{parse_swf, records_to_jobs, SwfConvert};
@@ -276,10 +279,24 @@ impl Scenario {
         )
     }
 
-    /// Materialise the scenario: the job list plus the burst-buffer
-    /// capacity the simulator must be configured with. Deterministic in
-    /// `seed`; shared by the CLI and the campaign runner.
+    /// Materialise the scenario on the paper's default topology: the
+    /// job list plus the burst-buffer capacity the simulator must be
+    /// configured with. Deterministic in `seed`; shared by the CLI and
+    /// the campaign runner.
     pub fn materialise(&self, seed: u64) -> Result<(Vec<Job>, u64), String> {
+        self.materialise_on(seed, &TopologyConfig::default())
+    }
+
+    /// Materialise on an explicit topology: the compute-node count (the
+    /// capacity rule's full-load processor count and the per-node clamp
+    /// divisor) and the per-group storage capacities (the per-node
+    /// placement clamp) are derived from `topo` instead of the paper's
+    /// hard-coded 96.
+    pub fn materialise_on(
+        &self,
+        seed: u64,
+        topo: &TopologyConfig,
+    ) -> Result<(Vec<Job>, u64), String> {
         let scale = self.workload.scale;
         if !scale.is_finite() || scale <= 0.0 {
             return Err(format!("workload scale must be positive, got {scale}"));
@@ -288,10 +305,15 @@ impl Scenario {
         if !bb_factor.is_finite() || bb_factor <= 0.0 {
             return Err(format!("bb-factor must be positive, got {bb_factor}"));
         }
+        let machine = Topology::build(topo.clone());
+        let n_compute = machine.n_compute() as u32;
+        if n_compute == 0 {
+            return Err("topology has no compute nodes".to_string());
+        }
         // The one capacity rule (see module docs): the paper's default
         // model's expected demand at full load, scaled by the platform.
         let default_model = BbModel::default();
-        let bb_capacity = (default_model.capacity_for(96) as f64 * bb_factor) as u64;
+        let bb_capacity = (default_model.capacity_for(n_compute) as f64 * bb_factor) as u64;
         let max_bb_total = (bb_capacity as f64 * 0.8) as u64;
 
         let mut jobs = match &self.workload.family {
@@ -312,7 +334,7 @@ impl Scenario {
                 let mut jobs = records_to_jobs(
                     &records,
                     &SwfConvert {
-                        max_procs: 96,
+                        max_procs: n_compute,
                         walltime_factor_min: 1.25,
                         max_bb_total,
                         bb_model: default_model,
@@ -332,6 +354,7 @@ impl Scenario {
                     SynthConfig::scaled(seed, scale)
                 };
                 cfg.bb_capacity = bb_capacity;
+                cfg.max_procs = n_compute;
                 if let Family::HeavyTailBb { sigma } = family {
                     cfg.bb_model.lognorm.sigma = *sigma;
                 }
@@ -347,10 +370,33 @@ impl Scenario {
             }
         };
 
-        // Platform clamp before the estimate transform so walltime
+        // Platform clamps before the estimate transform so walltime
         // headroom reflects the request the job actually gets.
-        if self.platform.bb_arch == BbArch::PerNode {
-            clamp_per_node(&mut jobs, bb_capacity, 96);
+        match self.platform.bb_arch {
+            BbArch::Shared => {}
+            // Real per-node placement: jobs keep their full requests up
+            // to the schedulability bound — the smallest single group's
+            // storage capacity (a bigger request could be forever
+            // unplaceable once best-fit sends its compute there; the
+            // simulator rejects such workloads loudly). Contention and
+            // fragmentation then play out in the allocator.
+            BbArch::PerNode => {
+                let storage: Vec<(usize, usize)> = machine
+                    .nodes
+                    .iter()
+                    .filter(|n| n.role == NodeRole::Storage)
+                    .map(|n| (n.id, n.group))
+                    .collect();
+                let min_group =
+                    BurstBufferPool::new(&storage, bb_capacity).min_group_capacity();
+                clamp_to(&mut jobs, min_group);
+            }
+            // Legacy approximation: clamp the request at `procs x
+            // per-node capacity` with the per-node capacity derived
+            // from the *topology's* compute-node count (pre-PR this
+            // hard-coded the paper's 96, silently mis-clamping any
+            // other machine shape).
+            BbArch::PerNodeClamp => clamp_per_node(&mut jobs, bb_capacity, n_compute),
         }
         apply_estimate(&mut jobs, self.workload.estimate, seed);
 
@@ -384,13 +430,22 @@ fn scale_bb(jobs: &mut [Job], factor: f64, max_bb_total: u64) {
     }
 }
 
-/// Per-node burst buffers: a job can only use the node-local buffers of
-/// its own allocation, so its usable request caps at
-/// `procs x (capacity / compute nodes)`.
+/// Legacy per-node approximation: a job can only use the node-local
+/// buffers of its own allocation, so its usable request caps at
+/// `procs x (capacity / compute nodes)` — a generator-side transform
+/// that leaves the platform shared (no fragmentation possible).
 fn clamp_per_node(jobs: &mut [Job], bb_capacity: u64, n_compute: u32) {
     let per_node = bb_capacity / n_compute as u64;
     for j in jobs.iter_mut() {
         j.bb = j.bb.min(j.procs as u64 * per_node).max(1);
+    }
+}
+
+/// Per-node placement schedulability clamp: cap every request at the
+/// smallest single storage group's capacity.
+fn clamp_to(jobs: &mut [Job], max_bb: u64) {
+    for j in jobs.iter_mut() {
+        j.bb = j.bb.min(max_bb).max(1);
     }
 }
 
@@ -492,6 +547,11 @@ mod tests {
             platform: PlatformSpec { bb_arch: BbArch::PerNode, bb_factor: 0.5 },
         };
         assert_eq!(s.label(), "x0.01+pernode+bb0.5");
+        let c = Scenario {
+            workload: WorkloadSpec::paper_twin(0.01),
+            platform: PlatformSpec { bb_arch: BbArch::PerNodeClamp, bb_factor: 1.0 },
+        };
+        assert_eq!(c.label(), "x0.01+pnclamp+bb1");
     }
 
     #[test]
@@ -539,10 +599,10 @@ mod tests {
     }
 
     #[test]
-    fn per_node_arch_caps_requests_by_allocation() {
+    fn per_node_clamp_arch_caps_requests_by_allocation() {
         let spec = Scenario {
             workload: WorkloadSpec::paper_twin(0.01),
-            platform: PlatformSpec { bb_arch: BbArch::PerNode, bb_factor: 1.0 },
+            platform: PlatformSpec { bb_arch: BbArch::PerNodeClamp, bb_factor: 1.0 },
         };
         let (jobs, cap) = spec.materialise(9).unwrap();
         let per_node = cap / 96;
@@ -553,6 +613,71 @@ mod tests {
         // The aggregate constraint can therefore never bind beyond the
         // node allocation: sum over any <=96-proc set fits capacity.
         assert!(jobs.iter().all(|j| j.bb <= cap));
+    }
+
+    #[test]
+    fn per_node_placement_arch_clamps_to_the_smallest_group_only() {
+        // The placement arch keeps full requests up to the smallest
+        // single group's storage capacity (the schedulability bound) —
+        // NOT the legacy `procs x per-node` clamp, so per-node runs
+        // exercise genuine group contention.
+        let per_node = Scenario {
+            workload: WorkloadSpec::paper_twin(0.01),
+            platform: PlatformSpec { bb_arch: BbArch::PerNode, bb_factor: 1.0 },
+        };
+        let (jobs, cap) = per_node.materialise(9).unwrap();
+        // Default topology: 12 storage nodes in 3 groups of 4.
+        let min_group = {
+            let base = cap / 12;
+            let rem = cap % 12;
+            4 * base + rem.saturating_sub(8)
+        };
+        assert!(jobs.iter().all(|j| j.bb >= 1 && j.bb <= min_group));
+        // Some jobs genuinely exceed the legacy clamp (otherwise the
+        // two archs would be indistinguishable).
+        let legacy = |j: &Job| j.procs as u64 * (cap / 96);
+        assert!(
+            jobs.iter().any(|j| j.bb > legacy(j)),
+            "per-node placement must keep requests the clamp would cut"
+        );
+        // And the two archs materialise different workloads.
+        let clamped = Scenario {
+            workload: WorkloadSpec::paper_twin(0.01),
+            platform: PlatformSpec { bb_arch: BbArch::PerNodeClamp, bb_factor: 1.0 },
+        };
+        assert_ne!(jobs, clamped.materialise(9).unwrap().0);
+    }
+
+    #[test]
+    fn clamp_divisor_follows_the_topology_not_the_paper_constant() {
+        // A 12-compute-node machine (2 groups x 2 chassis x 1 router x
+        // 4 node slots, 1 storage slot per chassis): the per-node clamp
+        // must divide by 12, not the paper's 96.
+        let topo = TopologyConfig {
+            groups: 2,
+            chassis_per_group: 2,
+            routers_per_chassis: 1,
+            nodes_per_router: 4,
+            storage_per_chassis: 1,
+            ..TopologyConfig::default()
+        };
+        let spec = Scenario {
+            workload: WorkloadSpec::paper_twin(0.01),
+            platform: PlatformSpec { bb_arch: BbArch::PerNodeClamp, bb_factor: 1.0 },
+        };
+        let (jobs, cap) = spec.materialise_on(9, &topo).unwrap();
+        let per_node = cap / 12;
+        assert!(jobs.iter().all(|j| j.procs <= 12));
+        assert!(jobs.iter().all(|j| j.bb <= j.procs as u64 * per_node));
+        // The capacity rule also follows the machine size (12 procs at
+        // full load, not 96) ...
+        assert_eq!(cap, BbModel::default().capacity_for(12));
+        // ... and the clamp is genuinely looser than a hard-coded 96
+        // would make it: some job exceeds `procs x cap/96`.
+        assert!(
+            jobs.iter().any(|j| j.bb > j.procs as u64 * (cap / 96)),
+            "clamp still divides by the paper's 96"
+        );
     }
 
     #[test]

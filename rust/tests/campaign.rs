@@ -144,9 +144,10 @@ fn builtin_specs_exist_and_enumerate() {
 }
 
 /// The acceptance contract of the scenario engine: a scaled-down
-/// stress grid — every synthetic family x both architectures x a
-/// sloppy-estimate variant — completes with zero failures and is
-/// record-for-record byte-identical between 1 and 4 workers.
+/// stress grid — every synthetic family x all three architectures
+/// (shared, per-node placement, legacy clamp) x a sloppy-estimate
+/// variant — completes with zero failures and is record-for-record
+/// byte-identical between 1 and 4 workers.
 #[test]
 fn scenario_grid_is_deterministic_across_workers() {
     let spec = CampaignSpec::parse(
@@ -160,12 +161,12 @@ fn scenario_grid_is_deterministic_across_workers() {
          scales = 0.002\n\
          estimates = paper, x4\n\
          [scenario]\n\
-         bb-archs = shared, per-node\n\
+         bb-archs = shared, per-node, per-node-clamp\n\
          [sim]\n\
          io = false\n",
     )
     .unwrap();
-    assert_eq!(spec.n_runs(), 2 * 4 * 2 * 2);
+    assert_eq!(spec.n_runs(), 2 * 4 * 2 * 3);
 
     let run_with = |jobs: usize| -> Vec<String> {
         let progress = Progress::quiet(spec.n_runs());
@@ -212,6 +213,50 @@ fn per_run_timeout_fails_the_run_not_the_campaign() {
         assert!(!o.ok());
         assert!(o.error.as_deref().unwrap().contains("timeout"), "{:?}", o.error);
     }
+    assert_eq!(exit_code(&result.outcomes), EXIT_RUN_FAILED);
+}
+
+/// A timed-out cell must fail (exit code 1) WITHOUT poisoning the rest
+/// of the pool: cells after it in the same campaign still complete.
+/// (Guards the detached-timeout-thread starvation path noted in the
+/// ROADMAP: the abandoned thread keeps burning a core, but the pool
+/// must keep scheduling and fast cells must still finish in budget.)
+#[test]
+fn timed_out_cell_fails_while_later_cells_complete() {
+    // Cell 0: plan-2 over the full-size paper twin — SA planning on a
+    // 28k-job / 48-week backlog, reliably minutes of work and far past
+    // any 5-second budget (the full grid is CI's *weekly* job for a
+    // reason). Cell 1: plan-2 over a ~60-job trace — milliseconds of
+    // work, orders of magnitude inside the budget even on a loaded
+    // single-core runner with the abandoned cell-0 thread still
+    // burning CPU (two-sided margin, so the test is not wall-clock
+    // flaky in either direction).
+    let spec = CampaignSpec::parse(
+        "[campaign]\n\
+         name = budget-mixed\n\
+         timeout-s = 5.0\n\
+         [grid]\n\
+         policies = plan-2\n\
+         [workload]\n\
+         scales = 1.0, 0.002\n\
+         [sim]\n\
+         io = false\n",
+    )
+    .unwrap();
+    assert_eq!(spec.n_runs(), 2);
+    let progress = Progress::quiet(spec.n_runs());
+    // ONE worker, so the fast cell can only run after the same worker
+    // has abandoned the timed-out cell — the pool-moves-on guarantee is
+    // actually on the line (with >= 2 workers the fast cell would pass
+    // trivially on its own worker).
+    let result = run_campaign(&spec, 1, &progress, |_| {});
+    assert_eq!(result.outcomes.len(), 2);
+    let slow = &result.outcomes[0];
+    assert!(!slow.ok(), "the full-scale cell must blow the 5 s budget");
+    assert!(slow.error.as_deref().unwrap().contains("timeout"), "{:?}", slow.error);
+    let fast = &result.outcomes[1];
+    assert!(fast.ok(), "a later cell must still complete: {:?}", fast.error);
+    assert!(fast.summary.is_some());
     assert_eq!(exit_code(&result.outcomes), EXIT_RUN_FAILED);
 }
 

@@ -1,0 +1,131 @@
+//! Per-node burst-buffer placement: the fragmentation-focused
+//! integration tier.
+//!
+//! Three contracts:
+//! 1. **Shared byte-identity** — the `shared` architecture end-to-end
+//!    (scenario engine -> simulator -> per-policy fingerprints) is
+//!    byte-identical to the pre-scenario-engine pipeline that drives
+//!    the generator directly, for every policy. The placement engine
+//!    must be invisible unless asked for. (Cross-build drift of the
+//!    same fingerprints is pinned by `tests/golden.rs` once blessed.)
+//! 2. **Placement liveness** — every policy completes a per-node
+//!    placement run. The simulator asserts launch-time placement
+//!    feasibility, so a policy that skipped the probe gate panics here
+//!    rather than oversubscribing a storage group.
+//! 3. **Timeline-mode parity under placement** — incremental vs
+//!    rebuild vs validate timeline modes stay fingerprint-identical in
+//!    per-node mode too (the rebuild path must preserve the per-group
+//!    timelines it cannot reconstruct from a view).
+
+use bbsched::coordinator::{run_policy, PlanBackendKind};
+use bbsched::platform::{BbArch, Placement, PlatformSpec};
+use bbsched::sched::Policy;
+use bbsched::sim::simulator::SimConfig;
+use bbsched::workload::{generate, load_scenario, SynthConfig, WorkloadSpec};
+
+/// All evaluated policies plus the two §3.2 extensions.
+fn all_policies() -> Vec<Policy> {
+    let mut ps = Policy::ALL.to_vec();
+    ps.push(Policy::SlurmLike);
+    ps.push(Policy::ConservativeBb);
+    ps
+}
+
+fn platform(arch: BbArch) -> PlatformSpec {
+    PlatformSpec { bb_arch: arch, bb_factor: 1.0 }
+}
+
+#[test]
+fn shared_arch_is_byte_identical_to_the_pre_scenario_pipeline() {
+    // The scenario engine's shared materialisation must equal driving
+    // the generator directly (the pre-PR path) ...
+    let (jobs, cap) =
+        load_scenario(&WorkloadSpec::paper_twin(0.003), &platform(BbArch::Shared), 1).unwrap();
+    let legacy_cfg = SynthConfig::scaled(1, 0.003);
+    assert_eq!(cap, legacy_cfg.bb_capacity);
+    assert_eq!(jobs, generate(&legacy_cfg));
+    // ... and the default simulator config must still be the shared
+    // platform, so per-policy fingerprints agree end-to-end.
+    let scen_cfg = SimConfig { bb_capacity: cap, io_enabled: false, ..SimConfig::default() };
+    assert_eq!(scen_cfg.bb_placement, Placement::Striped);
+    let legacy_sim = SimConfig {
+        bb_capacity: legacy_cfg.bb_capacity,
+        io_enabled: false,
+        ..SimConfig::default()
+    };
+    for policy in all_policies() {
+        let a = run_policy(jobs.clone(), policy, &scen_cfg, 1, PlanBackendKind::Exact);
+        let b = run_policy(
+            generate(&legacy_cfg),
+            policy,
+            &legacy_sim,
+            1,
+            PlanBackendKind::Exact,
+        );
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "{}: shared arch diverged from the pre-scenario pipeline",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn every_policy_completes_a_pernode_placement_run() {
+    let (jobs, cap) =
+        load_scenario(&WorkloadSpec::paper_twin(0.003), &platform(BbArch::PerNode), 1).unwrap();
+    let cfg = SimConfig {
+        bb_capacity: cap,
+        bb_placement: Placement::PerNode,
+        io_enabled: false,
+        ..SimConfig::default()
+    };
+    for policy in all_policies() {
+        let res = run_policy(jobs.clone(), policy, &cfg, 1, PlanBackendKind::Exact);
+        assert_eq!(
+            res.records.len(),
+            jobs.len(),
+            "{}: per-node placement run lost jobs",
+            policy.name()
+        );
+    }
+    // One policy with real I/O: group-local slices must route through
+    // the fluid network like striped ones do.
+    let io_cfg = SimConfig { io_enabled: true, ..cfg };
+    let res = run_policy(jobs.clone(), Policy::SjfBb, &io_cfg, 1, PlanBackendKind::Exact);
+    assert_eq!(res.records.len(), jobs.len());
+}
+
+#[test]
+fn pernode_fingerprints_identical_across_timeline_modes() {
+    let (jobs, cap) =
+        load_scenario(&WorkloadSpec::paper_twin(0.003), &platform(BbArch::PerNode), 1).unwrap();
+    let base = SimConfig {
+        bb_capacity: cap,
+        bb_placement: Placement::PerNode,
+        io_enabled: false,
+        ..SimConfig::default()
+    };
+    for policy in all_policies() {
+        let incremental =
+            run_policy(jobs.clone(), policy, &base, 1, PlanBackendKind::Exact);
+        let rebuild_cfg = SimConfig { rebuild_timeline: true, ..base.clone() };
+        let rebuild = run_policy(jobs.clone(), policy, &rebuild_cfg, 1, PlanBackendKind::Exact);
+        let validate_cfg = SimConfig { validate_timeline: true, ..base.clone() };
+        let validate =
+            run_policy(jobs.clone(), policy, &validate_cfg, 1, PlanBackendKind::Exact);
+        assert_eq!(
+            incremental.fingerprint(),
+            rebuild.fingerprint(),
+            "{}: per-node incremental vs rebuild diverged",
+            policy.name()
+        );
+        assert_eq!(
+            incremental.fingerprint(),
+            validate.fingerprint(),
+            "{}: per-node validate pass changed behaviour",
+            policy.name()
+        );
+    }
+}
