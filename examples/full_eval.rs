@@ -16,13 +16,12 @@
 use bbsched::coordinator::{run_eval, EvalParams, PlanBackendKind};
 use bbsched::report::{fmt_f, render_table};
 use bbsched::sched::Policy;
-use bbsched::sim::simulator::SimConfig;
 use bbsched::workload::synth::{generate, SynthConfig};
+use bbsched::SimOptions;
 
 fn main() {
     let wl = SynthConfig::scaled(1, 0.10);
     let jobs = generate(&wl);
-    let sim_cfg = SimConfig { bb_capacity: wl.bb_capacity, ..SimConfig::default() };
 
     // plan-* policies score SA candidates through the XLA artifact when
     // artifacts/ is present (falls back to the native mirror otherwise).
@@ -32,21 +31,20 @@ fn main() {
         eprintln!("note: artifacts/ missing; SA will use the native discrete scorer");
         PlanBackendKind::Discrete { t_slots: 256 }
     };
+    let opts = SimOptions::new().bb_capacity(wl.bb_capacity).plan_backend(plan_backend);
 
     let params = EvalParams {
         policies: Policy::ALL.to_vec(),
         tail_k: 300,
         parts: Some((4, 0.5)), // scaled-down Figs 11-12 pass
-        plan_backend,
         ..EvalParams::default()
     };
     eprintln!(
-        "end-to-end: {} jobs, 7 policies, I/O contention on, plan backend {:?}",
+        "end-to-end: {} jobs, 7 policies, I/O contention on, plan backend {plan_backend:?}",
         jobs.len(),
-        params.plan_backend
     );
     let t0 = std::time::Instant::now();
-    let out = run_eval(&jobs, &sim_cfg, &params);
+    let out = run_eval(&jobs, &opts, &params);
     let wall = t0.elapsed().as_secs_f64();
 
     let rows: Vec<Vec<String>> = out

@@ -15,10 +15,10 @@
 use bbsched::core::job::{Job, JobId};
 use bbsched::core::resources::TIB;
 use bbsched::core::time::{Duration, Time};
-use bbsched::coordinator::{run_policy, PlanBackendKind};
 use bbsched::platform::topology::TopologyConfig;
 use bbsched::sched::Policy;
 use bbsched::sim::simulator::SimConfig;
+use bbsched::SimOptions;
 
 /// Table 1 of the paper: (submit, runtime, cpus, bb_tb).
 const TABLE1: [(u64, u64, u32, u64); 8] = [
@@ -69,7 +69,7 @@ fn sim_cfg() -> SimConfig {
 fn main() {
     let mut results = Vec::new();
     for policy in [Policy::FcfsEasy, Policy::FcfsBb] {
-        let res = run_policy(jobs(), policy, &sim_cfg(), 1, PlanBackendKind::Exact);
+        let res = SimOptions::for_sim(sim_cfg()).run(jobs(), policy);
         println!("=== {} schedule ===", policy.name());
         println!("job  submit  start  finish  wait[min]");
         let mut recs = res.records.clone();

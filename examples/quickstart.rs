@@ -3,11 +3,10 @@
 //!
 //! Run: cargo run --release --example quickstart
 
-use bbsched::coordinator::{run_policy, PlanBackendKind};
 use bbsched::metrics::summary::summarize;
 use bbsched::sched::Policy;
-use bbsched::sim::simulator::SimConfig;
 use bbsched::workload::synth::{generate, SynthConfig};
+use bbsched::SimOptions;
 
 fn main() {
     // 1. A workload: a scaled-down statistical twin of the paper's
@@ -21,12 +20,12 @@ fn main() {
     //    96 compute nodes, 12 burst-buffer nodes and a 5 GB/s PFS link,
     //    with full I/O side effects (stage-in/checkpoint/stage-out
     //    through the contended network).
-    let sim_cfg = SimConfig { bb_capacity: wl_cfg.bb_capacity, ..SimConfig::default() };
+    let opts = SimOptions::new().bb_capacity(wl_cfg.bb_capacity);
 
     // 3. Simulate under the paper's reference policy and its headline
     //    plan-based scheduler.
     for policy in [Policy::SjfBb, Policy::Plan(2)] {
-        let res = run_policy(jobs.clone(), policy, &sim_cfg, 1, PlanBackendKind::Exact);
+        let res = opts.run(jobs.clone(), policy);
         let s = summarize(&policy.name(), &res.records);
         println!(
             "{:<8} mean wait {:>7.3} h | mean bounded slowdown {:>7.2} | max wait {:>6.2} h",

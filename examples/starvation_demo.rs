@@ -9,9 +9,8 @@
 use bbsched::core::job::{Job, JobId};
 use bbsched::core::resources::GIB;
 use bbsched::core::time::{Duration, Time};
-use bbsched::coordinator::{run_policy, PlanBackendKind};
 use bbsched::sched::Policy;
-use bbsched::sim::simulator::SimConfig;
+use bbsched::SimOptions;
 
 fn workload() -> Vec<Job> {
     let mut jobs = Vec::new();
@@ -43,15 +42,11 @@ fn workload() -> Vec<Job> {
 }
 
 fn main() {
-    let cfg = SimConfig {
-        bb_capacity: 400 * GIB,
-        io_enabled: false,
-        ..SimConfig::default()
-    };
+    let opts = SimOptions::new().bb_capacity(400 * GIB).io(false);
     println!("victim: 90-node job at t=5min + a stream of 20-node jobs every 2 min\n");
     let mut waits = Vec::new();
     for policy in [Policy::Filler, Policy::FcfsBb] {
-        let res = run_policy(workload(), policy, &cfg, 1, PlanBackendKind::Exact);
+        let res = opts.run(workload(), policy);
         let victim = res.records.iter().find(|r| r.procs == 90).unwrap();
         let wait_h = victim.waiting().as_hours_f64();
         println!(

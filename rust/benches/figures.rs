@@ -5,25 +5,26 @@
 //!
 //! Full-scale numbers come from `repro eval` (see EXPERIMENTS.md).
 
-use bbsched::coordinator::{run_policy, PlanBackendKind};
+use bbsched::coordinator::run_policy;
 use bbsched::metrics::summary::summarize;
 use bbsched::metrics::{bsld_letter_values, bsld_tail, waiting_letter_values, waiting_tail};
 use bbsched::report::bench::{bench, report, BenchResult};
 use bbsched::sched::Policy;
-use bbsched::sim::simulator::{SimConfig, SimResult};
+use bbsched::sim::simulator::SimResult;
+use bbsched::SimOptions;
 use bbsched::workload::split::split_workload;
 use bbsched::workload::synth::{generate, SynthConfig};
 
 const SCALE: f64 = 0.02;
 
-fn workload() -> (Vec<bbsched::Job>, SimConfig) {
+fn workload() -> (Vec<bbsched::Job>, SimOptions) {
     let cfg = SynthConfig::scaled(1, SCALE);
     let jobs = generate(&cfg);
-    (jobs, SimConfig { bb_capacity: cfg.bb_capacity, ..SimConfig::default() })
+    (jobs, SimOptions::new().bb_capacity(cfg.bb_capacity))
 }
 
-fn run(jobs: &[bbsched::Job], sim: &SimConfig, p: Policy) -> SimResult {
-    run_policy(jobs.to_vec(), p, sim, 1, PlanBackendKind::Exact)
+fn run(jobs: &[bbsched::Job], sim: &SimOptions, p: Policy) -> SimResult {
+    run_policy(jobs.to_vec(), p, sim)
 }
 
 fn main() {
@@ -43,9 +44,8 @@ fn main() {
         0,
         3,
         || {
-            let mut cfg = sim.clone();
-            cfg.record_gantt = true;
-            let res = run_policy(jobs.clone(), Policy::FcfsEasy, &cfg, 1, PlanBackendKind::Exact);
+            let cfg = sim.clone().record_gantt(true);
+            let res = run_policy(jobs.clone(), Policy::FcfsEasy, &cfg);
             res.gantt.len()
         },
         |n| format!("{n} gantt rows"),
@@ -57,7 +57,7 @@ fn main() {
         0,
         3,
         || {
-            let res = run_policy(jobs.clone(), Policy::SjfBb, &sim, 1, PlanBackendKind::Exact);
+            let res = run_policy(jobs.clone(), Policy::SjfBb, &sim);
             summarize("sjf-bb", &res.records).mean_wait_h
         },
         |v| format!("sjf-bb mean wait {v:.2} h"),
@@ -67,7 +67,7 @@ fn main() {
         0,
         3,
         || {
-            let res = run_policy(jobs.clone(), Policy::Plan(2), &sim, 1, PlanBackendKind::Exact);
+            let res = run_policy(jobs.clone(), Policy::Plan(2), &sim);
             summarize("plan-2", &res.records).mean_bsld
         },
         |v| format!("plan-2 mean bsld {v:.2}"),
@@ -115,8 +115,8 @@ fn main() {
             let parts = split_workload(&jobs, 2, 0.2);
             let mut ratios = Vec::new();
             for part in parts.iter().filter(|p| !p.is_empty()) {
-                let a = run_policy(part.clone(), Policy::Plan(2), &sim, 1, PlanBackendKind::Exact);
-                let b = run_policy(part.clone(), Policy::SjfBb, &sim, 1, PlanBackendKind::Exact);
+                let a = run_policy(part.clone(), Policy::Plan(2), &sim);
+                let b = run_policy(part.clone(), Policy::SjfBb, &sim);
                 let (sa, sb) = (
                     summarize("plan-2", &a.records).mean_wait_h,
                     summarize("sjf-bb", &b.records).mean_wait_h,

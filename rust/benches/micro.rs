@@ -10,7 +10,7 @@
 use bbsched::core::job::JobId;
 use bbsched::core::resources::Resources;
 use bbsched::core::time::{Duration, Time};
-use bbsched::coordinator::{run_policy, PlanBackendKind};
+use bbsched::coordinator::run_policy;
 use bbsched::platform::flows::FlowNetwork;
 use bbsched::report::bench::{bench, report, BenchResult};
 use bbsched::sched::plan::builder::{build_plan, PlanJob};
@@ -18,10 +18,10 @@ use bbsched::sched::plan::scorer::DiscreteProblem;
 use bbsched::sched::timeline::Profile;
 use bbsched::sched::Policy;
 use bbsched::sim::events::{Event, EventQueue};
-use bbsched::sim::simulator::SimConfig;
 use bbsched::stats::rng::Pcg32;
 use bbsched::workload::bbmodel::BbModel;
 use bbsched::workload::synth::{generate, SynthConfig};
+use bbsched::SimOptions;
 
 fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
@@ -128,13 +128,13 @@ fn main() {
     // End-to-end simulator rate: 285-job workload with I/O.
     let wl = SynthConfig::scaled(1, 0.01);
     let wl_jobs = generate(&wl);
-    let sim = SimConfig { bb_capacity: wl.bb_capacity, ..SimConfig::default() };
+    let sim = SimOptions::new().bb_capacity(wl.bb_capacity);
     results.push(bench(
         "sim_285_jobs_sjf_bb_io",
         1,
         5,
         || {
-            run_policy(wl_jobs.clone(), Policy::SjfBb, &sim, 1, PlanBackendKind::Exact)
+            run_policy(wl_jobs.clone(), Policy::SjfBb, &sim)
                 .records
                 .len()
         },
@@ -145,7 +145,7 @@ fn main() {
         0,
         3,
         || {
-            run_policy(wl_jobs.clone(), Policy::Plan(2), &sim, 1, PlanBackendKind::Exact)
+            run_policy(wl_jobs.clone(), Policy::Plan(2), &sim)
                 .records
                 .len()
         },

@@ -21,14 +21,14 @@
 //! Usage: `cargo bench --bench sched_bench` (full ~10k-job workload) or
 //! `cargo bench --bench sched_bench -- --quick` (CI smoke size).
 
-use bbsched::coordinator::{run_policy_opts, PlanBackendKind, SchedOpts};
+use bbsched::coordinator::run_policy;
 use bbsched::platform::{BbArch, PlatformSpec};
 use bbsched::report::bench::{fmt_dur, write_json, BenchResult};
 use bbsched::report::{fmt_f, render_table};
 use bbsched::sched::Policy;
-use bbsched::sim::simulator::SimConfig;
 use bbsched::workload::synth::{generate, SynthConfig};
 use bbsched::workload::{EstimateModel, Family, Scenario, WorkloadSpec};
+use bbsched::SimOptions;
 use std::time::Duration;
 
 struct Row {
@@ -47,7 +47,7 @@ fn main() {
     let jobs = generate(&cfg);
     // Pure scheduling cost: I/O off so runtime == compute time and every
     // second of wall-clock difference is scheduler-side.
-    let sim = SimConfig { bb_capacity: cfg.bb_capacity, io_enabled: false, ..SimConfig::default() };
+    let sim = SimOptions::new().bb_capacity(cfg.bb_capacity).io(false);
     let policies = [
         Policy::Fcfs,
         Policy::FcfsEasy,
@@ -67,23 +67,9 @@ fn main() {
 
     let mut rows: Vec<Row> = Vec::new();
     for policy in policies {
-        let inc = run_policy_opts(
-            jobs.clone(),
-            policy,
-            &sim,
-            1,
-            PlanBackendKind::Exact,
-            SchedOpts::default(),
-        );
-        let reb_cfg = SimConfig { rebuild_timeline: true, ..sim.clone() };
-        let reb = run_policy_opts(
-            jobs.clone(),
-            policy,
-            &reb_cfg,
-            1,
-            PlanBackendKind::Exact,
-            SchedOpts { plan_cold_scoring: true, ..SchedOpts::default() },
-        );
+        let inc = run_policy(jobs.clone(), policy, &sim);
+        let reb_opts = sim.clone().rebuild_timeline(true).plan_cold_scoring(true);
+        let reb = run_policy(jobs.clone(), policy, &reb_opts);
         assert_eq!(
             inc.fingerprint(),
             reb.fingerprint(),
@@ -119,28 +105,17 @@ fn main() {
         platform: PlatformSpec { bb_arch: BbArch::Shared, bb_factor: 1.0 },
     };
     let (storm_jobs, storm_bb) = storm.materialise(1).expect("storm workload");
-    let storm_sim =
-        SimConfig { bb_capacity: storm_bb, io_enabled: false, ..SimConfig::default() };
-    let ablation: [(&str, SchedOpts); 4] = [
-        ("cold", SchedOpts { plan_cold_scoring: true, ..SchedOpts::default() }),
-        ("delta", SchedOpts::default()),
-        ("delta+warm", SchedOpts { plan_warm_start: true, ..SchedOpts::default() }),
-        (
-            "delta+warm+window",
-            SchedOpts { plan_warm_start: true, plan_window: 32, ..SchedOpts::default() },
-        ),
+    let storm_sim = SimOptions::new().bb_capacity(storm_bb).io(false);
+    let ablation: [(&str, SimOptions); 4] = [
+        ("cold", storm_sim.clone().plan_cold_scoring(true)),
+        ("delta", storm_sim.clone()),
+        ("delta+warm", storm_sim.clone().plan_warm_start(true)),
+        ("delta+warm+window", storm_sim.clone().plan_warm_start(true).plan_window(32)),
     ];
     eprintln!("plan ablation: {} storm jobs, plan-2 x {} configs", storm_jobs.len(), 4);
     let mut plan_rows: Vec<(String, Duration, u64, f64, u64)> = Vec::new();
     for (cfg, opts) in ablation {
-        let res = run_policy_opts(
-            storm_jobs.clone(),
-            Policy::Plan(2),
-            &storm_sim,
-            1,
-            PlanBackendKind::Exact,
-            opts,
-        );
+        let res = run_policy(storm_jobs.clone(), Policy::Plan(2), &opts);
         let mean_wait_h = {
             let s = bbsched::metrics::summary::summarize("plan-2", &res.records);
             s.mean_wait_h

@@ -1,0 +1,119 @@
+//! Typed campaign errors with a stable, machine-readable contract.
+//!
+//! Replaces the stringly `Option<String>` error channel: every failure
+//! class carries its own variant, its stable `error_code` token (the
+//! `"error_code"` field of NDJSON failure records and the `error_code`
+//! CSV column — a versioned protocol surface scripts may match on), and
+//! its exit-code mapping (the repx-style `0 ok / 1 run failed / 2 spec
+//! error` contract from [`crate::campaign`]). `Display` keeps the
+//! human-readable message shapes the pre-typed layer emitted, so
+//! existing log-grepping scripts keep working.
+
+use crate::campaign::spec::SpecError;
+use std::fmt;
+use std::path::PathBuf;
+
+/// Why a campaign — or one of its cells — failed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CampaignError {
+    /// The spec failed to parse or validate (nothing was run).
+    Spec(SpecError),
+    /// The run store could not be read from or written to. Loud by
+    /// design: silently recomputing would mask a half-broken store.
+    StoreIo { path: PathBuf, msg: String },
+    /// The cell itself failed: workload materialisation error or a
+    /// panic inside the simulation (message carries the details).
+    Cell(String),
+    /// The cell exceeded its per-run wall-clock budget and was
+    /// cooperatively cancelled.
+    Timeout { limit_s: f64 },
+    /// The campaign-level cancel token fired before/while this cell ran.
+    Cancelled,
+}
+
+impl CampaignError {
+    /// The stable machine-readable token (`error_code` field). Tokens
+    /// are append-only: existing ones never change meaning.
+    pub fn code(&self) -> &'static str {
+        match self {
+            CampaignError::Spec(_) => "spec",
+            CampaignError::StoreIo { .. } => "store_io",
+            CampaignError::Cell(_) => "cell",
+            CampaignError::Timeout { .. } => "timeout",
+            CampaignError::Cancelled => "cancelled",
+        }
+    }
+
+    /// The process exit code this error maps to.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            CampaignError::Spec(_) => crate::campaign::EXIT_SPEC_ERROR,
+            _ => crate::campaign::EXIT_RUN_FAILED,
+        }
+    }
+}
+
+impl fmt::Display for CampaignError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CampaignError::Spec(e) => e.fmt(f),
+            CampaignError::StoreIo { path, msg } => {
+                write!(f, "store I/O: {}: {msg}", path.display())
+            }
+            CampaignError::Cell(msg) => f.write_str(msg),
+            CampaignError::Timeout { limit_s } => {
+                write!(f, "timeout: run exceeded {limit_s}s")
+            }
+            CampaignError::Cancelled => {
+                f.write_str("cancelled: campaign aborted before this run completed")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CampaignError {}
+
+impl From<SpecError> for CampaignError {
+    fn from(e: SpecError) -> CampaignError {
+        CampaignError::Spec(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::{EXIT_RUN_FAILED, EXIT_SPEC_ERROR};
+
+    #[test]
+    fn codes_are_stable() {
+        let spec = CampaignError::Spec(SpecError { line: 3, msg: "bad".into() });
+        assert_eq!(spec.code(), "spec");
+        assert_eq!(spec.exit_code(), EXIT_SPEC_ERROR);
+        let cases: Vec<(CampaignError, &str)> = vec![
+            (
+                CampaignError::StoreIo { path: PathBuf::from("/s/x.json"), msg: "denied".into() },
+                "store_io",
+            ),
+            (CampaignError::Cell("panic: boom".into()), "cell"),
+            (CampaignError::Timeout { limit_s: 2.5 }, "timeout"),
+            (CampaignError::Cancelled, "cancelled"),
+        ];
+        for (e, code) in cases {
+            assert_eq!(e.code(), code);
+            assert_eq!(e.exit_code(), EXIT_RUN_FAILED, "{e}");
+        }
+    }
+
+    #[test]
+    fn display_keeps_legacy_message_shapes() {
+        // Scripts grep these substrings; they are part of the contract.
+        assert_eq!(
+            CampaignError::Timeout { limit_s: 2.5 }.to_string(),
+            "timeout: run exceeded 2.5s"
+        );
+        assert_eq!(CampaignError::Cell("panic: boom".into()).to_string(), "panic: boom");
+        assert!(CampaignError::Cancelled.to_string().starts_with("cancelled"));
+        let e = CampaignError::Spec(SpecError { line: 3, msg: "bad".into() });
+        assert_eq!(e.to_string(), "campaign spec line 3: bad");
+    }
+}

@@ -1,5 +1,6 @@
 //! The experiment-campaign subsystem: declarative grids of independent
-//! simulator runs, executed in parallel.
+//! simulator runs, executed in parallel and resumable from a
+//! content-addressed run store.
 //!
 //! The paper's evaluation (Figs 5-12) is a grid of (scheduler x workload
 //! seed x bb-factor) simulations; this module turns that one-shot loop
@@ -13,21 +14,33 @@
 //!   enumeration.
 //! - [`runner`]: grid execution on the shared work-stealing pool
 //!   ([`crate::pool::parallel_map`], also the engine under
-//!   `coordinator::run_many`), per-run fault isolation, and in-order
-//!   NDJSON streaming.
+//!   `coordinator::run_many`), per-run fault isolation, cooperative
+//!   cancellation/timeouts, and in-order NDJSON streaming.
+//! - [`store`]: the content-addressed run store — each completed cell
+//!   persists under a hash of its full identity (spec axes + workload
+//!   fingerprint + code version), so an interrupted campaign resumes
+//!   byte-identically, skipping completed cells.
+//! - [`error`]: typed failures ([`CampaignError`]) with stable
+//!   machine-readable `error_code` tokens and the exit-code mapping.
 //! - [`progress`]: stderr progress lines and the final speedup summary.
 //!
 //! Exit-code contract (repx-style, what CI scripts rely on):
 //! `0` = every run succeeded, `1` = at least one run failed,
 //! `2` = the spec failed to parse or validate (nothing was run).
 
+pub mod error;
 pub mod progress;
 pub mod runner;
 pub mod spec;
+pub mod store;
 
+pub use error::CampaignError;
 pub use progress::Progress;
-pub use runner::{execute_run, parallel_map, run_campaign, CampaignResult, RunOutcome};
+pub use runner::{
+    execute_run, parallel_map, run_campaign, CampaignOptions, CampaignResult, RunOutcome,
+};
 pub use spec::{CampaignSpec, RunSpec, SpecError, BUILTINS};
+pub use store::{cell_key, live_keys, workload_fingerprint, GcReport, RunStore, StoredCell};
 
 /// Process exit code for a fully-successful campaign.
 pub const EXIT_OK: i32 = 0;
@@ -61,10 +74,11 @@ mod tests {
             sched_invocations: 0,
             sched_wall_s: 0.0,
             wall_s: 0.0,
+            cached: false,
             error: None,
         };
         let mut failed = ok.clone();
-        failed.error = Some("boom".to_string());
+        failed.error = Some(CampaignError::Cell("boom".to_string()));
         assert_eq!(exit_code(&[]), EXIT_OK);
         assert_eq!(exit_code(&[ok.clone()]), EXIT_OK);
         assert_eq!(exit_code(&[ok, failed]), EXIT_RUN_FAILED);

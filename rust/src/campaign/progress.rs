@@ -14,6 +14,7 @@ pub struct Progress {
     started: AtomicUsize,
     done: AtomicUsize,
     failed: AtomicUsize,
+    cached: AtomicUsize,
     t0: Instant,
 }
 
@@ -25,6 +26,7 @@ impl Progress {
             started: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
             failed: AtomicUsize::new(0),
+            cached: AtomicUsize::new(0),
             t0: Instant::now(),
         }
     }
@@ -46,12 +48,16 @@ impl Progress {
         if !outcome.ok() {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
+        if outcome.cached {
+            self.cached.fetch_add(1, Ordering::Relaxed);
+        }
         if !self.enabled {
             return;
         }
+        let tag = if outcome.cached { "cached" } else { "ok" };
         match (&outcome.summary, &outcome.error) {
             (Some(s), _) => eprintln!(
-                "[{done}/{}] {} ok: mean_wait={}h mean_bsld={} ({}s)",
+                "[{done}/{}] {} {tag}: mean_wait={}h mean_bsld={} ({}s)",
                 self.total,
                 outcome.label,
                 fmt_f(s.mean_wait_h),
@@ -65,8 +71,8 @@ impl Progress {
         }
     }
 
-    /// Final summary line: totals, failures, and the parallel speedup
-    /// over a hypothetical sequential pass.
+    /// Final summary line: totals, cache hits, failures, and the
+    /// parallel speedup over a hypothetical sequential pass.
     pub fn finish(&self, result: &CampaignResult) {
         if !self.enabled {
             return;
@@ -74,9 +80,10 @@ impl Progress {
         let agg = result.aggregate_run_s();
         let speedup = if result.wall_s > 0.0 { agg / result.wall_s } else { 1.0 };
         eprintln!(
-            "campaign done: {} runs ({} failed) on {} threads in {}s \
+            "campaign done: {} runs ({} cached, {} failed) on {} threads in {}s \
              (aggregate run time {}s, speedup {}x)",
             result.outcomes.len(),
+            result.n_cached(),
             result.n_failed(),
             result.jobs,
             fmt_f(result.wall_s),
@@ -103,5 +110,6 @@ mod tests {
         assert!(p.elapsed_s() >= 0.0);
         assert_eq!(p.started.load(Ordering::Relaxed), 1);
         assert_eq!(p.done.load(Ordering::Relaxed), 0);
+        assert_eq!(p.cached.load(Ordering::Relaxed), 0);
     }
 }

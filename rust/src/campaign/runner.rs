@@ -10,19 +10,33 @@
 //! from the explicitly wall-clock fields, which the deterministic
 //! projection ([`RunOutcome::deterministic_line`]) excludes.
 //!
+//! Resumability: with a [`RunStore`] attached
+//! ([`CampaignOptions::with_store`]), completed cells persist under
+//! their content hash and later runs of the same grid replay them —
+//! byte-identically, wall-clock fields included, apart from the
+//! explicit `cached` flag. `force` recomputes (and refreshes the
+//! stored records).
+//!
+//! Cancellation: the campaign-level [`CancelToken`] fans out to one
+//! child token per cell, which the simulator event loop observes. A
+//! per-run `timeout-s` budget cancels its cell's token and *joins* the
+//! worker thread (bounded by one event batch), so a timed-out cell is
+//! a failed outcome without a detached thread burning a core in the
+//! background — the old watchdog leak.
+//!
 //! Exception: a per-run `timeout-s` budget makes *whether a borderline
 //! run completes* wall-clock-dependent (an oversubscribed worker pool
 //! can push a cell past its budget), so the byte-identical guarantee is
 //! stated only for campaigns without a timeout — or with one generous
 //! enough that no cell is borderline.
 
+use crate::campaign::error::CampaignError;
 use crate::campaign::progress::Progress;
 use crate::campaign::spec::{CampaignSpec, RunSpec};
-use crate::coordinator::{run_policy_opts, SchedOpts};
-use crate::core::time::Duration;
+use crate::campaign::store::{cell_key, workload_fingerprint, RunStore, StoredCell};
+use crate::core::cancel::CancelToken;
 use crate::metrics::summary::{summarize, PolicySummary};
 use crate::report::json::JsonObject;
-use crate::sim::simulator::SimConfig;
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
@@ -31,6 +45,45 @@ use std::time::Instant;
 /// The work-stealing pool driving campaigns (shared infrastructure,
 /// re-exported here because campaigns are its primary client).
 pub use crate::pool::parallel_map;
+
+/// How a campaign executes: worker count, run store, cancellation.
+/// (The *what* — the grid — lives in [`CampaignSpec`].)
+#[derive(Debug, Clone)]
+pub struct CampaignOptions {
+    /// Worker threads (clamped to `[1, n_runs]` at execution time).
+    pub jobs: usize,
+    /// Content-addressed store of completed cells; `None` = recompute
+    /// everything, exactly the pre-store behaviour.
+    pub store: Option<RunStore>,
+    /// With a store: ignore hits and recompute every cell (the stored
+    /// records are refreshed with the new results).
+    pub force: bool,
+    /// Campaign-level cancellation. Cancelling it makes every
+    /// not-yet-finished cell fail fast with the `cancelled` error code;
+    /// each cell simulates under its own child token.
+    pub cancel: CancelToken,
+}
+
+impl CampaignOptions {
+    pub fn new(jobs: usize) -> CampaignOptions {
+        CampaignOptions { jobs, store: None, force: false, cancel: CancelToken::new() }
+    }
+
+    pub fn with_store(mut self, store: RunStore) -> CampaignOptions {
+        self.store = Some(store);
+        self
+    }
+
+    pub fn force(mut self, on: bool) -> CampaignOptions {
+        self.force = on;
+        self
+    }
+
+    pub fn cancel_token(mut self, token: CancelToken) -> CampaignOptions {
+        self.cancel = token;
+        self
+    }
+}
 
 /// Everything one grid cell produced.
 #[derive(Debug, Clone)]
@@ -45,13 +98,23 @@ pub struct RunOutcome {
     pub sched_invocations: u64,
     pub sched_wall_s: f64,
     /// Host wall-clock of the whole run (workload build + simulation).
+    /// For cached outcomes this replays the *original* run's wall-clock
+    /// from the store, so resumed outputs are byte-identical.
     pub wall_s: f64,
-    pub error: Option<String>,
+    /// Served from the run store instead of simulated.
+    pub cached: bool,
+    pub error: Option<CampaignError>,
 }
 
 impl RunOutcome {
     pub fn ok(&self) -> bool {
         self.error.is_none()
+    }
+
+    /// The human-readable error message, if any (the NDJSON `error`
+    /// field; `error_code` carries the machine-readable token).
+    pub fn error_message(&self) -> Option<String> {
+        self.error.as_ref().map(|e| e.to_string())
     }
 
     /// One NDJSON record. `timing = false` omits the host wall-clock
@@ -64,8 +127,9 @@ impl RunOutcome {
                 .str("fingerprint", &format!("{:016x}", self.fingerprint));
         }
         if let Some(e) = &self.error {
-            obj = obj.str("error", e);
+            obj = obj.str("error", &e.to_string()).str("error_code", e.code());
         }
+        obj = obj.bool("cached", self.cached);
         if timing {
             obj = obj
                 .num_u("sched_invocations", self.sched_invocations)
@@ -97,6 +161,10 @@ impl CampaignResult {
         self.outcomes.iter().filter(|o| !o.ok()).count()
     }
 
+    pub fn n_cached(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.cached).count()
+    }
+
     /// Sum of per-run wall-clock — what a sequential pass would have
     /// cost; `aggregate_run_s / wall_s` is the parallel speedup.
     pub fn aggregate_run_s(&self) -> f64 {
@@ -104,80 +172,144 @@ impl CampaignResult {
     }
 }
 
-/// (summary, fingerprint, sched_invocations, sched_wall_s) of one
-/// successful simulation.
-type RunMetrics = (PolicySummary, u64, u64, f64);
+/// What one successful cell yields (fresh or replayed from the store).
+struct CellSuccess {
+    summary: PolicySummary,
+    fingerprint: u64,
+    sched_invocations: u64,
+    sched_wall_s: f64,
+    cached: bool,
+    /// The original run's wall-clock, when served from the store.
+    stored_wall_s: Option<f64>,
+}
 
-/// The panic-isolated simulation of one grid cell.
-fn simulate_cell(spec: &CampaignSpec, run: &RunSpec) -> Result<RunMetrics, String> {
-    let result = catch_unwind(AssertUnwindSafe(|| -> Result<RunMetrics, String> {
-        let (jobs, bb_capacity) = run.scenario().materialise(run.seed)?;
-        let sim_cfg = SimConfig {
-            bb_capacity,
-            // The per-node arch is a real allocator constraint, not just
-            // a workload transform — the simulator must know.
-            bb_placement: run.bb_arch.placement(),
-            io_enabled: spec.io_enabled,
-            tick: Duration::from_secs(spec.tick_s),
-            ..SimConfig::default()
+/// The panic-isolated simulation of one grid cell: store lookup,
+/// simulation under `cancel`, store write-back.
+fn simulate_cell(
+    spec: &CampaignSpec,
+    run: &RunSpec,
+    copts: &CampaignOptions,
+    cancel: &CancelToken,
+) -> Result<CellSuccess, CampaignError> {
+    let result = catch_unwind(AssertUnwindSafe(|| -> Result<CellSuccess, CampaignError> {
+        if cancel.is_cancelled() {
+            return Err(CampaignError::Cancelled);
+        }
+        let (jobs, bb_capacity) =
+            run.scenario().materialise(run.seed).map_err(CampaignError::Cell)?;
+        // Materialisation always runs (it is cheap relative to the
+        // simulation and the key needs the workload fingerprint), so a
+        // cache hit still validates that the workload generates.
+        let key = copts
+            .store
+            .as_ref()
+            .map(|store| (store, cell_key(spec, run, workload_fingerprint(&jobs, bb_capacity))));
+        if let (Some((store, key)), false) = (&key, copts.force) {
+            if let Some(cell) = store.load(*key, run)? {
+                return Ok(CellSuccess {
+                    summary: cell.summary,
+                    fingerprint: cell.fingerprint,
+                    sched_invocations: cell.sched_invocations,
+                    sched_wall_s: cell.sched_wall_s,
+                    cached: true,
+                    stored_wall_s: Some(cell.wall_s),
+                });
+            }
+        }
+        let t0 = Instant::now();
+        let opts = spec.sim_options(run, bb_capacity).cancel(cancel.clone());
+        let res = opts.run(jobs, run.policy);
+        if res.cancelled {
+            // Partial records must never look like a result (or reach
+            // the store); the watchdog/driver knows why it cancelled.
+            return Err(CampaignError::Cancelled);
+        }
+        let cell = CellSuccess {
+            summary: summarize(&run.policy.name(), &res.records),
+            fingerprint: res.fingerprint(),
+            sched_invocations: res.sched_invocations,
+            sched_wall_s: res.sched_wall.as_secs_f64(),
+            cached: false,
+            stored_wall_s: None,
         };
-        let opts = SchedOpts {
-            plan_warm_start: spec.plan_warm_start,
-            plan_window: run.plan_window,
-            ..SchedOpts::default()
-        };
-        let res = run_policy_opts(jobs, run.policy, &sim_cfg, run.seed, spec.plan_backend, opts);
-        let summary = summarize(&run.policy.name(), &res.records);
-        Ok((summary, res.fingerprint(), res.sched_invocations, res.sched_wall.as_secs_f64()))
+        if let Some((store, key)) = key {
+            store.save(
+                key,
+                run,
+                &StoredCell {
+                    summary: cell.summary.clone(),
+                    fingerprint: cell.fingerprint,
+                    sched_invocations: cell.sched_invocations,
+                    sched_wall_s: cell.sched_wall_s,
+                    // The simulation wall-clock, not the whole-cell one:
+                    // measured here so fresh and resumed runs agree on
+                    // what the field means.
+                    wall_s: t0.elapsed().as_secs_f64(),
+                },
+            )?;
+        }
+        Ok(cell)
     }));
     match result {
         Ok(inner) => inner,
-        Err(payload) => Err(panic_message(payload)),
+        Err(payload) => Err(CampaignError::Cell(panic_message(payload))),
     }
 }
 
-/// Execute one grid cell, turning panics, workload errors and timeouts
-/// into a failed outcome instead of tearing the campaign down.
-pub fn execute_run(spec: &CampaignSpec, run: &RunSpec) -> RunOutcome {
+/// Execute one grid cell, turning panics, workload errors, store
+/// failures, timeouts and cancellation into a failed outcome instead of
+/// tearing the campaign down.
+pub fn execute_run(spec: &CampaignSpec, run: &RunSpec, copts: &CampaignOptions) -> RunOutcome {
     let t0 = Instant::now();
     let label = run.label();
+    // One child token per cell: a per-cell timeout cancels only this
+    // cell, while the campaign token reaches every cell through it.
+    let cell_cancel = copts.cancel.child();
     let flat = match spec.timeout_s {
-        None => simulate_cell(spec, run),
+        None => simulate_cell(spec, run, copts, &cell_cancel),
         Some(limit) => {
-            // The simulator has no cancellation points, so a budgeted
-            // run executes on its own thread; on timeout the campaign
-            // records a failure and the pool moves on, while the
-            // detached thread winds the abandoned simulation down in
-            // the background (its result is dropped on send). Those
-            // abandoned threads keep burning cores, so a tight budget
-            // on a wide pool can starve later borderline cells into
-            // cascading timeouts — size budgets generously; a
-            // simulator-level cancellation hook is the ROADMAP fix.
+            // A budgeted run executes on its own thread; on timeout we
+            // cancel its token and JOIN it — the simulator observes the
+            // token at its next event batch and winds down, so the
+            // join is bounded by one batch (including one scheduler
+            // invocation) instead of the whole abandoned simulation.
             let (tx, rx) = std::sync::mpsc::channel();
-            let (spec2, run2) = (spec.clone(), run.clone());
-            std::thread::spawn(move || {
-                let _ = tx.send(simulate_cell(&spec2, &run2));
+            let (spec2, run2, copts2, cancel2) =
+                (spec.clone(), run.clone(), copts.clone(), cell_cancel.clone());
+            let handle = std::thread::spawn(move || {
+                let _ = tx.send(simulate_cell(&spec2, &run2, &copts2, &cancel2));
             });
             match rx.recv_timeout(std::time::Duration::from_secs_f64(limit)) {
-                Ok(flat) => flat,
+                Ok(flat) => {
+                    let _ = handle.join();
+                    flat
+                }
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                    Err(format!("timeout: run exceeded {limit}s"))
+                    cell_cancel.cancel();
+                    let _ = handle.join();
+                    Err(CampaignError::Timeout { limit_s: limit })
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                    Err("timeout worker vanished without a result".to_string())
+                    // simulate_cell catches panics, so this should be
+                    // unreachable; fail the cell loudly just in case.
+                    let _ = handle.join();
+                    Err(CampaignError::Cell(
+                        "timeout worker vanished without a result".to_string(),
+                    ))
                 }
             }
         }
     };
     match flat {
-        Ok((summary, fingerprint, sched_invocations, sched_wall_s)) => RunOutcome {
+        Ok(cell) => RunOutcome {
             run: run.clone(),
             label,
-            summary: Some(summary),
-            fingerprint,
-            sched_invocations,
-            sched_wall_s,
-            wall_s: t0.elapsed().as_secs_f64(),
+            summary: Some(cell.summary),
+            fingerprint: cell.fingerprint,
+            sched_invocations: cell.sched_invocations,
+            sched_wall_s: cell.sched_wall_s,
+            wall_s: cell.stored_wall_s.unwrap_or_else(|| t0.elapsed().as_secs_f64()),
+            cached: cell.cached,
             error: None,
         },
         Err(error) => RunOutcome {
@@ -188,6 +320,7 @@ pub fn execute_run(spec: &CampaignSpec, run: &RunSpec) -> RunOutcome {
             sched_invocations: 0,
             sched_wall_s: 0.0,
             wall_s: t0.elapsed().as_secs_f64(),
+            cached: false,
             error: Some(error),
         },
     }
@@ -221,12 +354,12 @@ impl<S: FnMut(&RunOutcome)> StreamState<S> {
     }
 }
 
-/// Run the whole grid on `jobs` workers. `on_record` observes every
-/// outcome in enumeration order as soon as its turn is complete (the
-/// NDJSON stream); the returned outcomes are in the same order.
+/// Run the whole grid on `copts.jobs` workers. `on_record` observes
+/// every outcome in enumeration order as soon as its turn is complete
+/// (the NDJSON stream); the returned outcomes are in the same order.
 pub fn run_campaign<S>(
     spec: &CampaignSpec,
-    jobs: usize,
+    copts: &CampaignOptions,
     progress: &Progress,
     on_record: S,
 ) -> CampaignResult
@@ -235,12 +368,12 @@ where
 {
     let runs = spec.enumerate();
     let n = runs.len();
-    let jobs = jobs.clamp(1, n.max(1));
+    let jobs = copts.jobs.clamp(1, n.max(1));
     let t0 = Instant::now();
     let stream = Mutex::new(StreamState { next: 0, buffered: BTreeMap::new(), sink: on_record });
-    let outcomes = parallel_map(runs, jobs, |run| {
+    let outcomes = crate::pool::parallel_map_cancellable(runs, jobs, &copts.cancel, |run, _| {
         progress.run_started(&run);
-        let outcome = execute_run(spec, &run);
+        let outcome = execute_run(spec, &run, copts);
         progress.run_finished(&outcome);
         stream.lock().unwrap().push(outcome.clone());
         outcome
@@ -252,6 +385,10 @@ where
 mod tests {
     use super::*;
 
+    fn no_store() -> CampaignOptions {
+        CampaignOptions::new(1)
+    }
+
     #[test]
     fn per_run_timeout_marks_the_run_failed() {
         let mut spec = CampaignSpec::smoke();
@@ -259,14 +396,16 @@ mod tests {
         // so this is deterministic without a sleep hook.
         spec.timeout_s = Some(1e-6);
         let run = spec.enumerate().into_iter().next().unwrap();
-        let o = execute_run(&spec, &run);
+        let o = execute_run(&spec, &run, &no_store());
         assert!(!o.ok());
         assert!(o.summary.is_none());
-        assert!(o.error.as_deref().unwrap().contains("timeout"), "{:?}", o.error);
+        assert!(matches!(o.error, Some(CampaignError::Timeout { .. })), "{:?}", o.error);
+        assert!(o.error_message().unwrap().contains("timeout"), "{:?}", o.error);
         // Without the budget the same cell succeeds.
         spec.timeout_s = None;
-        let o = execute_run(&spec, &run);
+        let o = execute_run(&spec, &run, &no_store());
         assert!(o.ok(), "{:?}", o.error);
+        assert!(!o.cached);
     }
 
     #[test]
@@ -274,9 +413,21 @@ mod tests {
         let mut spec = CampaignSpec::smoke();
         spec.timeout_s = Some(300.0);
         let run = spec.enumerate().into_iter().next().unwrap();
-        let o = execute_run(&spec, &run);
+        let o = execute_run(&spec, &run, &no_store());
         assert!(o.ok(), "{:?}", o.error);
         assert!(o.summary.is_some());
+    }
+
+    #[test]
+    fn cancelled_campaign_fails_cells_fast() {
+        let spec = CampaignSpec::smoke();
+        let run = spec.enumerate().into_iter().next().unwrap();
+        let copts = no_store();
+        copts.cancel.cancel();
+        let o = execute_run(&spec, &run, &copts);
+        assert!(matches!(o.error, Some(CampaignError::Cancelled)), "{:?}", o.error);
+        let json = o.to_json(false);
+        assert!(json.contains(r#""error_code":"cancelled""#), "{json}");
     }
 
     #[test]
@@ -306,7 +457,8 @@ mod tests {
             sched_invocations: 0,
             sched_wall_s: 0.0,
             wall_s: 0.0,
-            error: Some("stub".to_string()),
+            cached: false,
+            error: Some(CampaignError::Cell("stub".to_string())),
         }
     }
 }

@@ -35,6 +35,8 @@
 //! counterparts.
 
 use crate::coordinator::PlanBackendKind;
+use crate::core::time::Duration;
+use crate::options::SimOptions;
 use crate::platform::{BbArch, PlatformSpec};
 use crate::report::json::JsonObject;
 use crate::sched::Policy;
@@ -74,6 +76,11 @@ pub struct CampaignSpec {
     pub name: String,
     /// Where CSV/NDJSON outputs land (default `results/<name>`).
     pub out_dir: PathBuf,
+    /// Content-addressed run store (`[campaign] store-dir` /
+    /// `--store-dir`): completed cells persist here and later runs of
+    /// the same grid skip them. `None` (the default) disables the store
+    /// — every cell recomputes, exactly the pre-store behaviour.
+    pub store_dir: Option<PathBuf>,
     /// Grid axes. The cross product of these is the run list.
     pub policies: Vec<Policy>,
     pub seeds: Vec<u64>,
@@ -176,6 +183,7 @@ impl CampaignSpec {
         CampaignSpec {
             name: name.to_string(),
             out_dir: PathBuf::from("results").join(name),
+            store_dir: None,
             policies: Vec::new(),
             seeds: vec![1],
             families: vec![Family::PaperTwin],
@@ -281,6 +289,7 @@ impl CampaignSpec {
     pub fn parse(text: &str) -> Result<CampaignSpec, SpecError> {
         let mut name = "campaign".to_string();
         let mut out_dir: Option<PathBuf> = None;
+        let mut store_dir: Option<PathBuf> = None;
         let mut policies: Vec<Policy> = Vec::new();
         let mut seeds: Vec<u64> = vec![1];
         let mut grid_scales: Option<Vec<f64>> = None;
@@ -349,6 +358,12 @@ impl CampaignSpec {
                     name = value.to_string();
                 }
                 ("campaign", "out-dir") => out_dir = Some(PathBuf::from(value)),
+                ("campaign", "store-dir") => {
+                    if value.is_empty() {
+                        return Err(SpecError::at(ln, "store-dir must not be empty"));
+                    }
+                    store_dir = Some(PathBuf::from(value));
+                }
                 ("campaign", "timeout-s") => {
                     let v: f64 = value.parse().map_err(|_| {
                         SpecError::at(ln, format!("invalid timeout-s `{value}`"))
@@ -483,6 +498,7 @@ impl CampaignSpec {
         };
         Ok(CampaignSpec {
             out_dir: out_dir.unwrap_or_else(|| PathBuf::from("results").join(&name)),
+            store_dir,
             name,
             policies,
             seeds,
@@ -509,6 +525,9 @@ impl CampaignSpec {
         s.push_str("[campaign]\n");
         s.push_str(&format!("name = {}\n", self.name));
         s.push_str(&format!("out-dir = {}\n", self.out_dir.display()));
+        if let Some(d) = &self.store_dir {
+            s.push_str(&format!("store-dir = {}\n", d.display()));
+        }
         if let Some(t) = self.timeout_s {
             s.push_str(&format!("timeout-s = {t}\n"));
         }
@@ -567,6 +586,21 @@ impl CampaignSpec {
             s.push_str(&format!("tick-s = {}\n", self.tick_s));
         }
         s
+    }
+
+    /// The one place a campaign cell's knobs become a [`SimOptions`]:
+    /// shared `[sim]` settings from the spec plus the cell's own axes.
+    /// `bb_capacity` comes from the materialised scenario (it depends on
+    /// the workload); the caller attaches its cancel token afterwards.
+    pub fn sim_options(&self, run: &RunSpec, bb_capacity: u64) -> SimOptions {
+        SimOptions::new()
+            .bb(bb_capacity, run.bb_arch.placement())
+            .io(self.io_enabled)
+            .tick(Duration::from_secs(self.tick_s))
+            .seed(run.seed)
+            .plan_backend(self.plan_backend)
+            .plan_warm_start(self.plan_warm_start)
+            .plan_window(run.plan_window)
     }
 
     /// The workload axis materialised: family-major, then scale, then
@@ -842,6 +876,43 @@ t-slots = 128
             assert_eq!(err.line, 2, "timeout-s = {bad}");
         }
         assert_eq!(CampaignSpec::smoke().timeout_s, None);
+    }
+
+    #[test]
+    fn store_dir_parses_and_round_trips() {
+        let spec = CampaignSpec::parse(
+            "[campaign]\nstore-dir = /tmp/store\n[grid]\npolicies = fcfs\n",
+        )
+        .unwrap();
+        assert_eq!(spec.store_dir, Some(PathBuf::from("/tmp/store")));
+        let reparsed = CampaignSpec::parse(&spec.to_text()).unwrap();
+        assert_eq!(spec, reparsed);
+        // Default: no store.
+        assert_eq!(CampaignSpec::smoke().store_dir, None);
+        let err = CampaignSpec::parse("[campaign]\nstore-dir =\n[grid]\npolicies = fcfs\n")
+            .unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn sim_options_reflect_spec_and_cell() {
+        let spec = CampaignSpec::parse(
+            "[grid]\npolicies = plan-2\nscales = 0.01\nplan-windows = 8\n\
+             [scenario]\nbb-archs = per-node\n\
+             [sim]\nio = false\ntick-s = 30\nplan-warm-start = true\n\
+             plan-backend = discrete\nt-slots = 64\n",
+        )
+        .unwrap();
+        let run = &spec.enumerate()[0];
+        let opts = spec.sim_options(run, 1 << 40);
+        assert_eq!(opts.sim.bb_capacity, 1 << 40);
+        assert_eq!(opts.sim.bb_placement, crate::platform::Placement::PerNode);
+        assert!(!opts.sim.io_enabled);
+        assert_eq!(opts.sim.tick, Duration::from_secs(30));
+        assert_eq!(opts.seed, 1);
+        assert_eq!(opts.plan_backend, PlanBackendKind::Discrete { t_slots: 64 });
+        assert!(opts.plan_warm_start);
+        assert_eq!(opts.plan_window, 8);
     }
 
     #[test]

@@ -1,0 +1,461 @@
+//! The content-addressed campaign run store: resumable grids.
+//!
+//! Every grid cell is keyed by a stable FNV-1a hash over its *content*:
+//! the canonicalised cell identity (policy, seed, workload tokens,
+//! burst-buffer architecture and factor, plan window), every shared
+//! `[sim]` knob that changes simulation behaviour, a fingerprint of the
+//! materialised workload, and a compile-time code-version const. A
+//! completed cell persists its summary record to
+//! `<store-dir>/<key:016x>.json` (hand-rolled flat JSON, written
+//! temp-then-rename so interrupted writes never corrupt the store); a
+//! later run of the same grid loads the record instead of recomputing,
+//! byte-identically — including the wall-clock fields, which replay
+//! from the store so resumed NDJSON/CSV outputs match the original run
+//! apart from the explicit `cached` flag.
+//!
+//! Modelled on repx's incremental execution + output store: re-running
+//! an experiment spec only executes the cells whose outputs are missing,
+//! `--force` recomputes everything, and `repro gc --keep-spec` deletes
+//! artifacts no longer reachable from any kept spec.
+//!
+//! Only *successful* outcomes are stored: failures, timeouts and
+//! cancelled cells always re-run.
+
+use crate::campaign::error::CampaignError;
+use crate::campaign::spec::{CampaignSpec, RunSpec};
+use crate::coordinator::PlanBackendKind;
+use crate::core::job::Job;
+use crate::metrics::summary::PolicySummary;
+use crate::report::json::{parse_flat_object, JsonObject, JsonValue};
+use std::collections::{HashMap, HashSet};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Store format version, written into every record and checked on load
+/// (a mismatch is a cache miss, never an error).
+pub const STORE_VERSION: u64 = 1;
+
+/// Compile-time code identity baked into every cell key. Bump the
+/// suffix whenever simulation semantics change (event ordering, policy
+/// behaviour, metric definitions, ...): old store entries then stop
+/// matching and everything recomputes, instead of silently replaying
+/// stale results.
+pub const CODE_VERSION: &str = "bbsched-sim-1";
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Order-sensitive FNV-1a over the materialised workload (every job
+/// field the simulator reads) plus the scenario's burst-buffer
+/// capacity. Ties the cell key to the *actual* jobs, so a change in
+/// workload generation invalidates cached cells even when the spec text
+/// is unchanged.
+pub fn workload_fingerprint(jobs: &[Job], bb_capacity: u64) -> u64 {
+    let mut h = FNV_OFFSET;
+    let mut mix = |v: u64| h = fnv1a(h, &v.to_le_bytes());
+    for j in jobs {
+        mix(j.id.0 as u64);
+        mix(j.submit.0);
+        mix(j.walltime.0);
+        mix(j.compute_time.0);
+        mix(j.procs as u64);
+        mix(j.bb);
+        mix(j.phases as u64);
+    }
+    mix(jobs.len() as u64);
+    mix(bb_capacity);
+    h
+}
+
+fn backend_token(b: PlanBackendKind) -> String {
+    match b {
+        PlanBackendKind::Exact => "exact".to_string(),
+        PlanBackendKind::Discrete { t_slots } => format!("discrete:{t_slots}"),
+        PlanBackendKind::Xla { t_slots } => format!("xla:{t_slots}"),
+    }
+}
+
+/// The canonical identity string a cell key hashes. Public mainly for
+/// doc/debugging: `repro gc` and the runner only exchange the hash.
+///
+/// Deliberately excludes anything that does not change the simulation:
+/// campaign name, out-dir, store-dir, timeout, worker count, and the
+/// cell's grid index (reordering a grid must not invalidate its cells).
+pub fn cell_identity(spec: &CampaignSpec, run: &RunSpec, workload_fp: u64) -> String {
+    format!(
+        "v={CODE_VERSION};policy={};seed={};family={};scale={};estimate={};\
+         bb-arch={};bb-factor={};plan-window={};io={};tick-s={};backend={};\
+         warm-start={};wl-fp={:016x}",
+        run.policy.name(),
+        run.seed,
+        run.workload.family.spec_token(),
+        run.workload.scale,
+        run.workload.estimate.spec_token(),
+        run.bb_arch.name(),
+        run.bb_factor,
+        run.plan_window,
+        spec.io_enabled,
+        spec.tick_s,
+        backend_token(spec.plan_backend),
+        spec.plan_warm_start,
+        workload_fp,
+    )
+}
+
+/// The content hash a cell is stored under.
+pub fn cell_key(spec: &CampaignSpec, run: &RunSpec, workload_fp: u64) -> u64 {
+    fnv1a(FNV_OFFSET, cell_identity(spec, run, workload_fp).as_bytes())
+}
+
+/// What the store holds for one completed cell — exactly the fields a
+/// cached [`crate::campaign::RunOutcome`] restores, wall-clock included,
+/// so a resumed run's records are byte-identical to the original's.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredCell {
+    pub summary: PolicySummary,
+    pub fingerprint: u64,
+    pub sched_invocations: u64,
+    pub sched_wall_s: f64,
+    pub wall_s: f64,
+}
+
+/// A directory of `<key:016x>.json` cell records.
+#[derive(Debug, Clone)]
+pub struct RunStore {
+    dir: PathBuf,
+}
+
+/// What `gc` found (and, unless dry-run, deleted).
+#[derive(Debug)]
+pub struct GcReport {
+    /// Store entries reachable from the kept spec(s).
+    pub live: usize,
+    /// Store entries (paths) not reachable from any kept spec.
+    pub stale: Vec<PathBuf>,
+}
+
+impl RunStore {
+    /// No I/O happens here; the directory is created on first save.
+    pub fn new(dir: impl Into<PathBuf>) -> RunStore {
+        RunStore { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path_for(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.json"))
+    }
+
+    fn io_err(&self, path: &Path, e: impl std::fmt::Display) -> CampaignError {
+        CampaignError::StoreIo { path: path.to_path_buf(), msg: e.to_string() }
+    }
+
+    /// Persist one completed cell. Atomic-ish: written to a temp file in
+    /// the store directory, then renamed over the final path, so readers
+    /// (and interrupted writers) never observe a half-written record.
+    pub fn save(&self, key: u64, run: &RunSpec, cell: &StoredCell) -> Result<(), CampaignError> {
+        std::fs::create_dir_all(&self.dir).map_err(|e| self.io_err(&self.dir, e))?;
+        let s = &cell.summary;
+        let record = crate::report::json::summary_fields(
+            JsonObject::new()
+                .num_u("store_version", STORE_VERSION)
+                .str("code", CODE_VERSION)
+                .str("key", &format!("{key:016x}"))
+                .str("label", &run.label())
+                .str("policy", &run.policy.name()),
+            s,
+        )
+        .str("fingerprint", &format!("{:016x}", cell.fingerprint))
+        .num_u("sched_invocations", cell.sched_invocations)
+        .num_f("sched_wall_s", cell.sched_wall_s)
+        .num_f("wall_s", cell.wall_s)
+        .end();
+        // Worker-unique temp name: distinct cells have distinct keys, so
+        // the key alone already avoids collisions; the pid guards
+        // against two *processes* racing on one store.
+        let tmp = self.dir.join(format!(".{key:016x}.tmp{}", std::process::id()));
+        let write = || -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(record.as_bytes())?;
+            f.write_all(b"\n")?;
+            f.sync_all()?;
+            Ok(())
+        };
+        write().map_err(|e| self.io_err(&tmp, e))?;
+        std::fs::rename(&tmp, self.path_for(key)).map_err(|e| self.io_err(&tmp, e))
+    }
+
+    /// Load the cell stored under `key`, if any. Misses — no file, a
+    /// torn/corrupt record, a version or label mismatch — return
+    /// `Ok(None)` and the caller recomputes (overwriting the bad entry);
+    /// only real I/O failures (permissions, disk) are errors.
+    pub fn load(&self, key: u64, run: &RunSpec) -> Result<Option<StoredCell>, CampaignError> {
+        let path = self.path_for(key);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(self.io_err(&path, e)),
+        };
+        Ok(parse_stored_cell(&text, key, run))
+    }
+
+    /// Enumerate `(key, path)` of every record in the store. A missing
+    /// directory is an empty store.
+    pub fn list(&self) -> Result<Vec<(u64, PathBuf)>, CampaignError> {
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(it) => it,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(self.io_err(&self.dir, e)),
+        };
+        let mut out = Vec::new();
+        for entry in entries {
+            let entry = entry.map_err(|e| self.io_err(&self.dir, e))?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(hex) = name.strip_suffix(".json") else { continue };
+            if hex.len() != 16 || !hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+                continue; // not a store record (READMEs, temp files, ...)
+            }
+            if let Ok(key) = u64::from_str_radix(hex, 16) {
+                out.push((key, entry.path()));
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Remove (or, with `dry_run`, just report) every record whose key
+    /// is not in `live`. Non-record files are never touched.
+    pub fn gc(&self, live: &HashSet<u64>, dry_run: bool) -> Result<GcReport, CampaignError> {
+        let mut report = GcReport { live: 0, stale: Vec::new() };
+        for (key, path) in self.list()? {
+            if live.contains(&key) {
+                report.live += 1;
+            } else {
+                if !dry_run {
+                    std::fs::remove_file(&path).map_err(|e| self.io_err(&path, e))?;
+                }
+                report.stale.push(path);
+            }
+        }
+        Ok(report)
+    }
+}
+
+fn parse_stored_cell(text: &str, key: u64, run: &RunSpec) -> Option<StoredCell> {
+    let kv = parse_flat_object(text.trim_end()).ok()?;
+    let map: HashMap<&str, &JsonValue> = kv.iter().map(|(k, v)| (k.as_str(), v)).collect();
+    let str_of = |k: &str| map.get(k)?.as_str();
+    let f64_of = |k: &str| map.get(k)?.as_f64();
+    let u64_of = |k: &str| map.get(k)?.as_u64();
+    if u64_of("store_version")? != STORE_VERSION || str_of("code")? != CODE_VERSION {
+        return None;
+    }
+    // Hash-collision / mislabeled-record guard: the stored label must be
+    // the cell we are about to answer for.
+    if str_of("key")? != format!("{key:016x}") || str_of("label")? != run.label() {
+        return None;
+    }
+    let summary = PolicySummary {
+        policy: str_of("policy")?.to_string(),
+        n_jobs: u64_of("n_jobs")? as usize,
+        n_killed: u64_of("n_killed")? as usize,
+        mean_wait_h: f64_of("mean_wait_h")?,
+        wait_ci95: f64_of("wait_ci95")?,
+        mean_bsld: f64_of("mean_bsld")?,
+        bsld_ci95: f64_of("bsld_ci95")?,
+        median_wait_h: f64_of("median_wait_h")?,
+        p95_wait_h: f64_of("p95_wait_h")?,
+        max_wait_h: f64_of("max_wait_h")?,
+        makespan_h: f64_of("makespan_h")?,
+    };
+    Some(StoredCell {
+        summary,
+        fingerprint: u64::from_str_radix(str_of("fingerprint")?, 16).ok()?,
+        sched_invocations: u64_of("sched_invocations")?,
+        sched_wall_s: f64_of("sched_wall_s")?,
+        wall_s: f64_of("wall_s")?,
+    })
+}
+
+/// Every cell key a spec can reach — the live set for `repro gc`.
+/// Materialises each distinct scenario once (workload fingerprints
+/// require the actual jobs); a scenario that fails to materialise
+/// contributes no keys (its cells could never have been stored).
+pub fn live_keys(spec: &CampaignSpec) -> HashSet<u64> {
+    let mut fp_cache: HashMap<String, Option<u64>> = HashMap::new();
+    let mut live = HashSet::new();
+    for run in spec.enumerate() {
+        let cache_key = format!("{:?}#s{}", run.scenario(), run.seed);
+        let fp = fp_cache
+            .entry(cache_key)
+            .or_insert_with(|| {
+                run.scenario()
+                    .materialise(run.seed)
+                    .ok()
+                    .map(|(jobs, bb_capacity)| workload_fingerprint(&jobs, bb_capacity))
+            })
+            .clone();
+        if let Some(fp) = fp {
+            live.insert(cell_key(spec, &run, fp));
+        }
+    }
+    live
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "bbsched-store-{tag}-{}-{n}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_cell(policy: &str) -> StoredCell {
+        StoredCell {
+            summary: PolicySummary {
+                policy: policy.to_string(),
+                n_jobs: 42,
+                n_killed: 1,
+                mean_wait_h: 1.0 / 3.0,
+                wait_ci95: 0.25,
+                mean_bsld: 7.5,
+                bsld_ci95: 0.125,
+                median_wait_h: 0.1,
+                p95_wait_h: 2.5,
+                max_wait_h: 9.75,
+                makespan_h: 100.5,
+            },
+            fingerprint: 0xdead_beef_1234_5678,
+            sched_invocations: 1234,
+            sched_wall_s: 0.456789,
+            wall_s: 1.23456,
+        }
+    }
+
+    #[test]
+    fn save_load_round_trips_bit_exactly() {
+        let spec = CampaignSpec::smoke();
+        let run = spec.enumerate().into_iter().next().unwrap();
+        let store = RunStore::new(tmp_dir("roundtrip"));
+        let cell = sample_cell(&run.policy.name());
+        let key = 0x0123_4567_89ab_cdef;
+        store.save(key, &run, &cell).unwrap();
+        let loaded = store.load(key, &run).unwrap().expect("hit");
+        assert_eq!(loaded, cell);
+        // f64 fields round-trip bit-exactly (byte-identical resume).
+        assert_eq!(loaded.summary.mean_wait_h.to_bits(), cell.summary.mean_wait_h.to_bits());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn missing_corrupt_or_mismatched_records_are_misses() {
+        let spec = CampaignSpec::smoke();
+        let runs = spec.enumerate();
+        let store = RunStore::new(tmp_dir("miss"));
+        let key = 7u64;
+        assert!(store.load(key, &runs[0]).unwrap().is_none(), "no dir yet");
+        store.save(key, &runs[0], &sample_cell(&runs[0].policy.name())).unwrap();
+        // Corrupt (torn write): miss, not an error.
+        std::fs::write(store.path_for(key), "{\"store_version\":1,\"co").unwrap();
+        assert!(store.load(key, &runs[0]).unwrap().is_none());
+        // A record stored for a different cell's label: miss.
+        store.save(key, &runs[0], &sample_cell(&runs[0].policy.name())).unwrap();
+        assert!(store.load(key, &runs[1]).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn cell_keys_separate_every_axis_and_the_workload() {
+        let spec = CampaignSpec::smoke();
+        let runs = spec.enumerate();
+        let k0 = cell_key(&spec, &runs[0], 1);
+        assert_ne!(k0, cell_key(&spec, &runs[1], 1), "policy axis");
+        assert_ne!(k0, cell_key(&spec, &runs[0], 2), "workload fingerprint");
+        let mut io_spec = spec.clone();
+        io_spec.io_enabled = !io_spec.io_enabled;
+        assert_ne!(k0, cell_key(&io_spec, &runs[0], 1), "[sim] io knob");
+        // Identity-irrelevant fields change nothing: name, dirs, timeout,
+        // and the cell's position in the grid.
+        let mut renamed = spec.clone();
+        renamed.name = "other".into();
+        renamed.out_dir = PathBuf::from("/elsewhere");
+        renamed.store_dir = Some(PathBuf::from("/store"));
+        renamed.timeout_s = Some(5.0);
+        let mut moved = runs[0].clone();
+        moved.index = 99;
+        assert_eq!(k0, cell_key(&renamed, &moved, 1));
+    }
+
+    #[test]
+    fn workload_fingerprint_is_field_sensitive() {
+        let spec = CampaignSpec::smoke();
+        let run = &spec.enumerate()[0];
+        let (jobs, cap) = run.scenario().materialise(run.seed).unwrap();
+        let base = workload_fingerprint(&jobs, cap);
+        assert_eq!(base, workload_fingerprint(&jobs, cap), "deterministic");
+        assert_ne!(base, workload_fingerprint(&jobs, cap + 1), "capacity");
+        let mut tweaked = jobs.clone();
+        tweaked[0].procs += 1;
+        assert_ne!(base, workload_fingerprint(&tweaked, cap), "job field");
+        assert_ne!(base, workload_fingerprint(&jobs[1..], cap), "job set");
+    }
+
+    #[test]
+    fn gc_keeps_live_and_removes_stale() {
+        let spec = CampaignSpec::smoke();
+        let run = spec.enumerate().into_iter().next().unwrap();
+        let store = RunStore::new(tmp_dir("gc"));
+        let (live_key, stale_key) = (11u64, 22u64);
+        store.save(live_key, &run, &sample_cell("x")).unwrap();
+        store.save(stale_key, &run, &sample_cell("x")).unwrap();
+        // Non-record files are never gc'd.
+        std::fs::write(store.dir().join("README.txt"), "keep me").unwrap();
+        std::fs::write(store.dir().join("not-a-key.json"), "{}").unwrap();
+        let live: HashSet<u64> = [live_key].into_iter().collect();
+        // Dry run reports but deletes nothing.
+        let report = store.gc(&live, true).unwrap();
+        assert_eq!(report.live, 1);
+        assert_eq!(report.stale, vec![store.path_for(stale_key)]);
+        assert!(store.path_for(stale_key).exists());
+        // Real run deletes exactly the stale record.
+        let report = store.gc(&live, false).unwrap();
+        assert_eq!(report.stale.len(), 1);
+        assert!(!store.path_for(stale_key).exists());
+        assert!(store.path_for(live_key).exists());
+        assert!(store.dir().join("README.txt").exists());
+        assert!(store.dir().join("not-a-key.json").exists());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn live_keys_cover_the_grid() {
+        let spec = CampaignSpec::smoke();
+        let live = live_keys(&spec);
+        assert_eq!(live.len(), spec.n_runs(), "distinct key per cell");
+        // Each live key is exactly what the runner would compute.
+        for run in spec.enumerate() {
+            let (jobs, cap) = run.scenario().materialise(run.seed).unwrap();
+            let key = cell_key(&spec, &run, workload_fingerprint(&jobs, cap));
+            assert!(live.contains(&key));
+        }
+    }
+}

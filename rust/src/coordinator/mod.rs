@@ -1,17 +1,22 @@
 //! The evaluation coordinator: builds schedulers, fans simulations out
 //! over worker threads, and assembles every figure of the paper's
 //! evaluation (§4.2) from the results.
+//!
+//! All entry points take a [`SimOptions`] — the unified builder from
+//! [`crate::options`] — instead of the old (SimConfig, seed, backend,
+//! SchedOpts) four-tuple.
 
 use crate::core::job::Job;
 use crate::metrics::normalized::{normalized_by_reference, NormalizedPart};
 use crate::metrics::summary::{summarize, PolicySummary};
 use crate::metrics::{bsld_letter_values, bsld_tail, waiting_letter_values, waiting_tail};
+use crate::options::SimOptions;
 use crate::sched::easy::Easy;
 use crate::sched::fcfs::Fcfs;
 use crate::sched::filler::Filler;
 use crate::sched::plan::scheduler::{PlanSched, ScorerBackend};
 use crate::sched::{Policy, Scheduler};
-use crate::sim::simulator::{SimConfig, SimResult, Simulator};
+use crate::sim::simulator::SimResult;
 use crate::stats::descriptive::LetterValue;
 use crate::workload::split::split_workload;
 
@@ -24,37 +29,11 @@ pub enum PlanBackendKind {
     Xla { t_slots: usize },
 }
 
-/// Orthogonal scheduler construction knobs (all default-off; the
-/// defaults reproduce the paper-faithful, fingerprint-stable policies).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct SchedOpts {
-    /// Plan policies: seed the SA with the previous tick's plan.
-    pub plan_warm_start: bool,
-    /// Plan policies: disable the exact scorer's prefix cache (perf
-    /// baseline; behaviour-identical).
-    pub plan_cold_scoring: bool,
-    /// Plan policies: queue window `W` (0 = off) — optimise only the
-    /// first `W` queued jobs and append the tail greedily
-    /// ([`crate::sched::plan::window`]).
-    pub plan_window: usize,
-}
-
-/// Instantiate a scheduler for a policy (default options).
-pub fn make_scheduler(
-    policy: Policy,
-    seed: u64,
-    plan_backend: PlanBackendKind,
-) -> Box<dyn Scheduler + Send> {
-    make_scheduler_opts(policy, seed, plan_backend, SchedOpts::default())
-}
-
-/// Instantiate a scheduler for a policy with explicit options.
-pub fn make_scheduler_opts(
-    policy: Policy,
-    seed: u64,
-    plan_backend: PlanBackendKind,
-    opts: SchedOpts,
-) -> Box<dyn Scheduler + Send> {
+/// Instantiate a scheduler for a policy under the given options.
+///
+/// (Prefer the [`SimOptions::scheduler`] method; this is its
+/// implementation, kept here because it needs every policy type.)
+pub fn make_scheduler(policy: Policy, opts: &SimOptions) -> Box<dyn Scheduler + Send> {
     match policy {
         Policy::Fcfs => Box::new(Fcfs::new()),
         Policy::FcfsEasy => Box::new(Easy::fcfs_easy()),
@@ -64,11 +43,11 @@ pub fn make_scheduler_opts(
         Policy::SlurmLike => Box::new(crate::sched::slurm_like::SlurmLike::new()),
         Policy::ConservativeBb => Box::new(crate::sched::conservative::Conservative::new()),
         Policy::Plan(alpha) => {
-            let sched = PlanSched::new(alpha as f64, seed)
+            let sched = PlanSched::new(alpha as f64, opts.seed)
                 .with_warm_start(opts.plan_warm_start)
                 .with_cold_scoring(opts.plan_cold_scoring)
                 .with_window(opts.plan_window);
-            let sched = match plan_backend {
+            let sched = match opts.plan_backend {
                 PlanBackendKind::Exact => sched,
                 PlanBackendKind::Discrete { t_slots } => {
                     sched.with_backend(ScorerBackend::Discrete { t_slots })
@@ -95,28 +74,9 @@ pub fn make_scheduler_opts(
     }
 }
 
-/// Run one policy over one workload (default scheduler options).
-pub fn run_policy(
-    jobs: Vec<Job>,
-    policy: Policy,
-    sim_cfg: &SimConfig,
-    seed: u64,
-    plan_backend: PlanBackendKind,
-) -> SimResult {
-    run_policy_opts(jobs, policy, sim_cfg, seed, plan_backend, SchedOpts::default())
-}
-
-/// Run one policy over one workload with explicit scheduler options.
-pub fn run_policy_opts(
-    jobs: Vec<Job>,
-    policy: Policy,
-    sim_cfg: &SimConfig,
-    seed: u64,
-    plan_backend: PlanBackendKind,
-    opts: SchedOpts,
-) -> SimResult {
-    let sched = make_scheduler_opts(policy, seed, plan_backend, opts);
-    Simulator::new(jobs, sched, sim_cfg.clone()).run()
+/// Run one policy over one workload (alias for [`SimOptions::run`]).
+pub fn run_policy(jobs: Vec<Job>, policy: Policy, opts: &SimOptions) -> SimResult {
+    opts.run(jobs, policy)
 }
 
 /// Fan a list of (label, jobs, policy) simulations over worker threads.
@@ -125,13 +85,11 @@ pub fn run_policy_opts(
 /// pool, results come back in input order.
 pub fn run_many(
     tasks: Vec<(String, Vec<Job>, Policy)>,
-    sim_cfg: &SimConfig,
-    seed: u64,
-    plan_backend: PlanBackendKind,
+    opts: &SimOptions,
     n_threads: usize,
 ) -> Vec<(String, SimResult)> {
     crate::pool::parallel_map(tasks, n_threads, |(label, jobs, policy)| {
-        (label, run_policy(jobs, policy, sim_cfg, seed, plan_backend))
+        (label, opts.run(jobs, policy))
     })
 }
 
@@ -153,7 +111,9 @@ pub struct EvalOutput {
     pub whole: Vec<(String, SimResult)>,
 }
 
-/// Evaluation harness parameters.
+/// Evaluation harness parameters. Simulation/scheduler knobs (seed,
+/// plan backend, ...) now come from the [`SimOptions`] passed to
+/// [`run_eval`]; this holds only what is specific to the figure suite.
 #[derive(Debug, Clone)]
 pub struct EvalParams {
     pub policies: Vec<Policy>,
@@ -161,8 +121,6 @@ pub struct EvalParams {
     /// (number of parts, weeks per part) for Figs 11-12; `None` skips them.
     pub parts: Option<(usize, f64)>,
     pub reference: Policy,
-    pub seed: u64,
-    pub plan_backend: PlanBackendKind,
     pub n_threads: usize,
 }
 
@@ -173,15 +131,13 @@ impl Default for EvalParams {
             tail_k: crate::metrics::tail::TAIL_K,
             parts: Some((16, 3.0)),
             reference: Policy::SjfBb,
-            seed: 1,
-            plan_backend: PlanBackendKind::Exact,
             n_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
         }
     }
 }
 
 /// Run the full evaluation over one workload.
-pub fn run_eval(jobs: &[Job], sim_cfg: &SimConfig, params: &EvalParams) -> EvalOutput {
+pub fn run_eval(jobs: &[Job], opts: &SimOptions, params: &EvalParams) -> EvalOutput {
     // --- Whole trace, every policy (Figs 5-10). -------------------------
     let tasks: Vec<(String, Vec<Job>, Policy)> = params
         .policies
@@ -190,7 +146,7 @@ pub fn run_eval(jobs: &[Job], sim_cfg: &SimConfig, params: &EvalParams) -> EvalO
         .collect();
     // `run_many` preserves task order, so results are already in policy
     // declaration order.
-    let whole = run_many(tasks, sim_cfg, params.seed, params.plan_backend, params.n_threads);
+    let whole = run_many(tasks, opts, params.n_threads);
 
     let summaries: Vec<PolicySummary> =
         whole.iter().map(|(label, res)| summarize(label, &res.records)).collect();
@@ -223,8 +179,7 @@ pub fn run_eval(jobs: &[Job], sim_cfg: &SimConfig, params: &EvalParams) -> EvalO
                 tasks.push((format!("{}#{}", policy.name(), pi), part.clone(), policy));
             }
         }
-        let results =
-            run_many(tasks, sim_cfg, params.seed, params.plan_backend, params.n_threads);
+        let results = run_many(tasks, opts, params.n_threads);
         // metric[policy][part]
         let mut wait_by: std::collections::HashMap<String, Vec<(usize, f64)>> = Default::default();
         let mut bsld_by: std::collections::HashMap<String, Vec<(usize, f64)>> = Default::default();
@@ -281,18 +236,14 @@ mod tests {
     fn tiny_eval_pipeline_end_to_end() {
         let cfg = SynthConfig::scaled(5, 0.003); // ~85 jobs
         let jobs = crate::workload::synth::generate(&cfg);
-        let sim_cfg = SimConfig {
-            bb_capacity: cfg.bb_capacity,
-            io_enabled: false, // fast
-            ..SimConfig::default()
-        };
+        let opts = SimOptions::new().bb_capacity(cfg.bb_capacity).io(false); // fast
         let params = EvalParams {
             policies: vec![Policy::Fcfs, Policy::FcfsBb, Policy::SjfBb],
             tail_k: 50,
             parts: None,
             ..EvalParams::default()
         };
-        let out = run_eval(&jobs, &sim_cfg, &params);
+        let out = run_eval(&jobs, &opts, &params);
         assert_eq!(out.summaries.len(), 3);
         for s in &out.summaries {
             assert_eq!(s.n_jobs, jobs.len(), "{}", s.policy);
@@ -306,18 +257,14 @@ mod tests {
     fn parts_normalisation_reference_is_one() {
         let cfg = SynthConfig::scaled(6, 0.004);
         let jobs = crate::workload::synth::generate(&cfg);
-        let sim_cfg = SimConfig {
-            bb_capacity: cfg.bb_capacity,
-            io_enabled: false,
-            ..SimConfig::default()
-        };
+        let opts = SimOptions::new().bb_capacity(cfg.bb_capacity).io(false);
         let params = EvalParams {
             policies: vec![Policy::FcfsBb, Policy::SjfBb],
             tail_k: 10,
             parts: Some((2, 0.05)),
             ..EvalParams::default()
         };
-        let out = run_eval(&jobs, &sim_cfg, &params);
+        let out = run_eval(&jobs, &opts, &params);
         let refn = out.norm_wait.iter().find(|n| n.policy == "sjf-bb").unwrap();
         for v in &refn.values {
             assert!((v - 1.0).abs() < 1e-9);

@@ -1,0 +1,109 @@
+//! Cooperative cancellation.
+//!
+//! A [`CancelToken`] is a cheap, cloneable flag shared between the code
+//! that requests cancellation (a per-cell timeout watchdog, a campaign
+//! driver, an embedding application) and the code that honours it (the
+//! simulator event loop). Cancellation is *cooperative*: setting the
+//! flag does nothing by itself; the simulation observes it at the next
+//! event batch and winds down promptly, so the owning thread can be
+//! `join`ed instead of detached.
+//!
+//! Tokens form a tree via [`CancelToken::child`]: a child reports
+//! cancelled when either its own flag or any ancestor's flag is set.
+//! The campaign runner gives every cell a child of the campaign-level
+//! token, so one campaign-wide `cancel()` stops every in-flight cell
+//! while a per-cell timeout cancels only its own simulation.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Shared cancellation flag. `Clone` shares the underlying flag: all
+/// clones observe the same `cancel()`.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+    parent: Option<Arc<CancelToken>>,
+}
+
+impl CancelToken {
+    /// A fresh, un-cancelled token with no parent.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Idempotent; never blocks.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// True once this token — or any ancestor it was derived from via
+    /// [`child`](CancelToken::child) — has been cancelled.
+    pub fn is_cancelled(&self) -> bool {
+        if self.flag.load(Ordering::Acquire) {
+            return true;
+        }
+        match &self.parent {
+            Some(p) => p.is_cancelled(),
+            None => false,
+        }
+    }
+
+    /// Derive a child token: cancelling the child does not affect this
+    /// token, but cancelling this token (or its ancestors) cancels the
+    /// child.
+    pub fn child(&self) -> CancelToken {
+        CancelToken {
+            flag: Arc::new(AtomicBool::new(false)),
+            parent: Some(Arc::new(self.clone())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_token_is_not_cancelled() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        t.cancel();
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn clones_share_the_flag() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        b.cancel();
+        assert!(a.is_cancelled());
+    }
+
+    #[test]
+    fn parent_cancellation_reaches_children() {
+        let campaign = CancelToken::new();
+        let cell = campaign.child();
+        assert!(!cell.is_cancelled());
+        campaign.cancel();
+        assert!(cell.is_cancelled());
+    }
+
+    #[test]
+    fn child_cancellation_does_not_escape() {
+        let campaign = CancelToken::new();
+        let cell_a = campaign.child();
+        let cell_b = campaign.child();
+        cell_a.cancel();
+        assert!(cell_a.is_cancelled());
+        assert!(!cell_b.is_cancelled());
+        assert!(!campaign.is_cancelled());
+    }
+
+    #[test]
+    fn grandchildren_observe_root_cancellation() {
+        let root = CancelToken::new();
+        let leaf = root.child().child();
+        root.cancel();
+        assert!(leaf.is_cancelled());
+    }
+}

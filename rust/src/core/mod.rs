@@ -1,9 +1,11 @@
 //! Core vocabulary types shared by every layer: time, resources, jobs.
 
+pub mod cancel;
 pub mod job;
 pub mod resources;
 pub mod time;
 
+pub use cancel::CancelToken;
 pub use job::{Job, JobId, JobRecord, JobRequest, JobState};
 pub use resources::{ResourceDelta, Resources, GIB, TIB};
 pub use time::{Duration, Time, MICROS_PER_SEC};

@@ -70,11 +70,25 @@
 //! - Opt-in cost knobs that change trajectories: warm start
 //!   (`--plan-warm-start`) and queue windowing ([`sched::plan::window`],
 //!   `--plan-window` / campaign `plan-windows` axis).
+//!
+//! Run configuration and resumability:
+//! - [`options::SimOptions`] — the single builder every entry point
+//!   (CLI, campaign runner, benches, tests) uses to assemble simulator +
+//!   scheduler knobs; new knobs are added once here instead of in five
+//!   plumbing layers.
+//! - [`core::cancel::CancelToken`] — cooperative cancellation observed
+//!   by the simulator event loop; per-cell timeouts cancel and *join*
+//!   their worker instead of detaching it.
+//! - [`campaign::store`] — content-addressed on-disk store of completed
+//!   campaign cells (`.repro-store/<fnv1a>.json`); re-runs skip cached
+//!   cells byte-identically, `--force` recomputes, `repro gc` removes
+//!   artifacts no longer reachable from a kept spec.
 
 pub mod campaign;
 pub mod coordinator;
 pub mod core;
 pub mod metrics;
+pub mod options;
 pub mod platform;
 pub mod pool;
 pub mod report;
@@ -84,4 +98,5 @@ pub mod sim;
 pub mod stats;
 pub mod workload;
 
-pub use crate::core::{Duration, Job, JobId, JobRecord, JobRequest, Resources, Time};
+pub use crate::core::{CancelToken, Duration, Job, JobId, JobRecord, JobRequest, Resources, Time};
+pub use crate::options::SimOptions;

@@ -4,7 +4,9 @@
 //!   simulate   run one policy over a workload, print its summary
 //!   eval       run the full evaluation (Figs 5-12) and write results/
 //!   campaign   run a (policy x seed x workload x bb-factor) grid in
-//!              parallel from a spec file or a built-in spec
+//!              parallel from a spec file or a built-in spec, resumable
+//!              from a content-addressed run store
+//!   gc         delete store entries not reachable from a kept spec
 //!   gantt      export the Fig-3 Gantt CSV for a policy
 //!   ablation   SA (189 evals) vs Zheng et al. (8742 evals) comparison
 //!   workload   generate/inspect the synthetic KTH-SP2 twin
@@ -14,21 +16,25 @@
 //!
 //! Argument parsing is hand-rolled (`--key value` pairs) because the
 //! offline build ships no clap; see DESIGN.md §1.
+//!
+//! All simulator knobs funnel through ONE [`SimOptions`] construction
+//! site ([`sim_options`]); subcommands only layer their own defaults on
+//! top. The campaign runner builds its own `SimOptions` per grid cell
+//! from the spec (`CampaignSpec::sim_options`) — also exactly one site.
 
 use bbsched::campaign::{
-    self, CampaignSpec, Progress, RunOutcome, EXIT_OK, EXIT_SPEC_ERROR,
+    self, live_keys, CampaignOptions, CampaignSpec, Progress, RunOutcome, RunStore, EXIT_OK,
+    EXIT_SPEC_ERROR,
 };
-use bbsched::coordinator::{
-    run_eval, run_policy, run_policy_opts, EvalParams, PlanBackendKind, SchedOpts,
-};
+use bbsched::coordinator::{run_eval, EvalParams, PlanBackendKind};
 use bbsched::core::job::Job;
 use bbsched::core::time::Duration;
+use bbsched::options::SimOptions;
 use bbsched::platform::{BbArch, Placement, PlatformSpec};
 use bbsched::report::csv;
 use bbsched::report::json::{summary_fields, JsonObject};
 use bbsched::report::{fmt_f, render_table, scenario as scenario_report};
 use bbsched::sched::Policy;
-use bbsched::sim::simulator::SimConfig;
 use bbsched::stats::descriptive::letter_name;
 use bbsched::stats::{ks_p_value, ks_statistic, LogNormal};
 use bbsched::workload::{load_scenario, BbModel, EstimateModel, Family, WorkloadSpec};
@@ -120,21 +126,24 @@ fn load_workload(args: &Args) -> (Vec<Job>, u64, Placement) {
     }
 }
 
-fn sim_config(args: &Args, bb_capacity: u64, bb_placement: Placement) -> SimConfig {
+/// THE `SimOptions` construction site for every CLI entry point: all
+/// `--`-flag simulator/scheduler knobs resolve here, once.
+fn sim_options(args: &Args, bb_capacity: u64, bb_placement: Placement) -> SimOptions {
     let tick_s = args.u64("tick-s", 60);
     if tick_s == 0 {
         // A zero tick re-queues the scheduler at the same instant
         // forever; reject like the spec parser does.
         usage_fail("--tick-s must be positive");
     }
-    SimConfig {
-        bb_capacity,
-        bb_placement,
-        io_enabled: !args.flag("no-io"),
-        tick: Duration::from_secs(tick_s),
-        record_gantt: args.flag("gantt") || args.get("gantt-out").is_some(),
-        ..SimConfig::default()
-    }
+    SimOptions::new()
+        .bb(bb_capacity, bb_placement)
+        .io(!args.flag("no-io"))
+        .tick(Duration::from_secs(tick_s))
+        .record_gantt(args.flag("gantt") || args.get("gantt-out").is_some())
+        .seed(args.u64("seed", 1))
+        .plan_backend(plan_backend(args))
+        .plan_warm_start(args.flag("plan-warm-start"))
+        .plan_window(args.usize("plan-window", 0))
 }
 
 fn plan_backend(args: &Args) -> PlanBackendKind {
@@ -150,21 +159,16 @@ fn cmd_simulate(args: &Args) {
     let policy = Policy::parse(args.get("policy").unwrap_or("sjf-bb"))
         .expect("unknown policy (fcfs|fcfs-easy|filler|fcfs-bb|sjf-bb|plan-N)");
     let (jobs, bb_capacity, placement) = load_workload(args);
-    let cfg = sim_config(args, bb_capacity, placement);
+    let opts = sim_options(args, bb_capacity, placement);
     eprintln!(
         "simulating {} jobs under {} (bb capacity {:.1} GiB, io={})",
         jobs.len(),
         policy.name(),
         bb_capacity as f64 / (1u64 << 30) as f64,
-        cfg.io_enabled
+        opts.sim.io_enabled
     );
     let t0 = std::time::Instant::now();
-    let opts = SchedOpts {
-        plan_warm_start: args.flag("plan-warm-start"),
-        plan_window: args.usize("plan-window", 0),
-        ..SchedOpts::default()
-    };
-    let res = run_policy_opts(jobs, policy, &cfg, args.u64("seed", 1), plan_backend(args), opts);
+    let res = opts.run(jobs, policy);
     let summary = bbsched::metrics::summary::summarize(&policy.name(), &res.records);
     if args.flag("json") {
         // Machine-readable one-object output (ptybox-style `--json`).
@@ -212,7 +216,7 @@ fn cmd_simulate(args: &Args) {
 
 fn cmd_eval(args: &Args) {
     let (jobs, bb_capacity, placement) = load_workload(args);
-    let cfg = sim_config(args, bb_capacity, placement);
+    let opts = sim_options(args, bb_capacity, placement);
     let out_dir = PathBuf::from(args.get("out-dir").unwrap_or("results"));
     let policies: Vec<Policy> = match args.get("policies") {
         Some(list) => list
@@ -230,8 +234,6 @@ fn cmd_eval(args: &Args) {
         policies,
         tail_k: args.usize("tail-k", 3000),
         parts,
-        seed: args.u64("seed", 1),
-        plan_backend: plan_backend(args),
         ..EvalParams::default()
     };
     eprintln!(
@@ -239,10 +241,10 @@ fn cmd_eval(args: &Args) {
         params.policies.len(),
         jobs.len(),
         params.n_threads,
-        cfg.io_enabled
+        opts.sim.io_enabled
     );
     let t0 = std::time::Instant::now();
-    let out = run_eval(&jobs, &cfg, &params);
+    let out = run_eval(&jobs, &opts, &params);
     eprintln!("eval done in {:.1}s", t0.elapsed().as_secs_f64());
 
     // --- Figs 5-6 table. --------------------------------------------------
@@ -422,6 +424,23 @@ fn cmd_campaign(args: &Args) -> i32 {
     // --- Execute. ----------------------------------------------------------
     let default_jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let jobs = args.usize("jobs", default_jobs).max(1);
+    // Store resolution: --store-dir flag > spec `store-dir` key > the
+    // default `.repro-store`; --no-store opts out entirely.
+    let store_dir = if args.flag("no-store") {
+        None
+    } else {
+        Some(
+            args.get("store-dir")
+                .map(PathBuf::from)
+                .or_else(|| spec.store_dir.clone())
+                .unwrap_or_else(|| PathBuf::from(".repro-store")),
+        )
+    };
+    let mut copts = CampaignOptions::new(jobs).force(args.flag("force"));
+    if let Some(dir) = store_dir {
+        eprintln!("run store: {}", dir.display());
+        copts = copts.with_store(RunStore::new(dir));
+    }
     eprintln!(
         "campaign `{}`: {} runs on {} threads -> {}",
         spec.name,
@@ -430,7 +449,7 @@ fn cmd_campaign(args: &Args) -> i32 {
         spec.out_dir.display()
     );
     let progress = Progress::new(runs.len(), !args.flag("quiet"));
-    let result = campaign::run_campaign(&spec, jobs, &progress, |o: &RunOutcome| {
+    let result = campaign::run_campaign(&spec, &copts, &progress, |o: &RunOutcome| {
         if json {
             // NDJSON record stream in deterministic enumeration order.
             println!("{}", o.to_json(true));
@@ -475,6 +494,7 @@ fn cmd_campaign(args: &Args) -> i32 {
                 .str("campaign", &spec.name)
                 .num_u("runs", result.outcomes.len() as u64)
                 .num_u("failed", result.n_failed() as u64)
+                .num_u("cached", result.n_cached() as u64)
                 .num_u("jobs", result.jobs as u64)
                 .num_f("wall_s", result.wall_s)
                 .num_f("aggregate_run_s", result.aggregate_run_s())
@@ -492,7 +512,7 @@ fn cmd_campaign(args: &Args) -> i32 {
             .map(|o| match (&o.summary, &o.error) {
                 (Some(s), _) => vec![
                     o.label.clone(),
-                    "ok".to_string(),
+                    if o.cached { "cached".to_string() } else { "ok".to_string() },
                     fmt_f(s.mean_wait_h),
                     fmt_f(s.mean_bsld),
                     fmt_f(s.median_wait_h),
@@ -502,7 +522,10 @@ fn cmd_campaign(args: &Args) -> i32 {
                 ],
                 (None, e) => vec![
                     o.label.clone(),
-                    format!("FAILED: {}", e.as_deref().unwrap_or("?")),
+                    format!(
+                        "FAILED: {}",
+                        e.as_ref().map(|e| e.to_string()).unwrap_or_else(|| "?".to_string())
+                    ),
                     String::new(),
                     String::new(),
                     String::new(),
@@ -530,14 +553,83 @@ fn cmd_campaign(args: &Args) -> i32 {
     }
 }
 
+/// `repro gc`: delete run-store entries not reachable from a kept spec.
+/// Refuses to run without a keep source — a bare `gc` would delete the
+/// entire store.
+fn cmd_gc(args: &Args) -> i32 {
+    let dir = PathBuf::from(args.get("store-dir").unwrap_or(".repro-store"));
+    let spec = match (args.get("keep-spec"), args.get("keep-builtin")) {
+        (Some(_), Some(_)) => {
+            eprintln!("error: --keep-spec and --keep-builtin are mutually exclusive");
+            return EXIT_SPEC_ERROR;
+        }
+        (Some(path), None) => {
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("error: reading spec {path}: {e}");
+                    return EXIT_SPEC_ERROR;
+                }
+            };
+            match CampaignSpec::parse(&text) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("error: {path}: {e}");
+                    return EXIT_SPEC_ERROR;
+                }
+            }
+        }
+        (None, Some(name)) => match CampaignSpec::builtin(name) {
+            Some(s) => s,
+            None => {
+                eprintln!(
+                    "error: unknown built-in campaign `{name}` (have: {})",
+                    campaign::BUILTINS.join(", ")
+                );
+                return EXIT_SPEC_ERROR;
+            }
+        },
+        (None, None) => {
+            eprintln!(
+                "error: repro gc needs --keep-spec FILE or --keep-builtin NAME \
+                 (refusing to delete the whole store)"
+            );
+            return EXIT_SPEC_ERROR;
+        }
+    };
+    let dry_run = args.flag("dry-run");
+    let store = RunStore::new(dir);
+    let live = live_keys(&spec);
+    match store.gc(&live, dry_run) {
+        Ok(report) => {
+            // Stale paths go to stdout (scriptable: empty output means a
+            // clean store); the human summary stays on stderr.
+            for path in &report.stale {
+                println!("{}", path.display());
+            }
+            let verb = if dry_run { "stale (kept, dry run)" } else { "deleted" };
+            eprintln!(
+                "gc `{}`: {} live entries kept, {} {verb}",
+                store.dir().display(),
+                report.live,
+                report.stale.len()
+            );
+            EXIT_OK
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            campaign::EXIT_RUN_FAILED
+        }
+    }
+}
+
 fn cmd_gantt(args: &Args) {
     let policy = Policy::parse(args.get("policy").unwrap_or("fcfs-easy")).expect("policy");
     let (mut jobs, bb_capacity, placement) = load_workload(args);
     let first_n = args.usize("first-n", 3500);
     jobs.truncate(first_n);
-    let mut cfg = sim_config(args, bb_capacity, placement);
-    cfg.record_gantt = true;
-    let res = run_policy(jobs, policy, &cfg, args.u64("seed", 1), plan_backend(args));
+    let opts = sim_options(args, bb_capacity, placement).record_gantt(true);
+    let res = opts.run(jobs, policy);
     let out = args.get("out").unwrap_or("results/fig03_gantt.csv").to_string();
     csv::write_gantt(Path::new(&out), &res.gantt).unwrap();
     println!("Fig 3 gantt ({} rows, policy {}) -> {out}", res.gantt.len(), policy.name());
@@ -693,6 +785,7 @@ fn main() {
             EXIT_OK
         }
         "campaign" => cmd_campaign(&args),
+        "gc" => cmd_gc(&args),
         "gantt" => {
             cmd_gantt(&args);
             EXIT_OK
@@ -712,7 +805,7 @@ fn main() {
                 eprintln!("error: unknown subcommand `{other}`");
             }
             println!(
-                "usage: repro <simulate|eval|campaign|gantt|ablation|workload> [--key value ...]\n\n\
+                "usage: repro <simulate|eval|campaign|gc|gantt|ablation|workload> [--key value ...]\n\n\
                  common flags:\n\
                  \x20 --scale F        fraction of the paper workload (default 1.0 = 28453 jobs)\n\
                  \x20 --seed N         workload + scheduler seed\n\
@@ -734,9 +827,16 @@ fn main() {
                  \x20 --spec FILE      campaign spec ([campaign]/[grid]/[workload]/[scenario]/[sim])\n\
                  \x20 --builtin NAME   paper-eval (default) | smoke | stress-suite | bb-sweep | plan-perf\n\
                  \x20 --jobs N         worker threads (default: all cores)\n\
-                 \x20 --timeout-s T    per-run wall-clock budget; overruns are marked failed\n\
+                 \x20 --timeout-s T    per-run wall-clock budget; overruns are cancelled + failed\n\
+                 \x20 --store-dir DIR  content-addressed run store (default .repro-store)\n\
+                 \x20 --no-store       do not read or write the run store\n\
+                 \x20 --force          recompute cells even when the store has them\n\
                  \x20 --dry-run        enumerate the grid without simulating\n\
                  \x20 --quiet          suppress per-run progress on stderr\n\n\
+                 gc flags:\n\
+                 \x20 --keep-spec FILE | --keep-builtin NAME   grid whose cells stay live\n\
+                 \x20 --store-dir DIR  store to collect (default .repro-store)\n\
+                 \x20 --dry-run        print stale entries without deleting\n\n\
                  exit codes: 0 = ok, 1 = some campaign run failed, 2 = spec/usage error"
             );
             if other == "help" {

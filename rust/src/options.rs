@@ -1,0 +1,224 @@
+//! The one place simulation + scheduler knobs live: [`SimOptions`].
+//!
+//! Before this module existed every knob was plumbed through four
+//! layers — `SimConfig` fields, a separate `SchedOpts` struct, the
+//! `run_policy_opts`/`make_scheduler_opts` parameter lists, and per-flag
+//! parsing in `main.rs` — so adding one option meant touching five
+//! files. `SimOptions` collapses them into a single builder that every
+//! entry point (the `repro` CLI, the campaign runner, benches, tests)
+//! constructs in exactly one place; new knobs (the cancel token, the
+//! store directory) are added here once.
+//!
+//! ```no_run
+//! use bbsched::options::SimOptions;
+//! use bbsched::sched::Policy;
+//!
+//! let res = SimOptions::new()
+//!     .bb_capacity(1 << 40)
+//!     .seed(7)
+//!     .io(false)
+//!     .run(vec![], Policy::SjfBb);
+//! assert!(!res.cancelled);
+//! ```
+
+use crate::coordinator::PlanBackendKind;
+use crate::core::cancel::CancelToken;
+use crate::core::job::Job;
+use crate::core::time::{Duration, Time};
+use crate::platform::placement::Placement;
+use crate::sched::{Policy, Scheduler};
+use crate::sim::simulator::{SimConfig, SimResult, Simulator};
+
+/// Every knob a simulation run takes: the simulator configuration, the
+/// scheduler-construction seed, and the plan-policy options that used to
+/// live in `SchedOpts`. Defaults reproduce the paper-faithful,
+/// fingerprint-stable setup (I/O on, 60 s tick, exact scorer, no warm
+/// start, no windowing).
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Simulator parameters (topology, BB capacity/placement, tick,
+    /// triggers, I/O, horizon, gantt, timeline modes, cancel token).
+    pub sim: SimConfig,
+    /// Scheduler-construction seed (plan policies seed their SA RNG
+    /// from it).
+    pub seed: u64,
+    /// How plan policies score SA candidates.
+    pub plan_backend: PlanBackendKind,
+    /// Plan policies: seed the SA with the previous tick's plan.
+    pub plan_warm_start: bool,
+    /// Plan policies: disable the exact scorer's prefix cache (perf
+    /// baseline; behaviour-identical).
+    pub plan_cold_scoring: bool,
+    /// Plan policies: queue window `W` (0 = off) — optimise only the
+    /// first `W` queued jobs and append the tail greedily
+    /// ([`crate::sched::plan::window`]).
+    pub plan_window: usize,
+}
+
+impl Default for SimOptions {
+    fn default() -> SimOptions {
+        SimOptions {
+            sim: SimConfig::default(),
+            seed: 1,
+            plan_backend: PlanBackendKind::Exact,
+            plan_warm_start: false,
+            plan_cold_scoring: false,
+            plan_window: 0,
+        }
+    }
+}
+
+impl SimOptions {
+    pub fn new() -> SimOptions {
+        SimOptions::default()
+    }
+
+    /// Wrap an already-built [`SimConfig`] (callers that assemble the
+    /// simulator config directly, e.g. timeline-mode parity tests).
+    pub fn for_sim(sim: SimConfig) -> SimOptions {
+        SimOptions { sim, ..SimOptions::default() }
+    }
+
+    // ----- simulator knobs ----------------------------------------------
+
+    pub fn bb_capacity(mut self, bytes: u64) -> SimOptions {
+        self.sim.bb_capacity = bytes;
+        self
+    }
+
+    pub fn bb_placement(mut self, placement: Placement) -> SimOptions {
+        self.sim.bb_placement = placement;
+        self
+    }
+
+    /// Set capacity and placement together (the shape every scenario
+    /// hands back).
+    pub fn bb(self, bytes: u64, placement: Placement) -> SimOptions {
+        self.bb_capacity(bytes).bb_placement(placement)
+    }
+
+    pub fn io(mut self, enabled: bool) -> SimOptions {
+        self.sim.io_enabled = enabled;
+        self
+    }
+
+    pub fn tick(mut self, tick: Duration) -> SimOptions {
+        self.sim.tick = tick;
+        self
+    }
+
+    pub fn event_triggers(mut self, on: bool) -> SimOptions {
+        self.sim.event_triggers = on;
+        self
+    }
+
+    pub fn horizon(mut self, horizon: Option<Time>) -> SimOptions {
+        self.sim.horizon = horizon;
+        self
+    }
+
+    pub fn record_gantt(mut self, on: bool) -> SimOptions {
+        self.sim.record_gantt = on;
+        self
+    }
+
+    pub fn rebuild_timeline(mut self, on: bool) -> SimOptions {
+        self.sim.rebuild_timeline = on;
+        self
+    }
+
+    pub fn validate_timeline(mut self, on: bool) -> SimOptions {
+        self.sim.validate_timeline = on;
+        self
+    }
+
+    /// Cooperative cancellation token observed by the simulator event
+    /// loop (see [`crate::core::cancel`]).
+    pub fn cancel(mut self, token: CancelToken) -> SimOptions {
+        self.sim.cancel = token;
+        self
+    }
+
+    // ----- scheduler knobs ----------------------------------------------
+
+    pub fn seed(mut self, seed: u64) -> SimOptions {
+        self.seed = seed;
+        self
+    }
+
+    pub fn plan_backend(mut self, backend: PlanBackendKind) -> SimOptions {
+        self.plan_backend = backend;
+        self
+    }
+
+    pub fn plan_warm_start(mut self, on: bool) -> SimOptions {
+        self.plan_warm_start = on;
+        self
+    }
+
+    pub fn plan_cold_scoring(mut self, on: bool) -> SimOptions {
+        self.plan_cold_scoring = on;
+        self
+    }
+
+    pub fn plan_window(mut self, w: usize) -> SimOptions {
+        self.plan_window = w;
+        self
+    }
+
+    // ----- execution -----------------------------------------------------
+
+    /// Instantiate a scheduler for `policy` under these options.
+    pub fn scheduler(&self, policy: Policy) -> Box<dyn Scheduler + Send> {
+        crate::coordinator::make_scheduler(policy, self)
+    }
+
+    /// Run one policy over one workload to completion.
+    pub fn run(&self, jobs: Vec<Job>, policy: Policy) -> SimResult {
+        Simulator::new(jobs, self.scheduler(policy), self.sim.clone()).run()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::resources::TIB;
+
+    #[test]
+    fn builder_sets_every_layer_in_one_chain() {
+        let opts = SimOptions::new()
+            .bb(2 * TIB, Placement::PerNode)
+            .io(false)
+            .tick(Duration::from_secs(30))
+            .seed(9)
+            .plan_backend(PlanBackendKind::Discrete { t_slots: 32 })
+            .plan_warm_start(true)
+            .plan_window(8);
+        assert_eq!(opts.sim.bb_capacity, 2 * TIB);
+        assert_eq!(opts.sim.bb_placement, Placement::PerNode);
+        assert!(!opts.sim.io_enabled);
+        assert_eq!(opts.sim.tick, Duration::from_secs(30));
+        assert_eq!(opts.seed, 9);
+        assert_eq!(opts.plan_backend, PlanBackendKind::Discrete { t_slots: 32 });
+        assert!(opts.plan_warm_start);
+        assert_eq!(opts.plan_window, 8);
+    }
+
+    #[test]
+    fn defaults_are_paper_faithful() {
+        let opts = SimOptions::new();
+        assert!(opts.sim.io_enabled);
+        assert_eq!(opts.sim.tick, Duration::from_secs(60));
+        assert_eq!(opts.seed, 1);
+        assert_eq!(opts.plan_backend, PlanBackendKind::Exact);
+        assert!(!opts.plan_warm_start && !opts.plan_cold_scoring);
+        assert_eq!(opts.plan_window, 0);
+    }
+
+    #[test]
+    fn run_executes_a_tiny_workload() {
+        let res = SimOptions::new().bb_capacity(TIB).io(false).run(vec![], Policy::Fcfs);
+        assert!(res.records.is_empty());
+        assert!(!res.cancelled);
+    }
+}

@@ -3,6 +3,7 @@
 //! (`coordinator::run_many`) and the campaign runner
 //! (`campaign::runner::run_campaign`).
 
+use crate::core::cancel::CancelToken;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{mpsc, Mutex};
@@ -25,6 +26,28 @@ where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
+{
+    let never = CancelToken::new();
+    parallel_map_cancellable(tasks, jobs, &never, |t, _| f(t))
+}
+
+/// [`parallel_map`] with a cooperative [`CancelToken`]: `f` receives the
+/// token alongside each task and is expected to fast-path when it fires.
+///
+/// Cancellation does NOT drop tasks — every task still runs `f` and
+/// yields an `R` (a cancelled campaign cell still produces its failed
+/// outcome), which keeps the result vector total and input-ordered. The
+/// token's job is to make each remaining `f` call cheap, not to skip it.
+pub fn parallel_map_cancellable<T, R, F>(
+    tasks: Vec<T>,
+    jobs: usize,
+    cancel: &CancelToken,
+    f: F,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T, &CancelToken) -> R + Sync,
 {
     let n = tasks.len();
     if n == 0 {
@@ -49,7 +72,7 @@ where
                     // run or steal (tasks are never re-enqueued).
                     break;
                 };
-                let result = catch_unwind(AssertUnwindSafe(|| f(t)));
+                let result = catch_unwind(AssertUnwindSafe(|| f(t, cancel)));
                 let poisoned = result.is_err();
                 if tx.send((i, result)).is_err() || poisoned {
                     break;
@@ -129,6 +152,22 @@ mod tests {
         let out: Vec<u32> = parallel_map(Vec::<u32>::new(), 4, |t| t);
         assert!(out.is_empty());
         assert_eq!(parallel_map(vec![7u32], 16, |t| t + 1), vec![8]);
+    }
+
+    #[test]
+    fn cancellable_map_stays_total_under_cancellation() {
+        let token = CancelToken::new();
+        token.cancel();
+        // Even pre-cancelled, every task yields a result (the fast path).
+        let out = parallel_map_cancellable((0..20u64).collect(), 4, &token, |t, c| {
+            if c.is_cancelled() {
+                u64::MAX
+            } else {
+                t
+            }
+        });
+        assert_eq!(out.len(), 20);
+        assert!(out.iter().all(|&v| v == u64::MAX));
     }
 
     #[test]

@@ -118,12 +118,13 @@ pub(crate) fn csv_escape(field: &str) -> String {
 /// Campaign results: one row per grid cell, in enumeration order.
 /// Columns 1-17 (through `fingerprint`) are the deterministic
 /// projection the `--jobs N == --jobs 1` CI diff is stated over; the
-/// wall-clock columns after it are explicitly excluded.
+/// wall-clock, error and cache-provenance columns after it are
+/// explicitly excluded.
 pub fn write_campaign(path: &Path, outcomes: &[RunOutcome]) -> std::io::Result<()> {
     let mut s = String::from(
         "run,label,policy,seed,workload,bb_arch,bb_factor,plan_window,ok,n_jobs,n_killed,\
          mean_wait_h,mean_bsld,median_wait_h,max_wait_h,makespan_h,fingerprint,\
-         sched_invocations,sched_wall_s,wall_s,error\n",
+         sched_invocations,sched_wall_s,wall_s,error,error_code,cached\n",
     );
     for o in outcomes {
         let (n_jobs, n_killed, wait, bsld, median, max, makespan) = match &o.summary {
@@ -139,7 +140,7 @@ pub fn write_campaign(path: &Path, outcomes: &[RunOutcome]) -> std::io::Result<(
             None => Default::default(),
         };
         s.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:016x},{},{:.6},{:.6},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:016x},{},{:.6},{:.6},{},{},{}\n",
             o.run.index,
             csv_escape(&o.label),
             o.run.policy.name(),
@@ -160,7 +161,9 @@ pub fn write_campaign(path: &Path, outcomes: &[RunOutcome]) -> std::io::Result<(
             o.sched_invocations,
             o.sched_wall_s,
             o.wall_s,
-            csv_escape(o.error.as_deref().unwrap_or("")),
+            csv_escape(&o.error_message().unwrap_or_default()),
+            o.error.as_ref().map(|e| e.code()).unwrap_or(""),
+            o.cached,
         ));
     }
     write_file(path, &s)

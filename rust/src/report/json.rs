@@ -1,6 +1,8 @@
 //! Hand-rolled JSON serialization for `--json` machine-readable output
 //! (the offline build ships no serde). Only what the CLI needs: flat
-//! objects, string/number/bool fields, and NDJSON record streams.
+//! objects, string/number/bool fields, and NDJSON record streams — plus
+//! the matching [`parse_flat_object`] reader the campaign store uses to
+//! load its own records back.
 //!
 //! Number formatting uses Rust's shortest-round-trip `Display`, which is
 //! deterministic for identical inputs — the property the campaign
@@ -127,6 +129,205 @@ pub fn summary_fields(
         .num_f("makespan_h", s.makespan_h)
 }
 
+/// A value in a flat JSON object (no nesting — the store never writes
+/// nested records, so the parser rejects them loudly instead of
+/// half-supporting them).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+impl JsonValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            // Integers up to 2^53 round-trip exactly through f64; every
+            // u64 the store writes (counts, seeds) is far below that.
+            // Hashes travel as 16-hex-digit strings instead.
+            JsonValue::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 2f64.powi(53) => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one flat JSON object (`{"k":"v","n":1.5,"b":true,"x":null}`)
+/// into key/value pairs in document order. The inverse of
+/// [`JsonObject`]: numbers parsed with `str::parse::<f64>` round-trip
+/// the shortest-`Display` forms `number` emits bit-exactly, which is
+/// what the store's byte-identical-resume guarantee rests on. Nested
+/// objects/arrays and trailing garbage are errors.
+pub fn parse_flat_object(text: &str) -> Result<Vec<(String, JsonValue)>, String> {
+    let mut p = Parser { s: text.as_bytes(), i: 0 };
+    p.ws();
+    p.expect(b'{')?;
+    let mut out = Vec::new();
+    p.ws();
+    if p.peek() == Some(b'}') {
+        p.i += 1;
+    } else {
+        loop {
+            p.ws();
+            let key = p.string()?;
+            p.ws();
+            p.expect(b':')?;
+            p.ws();
+            let val = p.value()?;
+            out.push((key, val));
+            p.ws();
+            match p.next() {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                _ => return Err(format!("expected ',' or '}}' at byte {}", p.i)),
+            }
+        }
+    }
+    p.ws();
+    if p.i != p.s.len() {
+        return Err(format!("trailing garbage at byte {}", p.i));
+    }
+    Ok(out)
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+    fn next(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.i += 1;
+        }
+        b
+    }
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.next() == Some(b) {
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", b as char, self.i))
+        }
+    }
+    fn lit(&mut self, word: &str) -> Result<(), String> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.next() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.next() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        if self.i + 4 > self.s.len() {
+                            return Err("truncated \\u escape".to_string());
+                        }
+                        let hex = std::str::from_utf8(&self.s[self.i..self.i + 4])
+                            .map_err(|_| "bad \\u escape".to_string())?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| "bad \\u escape".to_string())?;
+                        self.i += 4;
+                        // The writer only \u-escapes control characters
+                        // (< 0x20); surrogate pairs never occur.
+                        out.push(
+                            char::from_u32(cp).ok_or_else(|| "bad \\u codepoint".to_string())?,
+                        );
+                    }
+                    _ => return Err(format!("bad escape at byte {}", self.i)),
+                },
+                Some(b) => {
+                    // Collect the full UTF-8 sequence starting at b.
+                    let start = self.i - 1;
+                    let len = match b {
+                        0x00..=0x7f => 1,
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    if start + len > self.s.len() {
+                        return Err("truncated UTF-8".to_string());
+                    }
+                    let chunk = std::str::from_utf8(&self.s[start..start + len])
+                        .map_err(|_| "invalid UTF-8 in string".to_string())?;
+                    out.push_str(chunk);
+                    self.i = start + len;
+                }
+            }
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue, String> {
+        match self.peek() {
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.lit("true").map(|_| JsonValue::Bool(true)),
+            Some(b'f') => self.lit("false").map(|_| JsonValue::Bool(false)),
+            Some(b'n') => self.lit("null").map(|_| JsonValue::Null),
+            Some(b'{') | Some(b'[') => {
+                Err(format!("nested value at byte {} (flat objects only)", self.i))
+            }
+            Some(_) => {
+                let start = self.i;
+                while matches!(
+                    self.peek(),
+                    Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                ) {
+                    self.i += 1;
+                }
+                let tok = std::str::from_utf8(&self.s[start..self.i]).unwrap();
+                tok.parse::<f64>()
+                    .map(JsonValue::Num)
+                    .map_err(|_| format!("bad number {tok:?} at byte {start}"))
+            }
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +370,53 @@ mod tests {
     #[test]
     fn empty_object() {
         assert_eq!(JsonObject::new().end(), "{}");
+    }
+
+    #[test]
+    fn parser_round_trips_writer_output() {
+        let doc = JsonObject::new()
+            .str("name", "smoke \"q\"\n")
+            .num_u("runs", 4)
+            .num_f("wall_s", 0.1 + 0.2) // a value with a long shortest form
+            .num_f("neg", -1.5e-9)
+            .bool("ok", true)
+            .num_f("nan", f64::NAN) // writes null
+            .end();
+        let kv = parse_flat_object(&doc).unwrap();
+        assert_eq!(kv[0], ("name".into(), JsonValue::Str("smoke \"q\"\n".into())));
+        assert_eq!(kv[1].1.as_u64(), Some(4));
+        assert_eq!(kv[2].1.as_f64(), Some(0.1 + 0.2));
+        assert_eq!(kv[3].1.as_f64(), Some(-1.5e-9));
+        assert_eq!(kv[4].1.as_bool(), Some(true));
+        assert_eq!(kv[5].1, JsonValue::Null);
+    }
+
+    #[test]
+    fn parser_round_trips_f64_bit_exactly() {
+        // The byte-identical-resume guarantee: Display -> parse -> Display
+        // is the identity on finite f64 (shortest round-trip formatting).
+        for v in [1.0 / 3.0, 0.003, 1e300, -7.23e-21, f64::MIN_POSITIVE] {
+            let doc = JsonObject::new().num_f("v", v).end();
+            let kv = parse_flat_object(&doc).unwrap();
+            assert_eq!(kv[0].1.as_f64().unwrap().to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn parser_handles_control_escapes_and_unicode() {
+        let doc = JsonObject::new().str("k", "a\u{1}b\tc λ").end();
+        let kv = parse_flat_object(&doc).unwrap();
+        assert_eq!(kv[0].1.as_str(), Some("a\u{1}b\tc λ"));
+        assert_eq!(parse_flat_object("{}").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn parser_rejects_nesting_and_garbage() {
+        assert!(parse_flat_object(r#"{"a":{}}"#).is_err());
+        assert!(parse_flat_object(r#"{"a":[1]}"#).is_err());
+        assert!(parse_flat_object(r#"{"a":1} x"#).is_err());
+        assert!(parse_flat_object(r#"{"a":1"#).is_err());
+        assert!(parse_flat_object("").is_err());
+        assert!(parse_flat_object(r#"{"a":bogus}"#).is_err());
     }
 }

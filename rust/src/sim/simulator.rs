@@ -9,6 +9,7 @@
 //! reproducible — events at equal timestamps are processed FIFO and all
 //! state updates are ordered.
 
+use crate::core::cancel::CancelToken;
 use crate::core::job::{Job, JobId, JobRecord, JobRequest, JobState};
 
 use crate::core::time::{Duration, Time};
@@ -58,6 +59,11 @@ pub struct SimConfig {
     /// breakpoint-identical to a full rebuild (test paranoia mode; the
     /// check runs outside the `sched_wall` timing window).
     pub validate_timeline: bool,
+    /// Cooperative cancellation: checked once per event batch. When the
+    /// token fires mid-run the simulation stops promptly, returns with
+    /// [`SimResult::cancelled`] set, and its records are partial — the
+    /// campaign layer turns that into a failed (never a stored) outcome.
+    pub cancel: CancelToken,
 }
 
 impl Default for SimConfig {
@@ -73,6 +79,7 @@ impl Default for SimConfig {
             record_gantt: false,
             rebuild_timeline: false,
             validate_timeline: false,
+            cancel: CancelToken::new(),
         }
     }
 }
@@ -102,6 +109,10 @@ pub struct SimResult {
     pub sched_invocations: u64,
     pub sched_wall: std::time::Duration,
     pub killed_jobs: u32,
+    /// The run was stopped by its [`CancelToken`] before completing; the
+    /// records (and therefore the fingerprint) cover only the simulated
+    /// prefix and must not be treated as a full-run result.
+    pub cancelled: bool,
 }
 
 impl SimResult {
@@ -240,7 +251,15 @@ impl Simulator {
     /// Run to completion (all jobs finished or horizon reached).
     pub fn run(mut self) -> SimResult {
         let mut horizon_hit = false;
+        let mut cancelled = false;
         'main: while let Some((t, first)) = self.queue.pop() {
+            // One cancellation check per event batch: cheap (an atomic
+            // load) yet prompt — the longest uncancellable stretch is a
+            // single batch including its scheduler invocation.
+            if self.cfg.cancel.is_cancelled() {
+                cancelled = true;
+                break 'main;
+            }
             debug_assert!(t >= self.clock, "event time regression");
             self.clock = t;
             // Drain network progress up to now; flow completions are part
@@ -285,6 +304,7 @@ impl Simulator {
             sched_invocations: self.sched_invocations,
             sched_wall: self.sched_wall,
             killed_jobs: self.killed,
+            cancelled,
         }
     }
 
@@ -904,6 +924,36 @@ mod tests {
         let mut c = cfg(1200);
         c.bb_placement = Placement::PerNode;
         let _ = Simulator::new(jobs, Box::new(Fcfs::new()), c);
+    }
+
+    #[test]
+    fn pre_cancelled_token_stops_before_any_event() {
+        let jobs = vec![mk_job(0, 0, 10_000, 4, 0)];
+        let mut c = cfg(TIB);
+        c.cancel = CancelToken::new();
+        c.cancel.cancel();
+        let res = Simulator::new(jobs, Box::new(Fcfs::new()), c).run();
+        assert!(res.cancelled);
+        assert!(res.records.is_empty());
+    }
+
+    #[test]
+    fn uncancelled_run_reports_cancelled_false() {
+        let jobs = vec![mk_job(0, 0, 60, 2, 0)];
+        let res = Simulator::new(jobs, Box::new(Fcfs::new()), cfg(TIB)).run();
+        assert!(!res.cancelled);
+        assert_eq!(res.records.len(), 1);
+    }
+
+    #[test]
+    fn cancelling_a_parent_token_stops_the_run() {
+        let campaign = CancelToken::new();
+        let jobs = vec![mk_job(0, 0, 10_000, 4, 0)];
+        let mut c = cfg(TIB);
+        c.cancel = campaign.child();
+        campaign.cancel();
+        let res = Simulator::new(jobs, Box::new(Fcfs::new()), c).run();
+        assert!(res.cancelled);
     }
 
     #[test]

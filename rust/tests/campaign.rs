@@ -4,8 +4,8 @@
 //! metrics to the same grid on 1 worker.
 
 use bbsched::campaign::{
-    exit_code, run_campaign, CampaignSpec, Progress, RunOutcome, EXIT_OK, EXIT_RUN_FAILED,
-    EXIT_SPEC_ERROR,
+    exit_code, run_campaign, CampaignOptions, CampaignSpec, Progress, RunOutcome, EXIT_OK,
+    EXIT_RUN_FAILED, EXIT_SPEC_ERROR,
 };
 use bbsched::coordinator::PlanBackendKind;
 use bbsched::platform::BbArch;
@@ -75,7 +75,7 @@ fn parallel_campaign_is_bit_identical_to_sequential() {
     let run_with = |jobs: usize| -> (Vec<String>, Vec<String>) {
         let streamed = Mutex::new(Vec::new());
         let progress = Progress::quiet(spec.n_runs());
-        let result = run_campaign(&spec, jobs, &progress, |o: &RunOutcome| {
+        let result = run_campaign(&spec, &CampaignOptions::new(jobs), &progress, |o: &RunOutcome| {
             streamed.lock().unwrap().push(o.deterministic_line());
         });
         assert_eq!(exit_code(&result.outcomes), EXIT_OK);
@@ -112,12 +112,12 @@ fn failed_runs_are_isolated_and_flip_the_exit_code() {
     )
     .unwrap();
     let progress = Progress::quiet(spec.n_runs());
-    let result = run_campaign(&spec, 2, &progress, |_| {});
+    let result = run_campaign(&spec, &CampaignOptions::new(2), &progress, |_| {});
     assert_eq!(result.outcomes.len(), 1);
     let o = &result.outcomes[0];
     assert!(!o.ok());
     assert!(o.summary.is_none());
-    assert!(o.error.as_deref().unwrap().contains("reading SWF file"));
+    assert!(o.error_message().unwrap().contains("reading SWF file"));
     assert_eq!(exit_code(&result.outcomes), EXIT_RUN_FAILED);
 }
 
@@ -170,7 +170,7 @@ fn scenario_grid_is_deterministic_across_workers() {
 
     let run_with = |jobs: usize| -> Vec<String> {
         let progress = Progress::quiet(spec.n_runs());
-        let result = run_campaign(&spec, jobs, &progress, |_| {});
+        let result = run_campaign(&spec, &CampaignOptions::new(jobs), &progress, |_| {});
         assert_eq!(exit_code(&result.outcomes), EXIT_OK, "a scenario run failed");
         result.outcomes.iter().map(|o| o.deterministic_line()).collect()
     };
@@ -207,20 +207,21 @@ fn per_run_timeout_fails_the_run_not_the_campaign() {
     )
     .unwrap();
     let progress = Progress::quiet(spec.n_runs());
-    let result = run_campaign(&spec, 2, &progress, |_| {});
+    let result = run_campaign(&spec, &CampaignOptions::new(2), &progress, |_| {});
     assert_eq!(result.outcomes.len(), 2, "every cell must still produce an outcome");
     for o in &result.outcomes {
         assert!(!o.ok());
-        assert!(o.error.as_deref().unwrap().contains("timeout"), "{:?}", o.error);
+        assert!(o.error_message().unwrap().contains("timeout"), "{:?}", o.error);
     }
     assert_eq!(exit_code(&result.outcomes), EXIT_RUN_FAILED);
 }
 
 /// A timed-out cell must fail (exit code 1) WITHOUT poisoning the rest
 /// of the pool: cells after it in the same campaign still complete.
-/// (Guards the detached-timeout-thread starvation path noted in the
-/// ROADMAP: the abandoned thread keeps burning a core, but the pool
-/// must keep scheduling and fast cells must still finish in budget.)
+/// (The timeout path cancels the cell's token and joins its worker
+/// thread, so — unlike the old detached-watchdog design — nothing keeps
+/// burning a core after the budget fires; `tests/store.rs` asserts the
+/// thread-count reclaim directly.)
 #[test]
 fn timed_out_cell_fails_while_later_cells_complete() {
     // Cell 0: plan-2 over the full-size paper twin — SA planning on a
@@ -228,9 +229,9 @@ fn timed_out_cell_fails_while_later_cells_complete() {
     // any 5-second budget (the full grid is CI's *weekly* job for a
     // reason). Cell 1: plan-2 over a ~60-job trace — milliseconds of
     // work, orders of magnitude inside the budget even on a loaded
-    // single-core runner with the abandoned cell-0 thread still
-    // burning CPU (two-sided margin, so the test is not wall-clock
-    // flaky in either direction).
+    // single-core runner (two-sided margin, so the test is not
+    // wall-clock flaky in either direction; cell 0's thread is joined
+    // at cancellation, so it is not even competing for the core).
     let spec = CampaignSpec::parse(
         "[campaign]\n\
          name = budget-mixed\n\
@@ -249,11 +250,11 @@ fn timed_out_cell_fails_while_later_cells_complete() {
     // has abandoned the timed-out cell — the pool-moves-on guarantee is
     // actually on the line (with >= 2 workers the fast cell would pass
     // trivially on its own worker).
-    let result = run_campaign(&spec, 1, &progress, |_| {});
+    let result = run_campaign(&spec, &CampaignOptions::new(1), &progress, |_| {});
     assert_eq!(result.outcomes.len(), 2);
     let slow = &result.outcomes[0];
     assert!(!slow.ok(), "the full-scale cell must blow the 5 s budget");
-    assert!(slow.error.as_deref().unwrap().contains("timeout"), "{:?}", slow.error);
+    assert!(slow.error_message().unwrap().contains("timeout"), "{:?}", slow.error);
     let fast = &result.outcomes[1];
     assert!(fast.ok(), "a later cell must still complete: {:?}", fast.error);
     assert!(fast.summary.is_some());
@@ -279,7 +280,7 @@ fn plan_window_axis_runs_and_preserves_fingerprints_when_oversized() {
     assert_eq!(spec.n_runs(), 3);
     let run_with = |jobs: usize| -> Vec<String> {
         let progress = Progress::quiet(spec.n_runs());
-        let result = run_campaign(&spec, jobs, &progress, |_| {});
+        let result = run_campaign(&spec, &CampaignOptions::new(jobs), &progress, |_| {});
         assert_eq!(exit_code(&result.outcomes), EXIT_OK);
         result.outcomes.iter().map(|o| o.deterministic_line()).collect()
     };

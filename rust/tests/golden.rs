@@ -18,11 +18,11 @@
 //! blessed file lands.
 
 use bbsched::campaign::CampaignSpec;
-use bbsched::coordinator::{run_policy, PlanBackendKind};
+use bbsched::coordinator::run_policy;
 use bbsched::platform::PlatformSpec;
 use bbsched::sched::Policy;
-use bbsched::sim::simulator::SimConfig;
 use bbsched::workload::load_scenario;
+use bbsched::SimOptions;
 use std::fmt::Write as _;
 use std::path::PathBuf;
 
@@ -50,14 +50,10 @@ fn smoke_builtin_fingerprints_match_golden() {
         for &seed in &spec.seeds {
             let (jobs, bb_capacity) =
                 load_scenario(workload, &PlatformSpec::default(), seed).expect("workload");
-            let cfg = SimConfig {
-                bb_capacity,
-                io_enabled: spec.io_enabled,
-                ..SimConfig::default()
-            };
+            let opts =
+                SimOptions::new().bb_capacity(bb_capacity).io(spec.io_enabled).seed(seed);
             for policy in all_policies() {
-                let res =
-                    run_policy(jobs.clone(), policy, &cfg, seed, PlanBackendKind::Exact);
+                let res = run_policy(jobs.clone(), policy, &opts);
                 writeln!(
                     current,
                     "{}+s{seed}+{} {:016x}",

@@ -7,14 +7,13 @@ use bbsched::core::job::Job;
 use bbsched::core::time::{Duration, Time};
 use bbsched::metrics::summary::summarize;
 use bbsched::sched::Policy;
-use bbsched::sim::simulator::SimConfig;
 use bbsched::workload::synth::{generate, SynthConfig};
+use bbsched::SimOptions;
 
-fn workload(seed: u64, frac: f64) -> (Vec<Job>, SimConfig) {
+fn workload(seed: u64, frac: f64) -> (Vec<Job>, SimOptions) {
     let cfg = SynthConfig::scaled(seed, frac);
     let jobs = generate(&cfg);
-    let sim = SimConfig { bb_capacity: cfg.bb_capacity, ..SimConfig::default() };
-    (jobs, sim)
+    (jobs, SimOptions::new().bb_capacity(cfg.bb_capacity))
 }
 
 /// Every job runs exactly once; start >= submit; finish > start; no
@@ -23,7 +22,7 @@ fn workload(seed: u64, frac: f64) -> (Vec<Job>, SimConfig) {
 fn conservation_invariants_all_policies() {
     let (jobs, sim) = workload(11, 0.01);
     for policy in Policy::ALL {
-        let res = run_policy(jobs.clone(), policy, &sim, 1, PlanBackendKind::Exact);
+        let res = run_policy(jobs.clone(), policy, &sim);
         assert_eq!(res.records.len(), jobs.len(), "{}", policy.name());
         let mut seen = vec![false; jobs.len()];
         for r in &res.records {
@@ -44,11 +43,9 @@ fn conservation_invariants_all_policies() {
 /// stretch (never shrink).
 #[test]
 fn io_only_stretches_runtimes() {
-    let (jobs, mut sim) = workload(13, 0.005);
-    sim.io_enabled = false;
-    let dry = run_policy(jobs.clone(), Policy::FcfsBb, &sim, 1, PlanBackendKind::Exact);
-    sim.io_enabled = true;
-    let wet = run_policy(jobs.clone(), Policy::FcfsBb, &sim, 1, PlanBackendKind::Exact);
+    let (jobs, sim) = workload(13, 0.005);
+    let dry = run_policy(jobs.clone(), Policy::FcfsBb, &sim.clone().io(false));
+    let wet = run_policy(jobs.clone(), Policy::FcfsBb, &sim.io(true));
     let mut dry_rt: Vec<(u32, Duration)> =
         dry.records.iter().map(|r| (r.id.0, r.runtime())).collect();
     dry_rt.sort();
@@ -85,7 +82,7 @@ fn io_only_stretches_runtimes() {
 fn policy_ordering_holds_at_load() {
     let (jobs, sim) = workload(17, 0.02);
     let mean = |p: Policy| {
-        let res = run_policy(jobs.clone(), p, &sim, 1, PlanBackendKind::Exact);
+        let res = run_policy(jobs.clone(), p, &sim);
         summarize(&p.name(), &res.records).mean_wait_h
     };
     let fcfs = mean(Policy::Fcfs);
@@ -105,9 +102,10 @@ fn policy_ordering_holds_at_load() {
 #[test]
 fn determinism_including_plan_based() {
     let (jobs, sim) = workload(19, 0.005);
+    let sim = sim.seed(7);
     for policy in [Policy::SjfBb, Policy::Plan(2)] {
-        let a = run_policy(jobs.clone(), policy, &sim, 7, PlanBackendKind::Exact);
-        let b = run_policy(jobs.clone(), policy, &sim, 7, PlanBackendKind::Exact);
+        let a = run_policy(jobs.clone(), policy, &sim);
+        let b = run_policy(jobs.clone(), policy, &sim);
         assert_eq!(a.records, b.records, "{}", policy.name());
     }
 }
@@ -118,19 +116,11 @@ fn determinism_including_plan_based() {
 #[test]
 fn discrete_backend_quality_close_to_exact() {
     let (jobs, sim) = workload(23, 0.01);
-    let exact = run_policy(
-        jobs.clone(),
-        Policy::Plan(2),
-        &sim,
-        1,
-        PlanBackendKind::Exact,
-    );
+    let exact = run_policy(jobs.clone(), Policy::Plan(2), &sim);
     let disc = run_policy(
         jobs.clone(),
         Policy::Plan(2),
-        &sim,
-        1,
-        PlanBackendKind::Discrete { t_slots: 256 },
+        &sim.plan_backend(PlanBackendKind::Discrete { t_slots: 256 }),
     );
     let se = summarize("exact", &exact.records).mean_wait_h;
     let sd = summarize("disc", &disc.records).mean_wait_h;
@@ -145,9 +135,8 @@ fn discrete_backend_quality_close_to_exact() {
 /// two jobs at the same instant.
 #[test]
 fn gantt_nodes_never_double_booked() {
-    let (jobs, mut sim) = workload(29, 0.005);
-    sim.record_gantt = true;
-    let res = run_policy(jobs.clone(), Policy::Filler, &sim, 1, PlanBackendKind::Exact);
+    let (jobs, sim) = workload(29, 0.005);
+    let res = run_policy(jobs.clone(), Policy::Filler, &sim.record_gantt(true));
     assert_eq!(res.gantt.len(), jobs.len());
     // Sweep: collect (node, start, finish), check overlaps per node.
     let mut per_node: std::collections::HashMap<usize, Vec<(Time, Time)>> = Default::default();
@@ -200,11 +189,8 @@ fn swf_to_simulation_pipeline() {
         },
     );
     assert_eq!(jobs.len(), 50);
-    let sim = SimConfig {
-        bb_capacity: bb_model.capacity_for(96),
-        ..SimConfig::default()
-    };
-    let res = run_policy(jobs, Policy::SjfBb, &sim, 1, PlanBackendKind::Exact);
+    let sim = SimOptions::new().bb_capacity(bb_model.capacity_for(96));
+    let res = run_policy(jobs, Policy::SjfBb, &sim);
     assert_eq!(res.records.len(), 50);
     assert_eq!(res.killed_jobs, 0);
 }

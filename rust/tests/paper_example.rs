@@ -5,10 +5,11 @@
 use bbsched::core::job::{Job, JobId, JobRecord};
 use bbsched::core::resources::TIB;
 use bbsched::core::time::{Duration, Time};
-use bbsched::coordinator::{run_policy, PlanBackendKind};
+use bbsched::coordinator::run_policy;
 use bbsched::platform::topology::TopologyConfig;
 use bbsched::sched::Policy;
 use bbsched::sim::simulator::SimConfig;
+use bbsched::SimOptions;
 
 const TABLE1: [(u64, u64, u32, u64); 8] = [
     (0, 10, 1, 4),
@@ -54,7 +55,7 @@ fn cfg() -> SimConfig {
 }
 
 fn starts_minutes(policy: Policy) -> Vec<f64> {
-    let res = run_policy(jobs(), policy, &cfg(), 1, PlanBackendKind::Exact);
+    let res = run_policy(jobs(), policy, &SimOptions::for_sim(cfg()));
     let mut recs: Vec<JobRecord> = res.records;
     recs.sort_by_key(|r| r.id);
     recs.iter().map(|r| r.start.as_secs_f64() / 60.0).collect()
@@ -90,7 +91,7 @@ fn fcfs_baseline_is_worst() {
 #[test]
 fn plan_based_matches_or_beats_fcfs_bb_on_example() {
     let total = |p: Policy| -> f64 {
-        let res = run_policy(jobs(), p, &cfg(), 1, PlanBackendKind::Exact);
+        let res = run_policy(jobs(), p, &SimOptions::for_sim(cfg()));
         res.records.iter().map(|r| r.waiting().as_secs_f64()).sum()
     };
     let bb = total(Policy::FcfsBb);

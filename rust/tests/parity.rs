@@ -8,11 +8,11 @@
 //! scheduler invocation.
 
 use bbsched::campaign::CampaignSpec;
-use bbsched::coordinator::{run_policy_opts, PlanBackendKind, SchedOpts};
+use bbsched::coordinator::run_policy;
 use bbsched::platform::PlatformSpec;
 use bbsched::sched::Policy;
-use bbsched::sim::simulator::SimConfig;
 use bbsched::workload::{load_scenario, WorkloadSpec};
+use bbsched::SimOptions;
 
 /// All evaluated policies plus the two §3.2 extensions.
 fn all_policies() -> Vec<Policy> {
@@ -25,31 +25,16 @@ fn all_policies() -> Vec<Policy> {
 fn parity_over(workload: &WorkloadSpec, seed: u64, io_enabled: bool, policies: &[Policy]) {
     let (jobs, bb_capacity) =
         load_scenario(workload, &PlatformSpec::default(), seed).expect("workload");
-    let base = SimConfig { bb_capacity, io_enabled, ..SimConfig::default() };
+    let base = SimOptions::new().bb_capacity(bb_capacity).io(io_enabled).seed(seed);
     for &policy in policies {
         let incremental = base.clone();
-        let rebuild = SimConfig { rebuild_timeline: true, ..base.clone() };
-        let validate = SimConfig { validate_timeline: true, ..base.clone() };
         // Cold scoring is behaviour-identical too: use it on the rebuild
         // pass so the whole pre-refactor configuration is covered.
-        let cold = SchedOpts { plan_cold_scoring: true, ..SchedOpts::default() };
-        let a = run_policy_opts(
-            jobs.clone(),
-            policy,
-            &incremental,
-            seed,
-            PlanBackendKind::Exact,
-            SchedOpts::default(),
-        );
-        let b = run_policy_opts(jobs.clone(), policy, &rebuild, seed, PlanBackendKind::Exact, cold);
-        let c = run_policy_opts(
-            jobs.clone(),
-            policy,
-            &validate,
-            seed,
-            PlanBackendKind::Exact,
-            SchedOpts::default(),
-        );
+        let rebuild = base.clone().rebuild_timeline(true).plan_cold_scoring(true);
+        let validate = base.clone().validate_timeline(true);
+        let a = run_policy(jobs.clone(), policy, &incremental);
+        let b = run_policy(jobs.clone(), policy, &rebuild);
+        let c = run_policy(jobs.clone(), policy, &validate);
         assert_eq!(
             a.fingerprint(),
             b.fingerprint(),

@@ -17,11 +17,11 @@
 //!    per-node mode too (the rebuild path must preserve the per-group
 //!    timelines it cannot reconstruct from a view).
 
-use bbsched::coordinator::{run_policy, PlanBackendKind};
+use bbsched::coordinator::run_policy;
 use bbsched::platform::{BbArch, Placement, PlatformSpec};
 use bbsched::sched::Policy;
-use bbsched::sim::simulator::SimConfig;
 use bbsched::workload::{generate, load_scenario, SynthConfig, WorkloadSpec};
+use bbsched::SimOptions;
 
 /// All evaluated policies plus the two §3.2 extensions.
 fn all_policies() -> Vec<Policy> {
@@ -46,22 +46,12 @@ fn shared_arch_is_byte_identical_to_the_pre_scenario_pipeline() {
     assert_eq!(jobs, generate(&legacy_cfg));
     // ... and the default simulator config must still be the shared
     // platform, so per-policy fingerprints agree end-to-end.
-    let scen_cfg = SimConfig { bb_capacity: cap, io_enabled: false, ..SimConfig::default() };
-    assert_eq!(scen_cfg.bb_placement, Placement::Striped);
-    let legacy_sim = SimConfig {
-        bb_capacity: legacy_cfg.bb_capacity,
-        io_enabled: false,
-        ..SimConfig::default()
-    };
+    let scen_cfg = SimOptions::new().bb_capacity(cap).io(false);
+    assert_eq!(scen_cfg.sim.bb_placement, Placement::Striped);
+    let legacy_sim = SimOptions::new().bb_capacity(legacy_cfg.bb_capacity).io(false);
     for policy in all_policies() {
-        let a = run_policy(jobs.clone(), policy, &scen_cfg, 1, PlanBackendKind::Exact);
-        let b = run_policy(
-            generate(&legacy_cfg),
-            policy,
-            &legacy_sim,
-            1,
-            PlanBackendKind::Exact,
-        );
+        let a = run_policy(jobs.clone(), policy, &scen_cfg);
+        let b = run_policy(generate(&legacy_cfg), policy, &legacy_sim);
         assert_eq!(
             a.fingerprint(),
             b.fingerprint(),
@@ -75,14 +65,9 @@ fn shared_arch_is_byte_identical_to_the_pre_scenario_pipeline() {
 fn every_policy_completes_a_pernode_placement_run() {
     let (jobs, cap) =
         load_scenario(&WorkloadSpec::paper_twin(0.003), &platform(BbArch::PerNode), 1).unwrap();
-    let cfg = SimConfig {
-        bb_capacity: cap,
-        bb_placement: Placement::PerNode,
-        io_enabled: false,
-        ..SimConfig::default()
-    };
+    let cfg = SimOptions::new().bb(cap, Placement::PerNode).io(false);
     for policy in all_policies() {
-        let res = run_policy(jobs.clone(), policy, &cfg, 1, PlanBackendKind::Exact);
+        let res = run_policy(jobs.clone(), policy, &cfg);
         assert_eq!(
             res.records.len(),
             jobs.len(),
@@ -92,8 +77,7 @@ fn every_policy_completes_a_pernode_placement_run() {
     }
     // One policy with real I/O: group-local slices must route through
     // the fluid network like striped ones do.
-    let io_cfg = SimConfig { io_enabled: true, ..cfg };
-    let res = run_policy(jobs.clone(), Policy::SjfBb, &io_cfg, 1, PlanBackendKind::Exact);
+    let res = run_policy(jobs.clone(), Policy::SjfBb, &cfg.io(true));
     assert_eq!(res.records.len(), jobs.len());
 }
 
@@ -101,20 +85,11 @@ fn every_policy_completes_a_pernode_placement_run() {
 fn pernode_fingerprints_identical_across_timeline_modes() {
     let (jobs, cap) =
         load_scenario(&WorkloadSpec::paper_twin(0.003), &platform(BbArch::PerNode), 1).unwrap();
-    let base = SimConfig {
-        bb_capacity: cap,
-        bb_placement: Placement::PerNode,
-        io_enabled: false,
-        ..SimConfig::default()
-    };
+    let base = SimOptions::new().bb(cap, Placement::PerNode).io(false);
     for policy in all_policies() {
-        let incremental =
-            run_policy(jobs.clone(), policy, &base, 1, PlanBackendKind::Exact);
-        let rebuild_cfg = SimConfig { rebuild_timeline: true, ..base.clone() };
-        let rebuild = run_policy(jobs.clone(), policy, &rebuild_cfg, 1, PlanBackendKind::Exact);
-        let validate_cfg = SimConfig { validate_timeline: true, ..base.clone() };
-        let validate =
-            run_policy(jobs.clone(), policy, &validate_cfg, 1, PlanBackendKind::Exact);
+        let incremental = run_policy(jobs.clone(), policy, &base);
+        let rebuild = run_policy(jobs.clone(), policy, &base.clone().rebuild_timeline(true));
+        let validate = run_policy(jobs.clone(), policy, &base.clone().validate_timeline(true));
         assert_eq!(
             incremental.fingerprint(),
             rebuild.fingerprint(),

@@ -5,7 +5,7 @@
 //! random cases per property; any failure reports its seed so the case
 //! replays deterministically (set `BBSCHED_PROP_SEED` to rerun one).
 
-use bbsched::coordinator::{run_policy, run_policy_opts, PlanBackendKind, SchedOpts};
+use bbsched::coordinator::run_policy;
 use bbsched::core::job::{JobId, JobRequest};
 use bbsched::core::resources::Resources;
 use bbsched::core::time::{Duration, Time};
@@ -21,6 +21,7 @@ use bbsched::sched::{schedule_once, Policy, RunningInfo, SchedView, Scheduler};
 use bbsched::sim::simulator::SimConfig;
 use bbsched::stats::rng::Pcg32;
 use bbsched::workload::{EstimateModel, Family, Scenario, WorkloadSpec};
+use bbsched::SimOptions;
 
 const CASES: u64 = 200;
 
@@ -262,7 +263,7 @@ fn prop_scenario_no_oversubscription() {
                 record_gantt: true,
                 ..scenario_sim_cfg(arch, bb_capacity)
             };
-            let res = run_policy(jobs, Policy::SjfBb, &cfg, seed, PlanBackendKind::Exact);
+            let res = run_policy(jobs, Policy::SjfBb, &SimOptions::for_sim(cfg).seed(seed));
             assert_eq!(res.records.len(), n_jobs, "{family:?}/{arch:?}: lost records");
             // Aggregate two-dimensional capacity at every start event.
             for r in &res.records {
@@ -394,7 +395,7 @@ fn prop_incremental_timeline_matches_rebuild_under_scenarios() {
             validate_timeline: true,
             ..scenario_sim_cfg(arch, bb_capacity)
         };
-        let res = run_policy(jobs, Policy::FcfsBb, &cfg, 3, PlanBackendKind::Exact);
+        let res = run_policy(jobs, Policy::FcfsBb, &SimOptions::for_sim(cfg).seed(3));
         assert_eq!(res.records.len(), n_jobs, "{family:?}/{arch:?}");
     }
 }
@@ -418,7 +419,7 @@ fn prop_pernode_no_storage_node_oversubscription() {
                 record_gantt: true,
                 ..scenario_sim_cfg(arch, bb_capacity)
             };
-            let res = run_policy(jobs, Policy::SjfBb, &cfg, seed, PlanBackendKind::Exact);
+            let res = run_policy(jobs, Policy::SjfBb, &SimOptions::for_sim(cfg).seed(seed));
             assert_eq!(res.records.len(), n_jobs, "{family:?}/{arch:?}: lost records");
             // Per-storage-node capacities, via the same split rule the
             // simulator's pool uses.
@@ -488,7 +489,7 @@ fn prop_pernode_placement_diverges_from_clamp() {
                     .materialise(1)
                     .unwrap();
             let cfg = SimConfig { io_enabled: false, ..scenario_sim_cfg(arch, bb_capacity) };
-            run_policy(jobs, Policy::SjfBb, &cfg, 1, PlanBackendKind::Exact)
+            run_policy(jobs, Policy::SjfBb, &SimOptions::for_sim(cfg))
         };
         let placed = run(BbArch::PerNode);
         let clamped = run(BbArch::PerNodeClamp);
@@ -580,13 +581,10 @@ fn prop_window_geq_queue_is_identity() {
         let n_jobs = jobs.len();
         let cfg = SimConfig { bb_capacity, io_enabled: false, ..SimConfig::default() };
         let run = |window: usize| {
-            run_policy_opts(
+            run_policy(
                 jobs.clone(),
                 Policy::Plan(2),
-                &cfg,
-                1,
-                PlanBackendKind::Exact,
-                SchedOpts { plan_window: window, ..SchedOpts::default() },
+                &SimOptions::for_sim(cfg.clone()).plan_window(window),
             )
         };
         let off = run(0);

@@ -1,0 +1,291 @@
+//! Run-store integration tests: the resumable-campaign tier.
+//!
+//! Contracts on the line:
+//! 1. **Resume byte-identity** — interrupting a campaign (modelled by
+//!    deleting store entries) and re-running produces record-for-record
+//!    identical output, apart from the explicit `cached` flag, with
+//!    cache hits actually taken.
+//! 2. **Force semantics** — `--force` recomputes every cell and the
+//!    recomputed records equal the originals (determinism through the
+//!    store round-trip).
+//! 3. **Corruption tolerance** — a torn/corrupt store entry is a cache
+//!    miss that recomputes and heals, never an error or a wrong replay.
+//! 4. **gc end-to-end** — `live_keys` + `RunStore::gc` keep exactly the
+//!    reachable entries; a dry run deletes nothing.
+//! 5. **Cancellation** — a pre-cancelled campaign fails every cell with
+//!    the `cancelled` error code and stores nothing; a timed-out cell
+//!    leaves no detached worker thread behind (the PR-4 watchdog leak).
+
+use bbsched::campaign::{
+    exit_code, live_keys, run_campaign, CampaignOptions, CampaignSpec, Progress, RunStore,
+    EXIT_RUN_FAILED,
+};
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Serialise the tests in this file: the thread-reclaim test reads the
+/// process-wide thread count, which concurrent sibling tests (each with
+/// its own worker pool) would perturb.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    let dir =
+        std::env::temp_dir().join(format!("bbsched-itest-{tag}-{}-{n}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Seconds-scale grid: 3 policies x 2 seeds = 6 cells.
+fn tiny_spec() -> CampaignSpec {
+    CampaignSpec::parse(
+        "[campaign]\n\
+         name = store-tiny\n\
+         [grid]\n\
+         policies = fcfs, fcfs-bb, sjf-bb\n\
+         seeds = 1, 2\n\
+         scales = 0.002\n\
+         [sim]\n\
+         io = false\n",
+    )
+    .unwrap()
+}
+
+/// The byte-identity projection: everything but the cache-provenance
+/// flag (which is *supposed* to differ between a fresh and resumed run).
+fn strip_cached(line: &str) -> String {
+    line.replace(",\"cached\":true", "").replace(",\"cached\":false", "")
+}
+
+struct CampaignRun {
+    lines: Vec<String>,
+    n_cached: usize,
+    code: i32,
+}
+
+fn run(spec: &CampaignSpec, copts: &CampaignOptions) -> CampaignRun {
+    let progress = Progress::quiet(spec.n_runs());
+    let result = run_campaign(spec, copts, &progress, |_| {});
+    CampaignRun {
+        lines: result.outcomes.iter().map(|o| o.deterministic_line()).collect(),
+        n_cached: result.n_cached(),
+        code: exit_code(&result.outcomes),
+    }
+}
+
+#[test]
+fn resume_after_partial_store_loss_is_byte_identical() {
+    let _g = serial();
+    let spec = tiny_spec();
+    let dir = tmp_dir("resume");
+    let store = RunStore::new(&dir);
+    let copts = CampaignOptions::new(2).with_store(store.clone());
+
+    // Cold run: nothing cached, every cell lands in the store.
+    let first = run(&spec, &copts);
+    assert_eq!(first.code, 0, "cold run failed");
+    assert_eq!(first.n_cached, 0);
+    assert_eq!(store.list().unwrap().len(), spec.n_runs());
+
+    // "Interrupt": lose half the store (as if the campaign died midway).
+    let entries = store.list().unwrap();
+    let lost = spec.n_runs() / 2;
+    for (_, path) in entries.iter().take(lost) {
+        std::fs::remove_file(path).unwrap();
+    }
+
+    // Resume: the kept cells replay, the lost ones recompute — and the
+    // records are byte-identical to the uninterrupted run, modulo the
+    // explicit cached flag.
+    let resumed = run(&spec, &copts);
+    assert_eq!(resumed.code, 0, "resumed run failed");
+    assert_eq!(resumed.n_cached, spec.n_runs() - lost, "wrong number of cache hits");
+    assert!(resumed.n_cached > 0, "resume took no cache hits");
+    let a: Vec<String> = first.lines.iter().map(|l| strip_cached(l)).collect();
+    let b: Vec<String> = resumed.lines.iter().map(|l| strip_cached(l)).collect();
+    assert_eq!(a, b, "resume is not byte-identical to the uninterrupted run");
+    let hits = resumed.lines.iter().filter(|l| l.contains("\"cached\":true")).count();
+    assert_eq!(hits, resumed.n_cached);
+
+    // Third run: the resume refilled the store, so everything replays.
+    let warm = run(&spec, &copts);
+    assert_eq!(warm.n_cached, spec.n_runs(), "store not fully repopulated by the resume");
+    let c: Vec<String> = warm.lines.iter().map(|l| strip_cached(l)).collect();
+    assert_eq!(a, c);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn force_recomputes_every_cell_to_the_same_records() {
+    let _g = serial();
+    let spec = tiny_spec();
+    let dir = tmp_dir("force");
+    let copts = CampaignOptions::new(2).with_store(RunStore::new(&dir));
+    let first = run(&spec, &copts);
+    assert_eq!(first.code, 0);
+
+    // --force ignores a fully-warm store...
+    let forced = run(&spec, &copts.clone().force(true));
+    assert_eq!(forced.n_cached, 0, "--force must not take cache hits");
+    // ...and, the simulator being deterministic, reproduces the exact
+    // records (both runs are all-fresh, so no strip_cached needed).
+    assert_eq!(first.lines, forced.lines);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_store_entry_recomputes_that_cell_and_heals() {
+    let _g = serial();
+    let spec = tiny_spec();
+    let dir = tmp_dir("corrupt");
+    let store = RunStore::new(&dir);
+    let copts = CampaignOptions::new(2).with_store(store.clone());
+    let first = run(&spec, &copts);
+    assert_eq!(first.code, 0);
+
+    // Tear one record (a crash mid-rename cannot produce this — saves
+    // are temp-then-rename — but disk rot or a hand-edit can).
+    let (_, victim) = store.list().unwrap().into_iter().next().unwrap();
+    std::fs::write(&victim, "{\"store_version\":1,\"co").unwrap();
+
+    let second = run(&spec, &copts);
+    assert_eq!(second.code, 0, "a corrupt entry must not fail the campaign");
+    assert_eq!(second.n_cached, spec.n_runs() - 1, "corrupt entry was not recomputed");
+    let a: Vec<String> = first.lines.iter().map(|l| strip_cached(l)).collect();
+    let b: Vec<String> = second.lines.iter().map(|l| strip_cached(l)).collect();
+    assert_eq!(a, b);
+
+    // The recompute overwrote the bad record: the store is healed.
+    let third = run(&spec, &copts);
+    assert_eq!(third.n_cached, spec.n_runs());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_keeps_live_entries_and_removes_stale_ones() {
+    let _g = serial();
+    let spec = tiny_spec();
+    let dir = tmp_dir("gc-e2e");
+    let store = RunStore::new(&dir);
+    let copts = CampaignOptions::new(2).with_store(store.clone());
+    assert_eq!(run(&spec, &copts).code, 0);
+
+    // Plant a stale record: a valid-looking key no spec reaches (e.g. a
+    // cell from a since-edited grid).
+    let stale = store.dir().join("00000000deadbeef.json");
+    std::fs::write(&stale, "{}").unwrap();
+
+    let live = live_keys(&spec);
+    assert_eq!(live.len(), spec.n_runs());
+    let live_paths: HashSet<PathBuf> = live.iter().map(|&k| store.path_for(k)).collect();
+    assert!(!live_paths.contains(&stale));
+
+    // Dry run: reports the stale entry, deletes nothing.
+    let report = store.gc(&live, true).unwrap();
+    assert_eq!(report.live, spec.n_runs());
+    assert_eq!(report.stale, vec![stale.clone()]);
+    assert!(stale.exists(), "dry run must not delete");
+
+    // Real run: exactly the stale entry goes.
+    let report = store.gc(&live, false).unwrap();
+    assert_eq!(report.stale, vec![stale.clone()]);
+    assert!(!stale.exists());
+
+    // Everything the spec reaches survived: the next run is all hits.
+    let after = run(&spec, &copts);
+    assert_eq!(after.n_cached, spec.n_runs(), "gc deleted a live entry");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pre_cancelled_campaign_fails_every_cell_and_stores_nothing() {
+    let _g = serial();
+    let spec = tiny_spec();
+    let dir = tmp_dir("cancel");
+    let store = RunStore::new(&dir);
+    let copts = CampaignOptions::new(2).with_store(store.clone());
+    copts.cancel.cancel();
+
+    let progress = Progress::quiet(spec.n_runs());
+    let result = run_campaign(&spec, &copts, &progress, |_| {});
+    // Cancellation does not drop cells: every one yields an outcome...
+    assert_eq!(result.outcomes.len(), spec.n_runs());
+    for o in &result.outcomes {
+        assert!(!o.ok());
+        assert!(
+            o.to_json(false).contains("\"error_code\":\"cancelled\""),
+            "wrong error for a cancelled cell: {:?}",
+            o.error
+        );
+    }
+    assert_eq!(exit_code(&result.outcomes), EXIT_RUN_FAILED);
+    // ...and none of them may masquerade as a completed result later.
+    assert!(store.list().unwrap().is_empty(), "a cancelled cell reached the store");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[cfg(target_os = "linux")]
+fn thread_count() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .unwrap()
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .expect("Threads: line")
+        .trim()
+        .parse()
+        .unwrap()
+}
+
+/// The watchdog-leak regression (the direct assertion promised by
+/// `tests/campaign.rs`): a timed-out cell's worker thread is cancelled
+/// and *joined*, so after the campaign returns the process is back to
+/// its baseline thread count. Under the old detached-watchdog design the
+/// abandoned simulation thread kept running (minutes of work) and this
+/// test's deadline would blow.
+#[cfg(target_os = "linux")]
+#[test]
+fn timed_out_cells_leave_no_detached_threads() {
+    let _g = serial();
+    let spec = CampaignSpec::parse(
+        "[campaign]\n\
+         name = leak-check\n\
+         timeout-s = 0.000001\n\
+         [grid]\n\
+         policies = fcfs, sjf-bb\n\
+         seeds = 1, 2\n\
+         scales = 0.002\n\
+         [sim]\n\
+         io = false\n",
+    )
+    .unwrap();
+    let before = thread_count();
+    let progress = Progress::quiet(spec.n_runs());
+    let result = run_campaign(&spec, &CampaignOptions::new(2), &progress, |_| {});
+    assert_eq!(result.outcomes.len(), spec.n_runs());
+    for o in &result.outcomes {
+        assert!(!o.ok(), "1 µs budget should time out every cell");
+        assert!(o.error_message().unwrap().contains("timeout"), "{:?}", o.error);
+    }
+    // Pool workers are scoped (joined before run_campaign returns); the
+    // only threads that could remain are detached timeout workers. Give
+    // the kernel a moment to retire the joined threads.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let now = thread_count();
+        if now <= before {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "thread leak after timed-out cells: {before} -> {now}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+}
