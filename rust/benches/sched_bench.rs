@@ -14,7 +14,10 @@
 //! where `cold` disables the prefix/delta cache (the bit-exactness
 //! oracle: its fingerprint must equal `delta`'s), `warm` seeds SA from
 //! the previous tick's plan and `window` bounds the SA problem to the
-//! first 32 queued jobs. Everything lands in one `BENCH_sched.json`
+//! 32 most urgent queued jobs. A third suite repeats the storm under
+//! per-node placement — {aggregate, group-aware} x {delta, cold} — to
+//! price the group-aware scoring lane (cold is the oracle in both lane
+//! modes). Everything lands in one `BENCH_sched.json`
 //! (override the path with `BENCH_OUT`) — the perf trajectory the CI
 //! `bench-gate` job enforces a regression threshold over.
 //!
@@ -141,6 +144,60 @@ fn main() {
         "delta scoring must be behaviour-identical to the cold scorer"
     );
 
+    // --- Group-aware ablation on a per-node storm. ------------------------
+    // The group-aware lane only bites under per-node placement, so this
+    // sweep runs the same storm against the per-node architecture:
+    // {aggregate, group} x {delta, cold}. Cold scoring stays the
+    // bit-exactness oracle within each lane mode.
+    let pernode = Scenario {
+        workload: WorkloadSpec {
+            family: Family::ArrivalStorm { intensity: 4.0 },
+            scale,
+            estimate: EstimateModel::Paper,
+        },
+        platform: PlatformSpec { bb_arch: BbArch::PerNode, bb_factor: 1.0 },
+    };
+    let (pn_jobs, pn_bb) = pernode.materialise(1).expect("per-node storm workload");
+    let pn_sim = SimOptions::new().bb(pn_bb, BbArch::PerNode.placement()).io(false);
+    let pn_ablation: [(&str, SimOptions); 4] = [
+        ("agg", pn_sim.clone()),
+        ("agg-cold", pn_sim.clone().plan_cold_scoring(true)),
+        ("group", pn_sim.clone().plan_group_aware(true)),
+        ("group-cold", pn_sim.clone().plan_group_aware(true).plan_cold_scoring(true)),
+    ];
+    eprintln!("per-node ablation: {} storm jobs, plan-2 x {} configs", pn_jobs.len(), 4);
+    let mut pn_rows: Vec<(String, Duration, u64, f64, u64)> = Vec::new();
+    for (cfg, opts) in pn_ablation {
+        let res = run_policy(pn_jobs.clone(), Policy::Plan(2), &opts);
+        let mean_wait_h = {
+            let s = bbsched::metrics::summary::summarize("plan-2", &res.records);
+            s.mean_wait_h
+        };
+        eprintln!(
+            "  {:>18}: sched_wall {} ({} invocations, mean wait {:.3} h)",
+            cfg,
+            fmt_dur(res.sched_wall),
+            res.sched_invocations,
+            mean_wait_h,
+        );
+        pn_rows.push((
+            cfg.to_string(),
+            res.sched_wall,
+            res.sched_invocations,
+            mean_wait_h,
+            res.fingerprint(),
+        ));
+    }
+    // The cold scorer stays the oracle in both lane modes.
+    assert_eq!(
+        pn_rows[0].4, pn_rows[1].4,
+        "per-node aggregate delta scoring must match its cold oracle"
+    );
+    assert_eq!(
+        pn_rows[2].4, pn_rows[3].4,
+        "group-aware delta scoring must match its cold oracle"
+    );
+
     // --- Table. -----------------------------------------------------------
     let table: Vec<Vec<String>> = rows
         .iter()
@@ -185,6 +242,29 @@ fn main() {
             &plan_table,
         )
     );
+    let pn_table: Vec<Vec<String>> = pn_rows
+        .iter()
+        .map(|(cfg, wall, inv, wait, fp)| {
+            vec![
+                cfg.clone(),
+                inv.to_string(),
+                fmt_dur(*wall),
+                fmt_f(*wait),
+                format!("{fp:016x}"),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            &format!(
+                "plan-2 group-aware ablation, per-node storm:4 workload ({} jobs)",
+                pn_jobs.len()
+            ),
+            &["config", "invocations", "sched_wall", "mean wait [h]", "fingerprint"],
+            &pn_table,
+        )
+    );
 
     // --- BENCH_sched.json (the perf-trajectory contract). -----------------
     let mut results: Vec<BenchResult> = rows
@@ -216,6 +296,17 @@ fn main() {
              speedup_vs_cold={:.3}",
             storm_jobs.len(),
             baseline_wall.as_secs_f64() / wall.as_secs_f64().max(1e-12),
+        ),
+    }));
+    results.extend(pn_rows.iter().map(|(cfg, wall, inv, wait, fp)| BenchResult {
+        name: format!("plan-2-pernode-storm/{cfg}"),
+        iters: 1,
+        mean: *wall,
+        stddev: Duration::ZERO,
+        min: *wall,
+        note: format!(
+            "invocations={inv} mean_wait_h={wait:.6} fingerprint={fp:016x} jobs={}",
+            pn_jobs.len(),
         ),
     }));
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_sched.json".to_string());

@@ -111,6 +111,12 @@ pub struct CampaignSpec {
     /// (`[sim] plan-warm-start`). Off by default: it changes search
     /// trajectories, so the paper-faithful grids stay fingerprint-stable.
     pub plan_warm_start: bool,
+    /// Score plan-policy SA proposals against per-group burst-buffer
+    /// lanes (`[sim] plan-group-aware`). Only meaningful under the
+    /// per-node architectures — inert (and fingerprint-identical)
+    /// elsewhere — and, like warm start, off by default because it
+    /// changes per-node plans.
+    pub plan_group_aware: bool,
     /// Scheduler tick period in seconds (`[sim] tick-s`; paper: 60).
     pub tick_s: u64,
 }
@@ -127,27 +133,31 @@ pub struct RunSpec {
     pub bb_factor: f64,
     /// Plan-policy queue window (0 = unwindowed — the legacy behaviour).
     pub plan_window: usize,
+    /// Plan-policy group-aware scoring (false for non-plan policies).
+    pub plan_group_aware: bool,
 }
 
 impl RunSpec {
     /// Stable human-readable run id, e.g. `plan-2+s1+x0.003+bb1` (the
     /// shared architecture is omitted so paper-faithful labels are
     /// unchanged; per-node runs read `...+pernode+bb1`, windowed plan
-    /// runs append `+wW`).
+    /// runs append `+wW`, group-aware plan runs append `+ga`).
     pub fn label(&self) -> String {
         let window = if self.plan_window > 0 {
             format!("+w{}", self.plan_window)
         } else {
             String::new()
         };
+        let ga = if self.plan_group_aware { "+ga" } else { "" };
         format!(
-            "{}+s{}+{}{}+bb{}{}",
+            "{}+s{}+{}{}+bb{}{}{}",
             self.policy.name(),
             self.seed,
             self.workload.label(),
             self.bb_arch.label_segment(),
             self.bb_factor,
-            window
+            window,
+            ga
         )
     }
 
@@ -172,6 +182,7 @@ impl RunSpec {
             .str("bb_arch", self.bb_arch.name())
             .num_f("bb_factor", self.bb_factor)
             .num_u("plan_window", self.plan_window as u64)
+            .bool("plan_group_aware", self.plan_group_aware)
     }
 }
 
@@ -196,6 +207,7 @@ impl CampaignSpec {
             io_enabled: true,
             plan_backend: PlanBackendKind::Exact,
             plan_warm_start: false,
+            plan_group_aware: false,
             tick_s: 60,
         }
     }
@@ -304,6 +316,7 @@ impl CampaignSpec {
         let mut timeout_s: Option<f64> = None;
         let mut io_enabled = true;
         let mut plan_warm_start = false;
+        let mut plan_group_aware = false;
         let mut backend_name = "exact".to_string();
         let mut t_slots = 256usize;
         let mut tick_s = 60u64;
@@ -429,6 +442,9 @@ impl CampaignSpec {
                 ("sim", "plan-warm-start") => {
                     plan_warm_start = parse_bool(ln, key, value)?;
                 }
+                ("sim", "plan-group-aware") => {
+                    plan_group_aware = parse_bool(ln, key, value)?;
+                }
                 ("sim", "plan-backend") => {
                     if !["exact", "discrete", "xla"].contains(&value) {
                         return Err(SpecError::at(
@@ -514,6 +530,7 @@ impl CampaignSpec {
             io_enabled,
             plan_backend,
             plan_warm_start,
+            plan_group_aware,
             tick_s,
         })
     }
@@ -573,6 +590,7 @@ impl CampaignSpec {
         s.push_str("[sim]\n");
         s.push_str(&format!("io = {}\n", self.io_enabled));
         s.push_str(&format!("plan-warm-start = {}\n", self.plan_warm_start));
+        s.push_str(&format!("plan-group-aware = {}\n", self.plan_group_aware));
         match self.plan_backend {
             PlanBackendKind::Exact => s.push_str("plan-backend = exact\n"),
             PlanBackendKind::Discrete { t_slots } => {
@@ -601,6 +619,7 @@ impl CampaignSpec {
             .plan_backend(self.plan_backend)
             .plan_warm_start(self.plan_warm_start)
             .plan_window(run.plan_window)
+            .plan_group_aware(run.plan_group_aware)
     }
 
     /// The workload axis materialised: family-major, then scale, then
@@ -663,6 +682,11 @@ impl CampaignSpec {
                                     bb_arch,
                                     bb_factor,
                                     plan_window,
+                                    // Only plan policies read the knob;
+                                    // stamping it false elsewhere keeps
+                                    // labels and cell identities clean.
+                                    plan_group_aware: self.plan_group_aware
+                                        && matches!(policy, Policy::Plan(_)),
                                 });
                             }
                         }
@@ -809,6 +833,35 @@ t-slots = 128
         let reparsed = CampaignSpec::parse(&spec.to_text()).unwrap();
         assert_eq!(spec, reparsed);
         assert!(!CampaignSpec::smoke().plan_warm_start);
+    }
+
+    #[test]
+    fn plan_group_aware_parses_labels_and_round_trips() {
+        let spec = CampaignSpec::parse(
+            "[grid]\npolicies = fcfs, plan-2\nscales = 0.01\n\
+             [scenario]\nbb-archs = per-node\n\
+             [sim]\nplan-group-aware = true\n",
+        )
+        .unwrap();
+        assert!(spec.plan_group_aware);
+        let reparsed = CampaignSpec::parse(&spec.to_text()).unwrap();
+        assert_eq!(spec, reparsed);
+        // Only plan policies carry the knob (and the `+ga` label suffix).
+        let labels: Vec<String> = spec.enumerate().iter().map(|r| r.label()).collect();
+        assert_eq!(
+            labels,
+            vec!["fcfs+s1+x0.01+pernode+bb1", "plan-2+s1+x0.01+pernode+bb1+ga"]
+        );
+        let runs = spec.enumerate();
+        assert!(!runs[0].plan_group_aware && runs[1].plan_group_aware);
+        let opts = spec.sim_options(&runs[1], 1 << 30);
+        assert!(opts.plan_group_aware);
+        let opts = spec.sim_options(&runs[0], 1 << 30);
+        assert!(!opts.plan_group_aware);
+        // Default: off, and identity JSON records the field either way.
+        assert!(!CampaignSpec::smoke().plan_group_aware);
+        let json = runs[1].identity_json(crate::report::json::JsonObject::new()).end();
+        assert!(json.contains("\"plan_group_aware\":true"), "{json}");
     }
 
     #[test]

@@ -40,7 +40,7 @@ pub const STORE_VERSION: u64 = 1;
 /// behaviour, metric definitions, ...): old store entries then stop
 /// matching and everything recomputes, instead of silently replaying
 /// stale results.
-pub const CODE_VERSION: &str = "bbsched-sim-1";
+pub const CODE_VERSION: &str = "bbsched-sim-2";
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -92,8 +92,8 @@ fn backend_token(b: PlanBackendKind) -> String {
 pub fn cell_identity(spec: &CampaignSpec, run: &RunSpec, workload_fp: u64) -> String {
     format!(
         "v={CODE_VERSION};policy={};seed={};family={};scale={};estimate={};\
-         bb-arch={};bb-factor={};plan-window={};io={};tick-s={};backend={};\
-         warm-start={};wl-fp={:016x}",
+         bb-arch={};bb-factor={};plan-window={};group-aware={};io={};tick-s={};\
+         backend={};warm-start={};wl-fp={:016x}",
         run.policy.name(),
         run.seed,
         run.workload.family.spec_token(),
@@ -102,6 +102,7 @@ pub fn cell_identity(spec: &CampaignSpec, run: &RunSpec, workload_fp: u64) -> St
         run.bb_arch.name(),
         run.bb_factor,
         run.plan_window,
+        run.plan_group_aware,
         spec.io_enabled,
         spec.tick_s,
         backend_token(spec.plan_backend),

@@ -46,7 +46,8 @@ pub fn make_scheduler(policy: Policy, opts: &SimOptions) -> Box<dyn Scheduler + 
             let sched = PlanSched::new(alpha as f64, opts.seed)
                 .with_warm_start(opts.plan_warm_start)
                 .with_cold_scoring(opts.plan_cold_scoring)
-                .with_window(opts.plan_window);
+                .with_window(opts.plan_window)
+                .with_group_aware(opts.plan_group_aware);
             let sched = match opts.plan_backend {
                 PlanBackendKind::Exact => sched,
                 PlanBackendKind::Discrete { t_slots } => {

@@ -67,9 +67,21 @@
 //!   [`sched::plan::PermScorer::score_proposal`] /
 //!   [`sched::plan::PermScorer::note_incumbent`] protocol, with
 //!   `ExactScorer::cold` kept as the bit-exactness oracle.
+//! - Allocation discipline — every per-proposal buffer (checkpoint
+//!   profiles, scratch, group lanes, static share carvings) lives in a
+//!   [`sched::plan::scorer::ScorerArena`] owned by the policy and
+//!   recycled across invocations (`ExactScorer::new_in` /
+//!   `into_arena`); once warm, scoring a proposal performs zero heap
+//!   allocations (pinned by the counting allocator in `tests/alloc.rs`).
 //! - Opt-in cost knobs that change trajectories: warm start
-//!   (`--plan-warm-start`) and queue windowing ([`sched::plan::window`],
-//!   `--plan-window` / campaign `plan-windows` axis).
+//!   (`--plan-warm-start`), queue windowing ([`sched::plan::window`],
+//!   `--plan-window` / campaign `plan-windows` axis; the window picks
+//!   the W most urgent jobs by XFactor, not the FCFS prefix), and
+//!   group-aware scoring (`--plan-group-aware`: per-storage-group
+//!   free-bytes lanes in the scorer so per-node fragmentation is
+//!   anticipated in the plan instead of discovered at the launch
+//!   probe; inert — fingerprint-identical — outside per-node
+//!   placement).
 //!
 //! Run configuration and resumability:
 //! - [`options::SimOptions`] — the single builder every entry point

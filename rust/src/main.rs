@@ -144,6 +144,7 @@ fn sim_options(args: &Args, bb_capacity: u64, bb_placement: Placement) -> SimOpt
         .plan_backend(plan_backend(args))
         .plan_warm_start(args.flag("plan-warm-start"))
         .plan_window(args.usize("plan-window", 0))
+        .plan_group_aware(args.flag("plan-group-aware"))
 }
 
 fn plan_backend(args: &Args) -> PlanBackendKind {
@@ -818,7 +819,8 @@ fn main() {
                  \x20 --policy NAME    fcfs|fcfs-easy|filler|fcfs-bb|sjf-bb|plan-1|plan-2\n\
                  \x20 --plan-backend B exact|discrete|xla (SA scorer backend)\n\
                  \x20 --plan-warm-start seed the plan SA from the previous tick's plan\n\
-                 \x20 --plan-window W  optimise only the first W queued jobs, greedy tail (0 = off)\n\
+                 \x20 --plan-window W  optimise only the W most urgent queued jobs, greedy tail (0 = off)\n\
+                 \x20 --plan-group-aware  score plan proposals per BB group (per-node arch only)\n\
                  \x20 --out-dir DIR    where eval writes figure CSVs (default results/)\n\
                  \x20 --no-parts       skip the 16-part Figs 11-12 pass\n\
                  \x20 --parts N --part-weeks W   split shape (default 16 x 3)\n\

@@ -50,9 +50,12 @@ pub struct SimOptions {
     /// baseline; behaviour-identical).
     pub plan_cold_scoring: bool,
     /// Plan policies: queue window `W` (0 = off) — optimise only the
-    /// first `W` queued jobs and append the tail greedily
+    /// `W` most urgent queued jobs and append the tail greedily
     /// ([`crate::sched::plan::window`]).
     pub plan_window: usize,
+    /// Plan policies: score SA proposals against per-group burst-buffer
+    /// lanes (per-node placement only; inert under shared striping).
+    pub plan_group_aware: bool,
 }
 
 impl Default for SimOptions {
@@ -64,6 +67,7 @@ impl Default for SimOptions {
             plan_warm_start: false,
             plan_cold_scoring: false,
             plan_window: 0,
+            plan_group_aware: false,
         }
     }
 }
@@ -166,6 +170,11 @@ impl SimOptions {
         self
     }
 
+    pub fn plan_group_aware(mut self, on: bool) -> SimOptions {
+        self.plan_group_aware = on;
+        self
+    }
+
     // ----- execution -----------------------------------------------------
 
     /// Instantiate a scheduler for `policy` under these options.
@@ -193,7 +202,8 @@ mod tests {
             .seed(9)
             .plan_backend(PlanBackendKind::Discrete { t_slots: 32 })
             .plan_warm_start(true)
-            .plan_window(8);
+            .plan_window(8)
+            .plan_group_aware(true);
         assert_eq!(opts.sim.bb_capacity, 2 * TIB);
         assert_eq!(opts.sim.bb_placement, Placement::PerNode);
         assert!(!opts.sim.io_enabled);
@@ -202,6 +212,7 @@ mod tests {
         assert_eq!(opts.plan_backend, PlanBackendKind::Discrete { t_slots: 32 });
         assert!(opts.plan_warm_start);
         assert_eq!(opts.plan_window, 8);
+        assert!(opts.plan_group_aware);
     }
 
     #[test]
@@ -213,6 +224,7 @@ mod tests {
         assert_eq!(opts.plan_backend, PlanBackendKind::Exact);
         assert!(!opts.plan_warm_start && !opts.plan_cold_scoring);
         assert_eq!(opts.plan_window, 0);
+        assert!(!opts.plan_group_aware);
     }
 
     #[test]

@@ -78,6 +78,13 @@ impl ComputePool {
         )
     }
 
+    /// *Total* compute nodes per group, sorted by group id — the static
+    /// topology the timeline's placement-aware consumers derive
+    /// allocator-style split plans from (busy state ignored).
+    pub fn capacity_by_group(&self) -> Vec<(usize, u32)> {
+        group_totals(self.nodes.iter().map(|&(_, g, _)| (g, 1u32)))
+    }
+
     /// Allocate `count` compute nodes for `job`. The locality policy
     /// (best-fit single group, else spill largest-first) lives in
     /// [`choose_groups`] so the scheduler-side probe predicts the same

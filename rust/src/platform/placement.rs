@@ -55,35 +55,53 @@ pub enum Placement {
 /// [`crate::platform::ComputePool::allocate`]; the scheduler-side
 /// [`PlaceProbe`] calls it on its own snapshot to predict placements.
 pub fn choose_groups(free: &[(usize, u32)], count: u32) -> Option<Vec<(usize, u32)>> {
+    let mut plan = Vec::new();
+    choose_groups_into(free, count, &mut plan).then_some(plan)
+}
+
+/// Allocation-free form of [`choose_groups`] for per-proposal hot paths
+/// (the plan scorer's group lane): the plan is written into `plan`
+/// (cleared first, reused as the sort scratch too — no temporaries) and
+/// the return value says whether a plan exists. The spill order key
+/// `(free desc, group id)` is total, so the unstable sort is
+/// deterministic and byte-identical to [`choose_groups`]'s output.
+pub fn choose_groups_into(
+    free: &[(usize, u32)],
+    count: u32,
+    plan: &mut Vec<(usize, u32)>,
+) -> bool {
+    plan.clear();
     if count == 0 {
-        return None;
+        return false;
     }
     let total: u32 = free.iter().map(|&(_, n)| n).sum();
     if count > total {
-        return None;
+        return false;
     }
     if let Some(&(g, _)) = free
         .iter()
         .filter(|&&(_, n)| n >= count)
         .min_by_key(|&&(g, n)| (n, g))
     {
-        return Some(vec![(g, count)]);
+        plan.push((g, count));
+        return true;
     }
-    let mut order: Vec<(usize, u32)> =
-        free.iter().copied().filter(|&(_, n)| n > 0).collect();
-    order.sort_by_key(|&(g, n)| (std::cmp::Reverse(n), g));
-    let mut plan = Vec::new();
+    plan.extend(free.iter().copied().filter(|&(_, n)| n > 0));
+    plan.sort_unstable_by_key(|&(g, n)| (std::cmp::Reverse(n), g));
     let mut left = count;
-    for (g, n) in order {
+    let mut keep = 0;
+    for i in 0..plan.len() {
         if left == 0 {
             break;
         }
-        let take = n.min(left);
-        plan.push((g, take));
+        let take = plan[i].1.min(left);
+        plan[i].1 = take;
         left -= take;
+        keep = i + 1;
     }
+    plan.truncate(keep);
     debug_assert_eq!(left, 0);
-    Some(plan)
+    true
 }
 
 /// Accumulate `(group, amount)` contributions into per-group totals
@@ -111,14 +129,23 @@ where
 /// allocation order (groups in plan order, nodes within a group in pick
 /// order), so the shares sum exactly to `bb`.
 pub fn per_node_shares(bb: u64, plan: &[(usize, u32)]) -> Vec<(usize, u64)> {
+    let mut shares = Vec::with_capacity(plan.len());
+    per_node_shares_append(bb, plan, &mut shares);
+    shares
+}
+
+/// Allocation-free form of [`per_node_shares`]: appends the carving to
+/// `shares` (callers batching many jobs into one flat buffer rely on the
+/// append semantics; clear first for a fresh carving).
+pub fn per_node_shares_append(bb: u64, plan: &[(usize, u32)], shares: &mut Vec<(usize, u64)>) {
     let procs: u64 = plan.iter().map(|&(_, n)| n as u64).sum();
     if bb == 0 || procs == 0 {
         debug_assert!(bb == 0, "nonzero bb with an empty group plan");
-        return Vec::new();
+        return;
     }
     let base = bb / procs;
     let mut rem = bb % procs;
-    let mut shares = Vec::with_capacity(plan.len());
+    let before = shares.len();
     for &(g, n) in plan {
         let extra = rem.min(n as u64);
         rem -= extra;
@@ -128,8 +155,7 @@ pub fn per_node_shares(bb: u64, plan: &[(usize, u32)]) -> Vec<(usize, u64)> {
         }
     }
     debug_assert_eq!(rem, 0);
-    debug_assert_eq!(shares.iter().map(|&(_, b)| b).sum::<u64>(), bb);
-    shares
+    debug_assert_eq!(shares[before..].iter().map(|&(_, b)| b).sum::<u64>(), bb);
 }
 
 /// A placement-feasibility probe over the cluster state *right now*,

@@ -116,14 +116,14 @@ pub(crate) fn csv_escape(field: &str) -> String {
 }
 
 /// Campaign results: one row per grid cell, in enumeration order.
-/// Columns 1-17 (through `fingerprint`) are the deterministic
+/// Columns 1-18 (through `fingerprint`) are the deterministic
 /// projection the `--jobs N == --jobs 1` CI diff is stated over; the
 /// wall-clock, error and cache-provenance columns after it are
 /// explicitly excluded.
 pub fn write_campaign(path: &Path, outcomes: &[RunOutcome]) -> std::io::Result<()> {
     let mut s = String::from(
-        "run,label,policy,seed,workload,bb_arch,bb_factor,plan_window,ok,n_jobs,n_killed,\
-         mean_wait_h,mean_bsld,median_wait_h,max_wait_h,makespan_h,fingerprint,\
+        "run,label,policy,seed,workload,bb_arch,bb_factor,plan_window,plan_group_aware,ok,\
+         n_jobs,n_killed,mean_wait_h,mean_bsld,median_wait_h,max_wait_h,makespan_h,fingerprint,\
          sched_invocations,sched_wall_s,wall_s,error,error_code,cached\n",
     );
     for o in outcomes {
@@ -140,7 +140,7 @@ pub fn write_campaign(path: &Path, outcomes: &[RunOutcome]) -> std::io::Result<(
             None => Default::default(),
         };
         s.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:016x},{},{:.6},{:.6},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:016x},{},{:.6},{:.6},{},{},{}\n",
             o.run.index,
             csv_escape(&o.label),
             o.run.policy.name(),
@@ -149,6 +149,7 @@ pub fn write_campaign(path: &Path, outcomes: &[RunOutcome]) -> std::io::Result<(
             o.run.bb_arch.name(),
             o.run.bb_factor,
             o.run.plan_window,
+            o.run.plan_group_aware,
             o.ok(),
             n_jobs,
             n_killed,

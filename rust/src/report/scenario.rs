@@ -65,14 +65,16 @@ pub fn aggregate(outcomes: &[RunOutcome]) -> Vec<ScenarioGroup> {
             }
         };
         let policies = &mut groups[gi].1;
-        // A windowed plan run is a different configuration, not another
-        // seed of the same policy — keep it a separate aggregate row
-        // (unwindowed names stay unchanged).
-        let policy = if o.run.plan_window > 0 {
-            format!("{}+w{}", o.run.policy.name(), o.run.plan_window)
-        } else {
-            o.run.policy.name()
-        };
+        // A windowed or group-aware plan run is a different configuration,
+        // not another seed of the same policy — keep it a separate
+        // aggregate row (plain names stay unchanged).
+        let mut policy = o.run.policy.name();
+        if o.run.plan_window > 0 {
+            policy.push_str(&format!("+w{}", o.run.plan_window));
+        }
+        if o.run.plan_group_aware {
+            policy.push_str("+ga");
+        }
         match policies.iter_mut().find(|(p, _)| *p == policy) {
             Some((_, runs)) => runs.push(o),
             None => policies.push((policy, vec![o])),

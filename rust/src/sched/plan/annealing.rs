@@ -166,16 +166,22 @@ pub fn optimise(
     // Anchor delta-scoring backends at the starting incumbent so the
     // first proposals already re-score only from their changed suffix.
     scorer.note_incumbent(&p);
+    // One proposal buffer for the whole anneal: move generation and the
+    // accept chain copy slices in place, so the non-batched hot loop
+    // performs zero heap allocations per proposal.
+    let mut proposal: Vec<usize> = Vec::with_capacity(n);
     for _ in 0..params.n_cooling {
         if params.batched {
             // Propose M neighbours of the current P, score them as one
             // batch (one PJRT execution), then run the accept chain.
+            // (Batch assembly allocates by design: the XLA backend needs
+            // owned rows, and this path never runs per-proposal.)
             let mut proposals = Vec::with_capacity(params.m_const as usize);
             for _ in 0..params.m_const {
                 proposals.push(random_swap(&p, rng));
             }
             let scores = scorer.score_batch(&proposals);
-            for (p_new, s_new) in proposals.into_iter().zip(scores) {
+            for (p_new, s_new) in proposals.iter().zip(scores) {
                 accept(
                     p_new, s_new, &mut p, &mut s, &mut p_best, &mut s_best, temp, rng,
                 );
@@ -183,10 +189,10 @@ pub fn optimise(
             scorer.note_incumbent(&p);
         } else {
             for _ in 0..params.m_const {
-                let p_new = random_swap(&p, rng);
-                let s_new = scorer.score_proposal(&p_new);
+                random_swap_into(&p, &mut proposal, rng);
+                let s_new = scorer.score_proposal(&proposal);
                 let accepted = accept(
-                    p_new, s_new, &mut p, &mut s, &mut p_best, &mut s_best, temp, rng,
+                    &proposal, s_new, &mut p, &mut s, &mut p_best, &mut s_best, temp, rng,
                 );
                 if accepted {
                     scorer.note_incumbent(&p);
@@ -204,10 +210,14 @@ pub fn optimise(
 }
 
 /// The accept rule of Algorithm 2 lines 16-20. Returns whether `p_new`
-/// replaced the incumbent (so delta-scoring callers re-anchor).
+/// replaced the incumbent (so delta-scoring callers re-anchor). Copies
+/// by `clear` + `extend_from_slice` into the long-lived incumbent
+/// buffers — no allocation once their capacities are warm — and draws
+/// from `rng` in exactly the same branch as the pre-arena version, so
+/// trajectories (and fingerprints) are unchanged.
 #[allow(clippy::too_many_arguments)]
 fn accept(
-    p_new: Vec<usize>,
+    p_new: &[usize],
     s_new: f64,
     p: &mut Vec<usize>,
     s: &mut f64,
@@ -218,30 +228,42 @@ fn accept(
 ) -> bool {
     if s_new < *s_best {
         *s_best = s_new;
-        *p_best = p_new.clone();
+        p_best.clear();
+        p_best.extend_from_slice(p_new);
         *s = s_new;
-        *p = p_new;
+        p.clear();
+        p.extend_from_slice(p_new);
         true
     } else if s_new < *s || rng.f64() < ((*s - s_new) / temp).exp() {
         *s = s_new;
-        *p = p_new;
+        p.clear();
+        p.extend_from_slice(p_new);
         true
     } else {
         false
     }
 }
 
-/// Swap two distinct random positions.
+/// Swap two distinct random positions (allocating form, batched path).
 fn random_swap(p: &[usize], rng: &mut Pcg32) -> Vec<usize> {
-    let mut q = p.to_vec();
-    let n = q.len();
+    let mut q = Vec::with_capacity(p.len());
+    random_swap_into(p, &mut q, rng);
+    q
+}
+
+/// In-place form of [`random_swap`] for the non-batched hot loop: same
+/// RNG draws in the same order, zero allocation once `out`'s capacity
+/// is warm.
+fn random_swap_into(p: &[usize], out: &mut Vec<usize>, rng: &mut Pcg32) {
+    out.clear();
+    out.extend_from_slice(p);
+    let n = out.len();
     let i = rng.below(n as u32) as usize;
     let mut j = rng.below(n as u32) as usize;
     while j == i {
         j = rng.below(n as u32) as usize;
     }
-    q.swap(i, j);
-    q
+    out.swap(i, j);
 }
 
 /// All permutations of 0..n (Heap's algorithm). Only used for n <= 5.

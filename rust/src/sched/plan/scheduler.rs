@@ -17,10 +17,12 @@
 use crate::core::job::JobId;
 
 use crate::sched::plan::annealing::{optimise, PermScorer, SaOutcome, SaParams};
-use crate::sched::plan::builder::{build_plan_on, PlanJob};
+use crate::sched::plan::builder::{build_plan_on, waiting_penalty, ExecutionPlan, PlanJob};
 use crate::sched::plan::candidates::initial_candidates;
-use crate::sched::plan::scorer::{DiscreteProblem, ExactScorer, NativeDiscreteScorer};
-use crate::sched::timeline::Profile;
+use crate::sched::plan::scorer::{
+    place_grouped, DiscreteProblem, ExactScorer, NativeDiscreteScorer, ScorerArena,
+};
+use crate::sched::timeline::{GroupBbTimelines, Profile};
 use crate::sched::{SchedCtx, SchedView, Scheduler};
 use crate::stats::rng::Pcg32;
 
@@ -66,12 +68,30 @@ pub struct PlanSched {
     /// Disable the exact scorer's prefix-checkpoint cache (perf-bench
     /// baseline; scores are bit-identical either way).
     pub cold_scoring: bool,
-    /// Queue window `W` (0 = off): optimise only the first `W` queued
-    /// jobs (FCFS base order) and append the rest greedily — see
-    /// [`crate::sched::plan::window`]. `W >= queue length` is exactly
-    /// the unwindowed path; a truncating window changes trajectories,
-    /// so, like warm start, it defaults off.
+    /// Queue window `W` (0 = off): optimise only the `W` most urgent
+    /// queued jobs (XFactor priority, ties toward queue order — see
+    /// [`crate::sched::plan::window::select`]) and append the rest
+    /// greedily. `W >= queue length` is exactly the unwindowed path; a
+    /// truncating window changes trajectories, so, like warm start, it
+    /// defaults off.
     pub window: usize,
+    /// Score SA proposals against per-group free-bytes lanes (per-node
+    /// placement only; inert — and fingerprint-identical — under the
+    /// shared architecture, where the timeline has no group state).
+    /// Anticipates the fragmentation the launch probe would otherwise
+    /// discover at dispatch. Changes plans in per-node mode, so opt-in.
+    pub group_aware: bool,
+    /// Launches the plan scheduled for *now* that the placement probe
+    /// rejected — the fragmentation the scorer failed to anticipate
+    /// (diagnostic; the group-aware lane exists to drive this down).
+    pub probe_skipped: u64,
+    /// Reusable scoring buffers, threaded through every invocation.
+    arena: ScorerArena,
+    /// Reusable snapshot of the shared timeline profile (the final-plan
+    /// build mutates it; `reset_from` refreshes it without reallocating).
+    snapshot: Profile,
+    /// Scratch group lane for the final plan build in group-aware mode.
+    final_groups: GroupBbTimelines,
     rng: Pcg32,
     /// Memoisation: if neither the queue nor the running set changed
     /// since the last invocation, no new job can possibly start (free
@@ -95,6 +115,11 @@ impl PlanSched {
             warm_start: false,
             cold_scoring: false,
             window: 0,
+            group_aware: false,
+            probe_skipped: 0,
+            arena: ScorerArena::default(),
+            snapshot: Profile::default(),
+            final_groups: GroupBbTimelines::default(),
             rng: Pcg32::seeded(seed),
             memo_key: 0,
             prev_best: Vec::new(),
@@ -125,6 +150,12 @@ impl PlanSched {
     /// Set the queue window `W` (0 disables windowing).
     pub fn with_window(mut self, window: usize) -> PlanSched {
         self.window = window;
+        self
+    }
+
+    /// Enable group-aware proposal scoring (per-node placement only).
+    pub fn with_group_aware(mut self, on: bool) -> PlanSched {
+        self.group_aware = on;
         self
     }
 
@@ -198,7 +229,7 @@ impl PlanSched {
         jobs: &[PlanJob],
     ) -> SaOutcome {
         let warm = if self.warm_start { self.warm_candidate(jobs) } else { None };
-        self.optimise_candidates(base, now, jobs, warm)
+        self.optimise_candidates(base, now, jobs, warm, None)
     }
 
     fn optimise_candidates(
@@ -207,6 +238,7 @@ impl PlanSched {
         now: crate::core::time::Time,
         jobs: &[PlanJob],
         warm: Option<Vec<usize>>,
+        lane: Option<&GroupBbTimelines>,
     ) -> SaOutcome {
         let mut candidates = initial_candidates(jobs);
         if let Some(w) = warm {
@@ -214,12 +246,21 @@ impl PlanSched {
         }
         let outcome = match &mut self.backend {
             ScorerBackend::Exact => {
+                // The arena is moved into the scorer for the invocation
+                // and recovered after — buffers persist across ticks.
+                let arena = std::mem::take(&mut self.arena);
                 let mut scorer = if self.cold_scoring {
-                    ExactScorer::cold(base, jobs, now, self.alpha)
+                    ExactScorer::cold_in(arena, base, jobs, now, self.alpha)
                 } else {
-                    ExactScorer::new(base, jobs, now, self.alpha)
+                    ExactScorer::new_in(arena, base, jobs, now, self.alpha)
                 };
-                optimise(&mut scorer, jobs.len(), &candidates, &self.params, &mut self.rng)
+                if let Some(g) = lane {
+                    scorer = scorer.with_groups(g);
+                }
+                let outcome =
+                    optimise(&mut scorer, jobs.len(), &candidates, &self.params, &mut self.rng);
+                self.arena = scorer.into_arena();
+                outcome
             }
             ScorerBackend::Discrete { t_slots } => {
                 let problem = DiscreteProblem::build(base, jobs, now, *t_slots, self.alpha);
@@ -281,23 +322,38 @@ impl Scheduler for PlanSched {
             self.invocations_memoised += 1;
             return vec![];
         }
-        // Queue windowing: only the first `w` jobs (FCFS base order)
-        // enter the SA search; `w == queue.len()` is the unwindowed
-        // path, bit-identical to pre-window behaviour.
-        let w = super::window::effective(self.window, view.queue.len());
-        let jobs: Vec<PlanJob> = view.queue[..w].iter().map(PlanJob::from_request).collect();
-        // One O(breakpoints) snapshot of the shared timeline replaces the
-        // per-invocation O(running · breakpoints) rebuild.
-        let base = ctx.timeline().profile().clone();
-        // The window is a queue prefix, so the ctx's precomputed
-        // id→queue-index map doubles as the warm-start lookup (indices
-        // past the window are new arrivals from the search's viewpoint).
-        let warm = if self.warm_start {
-            self.warm_candidate_via(jobs.len(), |id| ctx.queue_index(id).filter(|&i| i < w))
+        // Queue windowing: only the `w` most urgent jobs enter the SA
+        // search (XFactor priority, queue order inside the window — see
+        // `window::select`); `w == queue.len()` is the identity path,
+        // bit-identical to pre-window behaviour.
+        let picked = super::window::select(self.window, view.queue, view.now);
+        let windowed = picked.len() < view.queue.len();
+        let jobs: Vec<PlanJob> =
+            picked.iter().map(|&qi| PlanJob::from_request(&view.queue[qi])).collect();
+        // One reusable snapshot of the shared timeline replaces the
+        // per-invocation profile clone: `reset_from` reuses the buffer's
+        // capacity (the `scheduler.rs:291` allocation of PR 4, gone).
+        let mut base = std::mem::take(&mut self.snapshot);
+        base.reset_from(ctx.timeline().profile());
+        // Group-aware lane: seeded from the timeline's per-group state;
+        // only engages under per-node placement with topology attached.
+        let lane = if self.group_aware {
+            ctx.timeline().groups().filter(|g| g.has_compute_caps())
         } else {
             None
         };
-        let outcome = self.optimise_candidates(&base, view.now, &jobs, warm);
+        // `picked` is sorted, so the ctx's precomputed id→queue-index
+        // map composes with a binary search as the warm-start lookup
+        // (jobs outside the window are new arrivals from the search's
+        // viewpoint). Identity windows degenerate to the old prefix map.
+        let warm = if self.warm_start {
+            self.warm_candidate_via(jobs.len(), |id| {
+                ctx.queue_index(id).and_then(|qi| picked.binary_search(&qi).ok())
+            })
+        } else {
+            None
+        };
+        let outcome = self.optimise_candidates(&base, view.now, &jobs, warm, lane);
         self.invocations_planned += 1;
 
         // Final plan is always exact, regardless of search backend:
@@ -305,8 +361,32 @@ impl Scheduler for PlanSched {
         // reservations simply die with it — no second profile copy.
         // (Policies that need tentative reservations *on the shared
         // timeline itself* use `ctx.txn()` + `build_plan_on` instead.)
+        // In group-aware mode the final build replays the same grouped
+        // placement rule the scorer used, so planned starts reflect
+        // group feasibility for every backend (launches stay probe-
+        // gated either way).
         let mut final_profile = base;
-        let plan = build_plan_on(&mut final_profile, &jobs, &outcome.perm, view.now, self.alpha);
+        let plan = if let Some(g) = lane {
+            self.final_groups.reset_from(g);
+            self.arena.carvings.compute(g.compute_caps(), &jobs);
+            let mut starts = vec![view.now; jobs.len()];
+            let mut score = 0.0;
+            for &pi in &outcome.perm {
+                let j = &jobs[pi];
+                let t = place_grouped(
+                    &mut final_profile,
+                    &mut self.final_groups,
+                    self.arena.carvings.shares(pi),
+                    j,
+                    view.now,
+                );
+                starts[pi] = t;
+                score += waiting_penalty(t, j.submit, self.alpha);
+            }
+            ExecutionPlan { starts, score }
+        } else {
+            build_plan_on(&mut final_profile, &jobs, &outcome.perm, view.now, self.alpha)
+        };
         // The placement probe gates every "starts now" launch: in
         // per-node mode a plan slot at `now` that the exact placement
         // rejects stays an implicit future reservation (re-derived next
@@ -314,19 +394,43 @@ impl Scheduler for PlanSched {
         // paper's shared architecture.
         let mut launches = Vec::new();
         for &pi in &outcome.perm {
-            if plan.starts[pi] == view.now && ctx.try_place_now(&jobs[pi].req) {
-                launches.push(jobs[pi].id);
+            if plan.starts[pi] == view.now {
+                if ctx.try_place_now(&jobs[pi].req) {
+                    launches.push(jobs[pi].id);
+                } else {
+                    self.probe_skipped += 1;
+                }
             }
         }
-        // Greedy tail: jobs past the window are placed in queue order on
-        // the profile already carrying the window plan's reservations.
-        let tail: Vec<PlanJob> = view.queue[w..].iter().map(PlanJob::from_request).collect();
+        // Greedy tail: jobs outside the window are placed in queue order
+        // on the profile already carrying the window plan's reservations.
+        let tail: Vec<PlanJob> = if windowed {
+            let mut in_window = vec![false; view.queue.len()];
+            for &qi in &picked {
+                in_window[qi] = true;
+            }
+            view.queue
+                .iter()
+                .enumerate()
+                .filter(|&(qi, _)| !in_window[qi])
+                .map(|(_, r)| PlanJob::from_request(r))
+                .collect()
+        } else {
+            Vec::new()
+        };
         let tail_starts = super::window::append_tail(&mut final_profile, &tail, view.now);
         for (j, &t) in tail.iter().zip(&tail_starts) {
-            if t == view.now && ctx.try_place_now(&j.req) {
-                launches.push(j.id);
+            if t == view.now {
+                if ctx.try_place_now(&j.req) {
+                    launches.push(j.id);
+                } else {
+                    self.probe_skipped += 1;
+                }
             }
         }
+        // Hand the profile buffer back so next tick's `reset_from`
+        // reuses its capacity instead of reallocating.
+        self.snapshot = final_profile;
         if self.warm_start {
             // Remember the full plan order (window perm, then the greedy
             // tail) so survivors seed the next tick even across window
@@ -561,6 +665,84 @@ mod tests {
         let mut s = PlanSched::new(2.0, 1).with_window(1);
         let l = schedule_once(&mut s, &view);
         assert_eq!(l, vec![JobId(1)]);
+    }
+
+    #[test]
+    fn group_aware_lane_avoids_probe_rejected_launches() {
+        use crate::platform::PlaceProbe;
+        use crate::sched::timeline::ResourceTimeline;
+        use crate::sched::QueueIndex;
+
+        // Per-node cluster: 2 groups × (4 nodes, 100 bytes). Running jobs
+        // pin 30 bytes on group 0 (until t=100) and 80 bytes on group 1
+        // (until t=50): aggregate free is (6 cpu, 90 bytes), but no group
+        // can host an 80-byte job until t=50.
+        let mk_timeline = || {
+            let mut tl =
+                ResourceTimeline::with_per_node(
+                    Time::ZERO,
+                    Resources::new(8, 200),
+                    &[(0, 100), (1, 100)],
+                );
+            tl.set_compute_group_caps(&[(0, 4), (1, 4)]);
+            tl.job_started_placed(
+                JobId(9),
+                Resources::new(1, 30),
+                &[(0, 30)],
+                Time::ZERO,
+                Time::from_secs(100),
+            );
+            tl.job_started_placed(
+                JobId(8),
+                Resources::new(1, 80),
+                &[(1, 80)],
+                Time::ZERO,
+                Time::from_secs(50),
+            );
+            tl
+        };
+        let probe = || PlaceProbe::PerNode {
+            compute_free: vec![(0, 3), (1, 3)],
+            bb_free: vec![(0, 70), (1, 20)],
+        };
+        let q = [req(0, 2, 80, 10, 0)];
+        let running = [
+            RunningInfo {
+                id: JobId(9),
+                req: Resources::new(1, 30),
+                expected_end: Time::from_secs(100),
+            },
+            RunningInfo {
+                id: JobId(8),
+                req: Resources::new(1, 80),
+                expected_end: Time::from_secs(50),
+            },
+        ];
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(8, 200),
+            free: Resources::new(6, 90),
+            queue: &q,
+            running: &running,
+        };
+        // Aggregate scorer: the job fits the aggregate profile right now,
+        // so the plan says "start now" — and the placement probe rejects
+        // it at dispatch (fragmentation discovered too late).
+        let mut tl = mk_timeline();
+        let qindex = QueueIndex::new();
+        let mut ctx = SchedCtx::new(view, &mut tl, &qindex).with_probe(probe());
+        let mut agg = PlanSched::new(2.0, 1);
+        assert!(agg.schedule(&mut ctx).is_empty());
+        assert_eq!(agg.probe_skipped, 1, "aggregate plan must hit the probe");
+        // Group-aware scorer: the per-group lanes already show no group
+        // hosts 80 bytes before t=50, so the plan defers the start — no
+        // probe-rejected launch attempt at all.
+        let mut tl = mk_timeline();
+        let qindex = QueueIndex::new();
+        let mut ctx = SchedCtx::new(view, &mut tl, &qindex).with_probe(probe());
+        let mut ga = PlanSched::new(2.0, 1).with_group_aware(true);
+        assert!(ga.schedule(&mut ctx).is_empty());
+        assert_eq!(ga.probe_skipped, 0, "group-aware plan must anticipate the reject");
     }
 
     #[test]

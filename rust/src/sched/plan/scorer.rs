@@ -13,9 +13,113 @@
 
 
 use crate::core::time::Time;
+use crate::platform::placement::{choose_groups_into, per_node_shares_append};
 use crate::sched::plan::annealing::PermScorer;
 use crate::sched::plan::builder::{waiting_penalty, PlanJob};
-use crate::sched::timeline::Profile;
+use crate::sched::timeline::{GroupBbTimelines, Profile};
+
+/// Reusable scoring buffers, owned by the policy across invocations and
+/// lent to one [`ExactScorer`] at a time ([`ExactScorer::new_in`] /
+/// [`ExactScorer::into_arena`]). Every per-proposal structure lives
+/// here — scalar checkpoint profiles, per-group lanes, prefix sums, the
+/// static share carvings — so after the first few proposals warm the
+/// capacities, scoring a proposal performs **zero heap allocations**
+/// (asserted by the `alloc` test tier's counting allocator).
+#[derive(Debug, Default)]
+pub struct ScorerArena {
+    /// `checkpoints[k]` = profile after placing the first `k` jobs of
+    /// the anchor permutation; `checkpoints[0]` is the base.
+    checkpoints: Vec<Profile>,
+    prefix_scores: Vec<f64>,
+    cached: Vec<usize>,
+    /// Scratch for proposal scoring: seeded from `checkpoints[l]` and
+    /// mutated in place, leaving the incumbent lane intact.
+    scratch: Profile,
+    /// Group-lane mirrors of the above (untouched in aggregate mode).
+    group_checkpoints: Vec<GroupBbTimelines>,
+    group_scratch: GroupBbTimelines,
+    /// Static per-job share carvings for the current invocation.
+    pub(crate) carvings: StaticCarvings,
+}
+
+/// Per-job static group carvings — the byte shares the allocator's plan
+/// would carve for each job *on an empty machine* ([`choose_groups_into`]
+/// over the full per-group compute capacities + [`per_node_shares_append`]),
+/// computed once per scheduler invocation and read thousands of times by
+/// the SA loop. Flat storage (one shared `Vec` + per-job spans) keeps
+/// the lookup allocation-free. A job's span is empty when it needs no
+/// bytes, no plan exists, or the plan concentrates in a single group
+/// (the any-group feasibility question then subsumes the pinned share).
+#[derive(Debug, Default)]
+pub struct StaticCarvings {
+    flat: Vec<(usize, u64)>,
+    spans: Vec<(u32, u32)>,
+    plan_buf: Vec<(usize, u32)>,
+}
+
+impl StaticCarvings {
+    /// Recompute every job's carving from the static compute topology.
+    pub(crate) fn compute(&mut self, caps: &[(usize, u32)], jobs: &[PlanJob]) {
+        self.flat.clear();
+        self.spans.clear();
+        for j in jobs {
+            let start = self.flat.len() as u32;
+            if j.req.bb > 0
+                && choose_groups_into(caps, j.req.cpu, &mut self.plan_buf)
+                && self.plan_buf.len() > 1
+            {
+                per_node_shares_append(j.req.bb, &self.plan_buf, &mut self.flat);
+            }
+            self.spans.push((start, self.flat.len() as u32));
+        }
+    }
+
+    /// Job `ji`'s carving (empty = no split plan; see type docs).
+    pub(crate) fn shares(&self, ji: usize) -> &[(usize, u64)] {
+        let (a, b) = self.spans[ji];
+        &self.flat[a as usize..b as usize]
+    }
+}
+
+/// One group-aware earliest-fit placement — the group lane's pendant of
+/// `earliest_fit` + `reserve`: find the earliest aggregate window that
+/// also admits the job's bytes group-locally (a single group hosting
+/// them all, or the static split carving when the compute plan spans
+/// several groups), reserve it on the scalar profile and book the bytes
+/// into the lane ([`GroupBbTimelines::book_planned`]). When no group
+/// window ever opens, the aggregate fit is kept — same conservative
+/// fallback as the timeline's placed sweep; launches stay probe-gated
+/// either way. Returns the chosen start.
+pub(crate) fn place_grouped(
+    scalar: &mut Profile,
+    lane: &mut GroupBbTimelines,
+    shares: &[(usize, u64)],
+    j: &PlanJob,
+    now: Time,
+) -> Time {
+    let mut t = scalar.earliest_fit(j.req, j.walltime, now);
+    if j.req.bb > 0 {
+        let fallback = t;
+        loop {
+            let end = t + j.walltime;
+            if lane.single_group_fits(j.req.bb, t, end)
+                || (!shares.is_empty() && lane.fits_shares(shares, t, end))
+            {
+                break;
+            }
+            match lane.next_breakpoint_after(t) {
+                Some(next) => t = scalar.earliest_fit(j.req, j.walltime, next),
+                None => {
+                    t = fallback;
+                    break;
+                }
+            }
+        }
+    }
+    scalar.reserve(t, j.walltime, j.req);
+    lane.book_planned(j.req.bb, shares, t, t + j.walltime);
+    t
+}
 
 /// Exact, profile-based scorer (the default policy path).
 ///
@@ -39,48 +143,66 @@ use crate::sched::timeline::Profile;
 /// exact copies and the penalty sum is accumulated in the same
 /// left-to-right order — so caching can never change which plan wins
 /// (asserted by `prop_delta_scoring_bit_identical_to_cold`).
+///
+/// Group-aware mode ([`ExactScorer::with_groups`]): every checkpoint is
+/// paired with a per-group free-bytes lane and placements go through
+/// [`place_grouped`], so a permutation that fragments a storage group
+/// is *delayed in the plan* (and scores worse) instead of being
+/// silently skipped by the launch probe. Under shared placement the
+/// lane is never engaged and scoring is byte-identical to aggregate.
 pub struct ExactScorer<'a> {
     pub jobs: &'a [PlanJob],
     pub now: Time,
     pub alpha: f64,
     evals: u64,
-    /// `checkpoints[k]` = profile after placing the first `k` jobs of
-    /// `cached`; `checkpoints[0]` is the base. `prefix_scores[k]` is the
-    /// running penalty sum after `k` placements.
-    checkpoints: Vec<Profile>,
-    prefix_scores: Vec<f64>,
-    cached: Vec<usize>,
+    /// All per-proposal buffers (see [`ScorerArena`]); borrowed for the
+    /// scorer's lifetime, returned via [`ExactScorer::into_arena`].
+    arena: ScorerArena,
     cached_len: usize,
-    /// Scratch for proposal scoring: seeded from `checkpoints[l]` and
-    /// mutated in place, leaving the incumbent lane intact.
-    scratch: Profile,
     /// When false, every score is a cold full placement on one scratch
     /// (the pre-cache behaviour; kept as the perf-bench baseline and
     /// the bit-exactness oracle).
     cache_enabled: bool,
+    /// Group lane engaged (per-node placement + topology attached).
+    group_aware: bool,
 }
 
 impl<'a> ExactScorer<'a> {
     pub fn new(base: &Profile, jobs: &'a [PlanJob], now: Time, alpha: f64) -> Self {
+        ExactScorer::new_in(ScorerArena::default(), base, jobs, now, alpha)
+    }
+
+    /// Construct reusing `arena`'s buffers (the policy hot path: no
+    /// per-invocation reallocation once the arena has warmed to the
+    /// queue size). Only checkpoint slot 0 gets real content; every
+    /// other slot is `reset_from` its predecessor before it is read, so
+    /// placeholders are never cloned into.
+    pub fn new_in(
+        mut arena: ScorerArena,
+        base: &Profile,
+        jobs: &'a [PlanJob],
+        now: Time,
+        alpha: f64,
+    ) -> Self {
         let n = jobs.len();
-        // Only slot 0 needs real content; every other checkpoint is
-        // reset_from its predecessor before it is ever read, so cheap
-        // placeholders avoid n full profile clones per construction.
-        let mut checkpoints = Vec::with_capacity(n + 1);
-        checkpoints.push(base.clone());
-        let placeholder = || Profile::flat(Time::ZERO, crate::core::resources::Resources::ZERO);
-        checkpoints.resize_with(n + 1, placeholder);
+        if arena.checkpoints.len() < n + 1 {
+            arena.checkpoints.resize_with(n + 1, Profile::default);
+        }
+        arena.checkpoints[0].reset_from(base);
+        arena.prefix_scores.clear();
+        arena.prefix_scores.resize(n + 1, 0.0);
+        // Stale `cached` contents are unreachable behind `cached_len = 0`.
+        arena.cached.clear();
+        arena.cached.resize(n, usize::MAX);
         ExactScorer {
             jobs,
             now,
             alpha,
             evals: 0,
-            checkpoints,
-            prefix_scores: vec![0.0; n + 1],
-            cached: vec![usize::MAX; n],
+            arena,
             cached_len: 0,
-            scratch: placeholder(),
             cache_enabled: true,
+            group_aware: false,
         }
     }
 
@@ -91,21 +213,72 @@ impl<'a> ExactScorer<'a> {
         s
     }
 
+    /// Arena-reusing cold variant (the `plan_cold_scoring` oracle path).
+    pub fn cold_in(
+        arena: ScorerArena,
+        base: &Profile,
+        jobs: &'a [PlanJob],
+        now: Time,
+        alpha: f64,
+    ) -> Self {
+        let mut s = ExactScorer::new_in(arena, base, jobs, now, alpha);
+        s.cache_enabled = false;
+        s
+    }
+
+    /// Engage the group-aware lane, seeded from the shared timeline's
+    /// per-group free-bytes state. Inert when `groups` carries no
+    /// compute topology: no static plans can be derived, so the lane
+    /// would only re-ask the aggregate question. Works for both cached
+    /// and cold scoring (cold remains the bit-exactness oracle in group
+    /// mode too).
+    pub fn with_groups(mut self, groups: &GroupBbTimelines) -> Self {
+        if !groups.has_compute_caps() {
+            return self;
+        }
+        let n = self.jobs.len();
+        if self.arena.group_checkpoints.len() < n + 1 {
+            self.arena
+                .group_checkpoints
+                .resize_with(n + 1, GroupBbTimelines::default);
+        }
+        self.arena.group_checkpoints[0].reset_from(groups);
+        self.arena.carvings.compute(groups.compute_caps(), self.jobs);
+        self.group_aware = true;
+        self
+    }
+
+    /// Hand the buffers back for the next invocation.
+    pub fn into_arena(self) -> ScorerArena {
+        self.arena
+    }
+
     /// Pre-cache behaviour: one scratch reset + full placement.
     fn score_cold(&mut self, perm: &[usize]) -> f64 {
         self.evals += 1;
         if perm.is_empty() {
             return 0.0;
         }
-        let (base, rest) = self.checkpoints.split_at_mut(1);
+        let (base, rest) = self.arena.checkpoints.split_at_mut(1);
         let scratch = &mut rest[0];
         scratch.reset_from(&base[0]);
         let mut score = 0.0;
-        for &ji in perm {
-            let j = &self.jobs[ji];
-            let t = scratch.earliest_fit(j.req, j.walltime, self.now);
-            scratch.reserve(t, j.walltime, j.req);
-            score += waiting_penalty(t, j.submit, self.alpha);
+        if self.group_aware {
+            let (gbase, grest) = self.arena.group_checkpoints.split_at_mut(1);
+            let gscratch = &mut grest[0];
+            gscratch.reset_from(&gbase[0]);
+            for &ji in perm {
+                let j = &self.jobs[ji];
+                let t = place_grouped(scratch, gscratch, self.arena.carvings.shares(ji), j, self.now);
+                score += waiting_penalty(t, j.submit, self.alpha);
+            }
+        } else {
+            for &ji in perm {
+                let j = &self.jobs[ji];
+                let t = scratch.earliest_fit(j.req, j.walltime, self.now);
+                scratch.reserve(t, j.walltime, j.req);
+                score += waiting_penalty(t, j.submit, self.alpha);
+            }
         }
         score
     }
@@ -121,7 +294,7 @@ impl<'a> ExactScorer<'a> {
     /// Common prefix of `perm` with the lane's anchor permutation.
     fn lane_prefix(&self, perm: &[usize]) -> usize {
         let mut l = 0;
-        while l < self.cached_len && self.cached[l] == perm[l] {
+        while l < self.cached_len && self.arena.cached[l] == perm[l] {
             l += 1;
         }
         l
@@ -135,18 +308,26 @@ impl<'a> ExactScorer<'a> {
         let n = perm.len();
         debug_assert_eq!(n, self.jobs.len());
         let l = self.lane_prefix(perm);
-        let mut score = self.prefix_scores[l];
+        let mut score = self.arena.prefix_scores[l];
         for k in l..n {
             let ji = perm[k];
             let j = &self.jobs[ji];
-            let (placed, rest) = self.checkpoints.split_at_mut(k + 1);
+            let (placed, rest) = self.arena.checkpoints.split_at_mut(k + 1);
             let cur = &mut rest[0];
             cur.reset_from(&placed[k]);
-            let t = cur.earliest_fit(j.req, j.walltime, self.now);
-            cur.reserve(t, j.walltime, j.req);
+            let t = if self.group_aware {
+                let (gplaced, grest) = self.arena.group_checkpoints.split_at_mut(k + 1);
+                let gcur = &mut grest[0];
+                gcur.reset_from(&gplaced[k]);
+                place_grouped(cur, gcur, self.arena.carvings.shares(ji), j, self.now)
+            } else {
+                let t = cur.earliest_fit(j.req, j.walltime, self.now);
+                cur.reserve(t, j.walltime, j.req);
+                t
+            };
             score += waiting_penalty(t, j.submit, self.alpha);
-            self.prefix_scores[k + 1] = score;
-            self.cached[k] = ji;
+            self.arena.prefix_scores[k + 1] = score;
+            self.arena.cached[k] = ji;
         }
         self.cached_len = n;
         score
@@ -170,13 +351,28 @@ impl PermScorer for ExactScorer<'_> {
         self.evals += 1;
         debug_assert_eq!(perm.len(), self.jobs.len());
         let l = self.lane_prefix(perm);
-        let mut score = self.prefix_scores[l];
-        self.scratch.reset_from(&self.checkpoints[l]);
-        for &ji in &perm[l..] {
-            let j = &self.jobs[ji];
-            let t = self.scratch.earliest_fit(j.req, j.walltime, self.now);
-            self.scratch.reserve(t, j.walltime, j.req);
-            score += waiting_penalty(t, j.submit, self.alpha);
+        let mut score = self.arena.prefix_scores[l];
+        self.arena.scratch.reset_from(&self.arena.checkpoints[l]);
+        if self.group_aware {
+            self.arena.group_scratch.reset_from(&self.arena.group_checkpoints[l]);
+            for &ji in &perm[l..] {
+                let j = &self.jobs[ji];
+                let t = place_grouped(
+                    &mut self.arena.scratch,
+                    &mut self.arena.group_scratch,
+                    self.arena.carvings.shares(ji),
+                    j,
+                    self.now,
+                );
+                score += waiting_penalty(t, j.submit, self.alpha);
+            }
+        } else {
+            for &ji in &perm[l..] {
+                let j = &self.jobs[ji];
+                let t = self.arena.scratch.earliest_fit(j.req, j.walltime, self.now);
+                self.arena.scratch.reserve(t, j.walltime, j.req);
+                score += waiting_penalty(t, j.submit, self.alpha);
+            }
         }
         score
     }
@@ -476,6 +672,95 @@ mod tests {
         let a = delta.score(&incumbent);
         let b = cold.score(&incumbent);
         assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn group_lane_with_one_group_is_bit_identical_to_aggregate() {
+        use crate::stats::rng::Pcg32;
+        // One storage group holding the whole pool + one compute group:
+        // the group lane's free-bytes profile shadows the scalar bb
+        // component exactly, so every placement decision (and the f64
+        // accumulation order) must match the aggregate scorer bit for
+        // bit — a non-trivial equivalence exercising the full lane.
+        let base = Profile::flat(Time::ZERO, Resources::new(16, 200 << 30));
+        let mut groups = GroupBbTimelines::new(Time::ZERO, &[(0, 200u64 << 30)]);
+        groups.set_compute_caps(&[(0, 16)]);
+        let jobs: Vec<PlanJob> = (0..9)
+            .map(|i| PlanJob {
+                id: JobId(i),
+                req: Resources::new(1 + i % 5, ((i as u64 % 7) + 1) << 30),
+                walltime: crate::core::time::Duration::from_secs(120 + 60 * i as u64),
+                submit: Time::from_secs((i as u64) * 10),
+            })
+            .collect();
+        let mut plain = ExactScorer::new(&base, &jobs, Time::ZERO, 2.0);
+        let mut grouped = ExactScorer::new(&base, &jobs, Time::ZERO, 2.0).with_groups(&groups);
+        let mut rng = Pcg32::seeded(11);
+        let mut perm: Vec<usize> = (0..jobs.len()).collect();
+        plain.note_incumbent(&perm);
+        grouped.note_incumbent(&perm);
+        for _ in 0..150 {
+            let mut prop = perm.clone();
+            let i = rng.below(9) as usize;
+            let j = rng.below(9) as usize;
+            prop.swap(i, j);
+            let a = plain.score_proposal(&prop);
+            let b = grouped.score_proposal(&prop);
+            assert_eq!(a.to_bits(), b.to_bits(), "group lane diverged on {prop:?}");
+            if rng.below(4) == 0 {
+                perm = prop;
+                plain.note_incumbent(&perm);
+                grouped.note_incumbent(&perm);
+            }
+        }
+        // Cold oracle holds in group mode too.
+        let mut cold = ExactScorer::cold(&base, &jobs, Time::ZERO, 2.0).with_groups(&groups);
+        assert_eq!(
+            grouped.score(&perm).to_bits(),
+            cold.score(&perm).to_bits(),
+            "cold must stay the oracle under the group lane"
+        );
+    }
+
+    #[test]
+    fn group_lane_anticipates_fragmentation_the_aggregate_scorer_misses() {
+        // Groups hold (70, 70) GiB behind 4+4 compute nodes. Job 0 books
+        // 35 GiB into group 0; job 1 spills compute 4:1 and carves its
+        // 80 GiB as 64:16 — infeasible group-locally until job 0 ends,
+        // yet the aggregate scorer sees 105 GiB free and plans it at
+        // t=0 (where the launch probe would reject it).
+        let gib = 1u64 << 30;
+        let base = Profile::flat(Time::ZERO, Resources::new(8, 140 * gib));
+        let mut groups = GroupBbTimelines::new(Time::ZERO, &[(0, 70 * gib), (1, 70 * gib)]);
+        groups.set_compute_caps(&[(0, 4), (1, 4)]);
+        let jobs = vec![job(0, 1, 35, 100, 0), job(1, 5, 80, 100, 0)];
+        let perm = [0usize, 1];
+        let mut plain = ExactScorer::new(&base, &jobs, Time::ZERO, 1.0);
+        let mut grouped = ExactScorer::new(&base, &jobs, Time::ZERO, 1.0).with_groups(&groups);
+        let aggregate = plain.score(&perm);
+        let group_aware = grouped.score(&perm);
+        // Aggregate: both at t=0 -> score 0. Group lane: job 1 waits for
+        // job 0's bytes -> strictly worse score, visible to SA *before*
+        // launch.
+        assert_eq!(aggregate, 0.0);
+        assert_eq!(group_aware, 100.0, "job 1 must be delayed to job 0's end");
+    }
+
+    #[test]
+    fn arena_reuse_is_behaviour_identical() {
+        let base = Profile::flat(Time::ZERO, Resources::new(8, 50 << 30));
+        let jobs_a = vec![job(0, 4, 20, 300, 0), job(1, 8, 40, 100, 5), job(2, 2, 10, 50, 9)];
+        let jobs_b = vec![job(3, 6, 30, 200, 0), job(4, 3, 25, 400, 2)];
+        // Fresh-arena reference scores.
+        let ref_a = ExactScorer::new(&base, &jobs_a, Time::ZERO, 2.0).score(&[2, 0, 1]);
+        let ref_b = ExactScorer::new(&base, &jobs_b, Time::ZERO, 2.0).score(&[1, 0]);
+        // One arena threaded through two invocations with different
+        // queue sizes (shrinking included).
+        let mut scorer = ExactScorer::new(&base, &jobs_a, Time::ZERO, 2.0);
+        assert_eq!(scorer.score(&[2, 0, 1]).to_bits(), ref_a.to_bits());
+        let arena = scorer.into_arena();
+        let mut scorer = ExactScorer::new_in(arena, &base, &jobs_b, Time::ZERO, 2.0);
+        assert_eq!(scorer.score(&[1, 0]).to_bits(), ref_b.to_bits());
     }
 
     #[test]

@@ -16,7 +16,16 @@
 //! (asserted by `prop_window_geq_queue_is_identity`). A genuinely
 //! truncating window changes trajectories, so like `--plan-warm-start`
 //! it is an opt-in knob (`--plan-window` / campaign `plan-windows`).
+//!
+//! A truncating window selects the `W` *most urgent* jobs by an
+//! XFactor-style priority (see [`select`]) rather than the FCFS prefix:
+//! under a backlog the prefix is whatever happened to arrive first,
+//! and a short job drowning behind it accrues slowdown the optimiser
+//! never gets to see. The selected set is re-sorted into queue order,
+//! so inside the window candidate generation, warm starts and
+//! tie-breaking keep their FCFS semantics.
 
+use crate::core::job::JobRequest;
 use crate::core::time::Time;
 use crate::sched::plan::builder::{PlaceOps, PlanJob};
 
@@ -29,6 +38,43 @@ pub fn effective(window: usize, queue_len: usize) -> usize {
     } else {
         window
     }
+}
+
+/// The queue indices entering the SA window, in queue order.
+///
+/// Non-truncating windows (`W == 0` or `W >= len`) return the identity
+/// — every job, FCFS order, bit-identical to the pre-window path. A
+/// truncating window picks the `W` most urgent jobs by XFactor priority
+/// `(wait + walltime) / walltime`: the relative-slowdown pressure a job
+/// has already accrued at `now`, the same quantity the paper's bounded
+/// slowdown metric integrates. Comparison is exact (u128 cross-
+/// multiplication of microsecond counts — no float ties), ties broken
+/// toward the earlier queue position, so selection is deterministic.
+pub fn select(window: usize, queue: &[JobRequest], now: Time) -> Vec<usize> {
+    let len = queue.len();
+    let w = effective(window, len);
+    let mut idx: Vec<usize> = (0..len).collect();
+    if w == len {
+        return idx;
+    }
+    let urgency = |i: usize| {
+        let q = &queue[i];
+        let wait = now.since(q.submit).0 as u128;
+        // Zero-walltime requests would make the ratio infinite; clamp to
+        // one microsecond (they sort first among equal waits anyway).
+        let wall = q.walltime.0.max(1) as u128;
+        (wait, wall)
+    };
+    // Descending priority: a before b iff (wait_a + wall_a) / wall_a >
+    // (wait_b + wall_b) / wall_b, cross-multiplied.
+    idx.sort_by(|&a, &b| {
+        let (wa, la) = urgency(a);
+        let (wb, lb) = urgency(b);
+        ((wb + lb) * la).cmp(&((wa + la) * lb)).then_with(|| a.cmp(&b))
+    });
+    idx.truncate(w);
+    idx.sort_unstable();
+    idx
 }
 
 /// Append the tail greedily behind the windowed plan: place every tail
@@ -96,5 +142,58 @@ mod tests {
         let before = profile.clone();
         assert!(append_tail(&mut profile, &[], Time::ZERO).is_empty());
         assert_eq!(profile, before);
+    }
+
+    fn req(id: u32, submit_s: u64, wall_s: u64) -> JobRequest {
+        JobRequest {
+            id: JobId(id),
+            submit: Time::from_secs(submit_s),
+            walltime: Duration::from_secs(wall_s),
+            procs: 1,
+            bb: 0,
+        }
+    }
+
+    #[test]
+    fn select_is_identity_when_not_truncating() {
+        let queue = [req(0, 0, 100), req(1, 50, 10), req(2, 80, 1000)];
+        let now = Time::from_secs(100);
+        assert_eq!(select(0, &queue, now), vec![0, 1, 2]);
+        assert_eq!(select(3, &queue, now), vec![0, 1, 2]);
+        assert_eq!(select(64, &queue, now), vec![0, 1, 2]);
+        assert!(select(2, &[], now).is_empty());
+    }
+
+    #[test]
+    fn select_prefers_xfactor_urgency_over_fcfs() {
+        // At t=100: job 0 waited 100 over wall 1000 -> XFactor 1.1;
+        // job 1 waited 50 over wall 10 -> 6.0; job 2 waited 20 over wall
+        // 40 -> 1.5. Most urgent two are jobs 1 and 2, NOT the FCFS
+        // prefix {0, 1} — and the result is in queue order.
+        let queue = [req(0, 0, 1000), req(1, 50, 10), req(2, 80, 40)];
+        let now = Time::from_secs(100);
+        assert_eq!(select(2, &queue, now), vec![1, 2]);
+        assert_eq!(select(1, &queue, now), vec![1]);
+    }
+
+    #[test]
+    fn select_ties_break_toward_queue_order() {
+        // Identical jobs: equal priority, so the FCFS prefix wins.
+        let queue = [req(0, 10, 100), req(1, 10, 100), req(2, 10, 100)];
+        let now = Time::from_secs(60);
+        assert_eq!(select(2, &queue, now), vec![0, 1]);
+        // Exact arithmetic: (wait+wall)*wall' comparisons, no float ties.
+        // Job 2's wait 51 vs 50 must beat jobs 0/1 deterministically.
+        let queue2 = [req(0, 10, 100), req(1, 10, 100), req(2, 9, 100)];
+        assert_eq!(select(1, &queue2, now), vec![2]);
+    }
+
+    #[test]
+    fn select_clamps_zero_walltime() {
+        let mut q = req(0, 0, 0);
+        q.walltime = Duration(0);
+        let queue = [q, req(1, 0, 100)];
+        // Must not divide by zero / panic; zero-wall sorts most urgent.
+        assert_eq!(select(1, &queue, Time::from_secs(10)), vec![0]);
     }
 }

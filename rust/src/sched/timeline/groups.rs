@@ -20,12 +20,22 @@
 
 use crate::core::resources::Resources;
 use crate::core::time::Time;
+use crate::platform::placement::{choose_groups, per_node_shares};
 use crate::sched::timeline::profile::Profile;
 
 /// One free-bytes profile per storage group, sorted by group id.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Default` is the empty placeholder (no groups, no topology) used by
+/// reusable scratch arenas before their first [`GroupBbTimelines::reset_from`].
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct GroupBbTimelines {
     entries: Vec<(usize, Profile)>,
+    /// Static compute-node capacity per group, sorted by group id.
+    /// Empty when the owner never attached topology data — every
+    /// placement-aware consumer (the probe sweep's split-share fallback,
+    /// the plan scorer's group lane) then degrades to the conservative
+    /// single-group question.
+    compute_caps: Vec<(usize, u32)>,
 }
 
 fn bytes(bb: u64) -> Resources {
@@ -40,7 +50,45 @@ impl GroupBbTimelines {
             .map(|&(g, cap)| (g, Profile::flat(start, bytes(cap))))
             .collect();
         entries.sort_by_key(|&(g, _)| g);
-        GroupBbTimelines { entries }
+        GroupBbTimelines { entries, compute_caps: Vec::new() }
+    }
+
+    /// Attach the static per-group compute-node capacities. These never
+    /// change over a run; they let consumers derive a request's
+    /// allocator-style group plan (via [`choose_groups`] over the full
+    /// capacities + [`per_node_shares`]) without reaching back into the
+    /// platform layer.
+    pub fn set_compute_caps(&mut self, caps: &[(usize, u32)]) {
+        self.compute_caps.clear();
+        self.compute_caps.extend_from_slice(caps);
+        self.compute_caps.sort_unstable_by_key(|&(g, _)| g);
+    }
+
+    /// The attached compute topology (empty when never provided).
+    pub fn compute_caps(&self) -> &[(usize, u32)] {
+        &self.compute_caps
+    }
+
+    pub fn has_compute_caps(&self) -> bool {
+        !self.compute_caps.is_empty()
+    }
+
+    /// Become a copy of `other`, reusing this instance's allocations
+    /// when the group sets match (the arena hot path: per-proposal lane
+    /// resets degenerate to `memcpy`s after warm-up).
+    pub fn reset_from(&mut self, other: &GroupBbTimelines) {
+        if self.entries.len() == other.entries.len()
+            && self.entries.iter().zip(&other.entries).all(|(a, b)| a.0 == b.0)
+        {
+            for ((_, p), (_, q)) in self.entries.iter_mut().zip(&other.entries) {
+                p.reset_from(q);
+            }
+        } else {
+            self.entries.clear();
+            self.entries.extend(other.entries.iter().cloned());
+        }
+        self.compute_caps.clear();
+        self.compute_caps.extend_from_slice(&other.compute_caps);
     }
 
     pub fn advance_to(&mut self, now: Time) {
@@ -145,6 +193,49 @@ impl GroupBbTimelines {
             })
             .min()
     }
+
+    /// The per-group byte carving the allocator's *static* plan gives
+    /// `req` on an empty machine — [`choose_groups`] over the full
+    /// compute capacities, then [`per_node_shares`] — when that plan
+    /// genuinely spans more than one group. `None` when no topology is
+    /// attached, the request needs no bytes or no compute, or the
+    /// static plan concentrates in a single group (the any-group
+    /// [`GroupBbTimelines::single_group_fits`] query is then strictly
+    /// more permissive than a pinned share, so a split adds nothing).
+    ///
+    /// Static because the plan is derived from capacities, not the
+    /// momentary free map the real allocator sees: a deliberate,
+    /// documented approximation that keeps the sweep deterministic and
+    /// cheap. Launches stay probe-gated, so an optimistic answer here
+    /// costs a skipped launch, never a broken allocation.
+    pub fn static_split_shares(&self, req: Resources) -> Option<Vec<(usize, u64)>> {
+        if req.bb == 0 || self.compute_caps.is_empty() {
+            return None;
+        }
+        let plan = choose_groups(&self.compute_caps, req.cpu)?;
+        if plan.len() < 2 {
+            return None;
+        }
+        Some(per_node_shares(req.bb, &plan))
+    }
+
+    /// Book a planned placement's bytes over `[from, to)` the way the
+    /// feasibility sweep judged them: concentrated in the roomiest
+    /// single group when one can host them all, else along the static
+    /// `shares` carving (saturating — aggregate-fallback placements may
+    /// be group-infeasible and the model must stay non-negative). With
+    /// neither a feasible group nor a carving, nothing is booked: the
+    /// scalar lane already accounts for the bytes.
+    pub fn book_planned(&mut self, bb: u64, shares: &[(usize, u64)], from: Time, to: Time) {
+        if bb == 0 {
+            return;
+        }
+        if let Some(g) = self.best_group(bb, from, to) {
+            self.reserve_in(g, bb, from, to);
+        } else if !shares.is_empty() {
+            self.book_saturating(shares, from, to);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -183,6 +274,63 @@ mod tests {
         g.reserve_in(1, 90, t(0), t(50));
         assert_eq!(g.best_group(80, t(0), t(50)), Some(2));
         assert_eq!(g.best_group(101, t(0), t(50)), None);
+    }
+
+    #[test]
+    fn static_split_shares_mirror_the_allocator_plan() {
+        let mut g = GroupBbTimelines::new(t(0), &[(0, 70), (1, 60)]);
+        // No topology attached: no carving derivable.
+        assert_eq!(g.static_split_shares(Resources { cpu: 5, bb: 80 }), None);
+        g.set_compute_caps(&[(0, 4), (1, 4)]);
+        // Fits one group's compute (best-fit concentrates): no split.
+        assert_eq!(g.static_split_shares(Resources { cpu: 4, bb: 80 }), None);
+        // Zero-byte requests never need a carving.
+        assert_eq!(g.static_split_shares(Resources { cpu: 5, bb: 0 }), None);
+        // 5 procs over (4, 4) nodes spills 4:1 -> bytes carve 64:16, the
+        // canonical placement.rs fragmentation shape.
+        assert_eq!(
+            g.static_split_shares(Resources { cpu: 5, bb: 80 }),
+            Some(vec![(0, 64), (1, 16)])
+        );
+        // The carving fits the fresh model even though no single group
+        // can host all 80 bytes.
+        let shares = g.static_split_shares(Resources { cpu: 5, bb: 80 }).unwrap();
+        assert!(!g.single_group_fits(80, t(0), t(10)));
+        assert!(g.fits_shares(&shares, t(0), t(10)));
+    }
+
+    #[test]
+    fn book_planned_concentrates_then_splits_then_saturates() {
+        let mut g = GroupBbTimelines::new(t(0), &[(0, 70), (1, 60)]);
+        g.set_compute_caps(&[(0, 4), (1, 4)]);
+        // A single group can host 50: concentrated in the roomiest (0),
+        // leaving (20, 60).
+        g.book_planned(50, &[], t(0), t(10));
+        assert!(!g.single_group_fits(61, t(0), t(10)));
+        assert!(g.single_group_fits(60, t(0), t(10)));
+        // 80 fits no single group now; the carving is booked share-wise.
+        let shares = [(0usize, 10u64), (1, 50)];
+        g.book_planned(80, &shares, t(0), t(10));
+        assert!(g.fits_shares(&[(0, 10), (1, 10)], t(0), t(10)));
+        assert!(!g.fits_shares(&[(1, 11)], t(0), t(10)));
+        // Saturation: over-booking clamps at the window minimum instead
+        // of panicking the underlying profile.
+        g.book_planned(500, &[(0, 500)], t(0), t(10));
+        assert!(!g.fits_shares(&[(0, 1)], t(0), t(10)));
+    }
+
+    #[test]
+    fn reset_from_copies_state_and_topology() {
+        let mut src = GroupBbTimelines::new(t(0), &[(0, 100), (1, 100)]);
+        src.set_compute_caps(&[(0, 4), (1, 4)]);
+        src.apply(&[(0, 80)], t(0), t(50), false);
+        let mut dst = GroupBbTimelines::default();
+        dst.reset_from(&src);
+        assert_eq!(dst, src);
+        // Same-shape reset (the arena hot path) also converges.
+        src.apply(&[(1, 30)], t(10), t(20), false);
+        dst.reset_from(&src);
+        assert_eq!(dst, src);
     }
 
     #[test]

@@ -19,6 +19,16 @@ pub struct Profile {
     points: Vec<(Time, Resources)>,
 }
 
+/// The empty placeholder (no breakpoints) reusable scratch arenas hold
+/// before their first [`Profile::reset_from`]. Every query method
+/// assumes at least one point — a default profile must be reset before
+/// use.
+impl Default for Profile {
+    fn default() -> Profile {
+        Profile { points: Vec::new() }
+    }
+}
+
 impl Profile {
     /// A profile that is fully free from `now` on.
     pub fn flat(now: Time, capacity: Resources) -> Profile {

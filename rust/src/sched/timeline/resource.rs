@@ -181,6 +181,17 @@ impl ResourceTimeline {
         self.groups.as_ref()
     }
 
+    /// Attach the static per-group compute-node capacities (per-node
+    /// mode; a no-op under shared placement). Unlocks the split-share
+    /// fallback in [`ResourceTimeline::earliest_fit_placed`] and the
+    /// plan scorer's group-aware lane — without topology both degrade
+    /// to the conservative single-group question.
+    pub fn set_compute_group_caps(&mut self, caps: &[(usize, u32)]) {
+        if let Some(g) = &mut self.groups {
+            g.set_compute_caps(caps);
+        }
+    }
+
     // ----- read-only queries (delegated) ---------------------------------
 
     pub fn free_at(&self, t: Time) -> Resources {
@@ -233,12 +244,18 @@ impl ResourceTimeline {
 /// The placement-aware earliest-fit sweep shared by
 /// [`ResourceTimeline::earliest_fit_placed`] and
 /// [`TimelineTxn::earliest_fit_placed`]: take the aggregate earliest
-/// fit, then advance over group-profile breakpoints until a single
-/// group admits the bytes throughout the window. Group feasibility only
-/// changes at group breakpoints, so the scan terminates after at most
-/// one pass over them; if it runs dry (no single group can ever host
-/// the bytes) the aggregate answer is returned as the conservative
-/// fallback.
+/// fit, then advance over group-profile breakpoints until the window
+/// admits the bytes group-locally — a single group hosting them all,
+/// or (when the timeline carries compute topology and the allocator's
+/// static plan spans several groups) the split
+/// [`GroupBbTimelines::static_split_shares`] carving. The split attempt
+/// closes the PR 5 gap where the probe was stricter than the allocator:
+/// a request whose compute plan spills across groups carves its bytes
+/// per-group too, so demanding one group host everything over-delayed
+/// placeable jobs. Group feasibility only changes at group breakpoints,
+/// so the scan terminates after at most one pass over them; if it runs
+/// dry (the bytes can never be hosted either way) the aggregate answer
+/// is returned as the conservative fallback.
 pub(crate) fn earliest_fit_placed_on(
     profile: &Profile,
     groups: Option<&GroupBbTimelines>,
@@ -251,9 +268,13 @@ pub(crate) fn earliest_fit_placed_on(
     if req.bb == 0 {
         return t;
     }
+    let split = groups.static_split_shares(req);
+    let split = split.as_deref();
     let fallback = t;
     loop {
-        if groups.single_group_fits(req.bb, t, t + dur) {
+        if groups.single_group_fits(req.bb, t, t + dur)
+            || split.is_some_and(|s| groups.fits_shares(s, t, t + dur))
+        {
             return t;
         }
         match groups.next_breakpoint_after(t) {
@@ -367,6 +388,29 @@ mod tests {
             tl.earliest_fit_placed(res(1, 150), Duration::from_secs(10), t(0)),
             tl.earliest_fit(res(1, 150), Duration::from_secs(10), t(0)),
         );
+    }
+
+    #[test]
+    fn placed_fit_accepts_split_shares_when_no_single_group_hosts() {
+        // PR 5 regression shape: a spilling request (5 procs over 4+4
+        // node groups) carves bytes 64:16, which fits *now*, while no
+        // single group frees 80 bytes until t=50. The probe used to
+        // demand a single group and over-delay to t=50.
+        let cap = res(8, 200);
+        let mut tl = ResourceTimeline::with_per_node(t(0), cap, &[(0, 100), (1, 100)]);
+        tl.job_started_placed(JobId(1), res(1, 30), &[(0, 30)], t(0), t(100));
+        tl.job_started_placed(JobId(2), res(1, 80), &[(1, 80)], t(0), t(50));
+        let req = res(5, 80);
+        let dur = Duration::from_secs(10);
+        // Without topology the conservative single-group sweep waits.
+        assert_eq!(tl.earliest_fit_placed(req, dur, t(0)), t(50));
+        // With topology the static split carving (64 in group 0, 16 in
+        // group 1) is admitted immediately.
+        tl.set_compute_group_caps(&[(0, 4), (1, 4)]);
+        assert_eq!(tl.earliest_fit_placed(req, dur, t(0)), t(0));
+        // Concentrating requests (<= 4 procs) still use the stricter
+        // single-group question: best-fit would put them in one group.
+        assert_eq!(tl.earliest_fit_placed(res(4, 80), dur, t(0)), t(50));
     }
 
     #[test]

@@ -124,9 +124,12 @@ impl<'a> TimelineTxn<'a> {
     /// per-node mode, booking the request's bytes in the single most
     /// roomy group able to host them over the window — so chained
     /// reservations (conservative backfilling, EASY head) see each
-    /// other's group pressure. When no single group fits (the
-    /// [`TimelineTxn::earliest_fit_placed`] fallback case) only the
-    /// aggregate is booked.
+    /// other's group pressure. When no single group fits, a spilling
+    /// request's static split carving
+    /// ([`GroupBbTimelines::static_split_shares`]) is booked instead —
+    /// mirroring the window [`TimelineTxn::earliest_fit_placed`]
+    /// admitted — saturating at the model minimum; with neither, only
+    /// the aggregate is booked (the fallback case).
     pub fn reserve_placed(&mut self, at: Time, dur: Duration, req: Resources) {
         self.profile.reserve(at, dur, req);
         if req.bb == 0 {
@@ -135,6 +138,8 @@ impl<'a> TimelineTxn<'a> {
         if let Some(g) = self.groups.as_deref_mut() {
             if let Some(group) = g.best_group(req.bb, at, at + dur) {
                 g.reserve_in(group, req.bb, at, at + dur);
+            } else if let Some(shares) = g.static_split_shares(req) {
+                g.book_saturating(&shares, at, at + dur);
             }
         }
     }

@@ -216,11 +216,17 @@ impl Simulator {
         let arrivals_left = jobs.len();
         let timeline = match cfg.bb_placement {
             Placement::Striped => ResourceTimeline::new(Time::ZERO, cluster.capacity()),
-            Placement::PerNode => ResourceTimeline::with_per_node(
-                Time::ZERO,
-                cluster.capacity(),
-                &cluster.bb.group_capacities(),
-            ),
+            Placement::PerNode => {
+                let mut tl = ResourceTimeline::with_per_node(
+                    Time::ZERO,
+                    cluster.capacity(),
+                    &cluster.bb.group_capacities(),
+                );
+                // Static compute topology unlocks split-share probes and
+                // the plan scorer's group lane.
+                tl.set_compute_group_caps(&cluster.compute.capacity_by_group());
+                tl
+            }
         };
         Simulator {
             router: Router::new(&topo),

@@ -1,0 +1,180 @@
+//! Allocation-discipline tier: the SA scoring hot path must perform
+//! **zero heap allocations per proposal once warm**.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; the test
+//! replays an identical, deterministic scoring pass twice from the same
+//! re-anchored lane state. The first pass grows every arena buffer to
+//! the capacity the pass needs; because the second pass is bit-identical
+//! (placements are deterministic), any allocation it performs would be
+//! per-proposal churn — exactly what the [`bbsched`] scorer arena exists
+//! to eliminate. Covered for both the aggregate lane and the group-aware
+//! lane, cached and cold scoring.
+//!
+//! Kept to a single `#[test]` on purpose: the counter is process-global,
+//! so concurrently-running tests would alias each other's allocations.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use bbsched::core::job::JobId;
+use bbsched::core::resources::Resources;
+use bbsched::core::time::{Duration, Time};
+use bbsched::sched::plan::annealing::PermScorer;
+use bbsched::sched::plan::builder::PlanJob;
+use bbsched::sched::plan::scorer::ExactScorer;
+use bbsched::sched::timeline::{GroupBbTimelines, Profile};
+use bbsched::stats::rng::Pcg32;
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A growth-realloc is allocation churn just the same.
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+fn jobs(n: u32) -> Vec<PlanJob> {
+    (0..n)
+        .map(|i| PlanJob {
+            id: JobId(i),
+            req: Resources::new(1 + i % 5, (((i as u64 % 7) + 1) << 30)),
+            walltime: Duration::from_secs(120 + 60 * i as u64),
+            submit: Time::from_secs(i as u64 * 10),
+        })
+        .collect()
+}
+
+/// The deterministic SA-shaped workload one pass replays: proposals
+/// derived from a rotating incumbent (pre-generated — building the move
+/// list itself is not part of the scoring hot path).
+fn moves(n: usize, rounds: usize) -> Vec<(Vec<usize>, bool)> {
+    let mut rng = Pcg32::seeded(42);
+    let mut incumbent: Vec<usize> = (0..n).collect();
+    let mut out = Vec::new();
+    for step in 0..rounds {
+        let mut prop = incumbent.clone();
+        let i = rng.below(n as u32) as usize;
+        let j = rng.below(n as u32) as usize;
+        if step % 3 == 0 {
+            let moved = prop.remove(i);
+            prop.insert(j.min(prop.len()), moved);
+        } else {
+            prop.swap(i, j);
+        }
+        let accept = rng.below(4) == 0;
+        if accept {
+            incumbent = prop.clone();
+        }
+        out.push((prop, accept));
+    }
+    out
+}
+
+/// One full scoring pass from a fixed anchor. Touches every hot-path
+/// entry point: `note_incumbent` (lane re-anchor), `score_proposal`
+/// (delta suffix on scratch), `score` (lane placement).
+fn run_pass(scorer: &mut ExactScorer<'_>, anchor: &[usize], moves: &[(Vec<usize>, bool)]) -> f64 {
+    scorer.note_incumbent(anchor);
+    let mut acc = 0.0;
+    for (prop, accept) in moves {
+        acc += scorer.score_proposal(prop);
+        if *accept {
+            acc += scorer.score(prop);
+            scorer.note_incumbent(prop);
+        }
+    }
+    acc
+}
+
+#[test]
+fn warm_scorer_performs_zero_heap_allocations_per_proposal() {
+    let gib = 1u64 << 30;
+    let mut base = Profile::flat(Time::ZERO, Resources::new(16, 200 * gib));
+    base.subtract(Time::from_secs(100), Time::from_secs(900), Resources::new(6, 50 * gib));
+    let mut groups = GroupBbTimelines::new(Time::ZERO, &[(0, 100 * gib), (1, 100 * gib)]);
+    groups.set_compute_caps(&[(0, 8), (1, 8)]);
+    let jobs = jobs(10);
+    let anchor: Vec<usize> = (0..jobs.len()).collect();
+    let moves = moves(jobs.len(), 240);
+
+    // (label, cached?, group lane?) — every scoring mode must hold the
+    // zero-allocation property, including the cold oracle paths.
+    for (label, cached, grouped) in [
+        ("aggregate/cached", true, false),
+        ("aggregate/cold", false, false),
+        ("group-aware/cached", true, true),
+        ("group-aware/cold", false, true),
+    ] {
+        let mut scorer = if cached {
+            ExactScorer::new(&base, &jobs, Time::ZERO, 2.0)
+        } else {
+            ExactScorer::cold(&base, &jobs, Time::ZERO, 2.0)
+        };
+        if grouped {
+            scorer = scorer.with_groups(&groups);
+        }
+        // Warm-up pass: grows checkpoints / scratch / group lanes to
+        // exactly the capacity the (identical) measured pass needs.
+        let warm = run_pass(&mut scorer, &anchor, &moves);
+        let before = allocations();
+        let measured = run_pass(&mut scorer, &anchor, &moves);
+        let delta = allocations() - before;
+        assert_eq!(
+            delta, 0,
+            "{label}: warm scoring pass performed {delta} heap allocations"
+        );
+        // Same anchor + same moves => bit-identical pass (sanity that
+        // the measured pass really replayed the warm one).
+        assert_eq!(warm.to_bits(), measured.to_bits(), "{label}: passes diverged");
+    }
+
+    // Arena hand-off across invocations (the policy hot path): scoring a
+    // *different* queue of the same size with recycled buffers must stay
+    // allocation-free too — `new_in`/`with_groups`/`into_arena` round trip.
+    let jobs_b: Vec<PlanJob> = jobs
+        .iter()
+        .map(|j| PlanJob {
+            id: JobId(j.id.0 + 100),
+            req: Resources::new(j.req.cpu.max(2) - 1, j.req.bb),
+            walltime: j.walltime + Duration::from_secs(30),
+            submit: j.submit,
+        })
+        .collect();
+    let mut scorer = ExactScorer::new(&base, &jobs, Time::ZERO, 2.0).with_groups(&groups);
+    run_pass(&mut scorer, &anchor, &moves);
+    let mut scorer =
+        ExactScorer::new_in(scorer.into_arena(), &base, &jobs_b, Time::ZERO, 2.0).with_groups(&groups);
+    run_pass(&mut scorer, &anchor, &moves); // warm for jobs_b's placements
+    let before = allocations();
+    let arena = {
+        let mut s =
+            ExactScorer::new_in(scorer.into_arena(), &base, &jobs_b, Time::ZERO, 2.0).with_groups(&groups);
+        run_pass(&mut s, &anchor, &moves);
+        s.into_arena()
+    };
+    let delta = allocations() - before;
+    assert_eq!(delta, 0, "arena round trip performed {delta} heap allocations");
+    drop(arena);
+}

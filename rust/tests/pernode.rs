@@ -77,8 +77,23 @@ fn every_policy_completes_a_pernode_placement_run() {
     }
     // One policy with real I/O: group-local slices must route through
     // the fluid network like striped ones do.
-    let res = run_policy(jobs.clone(), Policy::SjfBb, &cfg.io(true));
+    let res = run_policy(jobs.clone(), Policy::SjfBb, &cfg.clone().io(true));
     assert_eq!(res.records.len(), jobs.len());
+    // Group-aware plan scoring engages the per-group lane end to end
+    // (scorer carvings + grouped final build + probe-gated launches);
+    // the run must stay complete, with and without timeline rebuilds.
+    for opts in [
+        cfg.clone().plan_group_aware(true),
+        cfg.clone().plan_group_aware(true).rebuild_timeline(true),
+        cfg.plan_group_aware(true).plan_cold_scoring(true),
+    ] {
+        let res = run_policy(jobs.clone(), Policy::Plan(2), &opts);
+        assert_eq!(
+            res.records.len(),
+            jobs.len(),
+            "plan-2 group-aware per-node run lost jobs"
+        );
+    }
 }
 
 #[test]

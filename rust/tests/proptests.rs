@@ -601,6 +601,76 @@ fn prop_window_geq_queue_is_identity() {
     }
 }
 
+/// PROPERTY: group-aware plan scoring is bit-identical to the aggregate
+/// lane wherever the timeline carries no per-group state — the shared
+/// pool and the per-node *clamp* approximation both score through the
+/// aggregate path, so whole-simulation fingerprints must not move. The
+/// knob may only change behaviour under real per-node placement.
+#[test]
+fn prop_group_aware_on_shared_arch_is_identity() {
+    for family in [Family::PaperTwin, Family::ArrivalStorm { intensity: 4.0 }] {
+        for arch in [BbArch::Shared, BbArch::PerNodeClamp] {
+            let (jobs, bb_capacity) =
+                tiny_scenario(family.clone(), arch, EstimateModel::Paper)
+                    .materialise(1)
+                    .unwrap();
+            let n_jobs = jobs.len();
+            let cfg = SimConfig { io_enabled: false, ..scenario_sim_cfg(arch, bb_capacity) };
+            let run = |ga: bool| {
+                run_policy(
+                    jobs.clone(),
+                    Policy::Plan(2),
+                    &SimOptions::for_sim(cfg.clone()).plan_group_aware(ga),
+                )
+            };
+            let off = run(false);
+            let on = run(true);
+            assert_eq!(off.records.len(), n_jobs, "{family:?}/{arch:?}: lost jobs");
+            assert_eq!(
+                off.fingerprint(),
+                on.fingerprint(),
+                "{family:?}/{arch:?}: group-aware knob changed an aggregate-lane run"
+            );
+        }
+    }
+}
+
+/// PROPERTY: under real per-node placement the group-aware lane still
+/// yields a complete schedule (every job finishes; the simulator
+/// asserts launch feasibility internally) across every synthetic
+/// family, windowed or not.
+#[test]
+fn prop_group_aware_pernode_schedules_everything() {
+    for family in [
+        Family::PaperTwin,
+        Family::ArrivalStorm { intensity: 4.0 },
+        Family::IoMix { factor: 3.0 },
+        Family::HeavyTailBb { sigma: 1.6 },
+    ] {
+        let (jobs, bb_capacity) =
+            tiny_scenario(family.clone(), BbArch::PerNode, EstimateModel::Paper)
+                .materialise(1)
+                .unwrap();
+        let n_jobs = jobs.len();
+        let cfg = SimConfig {
+            io_enabled: false,
+            ..scenario_sim_cfg(BbArch::PerNode, bb_capacity)
+        };
+        for window in [0usize, 3] {
+            let res = run_policy(
+                jobs.clone(),
+                Policy::Plan(2),
+                &SimOptions::for_sim(cfg.clone()).plan_group_aware(true).plan_window(window),
+            );
+            assert_eq!(
+                res.records.len(),
+                n_jobs,
+                "{family:?} window {window}: group-aware per-node run lost jobs"
+            );
+        }
+    }
+}
+
 /// PROPERTY: the native discrete scorer agrees with a brute-force
 /// earliest-slot search (independent implementation).
 #[test]
