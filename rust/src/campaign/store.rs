@@ -20,6 +20,14 @@
 //!
 //! Only *successful* outcomes are stored: failures, timeouts and
 //! cancelled cells always re-run.
+//!
+//! The store doubles as the `repro serve` cache tier: a service `run`
+//! request builds the same one-cell identity and goes through the same
+//! [`crate::campaign::execute_run`] path, so cells computed by any
+//! previous campaign or serve session — the key deliberately excludes
+//! campaign names and grid indices — are answered from disk without
+//! simulating, and cells a serve session computes are visible to later
+//! campaigns.
 
 use crate::campaign::error::CampaignError;
 use crate::campaign::spec::{CampaignSpec, RunSpec};

@@ -94,7 +94,18 @@
 //! - [`campaign::store`] — content-addressed on-disk store of completed
 //!   campaign cells (`.repro-store/<fnv1a>.json`); re-runs skip cached
 //!   cells byte-identically, `--force` recomputes, `repro gc` removes
-//!   artifacts no longer reachable from a kept spec.
+//!   artifacts no longer reachable from a kept spec. The same store is
+//!   the [`serve`] service's cache tier: `run` requests whose cell any
+//!   previous campaign or serve session computed are answered from disk
+//!   without simulating.
+//! - [`serve`] — `repro serve`, the long-lived stdin/stdout NDJSON
+//!   scheduling service: named online sessions
+//!   ([`sim::simulator::Simulator::online`]) keep scheduler state hot
+//!   between requests (incremental timeline, incumbent plan, scorer
+//!   arena, warm-start seed); requests stream `submit`/`advance`/
+//!   `query` and decisions stream back as events; every failure is a
+//!   typed error line, and `--record`/`--replay` make any dialogue a
+//!   byte-identical regression artifact.
 
 pub mod campaign;
 pub mod coordinator;
@@ -106,6 +117,7 @@ pub mod pool;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod stats;
 pub mod workload;

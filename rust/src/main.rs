@@ -7,6 +7,9 @@
 //!              parallel from a spec file or a built-in spec, resumable
 //!              from a content-addressed run store
 //!   gc         delete store entries not reachable from a kept spec
+//!   serve      long-lived NDJSON scheduling service on stdin/stdout,
+//!              with the run store as its cache tier and recorded
+//!              transcripts replayable byte-for-byte
 //!   gantt      export the Fig-3 Gantt CSV for a policy
 //!   ablation   SA (189 evals) vs Zheng et al. (8742 evals) comparison
 //!   workload   generate/inspect the synthetic KTH-SP2 twin
@@ -35,6 +38,8 @@ use bbsched::report::csv;
 use bbsched::report::json::{summary_fields, JsonObject};
 use bbsched::report::{fmt_f, render_table, scenario as scenario_report};
 use bbsched::sched::Policy;
+use bbsched::serve::{self, ServeOptions};
+use bbsched::CancelToken;
 use bbsched::stats::descriptive::letter_name;
 use bbsched::stats::{ks_p_value, ks_statistic, LogNormal};
 use bbsched::workload::{load_scenario, BbModel, EstimateModel, Family, WorkloadSpec};
@@ -774,6 +779,49 @@ fn cmd_workload(args: &Args) {
     }
 }
 
+/// `repro serve`: the long-lived NDJSON scheduling service on
+/// stdin/stdout (see [`bbsched::serve`]). `--replay FILE` verifies a
+/// recorded transcript against a fresh service instead of serving;
+/// `--record FILE` mirrors the live dialogue into such a transcript.
+fn cmd_serve(args: &Args) -> i32 {
+    // Store resolution mirrors `campaign`: --store-dir, default
+    // `.repro-store`; --no-store opts out (the `run` op then always
+    // simulates).
+    let store = if args.flag("no-store") {
+        None
+    } else {
+        let dir = PathBuf::from(args.get("store-dir").unwrap_or(".repro-store"));
+        eprintln!("run store: {}", dir.display());
+        Some(RunStore::new(dir))
+    };
+    let opts = ServeOptions { store, cancel: CancelToken::new() };
+    if let Some(path) = args.get("replay") {
+        return serve::replay_file(opts, Path::new(path));
+    }
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    match args.get("record") {
+        Some(path) => {
+            let file = match std::fs::File::create(path) {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!("error: cannot create transcript {path}: {e}");
+                    return EXIT_SPEC_ERROR;
+                }
+            };
+            let mut rec = std::io::BufWriter::new(file);
+            let code = serve::run_loop(opts, stdin.lock(), stdout.lock(), Some(&mut rec));
+            use std::io::Write;
+            if rec.flush().is_err() {
+                eprintln!("error: transcript flush failed");
+                return campaign::EXIT_RUN_FAILED;
+            }
+            code
+        }
+        None => serve::run_loop(opts, stdin.lock(), stdout.lock(), None),
+    }
+}
+
 fn main() {
     let args = Args::parse();
     let code = match args.cmd.as_str() {
@@ -787,6 +835,7 @@ fn main() {
         }
         "campaign" => cmd_campaign(&args),
         "gc" => cmd_gc(&args),
+        "serve" => cmd_serve(&args),
         "gantt" => {
             cmd_gantt(&args);
             EXIT_OK
@@ -806,7 +855,7 @@ fn main() {
                 eprintln!("error: unknown subcommand `{other}`");
             }
             println!(
-                "usage: repro <simulate|eval|campaign|gc|gantt|ablation|workload> [--key value ...]\n\n\
+                "usage: repro <simulate|eval|campaign|gc|serve|gantt|ablation|workload> [--key value ...]\n\n\
                  common flags:\n\
                  \x20 --scale F        fraction of the paper workload (default 1.0 = 28453 jobs)\n\
                  \x20 --seed N         workload + scheduler seed\n\
@@ -835,6 +884,11 @@ fn main() {
                  \x20 --force          recompute cells even when the store has them\n\
                  \x20 --dry-run        enumerate the grid without simulating\n\
                  \x20 --quiet          suppress per-run progress on stderr\n\n\
+                 serve flags (NDJSON scheduling service on stdin/stdout; see README \"Serving\"):\n\
+                 \x20 --store-dir DIR  run store answering `run` requests from cache (default .repro-store)\n\
+                 \x20 --no-store       always simulate `run` requests\n\
+                 \x20 --record FILE    mirror the dialogue into a replayable transcript\n\
+                 \x20 --replay FILE    verify a recorded transcript byte-for-byte, then exit\n\n\
                  gc flags:\n\
                  \x20 --keep-spec FILE | --keep-builtin NAME   grid whose cells stay live\n\
                  \x20 --store-dir DIR  store to collect (default .repro-store)\n\

@@ -186,6 +186,12 @@ impl SimOptions {
     pub fn run(&self, jobs: Vec<Job>, policy: Policy) -> SimResult {
         Simulator::new(jobs, self.scheduler(policy), self.sim.clone()).run()
     }
+
+    /// Start a live online session for `policy` under these options —
+    /// the `repro serve` entry point (see [`Simulator::online`]).
+    pub fn online_simulator(&self, policy: Policy) -> Simulator {
+        Simulator::online(self.scheduler(policy), self.sim.clone())
+    }
 }
 
 #[cfg(test)]

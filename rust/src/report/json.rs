@@ -172,6 +172,12 @@ impl JsonValue {
     }
 }
 
+/// Look up `key` in a parsed flat object (first occurrence, document
+/// order) — the accessor the serve replay path and store reader share.
+pub fn get<'a>(fields: &'a [(String, JsonValue)], key: &str) -> Option<&'a JsonValue> {
+    fields.iter().find(|(k, _)| k.as_str() == key).map(|(_, v)| v)
+}
+
 /// Parse one flat JSON object (`{"k":"v","n":1.5,"b":true,"x":null}`)
 /// into key/value pairs in document order. The inverse of
 /// [`JsonObject`]: numbers parsed with `str::parse::<f64>` round-trip

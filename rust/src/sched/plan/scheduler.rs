@@ -325,8 +325,12 @@ impl Scheduler for PlanSched {
         // Queue windowing: only the `w` most urgent jobs enter the SA
         // search (XFactor priority, queue order inside the window — see
         // `window::select`); `w == queue.len()` is the identity path,
-        // bit-identical to pre-window behaviour.
-        let picked = super::window::select(self.window, view.queue, view.now);
+        // bit-identical to pre-window behaviour. The index buffer lives
+        // in the arena (taken out here because the arena itself moves
+        // into the scorer below) so the once-per-tick selection is
+        // allocation-free once warm.
+        let mut picked = std::mem::take(&mut self.arena.picked);
+        super::window::select_into(self.window, view.queue, view.now, &mut picked);
         let windowed = picked.len() < view.queue.len();
         let jobs: Vec<PlanJob> =
             picked.iter().map(|&qi| PlanJob::from_request(&view.queue[qi])).collect();
@@ -342,6 +346,10 @@ impl Scheduler for PlanSched {
         } else {
             None
         };
+        // `lane`'s timeline borrow must end before the launch probes
+        // need `ctx` mutably; the tail build below keys off this flag
+        // and `self.final_groups` instead.
+        let grouped = lane.is_some();
         // `picked` is sorted, so the ctx's precomputed id→queue-index
         // map composes with a binary search as the warm-start lookup
         // (jobs outside the window are new arrivals from the search's
@@ -418,7 +426,30 @@ impl Scheduler for PlanSched {
         } else {
             Vec::new()
         };
-        let tail_starts = super::window::append_tail(&mut final_profile, &tail, view.now);
+        let mut tail_starts = std::mem::take(&mut self.arena.tail_starts);
+        if grouped && !tail.is_empty() {
+            // Group-aware runs route the tail through the same grouped
+            // placement rule as the window plan: an aggregate-only tail
+            // can plan a group-infeasible "start now" that the probe
+            // then rejects at dispatch (the PR-7 deferral, closed here).
+            // `final_groups` already carries the window plan's bookings;
+            // the carvings are recomputed for the tail jobs (the window
+            // jobs' carvings have served their purpose by now).
+            self.arena.carvings.compute(self.final_groups.compute_caps(), &tail);
+            tail_starts.clear();
+            for (ti, j) in tail.iter().enumerate() {
+                let t = place_grouped(
+                    &mut final_profile,
+                    &mut self.final_groups,
+                    self.arena.carvings.shares(ti),
+                    j,
+                    view.now,
+                );
+                tail_starts.push(t);
+            }
+        } else {
+            super::window::append_tail_into(&mut final_profile, &tail, view.now, &mut tail_starts);
+        }
         for (j, &t) in tail.iter().zip(&tail_starts) {
             if t == view.now {
                 if ctx.try_place_now(&j.req) {
@@ -429,8 +460,11 @@ impl Scheduler for PlanSched {
             }
         }
         // Hand the profile buffer back so next tick's `reset_from`
-        // reuses its capacity instead of reallocating.
+        // reuses its capacity instead of reallocating — likewise the
+        // window scratch buffers.
         self.snapshot = final_profile;
+        self.arena.tail_starts = tail_starts;
+        self.arena.picked = picked;
         if self.warm_start {
             // Remember the full plan order (window perm, then the greedy
             // tail) so survivors seed the next tick even across window
@@ -743,6 +777,88 @@ mod tests {
         let mut ga = PlanSched::new(2.0, 1).with_group_aware(true);
         assert!(ga.schedule(&mut ctx).is_empty());
         assert_eq!(ga.probe_skipped, 0, "group-aware plan must anticipate the reject");
+    }
+
+    #[test]
+    fn group_aware_window_tail_routes_through_group_lane() {
+        use crate::platform::PlaceProbe;
+        use crate::sched::timeline::ResourceTimeline;
+        use crate::sched::QueueIndex;
+
+        // Same per-node cluster as the test above: 2 groups × (4 nodes,
+        // 100 bytes); 30 bytes pinned on group 0 until t=100, 80 bytes
+        // on group 1 until t=50 — aggregate free (6 cpu, 90 bytes).
+        let mk_timeline = || {
+            let mut tl =
+                ResourceTimeline::with_per_node(
+                    Time::ZERO,
+                    Resources::new(8, 200),
+                    &[(0, 100), (1, 100)],
+                );
+            tl.set_compute_group_caps(&[(0, 4), (1, 4)]);
+            tl.job_started_placed(
+                JobId(9),
+                Resources::new(1, 30),
+                &[(0, 30)],
+                Time::ZERO,
+                Time::from_secs(100),
+            );
+            tl.job_started_placed(
+                JobId(8),
+                Resources::new(1, 80),
+                &[(1, 80)],
+                Time::ZERO,
+                Time::from_secs(50),
+            );
+            tl
+        };
+        let probe = || PlaceProbe::PerNode {
+            compute_free: vec![(0, 3), (1, 3)],
+            bb_free: vec![(0, 70), (1, 20)],
+        };
+        // A window of 1 traps job 0 (8 cpus — nothing before t=100), so
+        // jobs 1 and 2 go through the greedy *tail*. Job 1 (2 cpu, 85
+        // bytes) fits the aggregate right now but no group hosts 85
+        // bytes before t=50; job 2 (2 cpu, 40 bytes) is group-0-feasible
+        // immediately.
+        let q = [req(0, 8, 0, 1, 0), req(1, 2, 85, 1, 0), req(2, 2, 40, 1, 0)];
+        let running = [
+            RunningInfo {
+                id: JobId(9),
+                req: Resources::new(1, 30),
+                expected_end: Time::from_secs(100),
+            },
+            RunningInfo {
+                id: JobId(8),
+                req: Resources::new(1, 80),
+                expected_end: Time::from_secs(50),
+            },
+        ];
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(8, 200),
+            free: Resources::new(6, 90),
+            queue: &q,
+            running: &running,
+        };
+        // Aggregate tail: job 1 is planned at `now`, probe-rejected at
+        // dispatch, and its phantom 85-byte reservation pushes job 2
+        // past `now` — the tick launches nothing.
+        let mut tl = mk_timeline();
+        let qindex = QueueIndex::new();
+        let mut ctx = SchedCtx::new(view, &mut tl, &qindex).with_probe(probe());
+        let mut agg = PlanSched::new(2.0, 1).with_window(1);
+        assert!(agg.schedule(&mut ctx).is_empty());
+        assert!(agg.probe_skipped >= 1, "aggregate tail must hit the probe");
+        // Group-aware tail: job 1's start is deferred in the plan (no
+        // group fits it yet), so job 2's earliest fit stays `now`,
+        // group-feasible — it launches, with no probe-rejected attempt.
+        let mut tl = mk_timeline();
+        let qindex = QueueIndex::new();
+        let mut ctx = SchedCtx::new(view, &mut tl, &qindex).with_probe(probe());
+        let mut ga = PlanSched::new(2.0, 1).with_window(1).with_group_aware(true);
+        assert_eq!(ga.schedule(&mut ctx), vec![JobId(2)]);
+        assert_eq!(ga.probe_skipped, 0, "group-aware tail must anticipate the reject");
     }
 
     #[test]

@@ -40,6 +40,13 @@ pub struct ScorerArena {
     group_scratch: GroupBbTimelines,
     /// Static per-job share carvings for the current invocation.
     pub(crate) carvings: StaticCarvings,
+    /// Once-per-tick window scratch (the `window::select_into` index
+    /// buffer and the greedy tail's planned starts), owned here so the
+    /// policy path reuses their capacity across invocations. The policy
+    /// takes them out before the arena moves into a scorer and hands
+    /// them back after the launch pass — `new_in` never touches them.
+    pub(crate) picked: Vec<usize>,
+    pub(crate) tail_starts: Vec<Time>,
 }
 
 /// Per-job static group carvings — the byte shares the allocator's plan

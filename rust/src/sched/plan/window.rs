@@ -51,11 +51,25 @@ pub fn effective(window: usize, queue_len: usize) -> usize {
 /// multiplication of microsecond counts — no float ties), ties broken
 /// toward the earlier queue position, so selection is deterministic.
 pub fn select(window: usize, queue: &[JobRequest], now: Time) -> Vec<usize> {
+    let mut idx = Vec::new();
+    select_into(window, queue, now, &mut idx);
+    idx
+}
+
+/// Allocation-free variant of [`select`]: clears `out` and fills it with
+/// the selection, reusing its capacity. The plan policy keeps `out` in
+/// its [`crate::sched::plan::scorer::ScorerArena`], so the once-per-tick
+/// window path performs zero heap allocations once warm (pinned by the
+/// `tests/alloc.rs` counting-allocator tier). The priority sort is
+/// unstable — legal because the index tie-break makes the comparator a
+/// total order, so the result is identical to a stable sort.
+pub fn select_into(window: usize, queue: &[JobRequest], now: Time, out: &mut Vec<usize>) {
+    out.clear();
     let len = queue.len();
     let w = effective(window, len);
-    let mut idx: Vec<usize> = (0..len).collect();
+    out.extend(0..len);
     if w == len {
-        return idx;
+        return;
     }
     let urgency = |i: usize| {
         let q = &queue[i];
@@ -67,14 +81,13 @@ pub fn select(window: usize, queue: &[JobRequest], now: Time) -> Vec<usize> {
     };
     // Descending priority: a before b iff (wait_a + wall_a) / wall_a >
     // (wait_b + wall_b) / wall_b, cross-multiplied.
-    idx.sort_by(|&a, &b| {
+    out.sort_unstable_by(|&a, &b| {
         let (wa, la) = urgency(a);
         let (wb, lb) = urgency(b);
         ((wb + lb) * la).cmp(&((wa + la) * lb)).then_with(|| a.cmp(&b))
     });
-    idx.truncate(w);
-    idx.sort_unstable();
-    idx
+    out.truncate(w);
+    out.sort_unstable();
 }
 
 /// Append the tail greedily behind the windowed plan: place every tail
@@ -83,13 +96,26 @@ pub fn select(window: usize, queue: &[JobRequest], now: Time) -> Vec<usize> {
 /// starts. Reservations are left in `ops`, exactly like
 /// [`crate::sched::plan::builder::build_plan_on`].
 pub fn append_tail(ops: &mut impl PlaceOps, tail: &[PlanJob], now: Time) -> Vec<Time> {
-    tail.iter()
-        .map(|j| {
-            let t = ops.earliest_fit(j.req, j.walltime, now);
-            ops.reserve(t, j.walltime, j.req);
-            t
-        })
-        .collect()
+    let mut starts = Vec::new();
+    append_tail_into(ops, tail, now, &mut starts);
+    starts
+}
+
+/// Allocation-free variant of [`append_tail`]: clears `starts` and fills
+/// it with the planned start per tail job, reusing its capacity (same
+/// arena discipline as [`select_into`]).
+pub fn append_tail_into(
+    ops: &mut impl PlaceOps,
+    tail: &[PlanJob],
+    now: Time,
+    starts: &mut Vec<Time>,
+) {
+    starts.clear();
+    for j in tail {
+        let t = ops.earliest_fit(j.req, j.walltime, now);
+        ops.reserve(t, j.walltime, j.req);
+        starts.push(t);
+    }
 }
 
 #[cfg(test)]
@@ -186,6 +212,26 @@ mod tests {
         // Job 2's wait 51 vs 50 must beat jobs 0/1 deterministically.
         let queue2 = [req(0, 10, 100), req(1, 10, 100), req(2, 9, 100)];
         assert_eq!(select(1, &queue2, now), vec![2]);
+    }
+
+    #[test]
+    fn into_variants_clear_reused_buffers_and_match() {
+        let queue = [req(0, 0, 1000), req(1, 50, 10), req(2, 80, 40)];
+        let now = Time::from_secs(100);
+        let mut out = vec![9, 9, 9, 9, 9, 9]; // stale contents must be cleared
+        select_into(2, &queue, now, &mut out);
+        assert_eq!(out, select(2, &queue, now));
+        select_into(0, &queue, now, &mut out);
+        assert_eq!(out, vec![0, 1, 2]);
+
+        let mut profile = Profile::flat(Time::ZERO, Resources::new(4, 0));
+        profile.reserve(Time::ZERO, Duration::from_secs(100), Resources::new(3, 0));
+        let mut fresh = profile.clone();
+        let tail = vec![job(0, 4, 50), job(1, 1, 30)];
+        let mut starts = vec![Time::from_secs(77)];
+        append_tail_into(&mut profile, &tail, Time::ZERO, &mut starts);
+        assert_eq!(starts, append_tail(&mut fresh, &tail, Time::ZERO));
+        assert_eq!(profile, fresh);
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! `repro serve`: a long-lived NDJSON scheduling service.
+//!
+//! The batch pipeline answers "how did this whole workload fare"; this
+//! module answers questions *while they are being asked*. A driver
+//! process (an experiment harness, a notebook, a co-simulation) speaks
+//! newline-delimited JSON over stdin/stdout: one flat request object
+//! per line in, one or more response lines out, in request order. The
+//! service holds named online scheduling sessions
+//! ([`crate::sim::simulator::Simulator::online`]) whose scheduler state
+//! stays hot between requests — the incremental resource timeline, a
+//! plan policy's incumbent plan, scorer arena and SA warm-start seed
+//! are never rebuilt per question — and routes batch `run` requests
+//! through the campaign runner, where the content-addressed run store
+//! ([`crate::campaign::RunStore`]) acts as a cache tier: a grid cell
+//! any previous serve session *or* `repro campaign` run already
+//! computed is answered without simulating.
+//!
+//! The protocol (version [`PROTO_VERSION`]) is deterministic by
+//! construction: responses depend only on the request stream, never on
+//! wall-clock, so a `--record`ed transcript replays byte-identically
+//! (`repro serve --replay`), which is both the debugging story and the
+//! regression harness (`tests/serve.rs`, the `serve-smoke` CI job).
+//! Malformed input yields typed `error` lines with stable codes (see
+//! [`protocol`]); the service never exits on bad client input.
+
+pub mod protocol;
+pub mod session;
+
+pub use protocol::{Req, ServeError};
+pub use session::Dispatcher;
+
+use crate::campaign::{RunStore, EXIT_OK, EXIT_RUN_FAILED, EXIT_SPEC_ERROR};
+use crate::core::cancel::CancelToken;
+use crate::report::json::{self, JsonObject};
+use std::collections::VecDeque;
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// Wire protocol version, announced in the hello line. Bumped only for
+/// incompatible changes; new optional request fields and new response
+/// fields are not breaking.
+pub const PROTO_VERSION: u32 = 1;
+
+/// How the service runs: the run store acting as the `run` op's cache
+/// tier (`None` = always simulate), and the cancel token every session
+/// and batch cell observes (children of it, so one token winds down the
+/// whole service promptly).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub store: Option<RunStore>,
+    pub cancel: CancelToken,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { store: None, cancel: CancelToken::new() }
+    }
+}
+
+/// One transcript record: `{"dir":"in"|"out","line":"..."}`. The
+/// transcript is itself NDJSON of flat objects, so the replay path
+/// reuses the protocol parser.
+fn record_line(
+    rec: &mut Option<&mut dyn Write>,
+    dir: &str,
+    line: &str,
+) -> std::io::Result<()> {
+    if let Some(w) = rec.as_mut() {
+        writeln!(w, "{}", JsonObject::new().str("dir", dir).str("line", line).end())?;
+    }
+    Ok(())
+}
+
+/// The service loop: write the hello line, then handle requests until
+/// EOF (exit 0) or an I/O failure (exit 1). Every request's responses
+/// are written — and the output flushed — before the next request is
+/// read, so a driver can run strict request/response lockstep. `record`
+/// mirrors the full dialogue as a replayable transcript.
+pub fn run_loop(
+    opts: ServeOptions,
+    input: impl BufRead,
+    mut output: impl Write,
+    mut record: Option<&mut dyn Write>,
+) -> i32 {
+    let cancel = opts.cancel.clone();
+    let mut dispatcher = Dispatcher::new(opts);
+    let hello = dispatcher.hello();
+    let io_failed = |what: &str, e: std::io::Error| -> i32 {
+        eprintln!("repro serve: {what}: {e}");
+        EXIT_RUN_FAILED
+    };
+    if let Err(e) = writeln!(output, "{hello}") {
+        return io_failed("write failed", e);
+    }
+    if let Err(e) = record_line(&mut record, "out", &hello) {
+        return io_failed("transcript write failed", e);
+    }
+    for line in input.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => return io_failed("read failed", e),
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if cancel.is_cancelled() {
+            eprintln!("repro serve: cancelled; shutting down");
+            break;
+        }
+        if let Err(e) = record_line(&mut record, "in", &line) {
+            return io_failed("transcript write failed", e);
+        }
+        for resp in dispatcher.handle_line(&line) {
+            if let Err(e) = writeln!(output, "{resp}") {
+                return io_failed("write failed", e);
+            }
+            if let Err(e) = record_line(&mut record, "out", &resp) {
+                return io_failed("transcript write failed", e);
+            }
+        }
+        if let Err(e) = output.flush() {
+            return io_failed("flush failed", e);
+        }
+    }
+    let _ = output.flush();
+    EXIT_OK
+}
+
+/// Replay a `--record`ed transcript against a fresh service and verify
+/// every recorded output line byte-for-byte. Exit 0 on a perfect match,
+/// 1 on divergence (first mismatch is reported), 2 on an unreadable or
+/// malformed transcript.
+pub fn replay_file(opts: ServeOptions, path: &Path) -> i32 {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("repro serve: cannot read transcript {}: {e}", path.display());
+            return EXIT_SPEC_ERROR;
+        }
+    };
+    let mut dispatcher = Dispatcher::new(opts);
+    let mut produced: VecDeque<String> = VecDeque::new();
+    produced.push_back(dispatcher.hello());
+    let mut matched = 0usize;
+    for (i, raw) in text.lines().enumerate() {
+        let ln = i + 1;
+        if raw.trim().is_empty() {
+            continue;
+        }
+        let fields = match json::parse_flat_object(raw) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("repro serve: transcript {} line {ln}: {e}", path.display());
+                return EXIT_SPEC_ERROR;
+            }
+        };
+        let dir = json::get(&fields, "dir").and_then(|v| v.as_str());
+        let line = json::get(&fields, "line").and_then(|v| v.as_str());
+        let (Some(dir), Some(line)) = (dir, line) else {
+            eprintln!(
+                "repro serve: transcript {} line {ln}: expected `dir` and `line` string fields",
+                path.display()
+            );
+            return EXIT_SPEC_ERROR;
+        };
+        match dir {
+            "in" => produced.extend(dispatcher.handle_line(line)),
+            "out" => {
+                let Some(replayed) = produced.pop_front() else {
+                    eprintln!(
+                        "repro serve: replay diverged at transcript line {ln}: \
+                         recorded output has no replayed counterpart\n  recorded: {line}"
+                    );
+                    return EXIT_RUN_FAILED;
+                };
+                if replayed != line {
+                    eprintln!(
+                        "repro serve: replay diverged at transcript line {ln}\n  \
+                         recorded: {line}\n  replayed: {replayed}"
+                    );
+                    return EXIT_RUN_FAILED;
+                }
+                matched += 1;
+            }
+            other => {
+                eprintln!(
+                    "repro serve: transcript {} line {ln}: unknown dir `{other}`",
+                    path.display()
+                );
+                return EXIT_SPEC_ERROR;
+            }
+        }
+    }
+    if !produced.is_empty() {
+        eprintln!(
+            "repro serve: replay produced {} line(s) the transcript never recorded, first:\n  {}",
+            produced.len(),
+            produced[0]
+        );
+        return EXIT_RUN_FAILED;
+    }
+    eprintln!("repro serve: replay ok: {matched} output line(s) matched");
+    EXIT_OK
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const SCRIPT: &str = "{\"op\":\"open\",\"session\":\"t\",\"policy\":\"fcfs\",\"io\":false,\"seq\":1}\n\
+        {\"op\":\"submit\",\"session\":\"t\",\"procs\":2,\"walltime_s\":120,\"seq\":2}\n\
+        \n\
+        {\"op\":\"advance\",\"session\":\"t\",\"to_s\":600,\"seq\":3}\n\
+        not json at all\n\
+        {\"op\":\"cancel\",\"session\":\"t\",\"seq\":4}\n";
+
+    #[test]
+    fn loop_serves_records_and_replays() {
+        let mut out = Vec::new();
+        let mut transcript = Vec::new();
+        let code = run_loop(
+            ServeOptions::default(),
+            Cursor::new(SCRIPT),
+            &mut out,
+            Some(&mut transcript),
+        );
+        assert_eq!(code, EXIT_OK);
+        let out = String::from_utf8(out).unwrap();
+        assert!(out.starts_with("{\"type\":\"hello\""), "{out}");
+        assert!(out.contains("\"code\":\"parse\""), "{out}");
+        // Blank input lines produce nothing; every non-blank line is in
+        // the transcript with direction tags.
+        let transcript = String::from_utf8(transcript).unwrap();
+        assert_eq!(
+            transcript.lines().filter(|l| l.contains("\"dir\":\"in\"")).count(),
+            5,
+            "{transcript}"
+        );
+        // The recorded dialogue replays byte-identically from a path.
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("bbsched-serve-unit-{}.ndjson", std::process::id()));
+        std::fs::write(&path, &transcript).unwrap();
+        assert_eq!(replay_file(ServeOptions::default(), &path), EXIT_OK);
+        // Tampering with a recorded response is caught.
+        let tampered = transcript.replace("\\\"type\\\":\\\"ok\\\"", "\\\"type\\\":\\\"k0\\\"");
+        assert_ne!(tampered, transcript);
+        std::fs::write(&path, &tampered).unwrap();
+        assert_eq!(replay_file(ServeOptions::default(), &path), EXIT_RUN_FAILED);
+        // Garbage transcripts are a spec error, not a crash.
+        std::fs::write(&path, "{\"dir\":7}\n").unwrap();
+        assert_eq!(replay_file(ServeOptions::default(), &path), EXIT_SPEC_ERROR);
+        std::fs::write(&path, "nope\n").unwrap();
+        assert_eq!(replay_file(ServeOptions::default(), &path), EXIT_SPEC_ERROR);
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(
+            replay_file(ServeOptions::default(), &path),
+            EXIT_SPEC_ERROR,
+            "missing transcript"
+        );
+    }
+
+    #[test]
+    fn cancelled_loop_shuts_down_cleanly() {
+        let opts = ServeOptions::default();
+        opts.cancel.cancel();
+        let mut out = Vec::new();
+        let code = run_loop(opts, Cursor::new(SCRIPT), &mut out, None);
+        assert_eq!(code, EXIT_OK);
+        // Hello went out; no request was processed after cancellation.
+        let out = String::from_utf8(out).unwrap();
+        assert_eq!(out.lines().count(), 1, "{out}");
+    }
+}

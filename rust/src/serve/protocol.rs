@@ -1,0 +1,212 @@
+//! The serve wire protocol: typed request accessors and error lines.
+//!
+//! Every request and response is one flat JSON object per line
+//! (NDJSON), parsed/emitted with the same hand-rolled
+//! [`crate::report::json`] machinery the campaign store round-trips
+//! through — so the byte-identical-replay guarantee rests on the same
+//! shortest-round-trip number formatting.
+//!
+//! Error discipline mirrors [`crate::campaign::CampaignError`]: every
+//! failure is a response line with a stable machine-readable `code`
+//! token, never a process exit. Codes are append-only:
+//!
+//! | code         | meaning                                            |
+//! |--------------|----------------------------------------------------|
+//! | `parse`      | the request line is not a flat JSON object         |
+//! | `proto`      | bad request shape: missing/unknown op or field,    |
+//! |              | wrong field type, invalid enum token               |
+//! | `session`    | unknown session name, or opening a duplicate       |
+//! | `state`      | the request regresses the session clock            |
+//! | `infeasible` | the job can never run on this session's machine    |
+//! | `cancelled`  | the serve cancel token fired mid-request           |
+//! | *campaign*   | `run` failures carry the [`CampaignError`] code    |
+//! |              | (`spec`, `store_io`, `cell`, `timeout`, ...)       |
+
+use crate::report::json::{JsonObject, JsonValue};
+
+/// A failed request: the machine-readable `code` token plus the
+/// human-readable message. Rendered as an error response line; the
+/// service never exits on one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeError {
+    pub code: String,
+    pub msg: String,
+}
+
+impl ServeError {
+    pub fn new(code: &str, msg: impl Into<String>) -> ServeError {
+        ServeError { code: code.to_string(), msg: msg.into() }
+    }
+
+    /// A request-shape error (the most common kind).
+    pub fn proto(msg: impl Into<String>) -> ServeError {
+        ServeError::new("proto", msg)
+    }
+
+    /// The error response line, echoing the request's `seq` when it had
+    /// a well-formed one.
+    pub fn line(&self, seq: Option<u64>) -> String {
+        let obj = JsonObject::new()
+            .str("type", "error")
+            .str("code", &self.code)
+            .str("error", &self.msg);
+        seq_tail(obj, seq).end()
+    }
+}
+
+/// Append the echoed request `seq` as the conventional last field of a
+/// response object.
+pub fn seq_tail(obj: JsonObject, seq: Option<u64>) -> JsonObject {
+    match seq {
+        Some(s) => obj.num_u("seq", s),
+        None => obj,
+    }
+}
+
+/// A parsed request with consumed-field tracking: every accessor marks
+/// its key used, and [`Req::finish`] rejects leftovers — the same
+/// unknown-key-is-an-error philosophy as the campaign spec parser, so a
+/// typo cannot silently change a request's meaning.
+pub struct Req {
+    fields: Vec<(String, JsonValue)>,
+    used: Vec<bool>,
+}
+
+impl Req {
+    pub fn new(fields: Vec<(String, JsonValue)>) -> Req {
+        let used = vec![false; fields.len()];
+        Req { fields, used }
+    }
+
+    fn take(&mut self, key: &str) -> Option<JsonValue> {
+        for i in 0..self.fields.len() {
+            if !self.used[i] && self.fields[i].0 == key {
+                self.used[i] = true;
+                return Some(self.fields[i].1.clone());
+            }
+        }
+        None
+    }
+
+    pub fn str_opt(&mut self, key: &str) -> Result<Option<String>, ServeError> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(JsonValue::Str(s)) => Ok(Some(s)),
+            Some(_) => Err(ServeError::proto(format!("field `{key}` must be a string"))),
+        }
+    }
+
+    pub fn str_req(&mut self, key: &str) -> Result<String, ServeError> {
+        self.str_opt(key)?
+            .ok_or_else(|| ServeError::proto(format!("missing required field `{key}`")))
+    }
+
+    pub fn u64_opt(&mut self, key: &str) -> Result<Option<u64>, ServeError> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v.as_u64().map(Some).ok_or_else(|| {
+                ServeError::proto(format!("field `{key}` must be a non-negative integer"))
+            }),
+        }
+    }
+
+    pub fn u64_req(&mut self, key: &str) -> Result<u64, ServeError> {
+        self.u64_opt(key)?
+            .ok_or_else(|| ServeError::proto(format!("missing required field `{key}`")))
+    }
+
+    pub fn u32_opt(&mut self, key: &str) -> Result<Option<u32>, ServeError> {
+        match self.u64_opt(key)? {
+            None => Ok(None),
+            Some(v) => u32::try_from(v).map(Some).map_err(|_| {
+                ServeError::proto(format!("field `{key}` exceeds the 32-bit range"))
+            }),
+        }
+    }
+
+    pub fn u32_req(&mut self, key: &str) -> Result<u32, ServeError> {
+        self.u32_opt(key)?
+            .ok_or_else(|| ServeError::proto(format!("missing required field `{key}`")))
+    }
+
+    pub fn f64_opt(&mut self, key: &str) -> Result<Option<f64>, ServeError> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| ServeError::proto(format!("field `{key}` must be a number"))),
+        }
+    }
+
+    pub fn bool_opt(&mut self, key: &str) -> Result<Option<bool>, ServeError> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(JsonValue::Bool(b)) => Ok(Some(b)),
+            Some(_) => Err(ServeError::proto(format!("field `{key}` must be a boolean"))),
+        }
+    }
+
+    /// Reject any field no accessor consumed. Call *before* acting on
+    /// the request, so a typo'd request has no side effects at all.
+    pub fn finish(&self) -> Result<(), ServeError> {
+        for (i, (k, _)) in self.fields.iter().enumerate() {
+            if !self.used[i] {
+                return Err(ServeError::proto(format!("unknown field `{k}`")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::json::parse_flat_object;
+
+    fn req(line: &str) -> Req {
+        Req::new(parse_flat_object(line).unwrap())
+    }
+
+    #[test]
+    fn accessors_enforce_types_and_track_consumption() {
+        let mut r = req(r#"{"op":"open","n":3,"flag":true,"x":1.5}"#);
+        assert_eq!(r.str_req("op").unwrap(), "open");
+        assert_eq!(r.u64_opt("n").unwrap(), Some(3));
+        assert_eq!(r.bool_opt("flag").unwrap(), Some(true));
+        assert_eq!(r.f64_opt("x").unwrap(), Some(1.5));
+        assert!(r.finish().is_ok());
+
+        let mut r = req(r#"{"op":7}"#);
+        assert_eq!(r.str_req("op").unwrap_err().code, "proto");
+        let mut r = req(r#"{"n":-1}"#);
+        assert_eq!(r.u64_opt("n").unwrap_err().code, "proto");
+        let mut r = req(r#"{"n":4294967296}"#);
+        assert_eq!(r.u32_opt("n").unwrap_err().code, "proto");
+        let mut r = req(r#"{}"#);
+        assert!(r.str_opt("missing").unwrap().is_none());
+        assert_eq!(r.str_req("missing").unwrap_err().code, "proto");
+    }
+
+    #[test]
+    fn finish_rejects_unconsumed_fields() {
+        let mut r = req(r#"{"op":"query","typo":1}"#);
+        let _ = r.str_req("op");
+        let e = r.finish().unwrap_err();
+        assert_eq!(e.code, "proto");
+        assert!(e.msg.contains("typo"), "{e:?}");
+    }
+
+    #[test]
+    fn error_lines_echo_seq() {
+        let e = ServeError::new("state", "clock went backwards");
+        assert_eq!(
+            e.line(Some(9)),
+            r#"{"type":"error","code":"state","error":"clock went backwards","seq":9}"#
+        );
+        assert_eq!(
+            e.line(None),
+            r#"{"type":"error","code":"state","error":"clock went backwards"}"#
+        );
+    }
+}

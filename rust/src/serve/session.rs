@@ -1,0 +1,525 @@
+//! The serve dispatcher: named online sessions plus the store-backed
+//! `run` op.
+//!
+//! A [`Dispatcher`] owns a map of live scheduling sessions, each an
+//! online [`Simulator`] (see [`Simulator::online`]) whose scheduler
+//! state — the incremental resource timeline, a plan policy's incumbent
+//! plan, scorer arena and warm-start seed — stays hot between requests.
+//! Clients interleave requests across sessions freely; every request
+//! names its session.
+//!
+//! Ops:
+//!
+//! - `open`: create a session (`policy` required; burst-buffer, tick,
+//!   seed and plan knobs optional).
+//! - `submit`: add one job to a session's future (or present).
+//! - `advance`: drive the session clock forward; scheduling decisions
+//!   made along the way stream back as `event` lines, oldest first.
+//! - `query`: session status plus the live metric summary over the
+//!   jobs completed so far.
+//! - `cancel`: close a session and drop its state.
+//! - `run`: execute one batch grid cell through the campaign runner —
+//!   with a store configured, repeated questions are answered from the
+//!   content-addressed run store without simulating.
+//!
+//! Responses put `"type"` first and the echoed `seq` last; everything a
+//! request produces (events included) carries that request's `seq`.
+
+use std::collections::BTreeMap;
+
+use crate::campaign::{execute_run, CampaignOptions, CampaignSpec};
+use crate::core::job::{Job, JobId};
+use crate::core::time::{Duration, Time};
+use crate::metrics::summary::summarize;
+use crate::options::SimOptions;
+use crate::platform::BbArch;
+use crate::report::json::{parse_flat_object, summary_fields, JsonObject};
+use crate::sched::Policy;
+use crate::serve::protocol::{seq_tail, Req, ServeError};
+use crate::serve::{ServeOptions, PROTO_VERSION};
+use crate::sim::simulator::{Decision, Simulator};
+use crate::workload::{EstimateModel, Family};
+
+/// The request dispatcher: serve options plus the live session map.
+/// Deterministic by construction — sessions are keyed in a `BTreeMap`
+/// and every op's output depends only on the request stream, which is
+/// what the byte-identical replay guarantee rests on.
+pub struct Dispatcher {
+    opts: ServeOptions,
+    sessions: BTreeMap<String, Simulator>,
+}
+
+impl Dispatcher {
+    pub fn new(opts: ServeOptions) -> Dispatcher {
+        Dispatcher { opts, sessions: BTreeMap::new() }
+    }
+
+    /// The greeting line the service emits before reading any input:
+    /// protocol version and whether a run store is attached.
+    pub fn hello(&self) -> String {
+        JsonObject::new()
+            .str("type", "hello")
+            .str("service", "repro-serve")
+            .num_u("proto", PROTO_VERSION as u64)
+            .bool("store", self.opts.store.is_some())
+            .end()
+    }
+
+    /// Handle one request line, returning every response line it
+    /// produces (events first, then the ok line — or a single error
+    /// line). Never panics on client input; malformed requests yield
+    /// typed `error` lines.
+    pub fn handle_line(&mut self, line: &str) -> Vec<String> {
+        let fields = match parse_flat_object(line) {
+            Ok(f) => f,
+            Err(e) => return vec![ServeError::new("parse", e).line(None)],
+        };
+        let mut req = Req::new(fields);
+        let seq = match req.u64_opt("seq") {
+            Ok(s) => s,
+            Err(e) => return vec![e.line(None)],
+        };
+        let mut out = Vec::new();
+        if let Err(e) = self.dispatch(&mut req, seq, &mut out) {
+            out.push(e.line(seq));
+        }
+        out
+    }
+
+    fn dispatch(
+        &mut self,
+        req: &mut Req,
+        seq: Option<u64>,
+        out: &mut Vec<String>,
+    ) -> Result<(), ServeError> {
+        let op = req.str_req("op")?;
+        match op.as_str() {
+            "open" => self.op_open(req, seq, out),
+            "submit" => self.op_submit(req, seq, out),
+            "advance" => self.op_advance(req, seq, out),
+            "query" => self.op_query(req, seq, out),
+            "cancel" => self.op_cancel(req, seq, out),
+            "run" => self.op_run(req, seq, out),
+            other => Err(ServeError::proto(format!("unknown op `{other}`"))),
+        }
+    }
+
+    fn session(&mut self, name: &str) -> Result<&mut Simulator, ServeError> {
+        self.sessions
+            .get_mut(name)
+            .ok_or_else(|| ServeError::new("session", format!("unknown session `{name}`")))
+    }
+
+    fn op_open(
+        &mut self,
+        req: &mut Req,
+        seq: Option<u64>,
+        out: &mut Vec<String>,
+    ) -> Result<(), ServeError> {
+        let name = req.str_req("session")?;
+        if name.is_empty() {
+            return Err(ServeError::proto("session name must not be empty"));
+        }
+        let policy = parse_policy(&req.str_req("policy")?)?;
+        let bb_bytes = req.u64_opt("bb_bytes")?.unwrap_or(0);
+        let arch = parse_arch(&req.str_opt("bb_arch")?.unwrap_or_else(|| "shared".into()))?;
+        let tick_s = req.u64_opt("tick_s")?.unwrap_or(60);
+        if tick_s == 0 {
+            return Err(ServeError::proto("tick_s must be positive"));
+        }
+        let seed = req.u64_opt("seed")?.unwrap_or(1);
+        let io = req.bool_opt("io")?.unwrap_or(true);
+        let plan_window = req.u64_opt("plan_window")?.unwrap_or(0) as usize;
+        let warm = req.bool_opt("plan_warm_start")?.unwrap_or(false);
+        let group_aware = req.bool_opt("plan_group_aware")?.unwrap_or(false);
+        req.finish()?;
+        if self.sessions.contains_key(&name) {
+            return Err(ServeError::new(
+                "session",
+                format!("session `{name}` is already open"),
+            ));
+        }
+        // The serve entry point's single SimOptions construction site
+        // (the same single-site rule the CLI and campaign layers follow).
+        let opts = SimOptions::new()
+            .bb(bb_bytes, arch.placement())
+            .io(io)
+            .tick(Duration::from_secs(tick_s))
+            .seed(seed)
+            .plan_warm_start(warm)
+            .plan_window(plan_window)
+            .plan_group_aware(group_aware)
+            .cancel(self.opts.cancel.child());
+        let sim = opts.online_simulator(policy);
+        out.push(
+            seq_tail(
+                JsonObject::new()
+                    .str("type", "ok")
+                    .str("op", "open")
+                    .str("session", &name)
+                    .str("policy", &policy.name())
+                    .num_f("clock_s", 0.0),
+                seq,
+            )
+            .end(),
+        );
+        self.sessions.insert(name, sim);
+        Ok(())
+    }
+
+    fn op_submit(
+        &mut self,
+        req: &mut Req,
+        seq: Option<u64>,
+        out: &mut Vec<String>,
+    ) -> Result<(), ServeError> {
+        let name = req.str_req("session")?;
+        let procs = req.u32_req("procs")?;
+        let walltime_s = req.u64_req("walltime_s")?;
+        let compute_s = req.u64_opt("compute_s")?.unwrap_or(walltime_s);
+        let bb = req.u64_opt("bb_bytes")?.unwrap_or(0);
+        let phases = req.u32_opt("phases")?.unwrap_or(1);
+        let submit_s = req.u64_opt("submit_s")?;
+        req.finish()?;
+        let sim = self.session(&name)?;
+        let submit = match submit_s {
+            Some(s) => Time::from_secs(s),
+            None => sim.now(),
+        };
+        if submit < sim.now() {
+            return Err(ServeError::new(
+                "state",
+                format!("submit time {submit} is in the session's past (clock {})", sim.now()),
+            ));
+        }
+        let job = Job {
+            // Placeholder: the session assigns the real dense id.
+            id: JobId(0),
+            submit,
+            walltime: Duration::from_secs(walltime_s),
+            compute_time: Duration::from_secs(compute_s),
+            procs,
+            bb,
+            phases,
+        };
+        job.validate().map_err(ServeError::proto)?;
+        let id = sim.submit(job).map_err(|msg| ServeError::new("infeasible", msg))?;
+        out.push(
+            seq_tail(
+                JsonObject::new()
+                    .str("type", "ok")
+                    .str("op", "submit")
+                    .str("session", &name)
+                    .num_u("job", id.0 as u64)
+                    .num_f("submit_s", submit.as_secs_f64()),
+                seq,
+            )
+            .end(),
+        );
+        Ok(())
+    }
+
+    fn op_advance(
+        &mut self,
+        req: &mut Req,
+        seq: Option<u64>,
+        out: &mut Vec<String>,
+    ) -> Result<(), ServeError> {
+        let name = req.str_req("session")?;
+        let to_s = req.u64_req("to_s")?;
+        req.finish()?;
+        let sim = self.session(&name)?;
+        let to = Time::from_secs(to_s);
+        if to < sim.now() {
+            return Err(ServeError::new(
+                "state",
+                format!("advance target {to} regresses the session clock ({})", sim.now()),
+            ));
+        }
+        let cancelled = sim.advance_to(to);
+        let (mut started, mut finished) = (0u64, 0u64);
+        for d in sim.take_decisions() {
+            let line = match d {
+                Decision::Started { job, t } => {
+                    started += 1;
+                    seq_tail(
+                        JsonObject::new()
+                            .str("type", "event")
+                            .str("session", &name)
+                            .str("kind", "start")
+                            .num_u("job", job.0 as u64)
+                            .num_f("t_s", t.as_secs_f64()),
+                        seq,
+                    )
+                    .end()
+                }
+                Decision::Finished { job, t, killed } => {
+                    finished += 1;
+                    seq_tail(
+                        JsonObject::new()
+                            .str("type", "event")
+                            .str("session", &name)
+                            .str("kind", "finish")
+                            .num_u("job", job.0 as u64)
+                            .num_f("t_s", t.as_secs_f64())
+                            .bool("killed", killed),
+                        seq,
+                    )
+                    .end()
+                }
+            };
+            out.push(line);
+        }
+        if cancelled {
+            // Decisions made before the token fired still streamed above;
+            // the clock rests at the cancellation point.
+            return Err(ServeError::new("cancelled", "serve cancelled mid-advance"));
+        }
+        out.push(
+            seq_tail(
+                JsonObject::new()
+                    .str("type", "ok")
+                    .str("op", "advance")
+                    .str("session", &name)
+                    .num_f("clock_s", sim.now().as_secs_f64())
+                    .num_u("started", started)
+                    .num_u("finished", finished)
+                    .num_u("pending", sim.n_pending() as u64)
+                    .num_u("running", sim.n_running() as u64),
+                seq,
+            )
+            .end(),
+        );
+        Ok(())
+    }
+
+    fn op_query(
+        &mut self,
+        req: &mut Req,
+        seq: Option<u64>,
+        out: &mut Vec<String>,
+    ) -> Result<(), ServeError> {
+        let name = req.str_req("session")?;
+        req.finish()?;
+        let sim = self.session(&name)?;
+        let summary = summarize(sim.policy_name(), sim.records());
+        let obj = JsonObject::new()
+            .str("type", "ok")
+            .str("op", "query")
+            .str("session", &name)
+            .str("policy", sim.policy_name())
+            .num_f("clock_s", sim.now().as_secs_f64())
+            .num_u("submitted", sim.n_jobs() as u64)
+            .num_u("pending", sim.n_pending() as u64)
+            .num_u("running", sim.n_running() as u64)
+            .num_u("completed", sim.records().len() as u64);
+        out.push(seq_tail(summary_fields(obj, &summary), seq).end());
+        Ok(())
+    }
+
+    fn op_cancel(
+        &mut self,
+        req: &mut Req,
+        seq: Option<u64>,
+        out: &mut Vec<String>,
+    ) -> Result<(), ServeError> {
+        let name = req.str_req("session")?;
+        req.finish()?;
+        if self.sessions.remove(&name).is_none() {
+            return Err(ServeError::new("session", format!("unknown session `{name}`")));
+        }
+        out.push(
+            seq_tail(
+                JsonObject::new().str("type", "ok").str("op", "cancel").str("session", &name),
+                seq,
+            )
+            .end(),
+        );
+        Ok(())
+    }
+
+    /// One batch grid cell through the campaign runner: the store key
+    /// derivation, panic isolation and cache semantics are exactly the
+    /// campaign's, so with a store attached a cell the `repro campaign`
+    /// CLI already computed is answered here without simulating — and
+    /// vice versa. The response deliberately omits wall-clock and
+    /// `cached` fields so cold-store and warm-store answers are
+    /// byte-identical (the cache hit is announced on stderr only).
+    fn op_run(
+        &mut self,
+        req: &mut Req,
+        seq: Option<u64>,
+        out: &mut Vec<String>,
+    ) -> Result<(), ServeError> {
+        let policy = parse_policy(&req.str_req("policy")?)?;
+        let seed = req.u64_opt("seed")?.unwrap_or(1);
+        let family =
+            Family::parse(&req.str_opt("family")?.unwrap_or_else(|| "paper".into()))
+                .map_err(ServeError::proto)?;
+        let scale = req.f64_opt("scale")?.unwrap_or(0.003);
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(ServeError::proto("scale must be positive"));
+        }
+        let estimate =
+            EstimateModel::parse(&req.str_opt("estimate")?.unwrap_or_else(|| "paper".into()))
+                .map_err(ServeError::proto)?;
+        let bb_arch = parse_arch(&req.str_opt("bb_arch")?.unwrap_or_else(|| "shared".into()))?;
+        let bb_factor = req.f64_opt("bb_factor")?.unwrap_or(1.0);
+        if !bb_factor.is_finite() || bb_factor <= 0.0 {
+            return Err(ServeError::proto("bb_factor must be positive"));
+        }
+        let plan_window = req.u64_opt("plan_window")?.unwrap_or(0) as usize;
+        let group_aware = req.bool_opt("plan_group_aware")?.unwrap_or(false);
+        let io = req.bool_opt("io")?.unwrap_or(false);
+        let tick_s = req.u64_opt("tick_s")?.unwrap_or(60);
+        if tick_s == 0 {
+            return Err(ServeError::proto("tick_s must be positive"));
+        }
+        req.finish()?;
+        // A one-cell grid. The cell key hashes only simulation-relevant
+        // knobs (never the spec name), so this cell is interchangeable
+        // with the same cell of any campaign.
+        let spec = CampaignSpec {
+            name: "serve".to_string(),
+            policies: vec![policy],
+            seeds: vec![seed],
+            families: vec![family],
+            scales: vec![scale],
+            estimates: vec![estimate],
+            bb_archs: vec![bb_arch],
+            bb_factors: vec![bb_factor],
+            plan_windows: vec![plan_window],
+            plan_group_aware: group_aware,
+            io_enabled: io,
+            tick_s,
+            ..CampaignSpec::smoke()
+        };
+        let runs = spec.enumerate();
+        let run = &runs[0];
+        let mut copts = CampaignOptions::new(1).cancel_token(self.opts.cancel.child());
+        if let Some(store) = &self.opts.store {
+            copts = copts.with_store(store.clone());
+        }
+        let outcome = execute_run(&spec, run, &copts);
+        if let Some(e) = &outcome.error {
+            return Err(ServeError::new(e.code(), e.to_string()));
+        }
+        let Some(summary) = &outcome.summary else {
+            return Err(ServeError::new("cell", "run produced neither summary nor error"));
+        };
+        if outcome.cached {
+            eprintln!("repro serve: run `{}` answered from the store", outcome.label);
+        }
+        let obj = run.identity_json(JsonObject::new().str("type", "ok").str("op", "run"));
+        let obj = summary_fields(obj, summary)
+            .str("fingerprint", &format!("{:016x}", outcome.fingerprint));
+        out.push(seq_tail(obj, seq).end());
+        Ok(())
+    }
+}
+
+fn parse_policy(tok: &str) -> Result<Policy, ServeError> {
+    Policy::parse(tok).ok_or_else(|| ServeError::proto(format!("unknown policy `{tok}`")))
+}
+
+fn parse_arch(tok: &str) -> Result<BbArch, ServeError> {
+    BbArch::parse(tok).ok_or_else(|| ServeError::proto(format!("unknown bb_arch `{tok}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(d: &mut Dispatcher, line: &str) -> String {
+        let mut out = d.handle_line(line);
+        assert_eq!(out.len(), 1, "{out:?}");
+        out.pop().unwrap()
+    }
+
+    #[test]
+    fn hello_announces_proto_and_store() {
+        let d = Dispatcher::new(ServeOptions::default());
+        assert_eq!(
+            d.hello(),
+            r#"{"type":"hello","service":"repro-serve","proto":1,"store":false}"#
+        );
+    }
+
+    #[test]
+    fn open_submit_advance_query_cancel_round_trip() {
+        let mut d = Dispatcher::new(ServeOptions::default());
+        let line = one(
+            &mut d,
+            r#"{"op":"open","session":"a","policy":"fcfs","io":false,"seq":1}"#,
+        );
+        assert_eq!(
+            line,
+            r#"{"type":"ok","op":"open","session":"a","policy":"fcfs","clock_s":0,"seq":1}"#
+        );
+        let line = one(
+            &mut d,
+            r#"{"op":"submit","session":"a","procs":4,"walltime_s":600,"compute_s":300,"seq":2}"#,
+        );
+        assert!(line.contains(r#""job":0"#), "{line}");
+        // The job starts at t=0 and finishes at t=300; both events stream
+        // from the advance that crosses them, stamped with its seq.
+        let out = d.handle_line(r#"{"op":"advance","session":"a","to_s":3600,"seq":3}"#);
+        assert_eq!(out.len(), 3, "{out:?}");
+        assert!(out[0].contains(r#""kind":"start""#) && out[0].ends_with(r#""seq":3}"#));
+        assert!(out[1].contains(r#""kind":"finish""#) && out[1].contains(r#""killed":false"#));
+        assert!(out[2].contains(r#""started":1"#) && out[2].contains(r#""finished":1"#));
+        assert!(out[2].contains(r#""clock_s":3600"#));
+        let line = one(&mut d, r#"{"op":"query","session":"a","seq":4}"#);
+        assert!(line.contains(r#""completed":1"#) && line.contains(r#""mean_wait_h":0"#));
+        let line = one(&mut d, r#"{"op":"cancel","session":"a","seq":5}"#);
+        assert!(line.contains(r#""op":"cancel""#));
+        // The session is gone now.
+        let line = one(&mut d, r#"{"op":"query","session":"a","seq":6}"#);
+        assert!(line.contains(r#""code":"session""#), "{line}");
+    }
+
+    #[test]
+    fn errors_are_typed_and_never_tear_down_state() {
+        let mut d = Dispatcher::new(ServeOptions::default());
+        assert!(one(&mut d, "not json").contains(r#""code":"parse""#));
+        assert!(one(&mut d, r#"{"op":"nudge"}"#).contains(r#""code":"proto""#));
+        assert!(one(&mut d, r#"{"op":"open","policy":"fcfs"}"#).contains(r#""code":"proto""#));
+        assert!(
+            one(&mut d, r#"{"op":"advance","session":"zz","to_s":1}"#)
+                .contains(r#""code":"session""#)
+        );
+        one(&mut d, r#"{"op":"open","session":"a","policy":"fcfs","io":false}"#);
+        assert!(one(&mut d, r#"{"op":"open","session":"a","policy":"fcfs"}"#)
+            .contains(r#""code":"session""#));
+        // Typo'd field: rejected before side effects, session still fine.
+        assert!(one(&mut d, r#"{"op":"advance","session":"a","to":60}"#)
+            .contains(r#""code":"proto""#));
+        one(&mut d, r#"{"op":"advance","session":"a","to_s":60}"#);
+        // Clock regression is a state error; the clock is unchanged.
+        assert!(one(&mut d, r#"{"op":"advance","session":"a","to_s":30}"#)
+            .contains(r#""code":"state""#));
+        // Infeasible submission: typed, not fatal (capacity is 96 nodes).
+        assert!(one(
+            &mut d,
+            r#"{"op":"submit","session":"a","procs":500,"walltime_s":60}"#
+        )
+        .contains(r#""code":"infeasible""#));
+        // And the session still answers.
+        assert!(one(&mut d, r#"{"op":"query","session":"a"}"#).contains(r#""type":"ok""#));
+    }
+
+    #[test]
+    fn run_op_executes_a_batch_cell() {
+        let mut d = Dispatcher::new(ServeOptions::default());
+        let line = one(
+            &mut d,
+            r#"{"op":"run","policy":"sjf-bb","scale":0.003,"io":false,"seq":7}"#,
+        );
+        assert!(line.contains(r#""type":"ok""#) && line.contains(r#""op":"run""#), "{line}");
+        assert!(line.contains(r#""label":"sjf-bb+s1+x0.003+bb1""#), "{line}");
+        assert!(line.contains(r#""fingerprint":""#) && line.ends_with(r#""seq":7}"#), "{line}");
+        // Campaign error codes pass through (bad scale caught earlier
+        // as proto; an unknown policy too).
+        assert!(one(&mut d, r#"{"op":"run","policy":"warp"}"#).contains(r#""code":"proto""#));
+    }
+}

@@ -16,6 +16,7 @@ use crate::core::time::{Duration, Time};
 use crate::platform::cluster::Cluster;
 use crate::platform::flows::FlowNetwork;
 use crate::platform::placement::Placement;
+use crate::platform::PlaceProbe;
 use crate::platform::routing::Router;
 use crate::platform::topology::{Topology, TopologyConfig};
 use crate::sched::timeline::ResourceTimeline;
@@ -146,6 +147,33 @@ impl SimResult {
     }
 }
 
+/// One scheduling decision an online session journals for its driver
+/// (see [`Simulator::online`] / [`Simulator::take_decisions`]): batch
+/// runs produce the same information as [`SimResult::records`], but a
+/// long-lived service needs it *incrementally*, in event order, as the
+/// clock is advanced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// The scheduler launched `job` at simulation time `t`.
+    Started { job: JobId, t: Time },
+    /// `job` left the machine at `t` (walltime-killed when `killed`).
+    Finished { job: JobId, t: Time, killed: bool },
+}
+
+/// Why [`Simulator::pump`] stopped draining events.
+enum PumpStop {
+    /// The event queue is empty (batch mode only — online ticks re-arm).
+    Drained,
+    /// The next event lies beyond the requested limit (left queued).
+    Limit,
+    /// The cancel token fired.
+    Cancelled,
+    /// The hard-stop horizon event was reached.
+    Horizon,
+    /// Batch termination: no arrivals, pending or running jobs remain.
+    Idle,
+}
+
 pub struct Simulator {
     cfg: SimConfig,
     topo: Topology,
@@ -173,6 +201,17 @@ pub struct Simulator {
     sched_invocations: u64,
     sched_wall: std::time::Duration,
     killed: u32,
+    /// Online-session mode (see [`Simulator::online`]): the event loop
+    /// is driven stepwise by [`Simulator::advance_to`] and fed by
+    /// [`Simulator::submit`]; scheduler ticks re-arm unconditionally and
+    /// decisions are journalled for the driver to drain.
+    online: bool,
+    decisions: Vec<Decision>,
+    /// Empty-machine placement probe captured at session start, so
+    /// online submissions are feasibility-checked against a clean
+    /// cluster (the live probe reflects current occupancy, not
+    /// schedulability — an unplaceable job would pend forever).
+    empty_probe: Option<PlaceProbe>,
 }
 
 impl Simulator {
@@ -251,20 +290,44 @@ impl Simulator {
             sched_wall: std::time::Duration::ZERO,
             cfg,
             killed: 0,
+            online: false,
+            decisions: Vec::new(),
+            empty_probe: None,
         }
     }
 
-    /// Run to completion (all jobs finished or horizon reached).
-    pub fn run(mut self) -> SimResult {
-        let mut horizon_hit = false;
-        let mut cancelled = false;
-        'main: while let Some((t, first)) = self.queue.pop() {
+    /// Start a live (online) session: an empty simulator whose clock is
+    /// driven stepwise by [`Simulator::advance_to`] and whose workload
+    /// arrives through [`Simulator::submit`]. All scheduler state (the
+    /// incremental timeline, a plan policy's incumbent plan, arena and
+    /// warm-start seed) stays hot inside the boxed scheduler between
+    /// steps — this is the `repro serve` entry point.
+    pub fn online(scheduler: Box<dyn Scheduler>, cfg: SimConfig) -> Simulator {
+        let mut sim = Simulator::new(Vec::new(), scheduler, cfg);
+        sim.online = true;
+        // The cluster is still empty here: this probe answers "could the
+        // job ever be placed", which `new` asserts per batch job and
+        // `submit` must turn into a recoverable error instead.
+        sim.empty_probe = Some(sim.cluster.probe());
+        sim
+    }
+
+    /// Drain the event loop: process whole same-timestamp batches while
+    /// the next batch lies at or before `limit` (`None` = unbounded).
+    /// This is the single event-processing path — `run` calls it
+    /// unbounded, [`Simulator::advance_to`] calls it with the session's
+    /// target clock, leaving later events queued for the next step.
+    fn pump(&mut self, limit: Option<Time>) -> PumpStop {
+        loop {
+            let Some(t) = self.queue.peek_time() else { return PumpStop::Drained };
+            if limit.is_some_and(|lim| t > lim) {
+                return PumpStop::Limit;
+            }
             // One cancellation check per event batch: cheap (an atomic
             // load) yet prompt — the longest uncancellable stretch is a
             // single batch including its scheduler invocation.
             if self.cfg.cancel.is_cancelled() {
-                cancelled = true;
-                break 'main;
+                return PumpStop::Cancelled;
             }
             debug_assert!(t >= self.clock, "event time regression");
             self.clock = t;
@@ -273,16 +336,15 @@ impl Simulator {
             let mut trigger = self.drain_network();
             // Process every event scheduled for this exact timestamp as
             // one batch, then invoke the scheduler at most once.
-            let mut batch = vec![first];
+            let mut batch = Vec::new();
             while self.queue.peek_time() == Some(t) {
                 batch.push(self.queue.pop().unwrap().1);
             }
             for ev in batch {
                 match ev {
-                    Event::Horizon => {
-                        horizon_hit = true;
-                        break 'main;
-                    }
+                    // Like the pre-extraction `break 'main`, the rest of
+                    // the batch is abandoned with the horizon.
+                    Event::Horizon => return PumpStop::Horizon,
                     other => trigger |= self.handle(other),
                 }
             }
@@ -290,11 +352,25 @@ impl Simulator {
                 self.invoke_scheduler();
             }
             self.reschedule_network_wake();
-            if self.arrivals_left == 0 && self.pending.is_empty() && self.running.is_empty() {
-                break;
+            // Online sessions never self-terminate: future submissions
+            // may arrive, and the re-armed tick bounds the loop at
+            // `limit` anyway.
+            if !self.online
+                && self.arrivals_left == 0
+                && self.pending.is_empty()
+                && self.running.is_empty()
+            {
+                return PumpStop::Idle;
             }
         }
-        if horizon_hit {
+    }
+
+    /// Run to completion (all jobs finished or horizon reached).
+    pub fn run(mut self) -> SimResult {
+        assert!(!self.online, "run() is the batch entry point; online sessions use advance_to()");
+        let stop = self.pump(None);
+        let cancelled = matches!(stop, PumpStop::Cancelled);
+        if matches!(stop, PumpStop::Horizon) {
             // Kill whatever is still running so records are complete.
             let ids: Vec<JobId> = self.running.keys().copied().collect();
             for id in ids {
@@ -314,6 +390,106 @@ impl Simulator {
         }
     }
 
+    // ----- online-session API (the `repro serve` surface) ---------------
+
+    /// Submit one job into a live session. The session assigns the next
+    /// dense [`JobId`] (ignoring `job.id`); the job arrives at
+    /// `job.submit`, which must not lie in the session's past. Unlike
+    /// the batch constructor's asserts, every validation failure here is
+    /// a recoverable `Err` — a service must survive bad client input.
+    pub fn submit(&mut self, mut job: Job) -> Result<JobId, String> {
+        assert!(self.online, "submit() is online-session API; batch jobs go through new()");
+        let id = JobId(self.jobs.len() as u32);
+        job.id = id;
+        if job.submit < self.clock {
+            return Err(format!(
+                "submit time {} is in the session's past (clock {})",
+                job.submit, self.clock
+            ));
+        }
+        job.validate()?;
+        if job.bb > 0 && self.cfg.bb_capacity == 0 {
+            return Err("job requests burst buffer but the session has bb_capacity 0".into());
+        }
+        if !self.cluster.capacity().fits(&job.request()) {
+            return Err(format!(
+                "job requests {} but cluster capacity is {}",
+                job.request(),
+                self.cluster.capacity()
+            ));
+        }
+        let probe = self.empty_probe.as_ref().expect("online sessions capture the empty probe");
+        if !probe.can_place(&job.request()) {
+            return Err("job is placement-infeasible even on an empty cluster".into());
+        }
+        self.queue.push(job.submit, Event::JobArrival(id));
+        self.arrivals_left += 1;
+        self.jobs.push(job);
+        Ok(id)
+    }
+
+    /// Advance a live session's clock to `to`, processing every queued
+    /// event up to and including it (launches, completions, scheduler
+    /// ticks). Decisions made along the way are journalled — drain them
+    /// with [`Simulator::take_decisions`]. Returns `true` when the
+    /// session's [`CancelToken`] fired mid-step (the clock then rests at
+    /// the cancellation point, not at `to`).
+    pub fn advance_to(&mut self, to: Time) -> bool {
+        assert!(self.online, "advance_to() is online-session API; batch runs use run()");
+        debug_assert!(to >= self.clock, "advance target regresses the session clock");
+        let stop = self.pump(Some(to));
+        let cancelled = matches!(stop, PumpStop::Cancelled);
+        if !cancelled && to > self.clock {
+            // Settle on the target even when the last event lies before
+            // it, so queries and subsequent submissions see clock == to.
+            self.clock = to;
+        }
+        cancelled
+    }
+
+    /// Drain the decision journal accumulated since the last call, in
+    /// event order. Online sessions only.
+    pub fn take_decisions(&mut self) -> Vec<Decision> {
+        std::mem::take(&mut self.decisions)
+    }
+
+    /// Completed-job records so far (online queries summarise these
+    /// without waiting for a terminal [`SimResult`]).
+    pub fn records(&self) -> &[JobRecord] {
+        &self.records
+    }
+
+    /// The active policy's label.
+    pub fn policy_name(&self) -> &'static str {
+        self.scheduler.name()
+    }
+
+    /// Jobs ever submitted to this simulator (batch or online).
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Walltime-killed jobs so far.
+    pub fn n_killed(&self) -> u32 {
+        self.killed
+    }
+
+    /// The session clock (last advance target, or the latest event when
+    /// cancelled mid-step).
+    pub fn now(&self) -> Time {
+        self.clock
+    }
+
+    /// Jobs waiting in the scheduler queue right now.
+    pub fn n_pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Jobs executing on the machine right now.
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+
     /// Returns true when the event is a scheduler trigger.
     fn handle(&mut self, ev: Event) -> bool {
         match ev {
@@ -323,8 +499,14 @@ impl Simulator {
                 self.cfg.event_triggers
             }
             Event::SchedulerTick => {
-                // Keep ticking while anything can still happen.
-                if self.arrivals_left > 0 || !self.pending.is_empty() || !self.running.is_empty()
+                // Keep ticking while anything can still happen. Online
+                // sessions tick unconditionally: a submission can arrive
+                // at any future step, and `pump`'s limit bounds the
+                // chain per advance.
+                if self.online
+                    || self.arrivals_left > 0
+                    || !self.pending.is_empty()
+                    || !self.running.is_empty()
                 {
                     self.queue.push(self.clock + self.cfg.tick, Event::SchedulerTick);
                 }
@@ -437,6 +619,9 @@ impl Simulator {
         self.queue
             .push(rj.kill_time() + Duration(1), Event::WalltimeKill { job: id, gen });
         self.running.insert(id, rj);
+        if self.online {
+            self.decisions.push(Decision::Started { job: id, t: self.clock });
+        }
 
         if self.cfg.io_enabled && job.bb > 0 {
             let flows = self.start_stage_flows(id, FlowKind::StageIn);
@@ -580,6 +765,9 @@ impl Simulator {
     }
 
     fn record(&mut self, rj: &RunningJob, killed: bool) {
+        if self.online {
+            self.decisions.push(Decision::Finished { job: rj.job.id, t: self.clock, killed });
+        }
         self.records.push(JobRecord {
             id: rj.job.id,
             submit: rj.job.submit,
@@ -685,18 +873,13 @@ impl Simulator {
         self.pending.retain(|id| !launched.contains(id));
     }
 
-    /// Test/diagnostic hooks.
+    /// Test/diagnostic hooks. (`n_running`/`n_pending`/`now` moved up
+    /// with the online accessors — they are protocol surface now.)
     pub fn clock(&self) -> Time {
         self.clock
     }
     pub fn timeline(&self) -> &ResourceTimeline {
         &self.timeline
-    }
-    pub fn n_running(&self) -> usize {
-        self.running.len()
-    }
-    pub fn n_pending(&self) -> usize {
-        self.pending.len()
     }
 }
 
@@ -960,6 +1143,115 @@ mod tests {
         campaign.cancel();
         let res = Simulator::new(jobs, Box::new(Fcfs::new()), c).run();
         assert!(res.cancelled);
+    }
+
+    #[test]
+    fn online_session_matches_batch_run() {
+        // Same workload, same policy: feeding jobs through the online
+        // API and advancing past the makespan must reproduce the batch
+        // run record-for-record (ids submitted in sorted order, so the
+        // batch constructor's re-indexing is the identity).
+        let jobs: Vec<Job> = (0..12)
+            .map(|i| {
+                mk_job(i, (i as u64) * 40, 200 + (i as u64 * 37) % 300, 1 + (i % 6),
+                    (i as u64 % 3) << 28)
+            })
+            .collect();
+        let mut c = cfg(TIB);
+        c.io_enabled = false;
+        let batch = Simulator::new(jobs.clone(), Box::new(Fcfs::new()), c.clone()).run();
+        let mut live = Simulator::online(Box::new(Fcfs::new()), c);
+        for j in &jobs {
+            live.submit(j.clone()).unwrap();
+        }
+        assert!(!live.advance_to(Time::from_secs(100_000)));
+        assert_eq!(live.records().len(), batch.records.len());
+        for (a, b) in live.records().iter().zip(&batch.records) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn online_decisions_stream_identically_across_split_advances() {
+        // Hot state: advancing 0→5000 in one step or four must journal
+        // the same decisions in the same order — nothing is recomputed
+        // or replayed per request.
+        let mk = || {
+            let mut c = cfg(TIB);
+            c.io_enabled = false;
+            Simulator::online(Box::new(Fcfs::new()), c)
+        };
+        let submit_all = |sim: &mut Simulator| {
+            for i in 0..6u64 {
+                sim.submit(mk_job(0, i * 120, 300, 30, 0)).unwrap();
+            }
+        };
+        let mut one = mk();
+        submit_all(&mut one);
+        assert!(!one.advance_to(Time::from_secs(5000)));
+        let whole = one.take_decisions();
+        let mut two = mk();
+        submit_all(&mut two);
+        let mut stepped = Vec::new();
+        for t in [600u64, 1200, 1800, 5000] {
+            assert!(!two.advance_to(Time::from_secs(t)));
+            stepped.extend(two.take_decisions());
+        }
+        assert_eq!(whole, stepped);
+        assert!(whole.iter().any(|d| matches!(d, Decision::Started { .. })));
+        assert!(whole.iter().any(|d| matches!(d, Decision::Finished { .. })));
+    }
+
+    #[test]
+    fn online_submit_validates_instead_of_panicking() {
+        let mut c = cfg(0);
+        c.io_enabled = false;
+        let mut sim = Simulator::online(Box::new(Fcfs::new()), c);
+        // Burst buffer on a session with no bb capacity.
+        assert!(sim.submit(mk_job(0, 0, 60, 2, 1)).is_err());
+        // More processors than the cluster owns.
+        assert!(sim.submit(mk_job(0, 0, 60, 10_000, 0)).is_err());
+        // A legal job still goes through, with a fresh dense id.
+        let id = sim.submit(mk_job(7, 5, 60, 2, 0)).unwrap();
+        assert_eq!(id, JobId(0));
+        assert!(!sim.advance_to(Time::from_secs(10)));
+        // Submissions in the session's past are rejected.
+        assert!(sim.submit(mk_job(0, 5, 60, 2, 0)).is_err());
+    }
+
+    #[test]
+    fn online_tick_chain_survives_idle_periods() {
+        // With event triggers off, the periodic tick is the only thing
+        // that can ever launch a job — so if the tick chain died during
+        // the idle stretch (the batch-mode re-arm condition), the late
+        // submission would pend forever.
+        let mut c = cfg(TIB);
+        c.io_enabled = false;
+        c.event_triggers = false;
+        let mut sim = Simulator::online(Box::new(Fcfs::new()), c);
+        assert!(!sim.advance_to(Time::from_secs(3600)));
+        sim.submit(mk_job(0, 3600, 120, 4, 0)).unwrap();
+        assert!(!sim.advance_to(Time::from_secs(7200)));
+        assert_eq!(sim.records().len(), 1);
+        // The tick at 3600 fired before the arrival was queued, so the
+        // next tick (3660) launches it.
+        assert_eq!(sim.records()[0].start, Time::from_secs(3660));
+        assert_eq!(sim.clock(), Time::from_secs(7200));
+    }
+
+    #[test]
+    fn online_advance_observes_cancellation() {
+        let mut c = cfg(TIB);
+        c.io_enabled = false;
+        let token = CancelToken::new();
+        c.cancel = token.child();
+        let mut sim = Simulator::online(Box::new(Fcfs::new()), c);
+        sim.submit(mk_job(0, 0, 600, 4, 0)).unwrap();
+        assert!(!sim.advance_to(Time::from_secs(60)));
+        token.cancel();
+        assert!(sim.advance_to(Time::from_secs(10_000)));
+        // Cancellation stops the step before the target clock.
+        assert!(sim.clock() < Time::from_secs(10_000));
     }
 
     #[test]

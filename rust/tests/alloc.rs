@@ -16,12 +16,13 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use bbsched::core::job::JobId;
+use bbsched::core::job::{JobId, JobRequest};
 use bbsched::core::resources::Resources;
 use bbsched::core::time::{Duration, Time};
 use bbsched::sched::plan::annealing::PermScorer;
 use bbsched::sched::plan::builder::PlanJob;
 use bbsched::sched::plan::scorer::ExactScorer;
+use bbsched::sched::plan::window::{append_tail_into, select_into};
 use bbsched::sched::timeline::{GroupBbTimelines, Profile};
 use bbsched::stats::rng::Pcg32;
 
@@ -177,4 +178,36 @@ fn warm_scorer_performs_zero_heap_allocations_per_proposal() {
     let delta = allocations() - before;
     assert_eq!(delta, 0, "arena round trip performed {delta} heap allocations");
     drop(arena);
+
+    // Once-per-tick window path: `select_into` (a genuinely truncating
+    // window, so the priority sort runs) and `append_tail_into` write
+    // into caller-owned buffers — the policy keeps them in this same
+    // arena — so once the buffers and the tail profile are warm, the
+    // whole window pass is allocation-free as well.
+    let queue: Vec<JobRequest> = (0..32u32)
+        .map(|i| JobRequest {
+            id: JobId(i),
+            submit: Time::from_secs(i as u64 * 7),
+            walltime: Duration::from_secs(60 + (i as u64 % 9) * 120),
+            procs: 1 + i % 6,
+            bb: ((i as u64 % 4) + 1) << 28,
+        })
+        .collect();
+    let now = Time::from_secs(3600);
+    let mut picked: Vec<usize> = Vec::new();
+    let mut starts: Vec<Time> = Vec::new();
+    let mut tail_profile = Profile::default();
+    let mut window_pass =
+        |picked: &mut Vec<usize>, starts: &mut Vec<Time>, prof: &mut Profile| {
+            select_into(8, &queue, now, picked);
+            prof.reset_from(&base);
+            append_tail_into(prof, &jobs_b, now, starts);
+            (picked.iter().sum::<usize>(), starts.iter().map(|t| t.0).sum::<u64>())
+        };
+    let warm = window_pass(&mut picked, &mut starts, &mut tail_profile);
+    let before = allocations();
+    let measured = window_pass(&mut picked, &mut starts, &mut tail_profile);
+    let delta = allocations() - before;
+    assert_eq!(delta, 0, "warm window pass performed {delta} heap allocations");
+    assert_eq!(warm, measured, "window passes diverged");
 }

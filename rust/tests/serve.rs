@@ -1,0 +1,196 @@
+//! Serve protocol tier: the NDJSON service's determinism contract.
+//!
+//! - The committed smoke script (`examples/serve-smoke.ndjson`) produces
+//!   byte-identical output across runs, pinned by a self-blessing golden
+//!   (`examples/serve-smoke.golden`, same contract as `tests/golden.rs`).
+//! - Session state is hot: advancing in many small steps or one big one
+//!   yields the same decision stream and the same final metrics.
+//! - Malformed requests yield typed error lines, never a process exit.
+//! - A `--record`ed transcript replays byte-identically; tampering and
+//!   garbage transcripts are detected with the right exit codes.
+//! - `run` requests persist their cell in the run store, so a restarted
+//!   service answers the same question from disk — byte-identically
+//!   with the cold answer.
+
+use bbsched::campaign::{RunStore, EXIT_OK, EXIT_RUN_FAILED};
+use bbsched::serve::{replay_file, run_loop, Dispatcher, ServeOptions};
+use bbsched::CancelToken;
+use std::io::Cursor;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn script() -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/serve-smoke.ndjson");
+    std::fs::read_to_string(&path).expect("examples/serve-smoke.ndjson")
+}
+
+fn serve_script(input: &str) -> (i32, String) {
+    let mut out = Vec::new();
+    let code = run_loop(ServeOptions::default(), Cursor::new(input.to_string()), &mut out, None);
+    (code, String::from_utf8(out).unwrap())
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("bbsched-serve-itest-{tag}-{}-{n}", std::process::id()))
+}
+
+#[test]
+fn smoke_script_is_byte_identical_across_runs() {
+    let script = script();
+    let (code_a, out_a) = serve_script(&script);
+    let (code_b, out_b) = serve_script(&script);
+    assert_eq!(code_a, EXIT_OK);
+    assert_eq!(code_b, EXIT_OK);
+    assert_eq!(out_a, out_b, "serve output depends on something beyond the request stream");
+    // The script exercises the whole surface: every typed error code
+    // plus ok/event lines from both session kinds and the run op.
+    for needle in [
+        r#""type":"hello""#,
+        r#""type":"ok""#,
+        r#""type":"event""#,
+        r#""code":"parse""#,
+        r#""code":"proto""#,
+        r#""code":"session""#,
+        r#""code":"infeasible""#,
+        r#""op":"run""#,
+    ] {
+        assert!(out_a.contains(needle), "missing {needle} in:\n{out_a}");
+    }
+}
+
+#[test]
+fn smoke_script_output_matches_golden() {
+    let (code, out) = serve_script(&script());
+    assert_eq!(code, EXIT_OK);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/serve-smoke.golden");
+    let bless = std::env::var("BBSCHED_BLESS").is_ok();
+    if bless || !path.exists() {
+        std::fs::write(&path, &out).unwrap();
+        if !bless {
+            eprintln!(
+                "serve golden: no committed transcript found; blessed this run's output -> {}\n\
+                 serve golden: commit the file so protocol drift is pinned against it",
+                path.display()
+            );
+        }
+        return;
+    }
+    let golden = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        out, golden,
+        "serve smoke output drifted from {}.\n\
+         If the protocol change is intentional, re-bless with\n\
+         `BBSCHED_BLESS=1 cargo test --test serve` and commit the diff.",
+        path.display()
+    );
+}
+
+#[test]
+fn split_advance_preserves_hot_state() {
+    // A plan policy session: its incumbent plan, scorer arena and SA RNG
+    // live inside the boxed scheduler, so the decision stream must not
+    // depend on how the driver slices its advances.
+    let setup = [
+        r#"{"op":"open","session":"p","policy":"plan-2","io":false}"#,
+        r#"{"op":"submit","session":"p","procs":8,"walltime_s":1200,"compute_s":600}"#,
+        r#"{"op":"submit","session":"p","procs":96,"walltime_s":600,"compute_s":300}"#,
+        r#"{"op":"submit","session":"p","procs":4,"walltime_s":2400,"compute_s":1200,"submit_s":120}"#,
+    ];
+    let mut one = Dispatcher::new(ServeOptions::default());
+    let mut split = Dispatcher::new(ServeOptions::default());
+    for line in &setup {
+        assert!(one.handle_line(line)[0].contains(r#""type":"ok""#), "{line}");
+        assert!(split.handle_line(line)[0].contains(r#""type":"ok""#), "{line}");
+    }
+    let mut one_events = one.handle_line(r#"{"op":"advance","session":"p","to_s":3600}"#);
+    let ok = one_events.pop().unwrap();
+    assert!(ok.contains(r#""op":"advance""#) && ok.contains(r#""clock_s":3600"#), "{ok}");
+    let mut split_events = Vec::new();
+    for to in [600u64, 1200, 3600] {
+        let mut lines =
+            split.handle_line(&format!(r#"{{"op":"advance","session":"p","to_s":{to}}}"#));
+        let ok = lines.pop().unwrap();
+        assert!(ok.contains(r#""type":"ok""#), "{ok}");
+        split_events.extend(lines);
+    }
+    assert!(!one_events.is_empty(), "expected scheduling events");
+    assert_eq!(one_events, split_events, "decision stream depends on advance granularity");
+    // Final metrics agree too — same completions, same waits.
+    let query = r#"{"op":"query","session":"p"}"#;
+    assert_eq!(one.handle_line(query), split.handle_line(query));
+}
+
+#[test]
+fn garbage_input_never_kills_the_service() {
+    let input = concat!(
+        "garbage\n",
+        "{\"op\":\"zap\"}\n",
+        "{\"op\":\"open\",\"session\":\"s\",\"policy\":\"fcfs\",\"io\":false}\n",
+        "{\"op\":\"open\",\"session\":\"s\",\"policy\":\"fcfs\"}\n",
+        "{\"op\":\"advance\",\"session\":\"s\",\"to_s\":60}\n",
+        "{\"op\":\"advance\",\"session\":\"s\",\"to_s\":30}\n",
+        "{\"op\":\"submit\",\"session\":\"s\",\"procs\":0,\"walltime_s\":60}\n",
+        "{\"op\":\"submit\",\"session\":\"s\",\"procs\":500,\"walltime_s\":60}\n",
+        "{\"op\":\"query\",\"session\":\"s\"}\n",
+    );
+    let (code, out) = serve_script(input);
+    // Bad input is answered, not fatal: the loop runs to EOF and the
+    // session opened mid-stream still answers the final query.
+    assert_eq!(code, EXIT_OK);
+    for c in ["parse", "proto", "session", "state", "infeasible"] {
+        assert!(out.contains(&format!("\"code\":\"{c}\"")), "missing code {c} in:\n{out}");
+    }
+    let last = out.lines().last().unwrap();
+    assert!(last.contains(r#""op":"query""#) && last.contains(r#""type":"ok""#), "{last}");
+}
+
+#[test]
+fn recorded_smoke_dialogue_replays_byte_identically() {
+    let mut out = Vec::new();
+    let mut transcript = Vec::new();
+    let code = run_loop(
+        ServeOptions::default(),
+        Cursor::new(script()),
+        &mut out,
+        Some(&mut transcript),
+    );
+    assert_eq!(code, EXIT_OK);
+    let path = tmp_path("replay");
+    std::fs::write(&path, &transcript).unwrap();
+    assert_eq!(replay_file(ServeOptions::default(), &path), EXIT_OK);
+    // One flipped byte in a recorded response is caught (the clock of
+    // the first advance; escaped because transcript lines nest the
+    // dialogue lines as JSON strings).
+    let text = String::from_utf8(transcript).unwrap();
+    let tampered = text.replace("\\\"clock_s\\\":60,", "\\\"clock_s\\\":61,");
+    assert_ne!(tampered, text, "tamper target not found in transcript");
+    std::fs::write(&path, &tampered).unwrap();
+    assert_eq!(replay_file(ServeOptions::default(), &path), EXIT_RUN_FAILED);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn run_requests_survive_service_restarts_via_the_store() {
+    let dir = tmp_path("store");
+    std::fs::create_dir_all(&dir).unwrap();
+    let line = r#"{"op":"run","policy":"fcfs","scale":0.003,"io":false,"seq":9}"#;
+    let opts =
+        || ServeOptions { store: Some(RunStore::new(&dir)), cancel: CancelToken::new() };
+    let mut first = Dispatcher::new(opts());
+    let cold = first.handle_line(line);
+    assert_eq!(cold.len(), 1, "{cold:?}");
+    assert!(cold[0].contains(r#""type":"ok""#) && cold[0].ends_with(r#""seq":9}"#), "{cold:?}");
+    assert_eq!(RunStore::new(&dir).list().unwrap().len(), 1, "run cell not persisted");
+    // A fresh dispatcher — a service restart — answers from the store.
+    let mut second = Dispatcher::new(opts());
+    assert_eq!(second.handle_line(line), cold);
+    // Still exactly one cell: the hit did not re-save.
+    assert_eq!(RunStore::new(&dir).list().unwrap().len(), 1);
+    // And a store-less service gives the same bytes — the response
+    // deliberately carries no cache provenance or wall-clock.
+    let mut bare = Dispatcher::new(ServeOptions::default());
+    assert_eq!(bare.handle_line(line), cold);
+    let _ = std::fs::remove_dir_all(&dir);
+}
