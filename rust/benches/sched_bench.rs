@@ -25,7 +25,7 @@
 //! `cargo bench --bench sched_bench -- --quick` (CI smoke size).
 
 use bbsched::coordinator::run_policy;
-use bbsched::platform::{BbArch, PlatformSpec};
+use bbsched::platform::{BbArch, PlatformSpec, TopologyConfig};
 use bbsched::report::bench::{fmt_dur, write_json, BenchResult};
 use bbsched::report::{fmt_f, render_table};
 use bbsched::sched::Policy;
@@ -107,7 +107,8 @@ fn main() {
         },
         platform: PlatformSpec { bb_arch: BbArch::Shared, bb_factor: 1.0 },
     };
-    let (storm_jobs, storm_bb) = storm.materialise(1).expect("storm workload");
+    let (storm_jobs, storm_bb) =
+        storm.materialise(1, &TopologyConfig::default()).expect("storm workload");
     let storm_sim = SimOptions::new().bb_capacity(storm_bb).io(false);
     let ablation: [(&str, SimOptions); 4] = [
         ("cold", storm_sim.clone().plan_cold_scoring(true)),
@@ -157,7 +158,8 @@ fn main() {
         },
         platform: PlatformSpec { bb_arch: BbArch::PerNode, bb_factor: 1.0 },
     };
-    let (pn_jobs, pn_bb) = pernode.materialise(1).expect("per-node storm workload");
+    let (pn_jobs, pn_bb) =
+        pernode.materialise(1, &TopologyConfig::default()).expect("per-node storm workload");
     let pn_sim = SimOptions::new().bb(pn_bb, BbArch::PerNode.placement()).io(false);
     let pn_ablation: [(&str, SimOptions); 4] = [
         ("agg", pn_sim.clone()),

@@ -36,6 +36,7 @@ use crate::campaign::spec::{CampaignSpec, RunSpec};
 use crate::campaign::store::{cell_key, workload_fingerprint, RunStore, StoredCell};
 use crate::core::cancel::CancelToken;
 use crate::metrics::summary::{summarize, PolicySummary};
+use crate::platform::TopologyConfig;
 use crate::report::json::JsonObject;
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -195,8 +196,13 @@ fn simulate_cell(
         if cancel.is_cancelled() {
             return Err(CampaignError::Cancelled);
         }
-        let (jobs, bb_capacity) =
-            run.scenario().materialise(run.seed).map_err(CampaignError::Cell)?;
+        // Campaign cells size for the paper's default machine; the
+        // topology is the caller's choice now, so name it here rather
+        // than inherit a hidden default.
+        let (jobs, bb_capacity) = run
+            .scenario()
+            .materialise(run.seed, &TopologyConfig::default())
+            .map_err(CampaignError::Cell)?;
         // Materialisation always runs (it is cheap relative to the
         // simulation and the key needs the workload fingerprint), so a
         // cache hit still validates that the workload generates.

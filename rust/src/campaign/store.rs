@@ -34,6 +34,7 @@ use crate::campaign::spec::{CampaignSpec, RunSpec};
 use crate::coordinator::PlanBackendKind;
 use crate::core::job::Job;
 use crate::metrics::summary::PolicySummary;
+use crate::platform::TopologyConfig;
 use crate::report::json::{parse_flat_object, JsonObject, JsonValue};
 use std::collections::{HashMap, HashSet};
 use std::io::Write;
@@ -97,6 +98,13 @@ fn backend_token(b: PlanBackendKind) -> String {
 /// Deliberately excludes anything that does not change the simulation:
 /// campaign name, out-dir, store-dir, timeout, worker count, and the
 /// cell's grid index (reordering a grid must not invalidate its cells).
+///
+/// The platform topology is not a spec axis yet: `materialise` takes it
+/// explicitly (the caller's choice, no hidden default), and the campaign
+/// layer always passes `TopologyConfig::default()`. Any other topology
+/// changes the materialised jobs and capacity, so the workload
+/// fingerprint — hashed below — already separates such cells; if
+/// topology becomes a grid axis it must also join this identity string.
 pub fn cell_identity(spec: &CampaignSpec, run: &RunSpec, workload_fp: u64) -> String {
     format!(
         "v={CODE_VERSION};policy={};seed={};family={};scale={};estimate={};\
@@ -310,7 +318,7 @@ pub fn live_keys(spec: &CampaignSpec) -> HashSet<u64> {
             .entry(cache_key)
             .or_insert_with(|| {
                 run.scenario()
-                    .materialise(run.seed)
+                    .materialise(run.seed, &TopologyConfig::default())
                     .ok()
                     .map(|(jobs, bb_capacity)| workload_fingerprint(&jobs, bb_capacity))
             })
@@ -418,7 +426,7 @@ mod tests {
     fn workload_fingerprint_is_field_sensitive() {
         let spec = CampaignSpec::smoke();
         let run = &spec.enumerate()[0];
-        let (jobs, cap) = run.scenario().materialise(run.seed).unwrap();
+        let (jobs, cap) = run.scenario().materialise(run.seed, &TopologyConfig::default()).unwrap();
         let base = workload_fingerprint(&jobs, cap);
         assert_eq!(base, workload_fingerprint(&jobs, cap), "deterministic");
         assert_ne!(base, workload_fingerprint(&jobs, cap + 1), "capacity");
@@ -462,7 +470,8 @@ mod tests {
         assert_eq!(live.len(), spec.n_runs(), "distinct key per cell");
         // Each live key is exactly what the runner would compute.
         for run in spec.enumerate() {
-            let (jobs, cap) = run.scenario().materialise(run.seed).unwrap();
+            let (jobs, cap) =
+                run.scenario().materialise(run.seed, &TopologyConfig::default()).unwrap();
             let key = cell_key(&spec, &run, workload_fingerprint(&jobs, cap));
             assert!(live.contains(&key));
         }

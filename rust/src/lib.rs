@@ -103,9 +103,19 @@
 //!   ([`sim::simulator::Simulator::online`]) keep scheduler state hot
 //!   between requests (incremental timeline, incumbent plan, scorer
 //!   arena, warm-start seed); requests stream `submit`/`advance`/
-//!   `query` and decisions stream back as events; every failure is a
+//!   `query` and decisions stream back as events — plus opt-in
+//!   `plan_delta`/`metrics` observability lines; every failure is a
 //!   typed error line, and `--record`/`--replay` make any dialogue a
-//!   byte-identical regression artifact.
+//!   byte-identical regression artifact. The service is restartable
+//!   and concurrent without weakening that guarantee: sessions are
+//!   whole movable values (`Simulator` owns a `Box<dyn Scheduler +
+//!   Send>`), so `--session-jobs N` migrates them across the
+//!   work-stealing [`pool`] to batch independent advances
+//!   byte-identically, and `snapshot`/`restore` persist a session's
+//!   event history through the run store — replaying it rebuilds the
+//!   hot state bit-exactly (the split-advance invariant), so a
+//!   restored session's response stream matches the never-killed
+//!   one's.
 
 pub mod campaign;
 pub mod coordinator;

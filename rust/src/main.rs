@@ -794,7 +794,11 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("run store: {}", dir.display());
         Some(RunStore::new(dir))
     };
-    let opts = ServeOptions { store, cancel: CancelToken::new() };
+    let opts = ServeOptions {
+        store,
+        cancel: CancelToken::new(),
+        session_jobs: args.usize("session-jobs", 1),
+    };
     if let Some(path) = args.get("replay") {
         return serve::replay_file(opts, Path::new(path));
     }
@@ -888,7 +892,9 @@ fn main() {
                  \x20 --store-dir DIR  run store answering `run` requests from cache (default .repro-store)\n\
                  \x20 --no-store       always simulate `run` requests\n\
                  \x20 --record FILE    mirror the dialogue into a replayable transcript\n\
-                 \x20 --replay FILE    verify a recorded transcript byte-for-byte, then exit\n\n\
+                 \x20 --replay FILE    verify a recorded transcript byte-for-byte, then exit\n\
+                 \x20 --session-jobs N run batched `advance` ops for distinct sessions on N threads\n\
+                 \x20                  (default 1 = lockstep; N>1 reads ahead, same byte stream)\n\n\
                  gc flags:\n\
                  \x20 --keep-spec FILE | --keep-builtin NAME   grid whose cells stay live\n\
                  \x20 --store-dir DIR  store to collect (default .repro-store)\n\

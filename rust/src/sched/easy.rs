@@ -353,6 +353,64 @@ mod tests {
     }
 
     #[test]
+    fn split_reserved_head_presses_its_groups_onto_backfill() {
+        use crate::platform::PlaceProbe;
+        use crate::sched::timeline::ResourceTimeline;
+        use crate::sched::{QueueIndex, SchedCtx};
+        // Only a *split* placement fits the head: groups hold (0: 70,
+        // 1: 60) bytes, 4 compute nodes each, and the head wants 5
+        // cpus + 80 bytes — more than any single group, but fine as
+        // the static carving (0: 64, 1: 16). A running job pins all of
+        // group 1's cpus until t=600, so the head is reserved at t=600
+        // and `reserve_placed` must book its split carving (ROADMAP
+        // PR-7 deferral (d)): group 0 then keeps only 6 free bytes
+        // over the reservation. Backfill candidate 1 (2 cpus, 10
+        // bytes, overlapping the reservation) is routed to group 0 by
+        // the probe and must be refused — before the sweep the head's
+        // bytes were invisible and it slipped through. Candidate 2
+        // (1 cpu, 5 bytes) fits under the residual 6 and still
+        // backfills: the gate is pressure-aware, not blanket.
+        let queue = [req(0, 5, 80, 10), req(1, 2, 10, 20), req(2, 1, 5, 20)];
+        let running = [RunningInfo {
+            id: JobId(9),
+            req: Resources::new(4, 0),
+            expected_end: Time::from_secs(600),
+        }];
+        let view = SchedView {
+            now: Time::ZERO,
+            capacity: Resources::new(8, 130),
+            free: Resources::new(4, 130),
+            queue: &queue,
+            running: &running,
+        };
+        // Shared architecture: no group pressure, both candidates fit
+        // the aggregate and backfill.
+        assert_eq!(schedule_once(&mut Easy::fcfs_bb(), &view), vec![JobId(1), JobId(2)]);
+        // Per-node: the split booking refuses 1, admits 2.
+        let mut tl =
+            ResourceTimeline::with_per_node(Time::ZERO, view.capacity, &[(0, 70), (1, 60)]);
+        tl.set_compute_group_caps(&[(0, 4), (1, 4)]);
+        tl.job_started_placed(
+            JobId(9),
+            Resources::new(4, 0),
+            &[],
+            Time::ZERO,
+            Time::from_secs(600),
+        );
+        let qindex = QueueIndex::new();
+        let probe = PlaceProbe::PerNode {
+            compute_free: vec![(0, 4), (1, 0)],
+            bb_free: vec![(0, 70), (1, 60)],
+        };
+        let mut ctx = SchedCtx::new(view, &mut tl, &qindex).with_probe(probe);
+        assert_eq!(
+            Easy::fcfs_bb().schedule(&mut ctx),
+            vec![JobId(2)],
+            "candidate 1 must see the head's split-booked group bytes"
+        );
+    }
+
+    #[test]
     fn launch_order_prefix_then_backfill_in_queue_order() {
         // Guards the index-cursor refactor: launches must come out as
         // [feasible prefix in queue order] ++ [backfills in queue order]

@@ -187,6 +187,28 @@ pub fn schedule_once<S: Scheduler + ?Sized>(s: &mut S, view: &SchedView<'_>) -> 
     s.schedule(&mut ctx)
 }
 
+/// One observed change of a plan policy's incumbent: the permutation
+/// the SA optimiser currently intends to launch in, with its score and
+/// effort counters. Journalled by [`Scheduler::take_plan_updates`] when
+/// journaling is on; the serve layer streams these as `plan_delta`
+/// lines. Plan-less policies never produce one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanUpdate {
+    /// Simulation time of the scheduling pass that produced the plan.
+    pub t: Time,
+    /// The incumbent launch order over the planned queue window.
+    pub perm: Vec<JobId>,
+    /// The incumbent's objective value (lower is better).
+    pub score: f64,
+    /// Proposals scored by the SA pass.
+    pub evaluations: u64,
+    /// Proposals accepted (improvements + Metropolis uphill moves).
+    pub accepted: u64,
+    /// Whether the pass ran annealing or fell through (tiny queue,
+    /// memoised pass, ...).
+    pub annealed: bool,
+}
+
 /// A scheduling policy.
 pub trait Scheduler {
     /// Static policy name (matches the paper's policy labels).
@@ -199,6 +221,14 @@ pub trait Scheduler {
     /// — never committed; durable timeline changes come only from the
     /// simulator's job lifecycle.
     fn schedule(&mut self, ctx: &mut SchedCtx<'_, '_>) -> Vec<JobId>;
+    /// Toggle incumbent-plan journaling. Default: no-op — only plan
+    /// policies own a plan worth journalling.
+    fn set_plan_journal(&mut self, _on: bool) {}
+    /// Drain journalled [`PlanUpdate`]s since the last call, in
+    /// invocation order. Default: always empty.
+    fn take_plan_updates(&mut self) -> Vec<PlanUpdate> {
+        Vec::new()
+    }
 }
 
 /// Policy registry used by the CLI and the evaluation harness.

@@ -92,6 +92,10 @@ pub struct SaOutcome {
     pub score: f64,
     /// Scorer evaluations consumed (paper: N*M + |I| = 189).
     pub evaluations: u64,
+    /// Proposals the accept rule took (improvements + Metropolis uphill
+    /// moves). Zero on the exhaustive and skip paths, which never run
+    /// the accept chain.
+    pub accepted: u64,
     /// False when the queue was solved exhaustively or annealing was
     /// skipped (S_best == S_worst).
     pub annealed: bool,
@@ -109,7 +113,7 @@ pub fn optimise(
 ) -> SaOutcome {
     let evals0 = scorer.evaluations();
     if n == 0 {
-        return SaOutcome { perm: vec![], score: 0.0, evaluations: 0, annealed: false };
+        return SaOutcome { perm: vec![], score: 0.0, evaluations: 0, accepted: 0, annealed: false };
     }
     // --- Exhaustive search for small queues (Algorithm 2 line 2-4). ----
     if n <= params.exhaustive_limit {
@@ -129,6 +133,7 @@ pub fn optimise(
             perm: perms[bi].clone(),
             score: scores[bi],
             evaluations: scorer.evaluations() - evals0,
+            accepted: 0,
             annealed: false,
         };
     }
@@ -155,6 +160,7 @@ pub fn optimise(
             perm: p_best,
             score: s_best,
             evaluations: scorer.evaluations() - evals0,
+            accepted: 0,
             annealed: false,
         };
     }
@@ -170,6 +176,7 @@ pub fn optimise(
     // accept chain copy slices in place, so the non-batched hot loop
     // performs zero heap allocations per proposal.
     let mut proposal: Vec<usize> = Vec::with_capacity(n);
+    let mut n_accepted: u64 = 0;
     for _ in 0..params.n_cooling {
         if params.batched {
             // Propose M neighbours of the current P, score them as one
@@ -182,9 +189,11 @@ pub fn optimise(
             }
             let scores = scorer.score_batch(&proposals);
             for (p_new, s_new) in proposals.iter().zip(scores) {
-                accept(
+                if accept(
                     p_new, s_new, &mut p, &mut s, &mut p_best, &mut s_best, temp, rng,
-                );
+                ) {
+                    n_accepted += 1;
+                }
             }
             scorer.note_incumbent(&p);
         } else {
@@ -195,6 +204,7 @@ pub fn optimise(
                     &proposal, s_new, &mut p, &mut s, &mut p_best, &mut s_best, temp, rng,
                 );
                 if accepted {
+                    n_accepted += 1;
                     scorer.note_incumbent(&p);
                 }
             }
@@ -205,6 +215,7 @@ pub fn optimise(
         perm: p_best,
         score: s_best,
         evaluations: scorer.evaluations() - evals0,
+        accepted: n_accepted,
         annealed: true,
     }
 }

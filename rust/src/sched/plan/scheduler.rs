@@ -23,7 +23,7 @@ use crate::sched::plan::scorer::{
     place_grouped, DiscreteProblem, ExactScorer, NativeDiscreteScorer, ScorerArena,
 };
 use crate::sched::timeline::{GroupBbTimelines, Profile};
-use crate::sched::{SchedCtx, SchedView, Scheduler};
+use crate::sched::{PlanUpdate, SchedCtx, SchedView, Scheduler};
 use crate::stats::rng::Pcg32;
 
 /// External batch scorer over the discretised problem (implemented by
@@ -100,6 +100,14 @@ pub struct PlanSched {
     memo_key: u64,
     /// The previous best plan's job ordering (warm-start seed).
     prev_best: Vec<JobId>,
+    /// Incumbent-plan journaling (serve `plan_delta` lines): off by
+    /// default — observation must not cost the batch path anything.
+    journal: bool,
+    /// Updates journalled since the last drain, in invocation order.
+    updates: Vec<PlanUpdate>,
+    /// The last journalled launch order, so only *changes* of the
+    /// incumbent produce an update line.
+    last_journalled: Vec<JobId>,
     /// Cumulative SA evaluations (ablation/diagnostics).
     pub total_evaluations: u64,
     pub invocations_planned: u64,
@@ -123,6 +131,9 @@ impl PlanSched {
             rng: Pcg32::seeded(seed),
             memo_key: 0,
             prev_best: Vec::new(),
+            journal: false,
+            updates: Vec::new(),
+            last_journalled: Vec::new(),
             total_evaluations: 0,
             invocations_planned: 0,
             invocations_memoised: 0,
@@ -465,6 +476,28 @@ impl Scheduler for PlanSched {
         self.snapshot = final_profile;
         self.arena.tail_starts = tail_starts;
         self.arena.picked = picked;
+        if self.journal {
+            // Journal the full intended launch order (window perm, then
+            // the greedy tail) — but only when the incumbent actually
+            // changed, so a quiet queue streams nothing.
+            let order: Vec<JobId> = outcome
+                .perm
+                .iter()
+                .map(|&pi| jobs[pi].id)
+                .chain(tail.iter().map(|j| j.id))
+                .collect();
+            if order != self.last_journalled {
+                self.updates.push(PlanUpdate {
+                    t: view.now,
+                    perm: order.clone(),
+                    score: outcome.score,
+                    evaluations: outcome.evaluations,
+                    accepted: outcome.accepted,
+                    annealed: outcome.annealed,
+                });
+                self.last_journalled = order;
+            }
+        }
         if self.warm_start {
             // Remember the full plan order (window perm, then the greedy
             // tail) so survivors seed the next tick even across window
@@ -497,6 +530,18 @@ impl Scheduler for PlanSched {
         // invocation anyway; only the no-launch case must match exactly.
         self.memo_key = if launches.is_empty() { h } else { 0 };
         launches
+    }
+
+    fn set_plan_journal(&mut self, on: bool) {
+        self.journal = on;
+        if !on {
+            self.updates.clear();
+            self.last_journalled.clear();
+        }
+    }
+
+    fn take_plan_updates(&mut self) -> Vec<PlanUpdate> {
+        std::mem::take(&mut self.updates)
     }
 }
 
@@ -859,6 +904,39 @@ mod tests {
         let mut ga = PlanSched::new(2.0, 1).with_window(1).with_group_aware(true);
         assert_eq!(ga.schedule(&mut ctx), vec![JobId(2)]);
         assert_eq!(ga.probe_skipped, 0, "group-aware tail must anticipate the reject");
+    }
+
+    #[test]
+    fn plan_journal_streams_only_incumbent_changes() {
+        let q = [req(0, 8, 0, 10, 0)];
+        let running = [RunningInfo {
+            id: JobId(9),
+            req: Resources::new(90, 0),
+            expected_end: Time::from_secs(600),
+        }];
+        let mk_view = |now: u64| SchedView {
+            now: Time::from_secs(now),
+            capacity: Resources::new(96, 100),
+            free: Resources::new(6, 100),
+            queue: &q,
+            running: &running,
+        };
+        let mut s = PlanSched::new(2.0, 1);
+        s.set_plan_journal(true);
+        assert!(schedule_once(&mut s, &mk_view(60)).is_empty());
+        let ups = s.take_plan_updates();
+        assert_eq!(ups.len(), 1, "{ups:?}");
+        assert_eq!(ups[0].perm, vec![JobId(0)]);
+        assert_eq!(ups[0].t, Time::from_secs(60));
+        assert_eq!(ups[0].evaluations, 1, "single-job queue solves exhaustively");
+        assert!(!ups[0].annealed);
+        // Second pass over unchanged state is memoised: the incumbent
+        // did not change, so nothing new is journalled.
+        assert!(schedule_once(&mut s, &mk_view(120)).is_empty());
+        assert!(s.take_plan_updates().is_empty());
+        // Turning the journal off drops any pending updates.
+        s.set_plan_journal(false);
+        assert!(s.take_plan_updates().is_empty());
     }
 
     #[test]

@@ -242,6 +242,37 @@ mod tests {
     }
 
     #[test]
+    fn reserve_placed_books_the_static_split_when_no_single_group_fits() {
+        // Canonical split fixture: groups (0: 70, 1: 60) bytes with 4
+        // compute nodes each; a 5-cpu/80-byte head spans both groups,
+        // so no single group hosts it and the static carving is
+        // (0: 64, 1: 16). `reserve_placed` must book that carving —
+        // the same sweep `earliest_fit_placed` admits splits by — so
+        // later backfill checks see the head's group pressure
+        // (ROADMAP PR-7 deferral (d)).
+        let mut p = Profile::flat(t(0), res(8, 130));
+        let mut g = GroupBbTimelines::new(t(0), &[(0, 70), (1, 60)]);
+        g.set_compute_caps(&[(0, 4), (1, 4)]);
+        let head = res(5, 80);
+        assert_eq!(g.best_group(head.bb, t(600), t(1200)), None);
+        assert_eq!(g.static_split_shares(head), Some(vec![(0, 64), (1, 16)]));
+        let mut txn = TimelineTxn::new(&mut p, Some(&mut g));
+        txn.reserve_placed(t(600), d(600), head);
+        txn.commit();
+        // Aggregate: the whole request is reserved over the window.
+        assert_eq!(p.min_free(t(600), t(1200)), res(3, 50));
+        // Groups: exactly the carving — 70-64=6 left in group 0,
+        // 60-16=44 in group 1 (before the PR-7 fix nothing was booked
+        // and both groups looked fully free to backfill).
+        assert!(g.fits_shares(&[(0, 6)], t(600), t(1200)));
+        assert!(!g.fits_shares(&[(0, 7)], t(600), t(1200)));
+        assert!(g.fits_shares(&[(1, 44)], t(600), t(1200)));
+        assert!(!g.fits_shares(&[(1, 45)], t(600), t(1200)));
+        // Outside the window the groups stay untouched.
+        assert!(g.fits_shares(&[(0, 70), (1, 60)], t(0), t(600)));
+    }
+
+    #[test]
     fn queries_see_tentative_state() {
         let mut p = Profile::flat(t(0), res(4, 10));
         let mut txn = TimelineTxn::new(&mut p, None);

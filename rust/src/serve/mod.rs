@@ -22,12 +22,26 @@
 //! regression harness (`tests/serve.rs`, the `serve-smoke` CI job).
 //! Malformed input yields typed `error` lines with stable codes (see
 //! [`protocol`]); the service never exits on bad client input.
+//!
+//! The service is restartable and concurrent without giving up any of
+//! that: `snapshot`/`restore` persist a session's event history through
+//! the run store so a new process resumes it with a byte-identical
+//! subsequent response stream, and `--session-jobs N` executes runs of
+//! consecutive `advance` requests for distinct sessions on the
+//! work-stealing pool ([`crate::pool`]) — responses still come back in
+//! request order, byte-identical to `N = 1`, because batching never
+//! reorders observable effects, only overlaps independent sessions'
+//! compute. The cost of `N > 1` is lockstep: the service reads ahead to
+//! grow a batch, so drivers must pipeline requests instead of awaiting
+//! each response before sending the next.
 
 pub mod protocol;
 pub mod session;
 
 pub use protocol::{Req, ServeError};
 pub use session::Dispatcher;
+
+use session::AdvanceReq;
 
 use crate::campaign::{RunStore, EXIT_OK, EXIT_RUN_FAILED, EXIT_SPEC_ERROR};
 use crate::core::cancel::CancelToken;
@@ -42,18 +56,26 @@ use std::path::Path;
 pub const PROTO_VERSION: u32 = 1;
 
 /// How the service runs: the run store acting as the `run` op's cache
-/// tier (`None` = always simulate), and the cancel token every session
-/// and batch cell observes (children of it, so one token winds down the
-/// whole service promptly).
+/// tier and the `snapshot`/`restore` home (`None` = always simulate,
+/// no snapshots), the cancel token every session and batch cell
+/// observes (children of it, so one token winds down the whole service
+/// promptly), and the `advance` batching width.
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
     pub store: Option<RunStore>,
     pub cancel: CancelToken,
+    /// Worker threads for batched `advance` execution. `1` (the
+    /// default) answers every request before reading the next — strict
+    /// lockstep. `N > 1` reads ahead to batch consecutive `advance`
+    /// requests for distinct sessions onto the work-stealing pool;
+    /// output is byte-identical either way (pinned by `tests/serve.rs`
+    /// and the `serve-smoke` CI job).
+    pub session_jobs: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> ServeOptions {
-        ServeOptions { store: None, cancel: CancelToken::new() }
+        ServeOptions { store: None, cancel: CancelToken::new(), session_jobs: 1 }
     }
 }
 
@@ -71,11 +93,37 @@ fn record_line(
     Ok(())
 }
 
+/// Write response lines to the client and mirror them into the
+/// transcript; the caller maps the failure kind onto the exit code.
+fn emit_lines(
+    output: &mut impl Write,
+    record: &mut Option<&mut dyn Write>,
+    lines: &[String],
+) -> Result<(), (&'static str, std::io::Error)> {
+    for resp in lines {
+        if let Err(e) = writeln!(output, "{resp}") {
+            return Err(("write failed", e));
+        }
+        if let Err(e) = record_line(record, "out", resp) {
+            return Err(("transcript write failed", e));
+        }
+    }
+    Ok(())
+}
+
 /// The service loop: write the hello line, then handle requests until
-/// EOF (exit 0) or an I/O failure (exit 1). Every request's responses
-/// are written — and the output flushed — before the next request is
-/// read, so a driver can run strict request/response lockstep. `record`
-/// mirrors the full dialogue as a replayable transcript.
+/// EOF (exit 0) or an I/O failure (exit 1). With `session_jobs == 1`
+/// every request's responses are written — and the output flushed —
+/// before the next request is read, so a driver can run strict
+/// request/response lockstep. With `session_jobs > 1` the loop reads
+/// ahead: maximal runs of consecutive `advance` requests for distinct
+/// sessions execute concurrently ([`Dispatcher::advance_batch`]), any
+/// other request acting as an order barrier — the byte stream is
+/// identical, only the wall-clock differs. `record` mirrors the full
+/// dialogue as a replayable transcript; batched requests' `in` records
+/// are deferred to the drain and written interleaved with their
+/// responses, so the transcript too is byte-identical to the lockstep
+/// service's.
 pub fn run_loop(
     opts: ServeOptions,
     input: impl BufRead,
@@ -83,18 +131,20 @@ pub fn run_loop(
     mut record: Option<&mut dyn Write>,
 ) -> i32 {
     let cancel = opts.cancel.clone();
+    let jobs = opts.session_jobs.max(1);
     let mut dispatcher = Dispatcher::new(opts);
     let hello = dispatcher.hello();
     let io_failed = |what: &str, e: std::io::Error| -> i32 {
         eprintln!("repro serve: {what}: {e}");
         EXIT_RUN_FAILED
     };
-    if let Err(e) = writeln!(output, "{hello}") {
-        return io_failed("write failed", e);
+    if let Err((what, e)) = emit_lines(&mut output, &mut record, std::slice::from_ref(&hello)) {
+        return io_failed(what, e);
     }
-    if let Err(e) = record_line(&mut record, "out", &hello) {
-        return io_failed("transcript write failed", e);
-    }
+    // Batched requests carry their raw line: the `in` transcript record
+    // is deferred until the drain so it can be written immediately
+    // before its responses, exactly where lockstep would put it.
+    let mut batch: Vec<(String, AdvanceReq)> = Vec::new();
     for line in input.lines() {
         let line = match line {
             Ok(l) => l,
@@ -107,23 +157,74 @@ pub fn run_loop(
             eprintln!("repro serve: cancelled; shutting down");
             break;
         }
+        if jobs > 1 {
+            if let Some(req) = dispatcher.batch_probe(&line) {
+                if batch.iter().all(|(_, b)| b.session != req.session) {
+                    batch.push((line, req));
+                    continue;
+                }
+                // A second advance for an already-batched session:
+                // drain the batch, then this request opens the next.
+                if let Err((what, e)) =
+                    drain_batch(&mut dispatcher, &mut batch, jobs, &mut output, &mut record)
+                {
+                    return io_failed(what, e);
+                }
+                batch.push((line, req));
+                continue;
+            }
+        }
+        // Any non-batchable request is an order barrier: the pending
+        // batch's records and responses precede its own.
+        if let Err((what, e)) =
+            drain_batch(&mut dispatcher, &mut batch, jobs, &mut output, &mut record)
+        {
+            return io_failed(what, e);
+        }
         if let Err(e) = record_line(&mut record, "in", &line) {
             return io_failed("transcript write failed", e);
         }
-        for resp in dispatcher.handle_line(&line) {
-            if let Err(e) = writeln!(output, "{resp}") {
-                return io_failed("write failed", e);
-            }
-            if let Err(e) = record_line(&mut record, "out", &resp) {
-                return io_failed("transcript write failed", e);
-            }
+        let responses = dispatcher.handle_line(&line);
+        if let Err((what, e)) = emit_lines(&mut output, &mut record, &responses) {
+            return io_failed(what, e);
         }
         if let Err(e) = output.flush() {
             return io_failed("flush failed", e);
         }
     }
+    // EOF (or cancellation) with a batch still pending: it was read, so
+    // its records and responses must reach the transcript too.
+    if let Err((what, e)) = drain_batch(&mut dispatcher, &mut batch, jobs, &mut output, &mut record)
+    {
+        return io_failed(what, e);
+    }
     let _ = output.flush();
     EXIT_OK
+}
+
+/// Execute a pending `advance` batch and emit each request's transcript
+/// `in` record followed by its responses, in request order — the same
+/// shape the lockstep loop writes, which is what keeps transcripts
+/// byte-identical across `--session-jobs` levels.
+fn drain_batch(
+    dispatcher: &mut Dispatcher,
+    batch: &mut Vec<(String, AdvanceReq)>,
+    jobs: usize,
+    output: &mut impl Write,
+    record: &mut Option<&mut dyn Write>,
+) -> Result<(), (&'static str, std::io::Error)> {
+    if batch.is_empty() {
+        return Ok(());
+    }
+    let (raw, reqs): (Vec<String>, Vec<AdvanceReq>) = std::mem::take(batch).into_iter().unzip();
+    let groups = dispatcher.advance_batch(reqs, jobs);
+    for (line, responses) in raw.iter().zip(groups) {
+        if let Err(e) = record_line(record, "in", line) {
+            return Err(("transcript write failed", e));
+        }
+        emit_lines(output, record, &responses)?;
+    }
+    Ok(())
 }
 
 /// Replay a `--record`ed transcript against a fresh service and verify
@@ -258,6 +359,51 @@ mod tests {
             EXIT_SPEC_ERROR,
             "missing transcript"
         );
+    }
+
+    #[test]
+    fn batched_advances_match_the_lockstep_byte_stream() {
+        // Three sessions with staggered jobs, then interleaved advance
+        // runs — including a same-session pair (drains the batch
+        // mid-run), an unknown-session advance (error, order barrier)
+        // and a trailing run cut off by EOF while still batched.
+        let mut script = String::new();
+        for (i, s) in ["a", "b", "c"].iter().enumerate() {
+            script.push_str(&format!(
+                "{{\"op\":\"open\",\"session\":\"{s}\",\"policy\":\"fcfs\",\
+                 \"io\":false,\"seq\":{}}}\n",
+                i + 1
+            ));
+            script.push_str(&format!(
+                "{{\"op\":\"submit\",\"session\":\"{s}\",\"procs\":{},\
+                 \"walltime_s\":{},\"seq\":{}}}\n",
+                2 + i,
+                300 + 60 * i,
+                10 + i
+            ));
+        }
+        let mut seq = 20;
+        for to in [120u64, 240, 240, 600] {
+            for s in ["a", "b", "c"] {
+                script.push_str(&format!(
+                    "{{\"op\":\"advance\",\"session\":\"{s}\",\"to_s\":{to},\"seq\":{seq}}}\n"
+                ));
+                seq += 1;
+            }
+        }
+        script.push_str("{\"op\":\"advance\",\"session\":\"zz\",\"to_s\":900,\"seq\":90}\n");
+        script.push_str("{\"op\":\"advance\",\"session\":\"a\",\"to_s\":900,\"seq\":91}\n");
+        script.push_str("{\"op\":\"advance\",\"session\":\"b\",\"to_s\":900,\"seq\":92}\n");
+        let run = |jobs: usize| -> String {
+            let mut out = Vec::new();
+            let opts = ServeOptions { session_jobs: jobs, ..ServeOptions::default() };
+            assert_eq!(run_loop(opts, Cursor::new(script.clone()), &mut out, None), EXIT_OK);
+            String::from_utf8(out).unwrap()
+        };
+        let lockstep = run(1);
+        assert_eq!(lockstep, run(4), "batched output diverged from lockstep");
+        assert_eq!(lockstep, run(2), "batched output diverged from lockstep");
+        assert!(lockstep.contains(r#""code":"session""#), "{lockstep}");
     }
 
     #[test]

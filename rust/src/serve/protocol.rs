@@ -19,6 +19,8 @@
 //! | `state`      | the request regresses the session clock            |
 //! | `infeasible` | the job can never run on this session's machine    |
 //! | `cancelled`  | the serve cancel token fired mid-request           |
+//! | `store`      | `snapshot`/`restore` without a run store attached, |
+//! |              | or the named snapshot is missing or corrupt        |
 //! | *campaign*   | `run` failures carry the [`CampaignError`] code    |
 //! |              | (`spec`, `store_io`, `cell`, `timeout`, ...)       |
 

@@ -11,13 +11,30 @@
 //! Ops:
 //!
 //! - `open`: create a session (`policy` required; burst-buffer, tick,
-//!   seed and plan knobs optional).
+//!   seed and plan knobs optional; `plan_deltas`/`metrics` opt into the
+//!   extra per-advance response lines described below).
 //! - `submit`: add one job to a session's future (or present).
 //! - `advance`: drive the session clock forward; scheduling decisions
-//!   made along the way stream back as `event` lines, oldest first.
+//!   made along the way stream back as `event` lines, oldest first,
+//!   followed (when opted in at `open`) by `plan_delta` lines — one per
+//!   incumbent-plan change the plan optimiser committed during the
+//!   advance — and one `metrics` line with the running waiting-time /
+//!   bounded-slowdown summary over the jobs completed so far.
 //! - `query`: session status plus the live metric summary over the
 //!   jobs completed so far.
 //! - `cancel`: close a session and drop its state.
+//! - `snapshot`: persist a session to the run store so a later service
+//!   process can `restore` it. What is written is the session's *event
+//!   history* — the open parameters, every submitted job, and the clock
+//!   — not the hot scheduler state: because the simulator is
+//!   deterministic and split advances equal one advance, replaying the
+//!   history rebuilds the incumbent plan, RNG and warm-start seed
+//!   bit-exactly, so the restored session's subsequent response stream
+//!   is byte-identical to the never-killed one's.
+//! - `restore`: open a session from a stored snapshot (under the same
+//!   or a new session name). Decisions and plan deltas replayed on the
+//!   way back to the snapshotted clock already streamed to the original
+//!   client, so they are drained silently, not re-emitted.
 //! - `run`: execute one batch grid cell through the campaign runner —
 //!   with a store configured, repeated questions are answered from the
 //!   content-addressed run store without simulating.
@@ -28,17 +45,182 @@
 use std::collections::BTreeMap;
 
 use crate::campaign::{execute_run, CampaignOptions, CampaignSpec};
+use crate::core::cancel::CancelToken;
 use crate::core::job::{Job, JobId};
 use crate::core::time::{Duration, Time};
 use crate::metrics::summary::summarize;
 use crate::options::SimOptions;
 use crate::platform::BbArch;
-use crate::report::json::{parse_flat_object, summary_fields, JsonObject};
+use crate::pool::parallel_map;
+use crate::report::json::{self, parse_flat_object, summary_fields, JsonObject, JsonValue};
 use crate::sched::Policy;
 use crate::serve::protocol::{seq_tail, Req, ServeError};
 use crate::serve::{ServeOptions, PROTO_VERSION};
 use crate::sim::simulator::{Decision, Simulator};
 use crate::workload::{EstimateModel, Family};
+
+/// Snapshot file format version (independent of the wire protocol; the
+/// header records both).
+const SNAPSHOT_FORMAT: u64 = 1;
+
+/// Everything a session was opened with. Kept alongside the simulator
+/// so `snapshot` can persist the exact rebuild recipe and `advance`
+/// knows which opt-in response lines this session wants.
+#[derive(Debug, Clone)]
+struct OpenParams {
+    policy: Policy,
+    bb_bytes: u64,
+    arch: BbArch,
+    tick_s: u64,
+    seed: u64,
+    io: bool,
+    plan_window: usize,
+    warm: bool,
+    group_aware: bool,
+    plan_deltas: bool,
+    metrics: bool,
+}
+
+/// One live session: the online simulator plus its open parameters.
+/// The params, the submitted jobs and the clock *are* the session's
+/// event history — all `snapshot` needs to rebuild it by replay.
+struct Session {
+    sim: Simulator,
+    params: OpenParams,
+}
+
+/// Build a session from its open parameters. The serve entry point's
+/// single `SimOptions` construction site (the same single-site rule the
+/// CLI and campaign layers follow) — `open` and `restore` both come
+/// through here, which is what makes a restored session's configuration
+/// exactly the original's.
+fn build_session(params: OpenParams, cancel: &CancelToken) -> Session {
+    let opts = SimOptions::new()
+        .bb(params.bb_bytes, params.arch.placement())
+        .io(params.io)
+        .tick(Duration::from_secs(params.tick_s))
+        .seed(params.seed)
+        .plan_warm_start(params.warm)
+        .plan_window(params.plan_window)
+        .plan_group_aware(params.group_aware)
+        .cancel(cancel.child());
+    let mut sim = opts.online_simulator(params.policy);
+    sim.set_plan_journal(params.plan_deltas);
+    Session { sim, params }
+}
+
+/// A fully validated `advance` request, parsed ahead of execution so
+/// the serve loop can batch consecutive ones for distinct sessions onto
+/// the work-stealing pool (see [`Dispatcher::advance_batch`]).
+pub(crate) struct AdvanceReq {
+    pub(crate) session: String,
+    pub(crate) to_s: u64,
+    pub(crate) seq: Option<u64>,
+}
+
+/// The one `advance` execution path, shared by the sequential op and
+/// the batched pump — sharing it is what makes `--session-jobs N`
+/// byte-identical to `N = 1`. Returns every response line the advance
+/// produces (events, opt-in `plan_delta`/`metrics` lines, then the ok
+/// line — or a trailing error line), all stamped with the request seq.
+fn advance_core(name: &str, sess: &mut Session, to_s: u64, seq: Option<u64>) -> Vec<String> {
+    let mut out = Vec::new();
+    let sim = &mut sess.sim;
+    let to = Time::from_secs(to_s);
+    if to < sim.stats().clock {
+        let e = ServeError::new(
+            "state",
+            format!("advance target {to} regresses the session clock ({})", sim.stats().clock),
+        );
+        out.push(e.line(seq));
+        return out;
+    }
+    let cancelled = sim.advance_to(to);
+    let (mut started, mut finished) = (0u64, 0u64);
+    for d in sim.take_decisions() {
+        let line = match d {
+            Decision::Started { job, t } => {
+                started += 1;
+                seq_tail(
+                    JsonObject::new()
+                        .str("type", "event")
+                        .str("session", name)
+                        .str("kind", "start")
+                        .num_u("job", job.0 as u64)
+                        .num_f("t_s", t.as_secs_f64()),
+                    seq,
+                )
+                .end()
+            }
+            Decision::Finished { job, t, killed } => {
+                finished += 1;
+                seq_tail(
+                    JsonObject::new()
+                        .str("type", "event")
+                        .str("session", name)
+                        .str("kind", "finish")
+                        .num_u("job", job.0 as u64)
+                        .num_f("t_s", t.as_secs_f64())
+                        .bool("killed", killed),
+                    seq,
+                )
+                .end()
+            }
+        };
+        out.push(line);
+    }
+    if sess.params.plan_deltas {
+        for u in sim.take_plan_updates() {
+            let order: Vec<String> = u.perm.iter().map(|id| id.0.to_string()).collect();
+            out.push(
+                seq_tail(
+                    JsonObject::new()
+                        .str("type", "plan_delta")
+                        .str("session", name)
+                        .num_f("t_s", u.t.as_secs_f64())
+                        .str("order", &order.join(","))
+                        .num_f("score", u.score)
+                        .num_u("evaluations", u.evaluations)
+                        .num_u("accepted", u.accepted)
+                        .bool("annealed", u.annealed),
+                    seq,
+                )
+                .end(),
+            );
+        }
+    }
+    if cancelled {
+        // Decisions made before the token fired still streamed above;
+        // the clock rests at the cancellation point.
+        out.push(ServeError::new("cancelled", "serve cancelled mid-advance").line(seq));
+        return out;
+    }
+    if sess.params.metrics {
+        let summary = summarize(sim.policy_name(), sim.records());
+        let obj = JsonObject::new()
+            .str("type", "metrics")
+            .str("session", name)
+            .num_f("clock_s", sim.stats().clock.as_secs_f64());
+        out.push(seq_tail(summary_fields(obj, &summary), seq).end());
+    }
+    let stats = sim.stats();
+    out.push(
+        seq_tail(
+            JsonObject::new()
+                .str("type", "ok")
+                .str("op", "advance")
+                .str("session", name)
+                .num_f("clock_s", stats.clock.as_secs_f64())
+                .num_u("started", started)
+                .num_u("finished", finished)
+                .num_u("pending", stats.pending as u64)
+                .num_u("running", stats.running as u64),
+            seq,
+        )
+        .end(),
+    );
+    out
+}
 
 /// The request dispatcher: serve options plus the live session map.
 /// Deterministic by construction — sessions are keyed in a `BTreeMap`
@@ -46,7 +228,7 @@ use crate::workload::{EstimateModel, Family};
 /// what the byte-identical replay guarantee rests on.
 pub struct Dispatcher {
     opts: ServeOptions,
-    sessions: BTreeMap<String, Simulator>,
+    sessions: BTreeMap<String, Session>,
 }
 
 impl Dispatcher {
@@ -55,7 +237,9 @@ impl Dispatcher {
     }
 
     /// The greeting line the service emits before reading any input:
-    /// protocol version and whether a run store is attached.
+    /// protocol version and whether a run store is attached. (The
+    /// `--session-jobs` level is deliberately absent: transcripts must
+    /// be byte-identical across levels.)
     pub fn hello(&self) -> String {
         JsonObject::new()
             .str("type", "hello")
@@ -86,6 +270,58 @@ impl Dispatcher {
         out
     }
 
+    /// Is this line a fully valid `advance` for an existing session —
+    /// i.e. eligible for the read-ahead batch the serve loop runs under
+    /// `--session-jobs N > 1`? Anything else (other ops, malformed
+    /// requests, unknown sessions) answers `None` and takes the
+    /// sequential path, so every error line is produced exactly where
+    /// the lockstep service would produce it.
+    pub(crate) fn batch_probe(&self, line: &str) -> Option<AdvanceReq> {
+        let fields = parse_flat_object(line).ok()?;
+        let mut req = Req::new(fields);
+        let seq = req.u64_opt("seq").ok()?;
+        if req.str_req("op").ok()? != "advance" {
+            return None;
+        }
+        let session = req.str_req("session").ok()?;
+        let to_s = req.u64_req("to_s").ok()?;
+        req.finish().ok()?;
+        if !self.sessions.contains_key(&session) {
+            return None;
+        }
+        Some(AdvanceReq { session, to_s, seq })
+    }
+
+    /// Execute a batch of `advance` requests for *distinct* sessions on
+    /// a work-stealing pool (the pump guarantees distinctness). Each
+    /// session is lifted out of the map and moved to a worker — whole
+    /// sessions migrate, nothing is shared — then reinserted; responses
+    /// come back grouped per request, in request order, so the caller
+    /// can interleave them with the transcript's `in` records exactly
+    /// the way sequential execution would have.
+    pub(crate) fn advance_batch(&mut self, reqs: Vec<AdvanceReq>, jobs: usize) -> Vec<Vec<String>> {
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        let tasks: Vec<(AdvanceReq, Session)> = reqs
+            .into_iter()
+            .map(|r| {
+                let sess = self.sessions.remove(&r.session).expect("batched session vanished");
+                (r, sess)
+            })
+            .collect();
+        let done = parallel_map(tasks, jobs, |(r, mut sess)| {
+            let lines = advance_core(&r.session, &mut sess, r.to_s, r.seq);
+            (r.session, sess, lines)
+        });
+        let mut out = Vec::new();
+        for (name, sess, lines) in done {
+            self.sessions.insert(name, sess);
+            out.push(lines);
+        }
+        out
+    }
+
     fn dispatch(
         &mut self,
         req: &mut Req,
@@ -99,12 +335,14 @@ impl Dispatcher {
             "advance" => self.op_advance(req, seq, out),
             "query" => self.op_query(req, seq, out),
             "cancel" => self.op_cancel(req, seq, out),
+            "snapshot" => self.op_snapshot(req, seq, out),
+            "restore" => self.op_restore(req, seq, out),
             "run" => self.op_run(req, seq, out),
             other => Err(ServeError::proto(format!("unknown op `{other}`"))),
         }
     }
 
-    fn session(&mut self, name: &str) -> Result<&mut Simulator, ServeError> {
+    fn session(&mut self, name: &str) -> Result<&mut Session, ServeError> {
         self.sessions
             .get_mut(name)
             .ok_or_else(|| ServeError::new("session", format!("unknown session `{name}`")))
@@ -132,6 +370,8 @@ impl Dispatcher {
         let plan_window = req.u64_opt("plan_window")?.unwrap_or(0) as usize;
         let warm = req.bool_opt("plan_warm_start")?.unwrap_or(false);
         let group_aware = req.bool_opt("plan_group_aware")?.unwrap_or(false);
+        let plan_deltas = req.bool_opt("plan_deltas")?.unwrap_or(false);
+        let metrics = req.bool_opt("metrics")?.unwrap_or(false);
         req.finish()?;
         if self.sessions.contains_key(&name) {
             return Err(ServeError::new(
@@ -139,18 +379,20 @@ impl Dispatcher {
                 format!("session `{name}` is already open"),
             ));
         }
-        // The serve entry point's single SimOptions construction site
-        // (the same single-site rule the CLI and campaign layers follow).
-        let opts = SimOptions::new()
-            .bb(bb_bytes, arch.placement())
-            .io(io)
-            .tick(Duration::from_secs(tick_s))
-            .seed(seed)
-            .plan_warm_start(warm)
-            .plan_window(plan_window)
-            .plan_group_aware(group_aware)
-            .cancel(self.opts.cancel.child());
-        let sim = opts.online_simulator(policy);
+        let params = OpenParams {
+            policy,
+            bb_bytes,
+            arch,
+            tick_s,
+            seed,
+            io,
+            plan_window,
+            warm,
+            group_aware,
+            plan_deltas,
+            metrics,
+        };
+        let sess = build_session(params, &self.opts.cancel);
         out.push(
             seq_tail(
                 JsonObject::new()
@@ -163,7 +405,7 @@ impl Dispatcher {
             )
             .end(),
         );
-        self.sessions.insert(name, sim);
+        self.sessions.insert(name, sess);
         Ok(())
     }
 
@@ -181,15 +423,16 @@ impl Dispatcher {
         let phases = req.u32_opt("phases")?.unwrap_or(1);
         let submit_s = req.u64_opt("submit_s")?;
         req.finish()?;
-        let sim = self.session(&name)?;
+        let sim = &mut self.session(&name)?.sim;
+        let clock = sim.stats().clock;
         let submit = match submit_s {
             Some(s) => Time::from_secs(s),
-            None => sim.now(),
+            None => clock,
         };
-        if submit < sim.now() {
+        if submit < clock {
             return Err(ServeError::new(
                 "state",
-                format!("submit time {submit} is in the session's past (clock {})", sim.now()),
+                format!("submit time {submit} is in the session's past (clock {clock})"),
             ));
         }
         let job = Job {
@@ -228,68 +471,8 @@ impl Dispatcher {
         let name = req.str_req("session")?;
         let to_s = req.u64_req("to_s")?;
         req.finish()?;
-        let sim = self.session(&name)?;
-        let to = Time::from_secs(to_s);
-        if to < sim.now() {
-            return Err(ServeError::new(
-                "state",
-                format!("advance target {to} regresses the session clock ({})", sim.now()),
-            ));
-        }
-        let cancelled = sim.advance_to(to);
-        let (mut started, mut finished) = (0u64, 0u64);
-        for d in sim.take_decisions() {
-            let line = match d {
-                Decision::Started { job, t } => {
-                    started += 1;
-                    seq_tail(
-                        JsonObject::new()
-                            .str("type", "event")
-                            .str("session", &name)
-                            .str("kind", "start")
-                            .num_u("job", job.0 as u64)
-                            .num_f("t_s", t.as_secs_f64()),
-                        seq,
-                    )
-                    .end()
-                }
-                Decision::Finished { job, t, killed } => {
-                    finished += 1;
-                    seq_tail(
-                        JsonObject::new()
-                            .str("type", "event")
-                            .str("session", &name)
-                            .str("kind", "finish")
-                            .num_u("job", job.0 as u64)
-                            .num_f("t_s", t.as_secs_f64())
-                            .bool("killed", killed),
-                        seq,
-                    )
-                    .end()
-                }
-            };
-            out.push(line);
-        }
-        if cancelled {
-            // Decisions made before the token fired still streamed above;
-            // the clock rests at the cancellation point.
-            return Err(ServeError::new("cancelled", "serve cancelled mid-advance"));
-        }
-        out.push(
-            seq_tail(
-                JsonObject::new()
-                    .str("type", "ok")
-                    .str("op", "advance")
-                    .str("session", &name)
-                    .num_f("clock_s", sim.now().as_secs_f64())
-                    .num_u("started", started)
-                    .num_u("finished", finished)
-                    .num_u("pending", sim.n_pending() as u64)
-                    .num_u("running", sim.n_running() as u64),
-                seq,
-            )
-            .end(),
-        );
+        let sess = self.session(&name)?;
+        out.extend(advance_core(&name, sess, to_s, seq));
         Ok(())
     }
 
@@ -301,18 +484,19 @@ impl Dispatcher {
     ) -> Result<(), ServeError> {
         let name = req.str_req("session")?;
         req.finish()?;
-        let sim = self.session(&name)?;
+        let sim = &self.session(&name)?.sim;
         let summary = summarize(sim.policy_name(), sim.records());
+        let stats = sim.stats();
         let obj = JsonObject::new()
             .str("type", "ok")
             .str("op", "query")
             .str("session", &name)
             .str("policy", sim.policy_name())
-            .num_f("clock_s", sim.now().as_secs_f64())
-            .num_u("submitted", sim.n_jobs() as u64)
-            .num_u("pending", sim.n_pending() as u64)
-            .num_u("running", sim.n_running() as u64)
-            .num_u("completed", sim.records().len() as u64);
+            .num_f("clock_s", stats.clock.as_secs_f64())
+            .num_u("submitted", stats.submitted as u64)
+            .num_u("pending", stats.pending as u64)
+            .num_u("running", stats.running as u64)
+            .num_u("completed", stats.completed as u64);
         out.push(seq_tail(summary_fields(obj, &summary), seq).end());
         Ok(())
     }
@@ -335,6 +519,226 @@ impl Dispatcher {
             )
             .end(),
         );
+        Ok(())
+    }
+
+    /// Persist a session's event history to the run store (see the
+    /// module doc for why the history, not the hot state, is what gets
+    /// written). The file lands under `<store>/sessions/<name>.snapshot`
+    /// via temp-then-rename, so a reader never sees a half-written
+    /// snapshot and a crashed writer leaves the previous one intact.
+    /// The response omits the filesystem path (announced on stderr
+    /// only) so transcripts stay machine-independent.
+    fn op_snapshot(
+        &mut self,
+        req: &mut Req,
+        seq: Option<u64>,
+        out: &mut Vec<String>,
+    ) -> Result<(), ServeError> {
+        let name = req.str_req("session")?;
+        let snap = match req.str_opt("name")? {
+            Some(n) => n,
+            None => name.clone(),
+        };
+        req.finish()?;
+        check_snap_name(&snap)?;
+        let Some(store) = &self.opts.store else {
+            return Err(ServeError::new(
+                "store",
+                "snapshot needs a run store (serve without --no-store)",
+            ));
+        };
+        let sess = self
+            .sessions
+            .get(&name)
+            .ok_or_else(|| ServeError::new("session", format!("unknown session `{name}`")))?;
+        let stats = sess.sim.stats();
+        let p = &sess.params;
+        // Times travel as exact integer microseconds (`Time`'s native
+        // unit), so replay reconstructs them bit-for-bit.
+        let mut text = JsonObject::new()
+            .str("type", "snapshot")
+            .num_u("format", SNAPSHOT_FORMAT)
+            .num_u("proto", PROTO_VERSION as u64)
+            .str("session", &name)
+            .str("policy", &p.policy.name())
+            .num_u("bb_bytes", p.bb_bytes)
+            .str("bb_arch", p.arch.name())
+            .num_u("tick_s", p.tick_s)
+            .num_u("seed", p.seed)
+            .bool("io", p.io)
+            .num_u("plan_window", p.plan_window as u64)
+            .bool("plan_warm_start", p.warm)
+            .bool("plan_group_aware", p.group_aware)
+            .bool("plan_deltas", p.plan_deltas)
+            .bool("metrics", p.metrics)
+            .num_u("clock_us", stats.clock.0)
+            .num_u("jobs", stats.submitted as u64)
+            .end();
+        text.push('\n');
+        for job in sess.sim.submitted_jobs() {
+            text.push_str(
+                &JsonObject::new()
+                    .str("type", "job")
+                    .num_u("submit_us", job.submit.0)
+                    .num_u("walltime_us", job.walltime.0)
+                    .num_u("compute_us", job.compute_time.0)
+                    .num_u("procs", job.procs as u64)
+                    .num_u("bb_bytes", job.bb)
+                    .num_u("phases", job.phases as u64)
+                    .end(),
+            );
+            text.push('\n');
+        }
+        let dir = store.dir().join("sessions");
+        let path = dir.join(format!("{snap}.snapshot"));
+        let write = || -> std::io::Result<()> {
+            std::fs::create_dir_all(&dir)?;
+            let tmp = dir.join(format!(".{snap}.tmp{}", std::process::id()));
+            std::fs::write(&tmp, &text)?;
+            std::fs::rename(&tmp, &path)
+        };
+        write()
+            .map_err(|e| ServeError::new("store", format!("cannot write snapshot `{snap}`: {e}")))?;
+        eprintln!("repro serve: session `{name}` snapshotted to {}", path.display());
+        out.push(
+            seq_tail(
+                JsonObject::new()
+                    .str("type", "ok")
+                    .str("op", "snapshot")
+                    .str("session", &name)
+                    .str("name", &snap)
+                    .num_f("clock_s", stats.clock.as_secs_f64())
+                    .num_u("jobs", stats.submitted as u64),
+                seq,
+            )
+            .end(),
+        );
+        Ok(())
+    }
+
+    /// Rebuild a session from a stored snapshot: same `SimOptions`
+    /// construction site as `open`, the snapshotted jobs re-submitted
+    /// in their original (dense-id) order, then one `advance_to` back
+    /// to the snapshotted clock. The split-advance invariant makes the
+    /// rebuilt hot state — timeline, incumbent plan, RNG, warm-start
+    /// seed — identical to the never-killed session's, so everything
+    /// the session says from here on is byte-identical too.
+    fn op_restore(
+        &mut self,
+        req: &mut Req,
+        seq: Option<u64>,
+        out: &mut Vec<String>,
+    ) -> Result<(), ServeError> {
+        let name = req.str_req("session")?;
+        if name.is_empty() {
+            return Err(ServeError::proto("session name must not be empty"));
+        }
+        let snap = match req.str_opt("name")? {
+            Some(n) => n,
+            None => name.clone(),
+        };
+        req.finish()?;
+        check_snap_name(&snap)?;
+        let Some(store) = &self.opts.store else {
+            return Err(ServeError::new(
+                "store",
+                "restore needs a run store (serve without --no-store)",
+            ));
+        };
+        if self.sessions.contains_key(&name) {
+            return Err(ServeError::new(
+                "session",
+                format!("session `{name}` is already open"),
+            ));
+        }
+        let path = store.dir().join("sessions").join(format!("{snap}.snapshot"));
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            ServeError::new("store", format!("no snapshot `{snap}` in the store: {e}"))
+        })?;
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().ok_or_else(|| corrupt(&snap, "empty file"))?;
+        let h = parse_flat_object(header).map_err(|e| corrupt(&snap, &e))?;
+        if snap_str(&snap, &h, "type")? != "snapshot" {
+            return Err(corrupt(&snap, "header is not a snapshot record"));
+        }
+        let format = snap_u64(&snap, &h, "format")?;
+        if format != SNAPSHOT_FORMAT {
+            return Err(corrupt(&snap, &format!("unsupported format {format}")));
+        }
+        let policy = Policy::parse(&snap_str(&snap, &h, "policy")?)
+            .ok_or_else(|| corrupt(&snap, "unknown policy"))?;
+        let arch = BbArch::parse(&snap_str(&snap, &h, "bb_arch")?)
+            .ok_or_else(|| corrupt(&snap, "unknown bb_arch"))?;
+        let params = OpenParams {
+            policy,
+            bb_bytes: snap_u64(&snap, &h, "bb_bytes")?,
+            arch,
+            tick_s: snap_u64(&snap, &h, "tick_s")?,
+            seed: snap_u64(&snap, &h, "seed")?,
+            io: snap_bool(&snap, &h, "io")?,
+            plan_window: snap_u64(&snap, &h, "plan_window")? as usize,
+            warm: snap_bool(&snap, &h, "plan_warm_start")?,
+            group_aware: snap_bool(&snap, &h, "plan_group_aware")?,
+            plan_deltas: snap_bool(&snap, &h, "plan_deltas")?,
+            metrics: snap_bool(&snap, &h, "metrics")?,
+        };
+        let clock = Time(snap_u64(&snap, &h, "clock_us")?);
+        let n_jobs = snap_u64(&snap, &h, "jobs")? as usize;
+        let mut sess = build_session(params, &self.opts.cancel);
+        let mut submitted = 0usize;
+        for line in lines {
+            let jf = parse_flat_object(line).map_err(|e| corrupt(&snap, &e))?;
+            if snap_str(&snap, &jf, "type")? != "job" {
+                return Err(corrupt(&snap, "expected a job record"));
+            }
+            let job = Job {
+                id: JobId(0),
+                submit: Time(snap_u64(&snap, &jf, "submit_us")?),
+                walltime: Duration(snap_u64(&snap, &jf, "walltime_us")?),
+                compute_time: Duration(snap_u64(&snap, &jf, "compute_us")?),
+                procs: snap_u64(&snap, &jf, "procs")? as u32,
+                bb: snap_u64(&snap, &jf, "bb_bytes")?,
+                phases: snap_u64(&snap, &jf, "phases")? as u32,
+            };
+            sess.sim.submit(job).map_err(|msg| {
+                corrupt(&snap, &format!("job rejected on replay: {msg}"))
+            })?;
+            submitted += 1;
+        }
+        if submitted != n_jobs {
+            return Err(corrupt(
+                &snap,
+                &format!("header promises {n_jobs} job(s), file holds {submitted}"),
+            ));
+        }
+        if sess.sim.advance_to(clock) {
+            return Err(ServeError::new("cancelled", "serve cancelled mid-restore"));
+        }
+        // Replayed decisions and plan deltas already streamed to the
+        // original client; drain them so the restored session only
+        // reports what happens after the snapshot point.
+        sess.sim.take_decisions();
+        sess.sim.take_plan_updates();
+        let stats = sess.sim.stats();
+        out.push(
+            seq_tail(
+                JsonObject::new()
+                    .str("type", "ok")
+                    .str("op", "restore")
+                    .str("session", &name)
+                    .str("name", &snap)
+                    .str("policy", sess.sim.policy_name())
+                    .num_f("clock_s", stats.clock.as_secs_f64())
+                    .num_u("submitted", stats.submitted as u64)
+                    .num_u("pending", stats.pending as u64)
+                    .num_u("running", stats.running as u64)
+                    .num_u("completed", stats.completed as u64),
+                seq,
+            )
+            .end(),
+        );
+        self.sessions.insert(name, sess);
         Ok(())
     }
 
@@ -426,14 +830,71 @@ fn parse_arch(tok: &str) -> Result<BbArch, ServeError> {
     BbArch::parse(tok).ok_or_else(|| ServeError::proto(format!("unknown bb_arch `{tok}`")))
 }
 
+/// Snapshot names become store file names, so they are restricted to a
+/// filesystem- and traversal-safe alphabet.
+fn check_snap_name(name: &str) -> Result<(), ServeError> {
+    let ok = !name.is_empty()
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_');
+    if ok {
+        Ok(())
+    } else {
+        Err(ServeError::proto(
+            "snapshot name must be non-empty [A-Za-z0-9_-] (it names a store file)",
+        ))
+    }
+}
+
+fn corrupt(snap: &str, why: &str) -> ServeError {
+    ServeError::new("store", format!("corrupt snapshot `{snap}`: {why}"))
+}
+
+fn snap_str(
+    snap: &str,
+    fields: &[(String, JsonValue)],
+    key: &str,
+) -> Result<String, ServeError> {
+    json::get(fields, key)
+        .and_then(|v| v.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| corrupt(snap, &format!("missing/invalid `{key}`")))
+}
+
+fn snap_u64(
+    snap: &str,
+    fields: &[(String, JsonValue)],
+    key: &str,
+) -> Result<u64, ServeError> {
+    json::get(fields, key)
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| corrupt(snap, &format!("missing/invalid `{key}`")))
+}
+
+fn snap_bool(
+    snap: &str,
+    fields: &[(String, JsonValue)],
+    key: &str,
+) -> Result<bool, ServeError> {
+    json::get(fields, key)
+        .and_then(|v| v.as_bool())
+        .ok_or_else(|| corrupt(snap, &format!("missing/invalid `{key}`")))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::campaign::RunStore;
 
     fn one(d: &mut Dispatcher, line: &str) -> String {
         let mut out = d.handle_line(line);
         assert_eq!(out.len(), 1, "{out:?}");
         out.pop().unwrap()
+    }
+
+    fn tmp_store(tag: &str) -> (RunStore, std::path::PathBuf) {
+        let dir = std::env::temp_dir()
+            .join(format!("bbsched-serve-session-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        (RunStore::new(&dir), dir)
     }
 
     #[test]
@@ -521,5 +982,99 @@ mod tests {
         // Campaign error codes pass through (bad scale caught earlier
         // as proto; an unknown policy too).
         assert!(one(&mut d, r#"{"op":"run","policy":"warp"}"#).contains(r#""code":"proto""#));
+    }
+
+    #[test]
+    fn metrics_line_streams_with_each_advance() {
+        let mut d = Dispatcher::new(ServeOptions::default());
+        one(
+            &mut d,
+            r#"{"op":"open","session":"m","policy":"fcfs","io":false,"metrics":true,"seq":1}"#,
+        );
+        one(
+            &mut d,
+            r#"{"op":"submit","session":"m","procs":2,"walltime_s":120,"seq":2}"#,
+        );
+        let out = d.handle_line(r#"{"op":"advance","session":"m","to_s":600,"seq":3}"#);
+        // start, finish, metrics, ok — the metrics line right before ok.
+        assert_eq!(out.len(), 4, "{out:?}");
+        let m = &out[2];
+        assert!(m.starts_with(r#"{"type":"metrics","session":"m""#), "{m}");
+        assert!(m.contains(r#""mean_wait_h":0"#) && m.contains(r#""mean_bsld""#), "{m}");
+        assert!(m.contains(r#""clock_s":600"#) && m.ends_with(r#""seq":3}"#), "{m}");
+        // An advance that completes nothing still reports the running
+        // summary (unchanged counts).
+        let out = d.handle_line(r#"{"op":"advance","session":"m","to_s":1200,"seq":4}"#);
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out[0].contains(r#""type":"metrics""#) && out[0].contains(r#""n_jobs":1"#));
+        // Sessions without the flag never emit metrics lines.
+        one(&mut d, r#"{"op":"open","session":"q","policy":"fcfs","io":false}"#);
+        let out = d.handle_line(r#"{"op":"advance","session":"q","to_s":600}"#);
+        assert_eq!(out.len(), 1, "{out:?}");
+    }
+
+    #[test]
+    fn plan_deltas_stream_on_incumbent_changes_only() {
+        let mut d = Dispatcher::new(ServeOptions::default());
+        one(
+            &mut d,
+            r#"{"op":"open","session":"p","policy":"plan-2","io":false,"plan_deltas":true}"#,
+        );
+        one(&mut d, r#"{"op":"submit","session":"p","procs":4,"walltime_s":600,"seq":2}"#);
+        let out = d.handle_line(r#"{"op":"advance","session":"p","to_s":60,"seq":3}"#);
+        let deltas: Vec<&String> =
+            out.iter().filter(|l| l.contains(r#""type":"plan_delta""#)).collect();
+        assert_eq!(deltas.len(), 1, "{out:?}");
+        assert!(deltas[0].contains(r#""order":"0""#), "{}", deltas[0]);
+        assert!(deltas[0].contains(r#""annealed":"#) && deltas[0].ends_with(r#""seq":3}"#));
+        // The incumbent is unchanged on a quiet advance: no new deltas.
+        let out = d.handle_line(r#"{"op":"advance","session":"p","to_s":120,"seq":4}"#);
+        assert!(
+            out.iter().all(|l| !l.contains(r#""type":"plan_delta""#)),
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn snapshot_requires_a_store_and_a_safe_name() {
+        let mut d = Dispatcher::new(ServeOptions::default());
+        one(&mut d, r#"{"op":"open","session":"a","policy":"fcfs","io":false}"#);
+        assert!(one(&mut d, r#"{"op":"snapshot","session":"a"}"#)
+            .contains(r#""code":"store""#));
+        assert!(one(&mut d, r#"{"op":"snapshot","session":"a","name":"../x"}"#)
+            .contains(r#""code":"proto""#));
+        assert!(one(&mut d, r#"{"op":"restore","session":"b"}"#)
+            .contains(r#""code":"store""#));
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_through_the_store() {
+        let (store, dir) = tmp_store("roundtrip");
+        let opts = ServeOptions { store: Some(store), ..ServeOptions::default() };
+        let mut d = Dispatcher::new(opts);
+        one(&mut d, r#"{"op":"open","session":"a","policy":"fcfs","io":false,"seq":1}"#);
+        one(&mut d, r#"{"op":"submit","session":"a","procs":2,"walltime_s":600,"seq":2}"#);
+        one(
+            &mut d,
+            r#"{"op":"submit","session":"a","procs":4,"walltime_s":300,"submit_s":900,"seq":3}"#,
+        );
+        d.handle_line(r#"{"op":"advance","session":"a","to_s":300,"seq":4}"#);
+        let snap = one(&mut d, r#"{"op":"snapshot","session":"a","name":"s1","seq":5}"#);
+        assert!(snap.contains(r#""op":"snapshot""#) && snap.contains(r#""jobs":2"#), "{snap}");
+        // Restoring over an open session is refused; under a new name it
+        // rebuilds the same state (job 1 still in the future).
+        assert!(one(&mut d, r#"{"op":"restore","session":"a","name":"s1"}"#)
+            .contains(r#""code":"session""#));
+        let line = one(&mut d, r#"{"op":"restore","session":"b","name":"s1","seq":6}"#);
+        assert!(line.contains(r#""op":"restore""#), "{line}");
+        assert!(line.contains(r#""clock_s":300"#) && line.contains(r#""submitted":2"#), "{line}");
+        // From here the two sessions answer identically (modulo name).
+        let qa = one(&mut d, r#"{"op":"query","session":"a","seq":7}"#);
+        let qb = one(&mut d, r#"{"op":"query","session":"b","seq":7}"#);
+        assert_eq!(qa.replace(r#""session":"a""#, r#""session":"b""#), qb);
+        // Unknown snapshot name: a store error, not a crash.
+        assert!(one(&mut d, r#"{"op":"restore","session":"c","name":"nope"}"#)
+            .contains(r#""code":"store""#));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -160,6 +160,28 @@ pub enum Decision {
     Finished { job: JobId, t: Time, killed: bool },
 }
 
+/// A point-in-time view of a live session, returned by
+/// [`Simulator::stats`]. The serve layer renders `ok`/`query` response
+/// blocks *and* the snapshot header from this one struct, so the wire
+/// protocol and the snapshot schema cannot drift apart.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionStats {
+    /// The session clock (last advance target, or the latest event when
+    /// cancelled mid-step).
+    pub clock: Time,
+    /// Jobs ever submitted to this simulator (batch or online).
+    pub submitted: usize,
+    /// Jobs waiting in the scheduler queue right now.
+    pub pending: usize,
+    /// Jobs executing on the machine right now.
+    pub running: usize,
+    /// Jobs that have left the machine (recorded), walltime kills
+    /// included.
+    pub completed: usize,
+    /// Walltime-killed jobs so far (a subset of `completed`).
+    pub killed: u32,
+}
+
 /// Why [`Simulator::pump`] stopped draining events.
 enum PumpStop {
     /// The event queue is empty (batch mode only — online ticks re-arm).
@@ -193,7 +215,9 @@ pub struct Simulator {
     flow_owner: HashMap<u64, (JobId, FlowKind)>,
     records: Vec<JobRecord>,
     gantt: Vec<GanttEntry>,
-    scheduler: Box<dyn Scheduler>,
+    /// `Send` so whole sessions can migrate across the serve layer's
+    /// work-stealing pump threads (the box is moved, never shared).
+    scheduler: Box<dyn Scheduler + Send>,
     arrivals_left: usize,
     net_wake_gen: u64,
     flows_dirty: bool,
@@ -217,7 +241,11 @@ pub struct Simulator {
 impl Simulator {
     /// `jobs` need not be sorted; they are indexed by `JobId` = position
     /// after sorting by submit time.
-    pub fn new(mut jobs: Vec<Job>, scheduler: Box<dyn Scheduler>, cfg: SimConfig) -> Simulator {
+    pub fn new(
+        mut jobs: Vec<Job>,
+        scheduler: Box<dyn Scheduler + Send>,
+        cfg: SimConfig,
+    ) -> Simulator {
         assert!(cfg.bb_capacity > 0 || jobs.iter().all(|j| j.bb == 0),
             "bb_capacity must be set when jobs request burst buffers");
         jobs.sort_by_key(|j| (j.submit, j.id.0));
@@ -302,7 +330,7 @@ impl Simulator {
     /// incremental timeline, a plan policy's incumbent plan, arena and
     /// warm-start seed) stays hot inside the boxed scheduler between
     /// steps — this is the `repro serve` entry point.
-    pub fn online(scheduler: Box<dyn Scheduler>, cfg: SimConfig) -> Simulator {
+    pub fn online(scheduler: Box<dyn Scheduler + Send>, cfg: SimConfig) -> Simulator {
         let mut sim = Simulator::new(Vec::new(), scheduler, cfg);
         sim.online = true;
         // The cluster is still empty here: this probe answers "could the
@@ -474,20 +502,39 @@ impl Simulator {
         self.killed
     }
 
-    /// The session clock (last advance target, or the latest event when
-    /// cancelled mid-step).
-    pub fn now(&self) -> Time {
-        self.clock
+    /// The point-in-time session view — the *single* accessor behind
+    /// serve `ok`/`query` response blocks and the snapshot header
+    /// (replacing the old `now`/`n_pending`/`n_running` trio, which let
+    /// the two surfaces drift apart field by field).
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            clock: self.clock,
+            submitted: self.jobs.len(),
+            pending: self.pending.len(),
+            running: self.running.len(),
+            completed: self.records.len(),
+            killed: self.killed,
+        }
     }
 
-    /// Jobs waiting in the scheduler queue right now.
-    pub fn n_pending(&self) -> usize {
-        self.pending.len()
+    /// Every job ever submitted, in submission (= dense [`JobId`])
+    /// order. Snapshotting persists these and replays them through
+    /// [`Simulator::submit`] on restore; determinism does the rest.
+    pub fn submitted_jobs(&self) -> &[Job] {
+        &self.jobs
     }
 
-    /// Jobs executing on the machine right now.
-    pub fn n_running(&self) -> usize {
-        self.running.len()
+    /// Toggle incumbent-plan journaling in the boxed scheduler (a no-op
+    /// for policies without a plan). Serve sessions opened with
+    /// `plan_deltas` turn this on to stream [`PlanUpdate`] lines.
+    pub fn set_plan_journal(&mut self, on: bool) {
+        self.scheduler.set_plan_journal(on);
+    }
+
+    /// Drain the scheduler's journalled plan updates since the last
+    /// call, in invocation order. Empty for plan-less policies.
+    pub fn take_plan_updates(&mut self) -> Vec<crate::sched::PlanUpdate> {
+        self.scheduler.take_plan_updates()
     }
 
     /// Returns true when the event is a scheduler trigger.
@@ -873,8 +920,9 @@ impl Simulator {
         self.pending.retain(|id| !launched.contains(id));
     }
 
-    /// Test/diagnostic hooks. (`n_running`/`n_pending`/`now` moved up
-    /// with the online accessors — they are protocol surface now.)
+    /// Test/diagnostic hooks. (The old `n_running`/`n_pending`/`now`
+    /// accessors became the one [`Simulator::stats`] view — they are
+    /// protocol surface now.)
     pub fn clock(&self) -> Time {
         self.clock
     }

@@ -17,16 +17,19 @@ pub use swf::{parse_swf, records_to_jobs, SwfConvert, SwfRecord};
 pub use synth::{generate, SynthConfig};
 
 use crate::core::job::Job;
-use crate::platform::PlatformSpec;
+use crate::platform::{PlatformSpec, TopologyConfig};
 
 /// Materialise a workload on a platform: the jobs plus the burst-buffer
 /// capacity the simulator must be configured with. Thin wrapper over
 /// [`Scenario::materialise`] for callers that hold the two halves
-/// separately (the CLI and the campaign runner).
+/// separately (the CLI and the campaign runner). The CLI sizes for the
+/// paper's default machine; `materialise` itself takes the topology
+/// explicitly.
 pub fn load_scenario(
     workload: &WorkloadSpec,
     platform: &PlatformSpec,
     seed: u64,
 ) -> Result<(Vec<Job>, u64), String> {
-    Scenario { workload: workload.clone(), platform: *platform }.materialise(seed)
+    Scenario { workload: workload.clone(), platform: *platform }
+        .materialise(seed, &TopologyConfig::default())
 }

@@ -279,20 +279,16 @@ impl Scenario {
         )
     }
 
-    /// Materialise the scenario on the paper's default topology: the
-    /// job list plus the burst-buffer capacity the simulator must be
-    /// configured with. Deterministic in `seed`; shared by the CLI and
-    /// the campaign runner.
-    pub fn materialise(&self, seed: u64) -> Result<(Vec<Job>, u64), String> {
-        self.materialise_on(seed, &TopologyConfig::default())
-    }
-
-    /// Materialise on an explicit topology: the compute-node count (the
-    /// capacity rule's full-load processor count and the per-node clamp
-    /// divisor) and the per-group storage capacities (the per-node
-    /// placement clamp) are derived from `topo` instead of the paper's
-    /// hard-coded 96.
-    pub fn materialise_on(
+    /// Materialise the scenario on an explicit topology: the job list
+    /// plus the burst-buffer capacity the simulator must be configured
+    /// with. Deterministic in `(seed, topo)`; shared by the CLI, the
+    /// campaign runner and the serve session layer. The compute-node
+    /// count (the capacity rule's full-load processor count and the
+    /// per-node clamp divisor) and the per-group storage capacities
+    /// (the per-node placement clamp) are derived from `topo` — there
+    /// is deliberately no defaulted form, so every caller states whose
+    /// machine the workload is sized for.
+    pub fn materialise(
         &self,
         seed: u64,
         topo: &TopologyConfig,
@@ -485,6 +481,12 @@ mod tests {
         }
     }
 
+    /// The paper's default machine — materialise now always takes the
+    /// topology explicitly, so the tests name their choice once here.
+    fn topo() -> TopologyConfig {
+        TopologyConfig::default()
+    }
+
     #[test]
     fn family_tokens_round_trip() {
         let fams = [
@@ -527,7 +529,7 @@ mod tests {
     fn paper_twin_matches_the_legacy_pipeline_bit_for_bit() {
         // The scenario engine must not perturb the paper-faithful path:
         // same jobs and capacity as driving the generator directly.
-        let (jobs, cap) = scenario(Family::PaperTwin, 0.003).materialise(1).unwrap();
+        let (jobs, cap) = scenario(Family::PaperTwin, 0.003).materialise(1, &topo()).unwrap();
         let cfg = SynthConfig::scaled(1, 0.003);
         assert_eq!(cap, cfg.bb_capacity);
         assert_eq!(jobs, generate(&cfg));
@@ -556,9 +558,11 @@ mod tests {
 
     #[test]
     fn storm_compresses_arrivals_into_windows() {
-        let (base, _) = scenario(Family::PaperTwin, 0.01).materialise(3).unwrap();
+        let (base, _) = scenario(Family::PaperTwin, 0.01).materialise(3, &topo()).unwrap();
         let (storm, _) =
-            scenario(Family::ArrivalStorm { intensity: 4.0 }, 0.01).materialise(3).unwrap();
+            scenario(Family::ArrivalStorm { intensity: 4.0 }, 0.01)
+                .materialise(3, &topo())
+                .unwrap();
         assert_eq!(base.len(), storm.len());
         // Every storm arrival sits in the first quarter of its window.
         for j in &storm {
@@ -574,22 +578,24 @@ mod tests {
 
     #[test]
     fn io_mix_scales_requests_within_clamp() {
-        let (base, cap) = scenario(Family::PaperTwin, 0.01).materialise(5).unwrap();
-        let (mix, _) = scenario(Family::IoMix { factor: 3.0 }, 0.01).materialise(5).unwrap();
+        let (base, cap) = scenario(Family::PaperTwin, 0.01).materialise(5, &topo()).unwrap();
+        let (mix, _) =
+            scenario(Family::IoMix { factor: 3.0 }, 0.01).materialise(5, &topo()).unwrap();
         let max_total = (cap as f64 * 0.8) as u64;
         let sum = |js: &[Job]| js.iter().map(|j| j.bb as u128).sum::<u128>();
         assert!(sum(&mix) > sum(&base), "io-mix must increase aggregate demand");
         assert!(mix.iter().all(|j| j.bb >= 1 && j.bb <= max_total));
         // De-intensifying shrinks demand.
-        let (lean, _) = scenario(Family::IoMix { factor: 0.25 }, 0.01).materialise(5).unwrap();
+        let (lean, _) =
+            scenario(Family::IoMix { factor: 0.25 }, 0.01).materialise(5, &topo()).unwrap();
         assert!(sum(&lean) < sum(&base));
     }
 
     #[test]
     fn heavy_tail_fattens_the_upper_quantiles() {
-        let (base, _) = scenario(Family::PaperTwin, 0.02).materialise(7).unwrap();
+        let (base, _) = scenario(Family::PaperTwin, 0.02).materialise(7, &topo()).unwrap();
         let (ht, _) =
-            scenario(Family::HeavyTailBb { sigma: 1.8 }, 0.02).materialise(7).unwrap();
+            scenario(Family::HeavyTailBb { sigma: 1.8 }, 0.02).materialise(7, &topo()).unwrap();
         let q90 = |js: &[Job]| {
             let mut v: Vec<u64> = js.iter().map(|j| j.bb / j.procs as u64).collect();
             v.sort_unstable();
@@ -604,7 +610,7 @@ mod tests {
             workload: WorkloadSpec::paper_twin(0.01),
             platform: PlatformSpec { bb_arch: BbArch::PerNodeClamp, bb_factor: 1.0 },
         };
-        let (jobs, cap) = spec.materialise(9).unwrap();
+        let (jobs, cap) = spec.materialise(9, &topo()).unwrap();
         let per_node = cap / 96;
         for j in &jobs {
             let cap_j = j.procs as u64 * per_node;
@@ -625,7 +631,7 @@ mod tests {
             workload: WorkloadSpec::paper_twin(0.01),
             platform: PlatformSpec { bb_arch: BbArch::PerNode, bb_factor: 1.0 },
         };
-        let (jobs, cap) = per_node.materialise(9).unwrap();
+        let (jobs, cap) = per_node.materialise(9, &topo()).unwrap();
         // Default topology: 12 storage nodes in 3 groups of 4.
         let min_group = {
             let base = cap / 12;
@@ -645,7 +651,7 @@ mod tests {
             workload: WorkloadSpec::paper_twin(0.01),
             platform: PlatformSpec { bb_arch: BbArch::PerNodeClamp, bb_factor: 1.0 },
         };
-        assert_ne!(jobs, clamped.materialise(9).unwrap().0);
+        assert_ne!(jobs, clamped.materialise(9, &topo()).unwrap().0);
     }
 
     #[test]
@@ -665,7 +671,7 @@ mod tests {
             workload: WorkloadSpec::paper_twin(0.01),
             platform: PlatformSpec { bb_arch: BbArch::PerNodeClamp, bb_factor: 1.0 },
         };
-        let (jobs, cap) = spec.materialise_on(9, &topo).unwrap();
+        let (jobs, cap) = spec.materialise(9, &topo).unwrap();
         let per_node = cap / 12;
         assert!(jobs.iter().all(|j| j.procs <= 12));
         assert!(jobs.iter().all(|j| j.bb <= j.procs as u64 * per_node));
@@ -690,7 +696,7 @@ mod tests {
             },
             platform: PlatformSpec::default(),
         };
-        let (jobs, _) = exact.materialise(11).unwrap();
+        let (jobs, _) = exact.materialise(11, &topo()).unwrap();
         for j in &jobs {
             assert!(j.walltime > j.compute_time);
             // Near-exact: within 5% + the I/O headroom.
@@ -707,7 +713,7 @@ mod tests {
             },
             platform: PlatformSpec::default(),
         };
-        let (sj, _) = sloppy.materialise(11).unwrap();
+        let (sj, _) = sloppy.materialise(11, &topo()).unwrap();
         let mean_factor = sj
             .iter()
             .map(|j| {
@@ -730,28 +736,28 @@ mod tests {
             Family::HeavyTailBb { sigma: 1.6 },
         ];
         for fam in fams {
-            let a = scenario(fam.clone(), 0.005).materialise(42).unwrap();
-            let b = scenario(fam.clone(), 0.005).materialise(42).unwrap();
+            let a = scenario(fam.clone(), 0.005).materialise(42, &topo()).unwrap();
+            let b = scenario(fam.clone(), 0.005).materialise(42, &topo()).unwrap();
             assert_eq!(a, b, "{fam:?}");
-            let c = scenario(fam.clone(), 0.005).materialise(43).unwrap();
+            let c = scenario(fam.clone(), 0.005).materialise(43, &topo()).unwrap();
             assert_ne!(a.0, c.0, "{fam:?} ignores the seed");
         }
     }
 
     #[test]
     fn invalid_parameters_error_cleanly() {
-        assert!(scenario(Family::PaperTwin, 0.0).materialise(1).is_err());
-        assert!(scenario(Family::PaperTwin, f64::NAN).materialise(1).is_err());
+        assert!(scenario(Family::PaperTwin, 0.0).materialise(1, &topo()).is_err());
+        assert!(scenario(Family::PaperTwin, f64::NAN).materialise(1, &topo()).is_err());
         let bad_platform = Scenario {
             workload: WorkloadSpec::paper_twin(0.01),
             platform: PlatformSpec { bb_arch: BbArch::Shared, bb_factor: 0.0 },
         };
-        assert!(bad_platform.materialise(1).is_err());
+        assert!(bad_platform.materialise(1, &topo()).is_err());
         let missing = scenario(Family::SwfReplay { path: PathBuf::from("/nope.swf") }, 1.0);
-        assert!(missing.materialise(1).unwrap_err().contains("reading SWF file"));
+        assert!(missing.materialise(1, &topo()).unwrap_err().contains("reading SWF file"));
         // Replay upscaling would duplicate the x1 cell under a new
         // label; rejected before the file is even opened.
         let upscale = scenario(Family::SwfReplay { path: PathBuf::from("/nope.swf") }, 2.0);
-        assert!(upscale.materialise(1).unwrap_err().contains("must be <= 1"));
+        assert!(upscale.materialise(1, &topo()).unwrap_err().contains("must be <= 1"));
     }
 }

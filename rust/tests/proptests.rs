@@ -10,7 +10,7 @@ use bbsched::core::job::{JobId, JobRequest};
 use bbsched::core::resources::Resources;
 use bbsched::core::time::{Duration, Time};
 use bbsched::platform::flows::FlowNetwork;
-use bbsched::platform::{BbArch, PlatformSpec};
+use bbsched::platform::{BbArch, PlatformSpec, TopologyConfig};
 use bbsched::sched::easy::Easy;
 use bbsched::sched::plan::annealing::{optimise, PermScorer, SaParams};
 use bbsched::sched::plan::builder::{build_plan, PlanJob};
@@ -255,7 +255,7 @@ fn prop_scenario_no_oversubscription() {
         for seed in [1u64, 2] {
             let (jobs, bb_capacity) =
                 tiny_scenario(family.clone(), arch, EstimateModel::Paper)
-                    .materialise(seed)
+                    .materialise(seed, &TopologyConfig::default())
                     .unwrap();
             let n_jobs = jobs.len();
             let cfg = SimConfig {
@@ -387,7 +387,7 @@ fn prop_incremental_timeline_matches_rebuild_under_scenarios() {
         // both timeline-mutation paths — on top of the family's shape.
         let (jobs, bb_capacity) =
             tiny_scenario(family.clone(), arch, EstimateModel::Sloppy { factor: 4.0 })
-                .materialise(3)
+                .materialise(3, &TopologyConfig::default())
                 .unwrap();
         let n_jobs = jobs.len();
         let cfg = SimConfig {
@@ -407,11 +407,11 @@ fn prop_incremental_timeline_matches_rebuild_under_scenarios() {
 /// architecture x policy family that exercises distinct launch paths.
 #[test]
 fn prop_pernode_no_storage_node_oversubscription() {
-    use bbsched::platform::{Cluster, Topology, TopologyConfig};
+    use bbsched::platform::{Cluster, Topology};
     for (family, arch) in scenario_space() {
         for seed in [1u64, 2] {
             let (jobs, bb_capacity) = tiny_scenario(family.clone(), arch, EstimateModel::Paper)
-                .materialise(seed)
+                .materialise(seed, &TopologyConfig::default())
                 .unwrap();
             let n_jobs = jobs.len();
             let cfg = SimConfig {
@@ -486,7 +486,7 @@ fn prop_pernode_placement_diverges_from_clamp() {
         let run = |arch: BbArch| {
             let (jobs, bb_capacity) =
                 tiny_scenario(family.clone(), arch, EstimateModel::Paper)
-                    .materialise(1)
+                    .materialise(1, &TopologyConfig::default())
                     .unwrap();
             let cfg = SimConfig { io_enabled: false, ..scenario_sim_cfg(arch, bb_capacity) };
             run_policy(jobs, Policy::SjfBb, &SimOptions::for_sim(cfg))
@@ -576,7 +576,7 @@ fn prop_window_geq_queue_is_identity() {
     for family in [Family::PaperTwin, Family::ArrivalStorm { intensity: 4.0 }] {
         let (jobs, bb_capacity) =
             tiny_scenario(family.clone(), BbArch::Shared, EstimateModel::Paper)
-                .materialise(1)
+                .materialise(1, &TopologyConfig::default())
                 .unwrap();
         let n_jobs = jobs.len();
         let cfg = SimConfig { bb_capacity, io_enabled: false, ..SimConfig::default() };
@@ -612,7 +612,7 @@ fn prop_group_aware_on_shared_arch_is_identity() {
         for arch in [BbArch::Shared, BbArch::PerNodeClamp] {
             let (jobs, bb_capacity) =
                 tiny_scenario(family.clone(), arch, EstimateModel::Paper)
-                    .materialise(1)
+                    .materialise(1, &TopologyConfig::default())
                     .unwrap();
             let n_jobs = jobs.len();
             let cfg = SimConfig { io_enabled: false, ..scenario_sim_cfg(arch, bb_capacity) };
@@ -649,7 +649,7 @@ fn prop_group_aware_pernode_schedules_everything() {
     ] {
         let (jobs, bb_capacity) =
             tiny_scenario(family.clone(), BbArch::PerNode, EstimateModel::Paper)
-                .materialise(1)
+                .materialise(1, &TopologyConfig::default())
                 .unwrap();
         let n_jobs = jobs.len();
         let cfg = SimConfig {

@@ -11,6 +11,12 @@
 //! - `run` requests persist their cell in the run store, so a restarted
 //!   service answers the same question from disk — byte-identically
 //!   with the cold answer.
+//! - `--session-jobs 4` (the read-ahead batching pump) produces output
+//!   and transcripts byte-identical to the lockstep service, and its
+//!   transcripts replay clean.
+//! - snapshot → kill → restore: a session resumed from a stored
+//!   snapshot continues with a response stream byte-identical to the
+//!   never-killed session's.
 
 use bbsched::campaign::{RunStore, EXIT_OK, EXIT_RUN_FAILED};
 use bbsched::serve::{replay_file, run_loop, Dispatcher, ServeOptions};
@@ -172,12 +178,162 @@ fn recorded_smoke_dialogue_replays_byte_identically() {
 }
 
 #[test]
+fn session_jobs_4_matches_lockstep_output_and_transcript() {
+    // Four interleaved sessions with mixed policies: the read-ahead
+    // batching pump must be observationally identical to lockstep —
+    // same bytes out, same transcript — with only wall-clock differing.
+    let mut script = String::new();
+    for (open, submits) in [
+        (
+            r#"{"op":"open","session":"f","policy":"fcfs","io":false}"#,
+            vec![r#"{"op":"submit","session":"f","procs":8,"walltime_s":900}"#],
+        ),
+        (
+            r#"{"op":"open","session":"e","policy":"fcfs-easy","io":false}"#,
+            vec![
+                r#"{"op":"submit","session":"e","procs":90,"walltime_s":600}"#,
+                r#"{"op":"submit","session":"e","procs":4,"walltime_s":300,"submit_s":60}"#,
+            ],
+        ),
+        (
+            r#"{"op":"open","session":"s","policy":"sjf-bb","io":false,"bb_bytes":500}"#,
+            vec![
+                r#"{"op":"submit","session":"s","procs":4,"walltime_s":600,"bb_bytes":200}"#,
+                r#"{"op":"submit","session":"s","procs":2,"walltime_s":120,"bb_bytes":400}"#,
+            ],
+        ),
+        (
+            r#"{"op":"open","session":"p","policy":"plan-2","io":false,"metrics":true}"#,
+            vec![
+                r#"{"op":"submit","session":"p","procs":8,"walltime_s":1200,"compute_s":600}"#,
+                r#"{"op":"submit","session":"p","procs":96,"walltime_s":600,"compute_s":300}"#,
+            ],
+        ),
+    ] {
+        script.push_str(open);
+        script.push('\n');
+        for s in submits {
+            script.push_str(s);
+            script.push('\n');
+        }
+    }
+    // Interleaved advance runs (batched under jobs>1), split by order
+    // barriers: a query, an unknown-session error, a same-session pair.
+    for to in [300u64, 900, 2400] {
+        for sess in ["f", "e", "s", "p"] {
+            let adv = format!("{{\"op\":\"advance\",\"session\":\"{sess}\",\"to_s\":{to}}}\n");
+            script.push_str(&adv);
+        }
+        script.push_str("{\"op\":\"query\",\"session\":\"p\"}\n");
+    }
+    script.push_str("{\"op\":\"advance\",\"session\":\"zz\",\"to_s\":9000}\n");
+    script.push_str("{\"op\":\"advance\",\"session\":\"f\",\"to_s\":7200}\n");
+    script.push_str("{\"op\":\"advance\",\"session\":\"f\",\"to_s\":7260}\n");
+    script.push_str("{\"op\":\"advance\",\"session\":\"p\",\"to_s\":7200}\n");
+    let run = |jobs: usize| -> (String, String) {
+        let mut out = Vec::new();
+        let mut rec = Vec::new();
+        let opts = ServeOptions { session_jobs: jobs, ..ServeOptions::default() };
+        let code = run_loop(opts, Cursor::new(script.clone()), &mut out, Some(&mut rec));
+        assert_eq!(code, EXIT_OK);
+        (String::from_utf8(out).unwrap(), String::from_utf8(rec).unwrap())
+    };
+    let (out_lockstep, rec_lockstep) = run(1);
+    let (out_batched, rec_batched) = run(4);
+    assert_eq!(out_lockstep, out_batched, "--session-jobs 4 changed the byte stream");
+    assert_eq!(rec_lockstep, rec_batched, "--session-jobs 4 changed the transcript");
+    assert!(out_batched.contains(r#""type":"metrics""#), "{out_batched}");
+    // The batched service's transcript replays clean on a lockstep one.
+    let path = tmp_path("jobs4");
+    std::fs::write(&path, &rec_batched).unwrap();
+    assert_eq!(replay_file(ServeOptions::default(), &path), EXIT_OK);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn snapshot_kill_restore_resumes_byte_identically() {
+    // A plan-2 session with warm start, per-node burst buffers and the
+    // opt-in delta/metrics streams — the maximum amount of hot state a
+    // snapshot has to carry through the store. The restored session's
+    // subsequent responses must match the never-killed control's, byte
+    // for byte.
+    let dir = tmp_path("snap");
+    std::fs::create_dir_all(&dir).unwrap();
+    let opts = || ServeOptions {
+        store: Some(RunStore::new(&dir)),
+        cancel: CancelToken::new(),
+        ..ServeOptions::default()
+    };
+    let setup = [
+        concat!(
+            r#"{"op":"open","session":"p","policy":"plan-2","io":false,"bb_bytes":1000,"#,
+            r#""bb_arch":"per-node","plan_warm_start":true,"plan_deltas":true,"metrics":true}"#,
+        ),
+        concat!(
+            r#"{"op":"submit","session":"p","procs":8,"walltime_s":1200,"compute_s":600,"#,
+            r#""bb_bytes":300}"#,
+        ),
+        r#"{"op":"submit","session":"p","procs":96,"walltime_s":600,"compute_s":300}"#,
+        concat!(
+            r#"{"op":"submit","session":"p","procs":4,"walltime_s":2400,"compute_s":1200,"#,
+            r#""bb_bytes":200,"submit_s":120}"#,
+        ),
+        concat!(
+            r#"{"op":"submit","session":"p","procs":16,"walltime_s":900,"compute_s":450,"#,
+            r#""bb_bytes":100,"submit_s":300}"#,
+        ),
+        r#"{"op":"advance","session":"p","to_s":600}"#,
+    ];
+    let suffix = [
+        r#"{"op":"advance","session":"p","to_s":1200}"#,
+        r#"{"op":"advance","session":"p","to_s":3600}"#,
+        r#"{"op":"query","session":"p"}"#,
+    ];
+    // The uninterrupted control.
+    let mut control = Dispatcher::new(opts());
+    for line in &setup {
+        control.handle_line(line);
+    }
+    let control_suffix: Vec<Vec<String>> =
+        suffix.iter().map(|l| control.handle_line(l)).collect();
+    // The snapshotted session, killed right after the snapshot...
+    let mut victim = Dispatcher::new(opts());
+    for line in &setup {
+        victim.handle_line(line);
+    }
+    let snap = victim.handle_line(r#"{"op":"snapshot","session":"p","name":"s1"}"#);
+    assert!(snap[0].contains(r#""op":"snapshot""#), "{snap:?}");
+    assert!(snap[0].contains(r#""clock_s":600"#) && snap[0].contains(r#""jobs":4"#), "{snap:?}");
+    drop(victim);
+    // ...and resumed by a fresh service process over the same store.
+    let mut resumed = Dispatcher::new(opts());
+    let restore = resumed.handle_line(r#"{"op":"restore","session":"p","name":"s1"}"#);
+    assert!(restore[0].contains(r#""op":"restore""#), "{restore:?}");
+    assert!(restore[0].contains(r#""clock_s":600"#), "{restore:?}");
+    let resumed_suffix: Vec<Vec<String>> =
+        suffix.iter().map(|l| resumed.handle_line(l)).collect();
+    assert_eq!(
+        control_suffix, resumed_suffix,
+        "a restored session diverged from the never-killed one"
+    );
+    // The compared stream is substantial: events plus the opt-in
+    // metrics lines all survived the kill/restore boundary.
+    let flat: Vec<String> = resumed_suffix.concat();
+    assert!(flat.iter().any(|l| l.contains(r#""type":"event""#)), "{flat:?}");
+    assert!(flat.iter().any(|l| l.contains(r#""type":"metrics""#)), "{flat:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn run_requests_survive_service_restarts_via_the_store() {
     let dir = tmp_path("store");
     std::fs::create_dir_all(&dir).unwrap();
     let line = r#"{"op":"run","policy":"fcfs","scale":0.003,"io":false,"seq":9}"#;
-    let opts =
-        || ServeOptions { store: Some(RunStore::new(&dir)), cancel: CancelToken::new() };
+    let opts = || ServeOptions {
+        store: Some(RunStore::new(&dir)),
+        cancel: CancelToken::new(),
+        ..ServeOptions::default()
+    };
     let mut first = Dispatcher::new(opts());
     let cold = first.handle_line(line);
     assert_eq!(cold.len(), 1, "{cold:?}");
