@@ -61,6 +61,27 @@
 //!   per-policy `sched_wall` trajectory (enforced by the CI
 //!   `bench-gate` job against the committed baseline).
 //!
+//! Event-loop microarchitecture ([`sim::simulator`]):
+//! - Batched dispatch — same-timestamp events are processed as one
+//!   batch (network drain first, then FIFO event dispatch, then at most
+//!   one scheduler invocation), and every per-batch buffer — the event
+//!   batch, the completed-flow list, the scheduler-view snapshot — is
+//!   recycled, so a warm steady-state batch performs zero heap
+//!   allocations (pinned alongside the scorer tier in `tests/alloc.rs`).
+//! - Hash-free state — the running set is a dense [`sim::RunningSet`]
+//!   slab (`JobId -> slot` index, swap-remove + fix-up), flow ownership
+//!   is packed into each flow's tag (`(job << 2) | kind`,
+//!   [`sim::jobexec::flow_tag`]), and the fluid network stores flows in
+//!   a sorted vector so completions dispatch — and rates freeze — in
+//!   flow-id order. Nothing on the event path iterates a `HashMap`, so
+//!   determinism is structural, not seed-dependent.
+//! - Stale-event guards — generation counters invalidate queued events
+//!   whose cause disappeared (a killed job's `NetworkWake`/phase-end);
+//!   a stale wake is *not* a scheduler trigger.
+//! - [`sched::timeline::Profile`] mutations coalesce only the two seams
+//!   of the changed interval (O(1) after the binary-search splits)
+//!   instead of sweeping every breakpoint per reservation.
+//!
 //! Plan-optimisation hot path ([`sched::plan`]):
 //! - Delta scoring — SA neighbour moves re-score from their first
 //!   changed position through the

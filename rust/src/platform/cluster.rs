@@ -309,6 +309,22 @@ impl Cluster {
         std::mem::take(&mut self.deltas)
     }
 
+    /// Take the single pending delta, asserting there is exactly one —
+    /// the launch-path contract (one allocation, one delta). Unlike
+    /// [`Cluster::drain_deltas`] this keeps the buffer's capacity, so
+    /// the simulator's event loop emits no per-launch `Vec` churn.
+    pub fn take_delta(&mut self) -> TimelineDelta {
+        assert_eq!(self.deltas.len(), 1, "exactly one delta per allocation");
+        self.deltas.pop().unwrap()
+    }
+
+    /// Drop pending deltas without yielding them (release paths that
+    /// account for the change through their own bookkeeping), keeping
+    /// the buffer's capacity.
+    pub fn discard_deltas(&mut self) {
+        self.deltas.clear();
+    }
+
     pub fn allocation(&self, job: JobId) -> Option<&Allocation> {
         self.allocations.get(&job)
     }

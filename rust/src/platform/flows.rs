@@ -8,9 +8,16 @@
 //!
 //! The simulator advances flows between events and asks for the earliest
 //! completion to schedule the next network event.
+//!
+//! Determinism: flows live in a `Vec` sorted by ascending [`FlowId`]
+//! (ids are handed out monotonically, removals preserve order), so
+//! completion dispatch, progressive-filling freeze order, and therefore
+//! every float operation happen in id order — the byte-identity contract
+//! must not depend on `HashMap` iteration (std's hasher is randomly
+//! seeded per process). `recompute_rates` runs on struct-held scratch
+//! buffers and performs no heap allocations once warm.
 
 use crate::core::time::{Duration, Time};
-use std::collections::HashMap;
 
 pub type FlowId = u64;
 
@@ -31,7 +38,9 @@ pub struct Flow {
 #[derive(Debug)]
 pub struct FlowNetwork {
     capacities: Vec<f64>,
-    flows: HashMap<FlowId, Flow>,
+    /// Active flows, sorted by ascending id (the insertion order, since
+    /// ids are monotone and removals are order-preserving).
+    flows: Vec<Flow>,
     next_id: FlowId,
     /// Time up to which all `remaining` values are valid.
     clock: Time,
@@ -39,17 +48,24 @@ pub struct FlowNetwork {
     /// Completion epsilon: flows with fewer than this many bytes left are
     /// considered finished (guards float dust).
     epsilon: f64,
+    // Recycled progressive-filling scratch (see `recompute_rates`).
+    scratch_cap: Vec<f64>,
+    scratch_count: Vec<u32>,
+    scratch_frozen: Vec<bool>,
 }
 
 impl FlowNetwork {
     pub fn new(link_capacities: Vec<f64>) -> FlowNetwork {
         FlowNetwork {
             capacities: link_capacities,
-            flows: HashMap::new(),
+            flows: Vec::new(),
             next_id: 1,
             clock: Time::ZERO,
             rates_dirty: false,
             epsilon: 1e-3,
+            scratch_cap: Vec::new(),
+            scratch_count: Vec::new(),
+            scratch_frozen: Vec::new(),
         }
     }
 
@@ -57,8 +73,12 @@ impl FlowNetwork {
         self.flows.len()
     }
 
+    fn index_of(&self, id: FlowId) -> Option<usize> {
+        self.flows.binary_search_by_key(&id, |f| f.id).ok()
+    }
+
     pub fn flow(&self, id: FlowId) -> Option<&Flow> {
-        self.flows.get(&id)
+        self.index_of(id).map(|i| &self.flows[i])
     }
 
     /// Add a flow of `bytes` over `route` at the current clock; returns its id.
@@ -70,24 +90,27 @@ impl FlowNetwork {
         route.dedup();
         let id = self.next_id;
         self.next_id += 1;
-        self.flows.insert(id, Flow { id, route, remaining: bytes, rate: 0.0, tag });
+        // Monotone ids: the push keeps `flows` sorted.
+        self.flows.push(Flow { id, route, remaining: bytes, rate: 0.0, tag });
         self.rates_dirty = true;
         id
     }
 
     /// Remove a flow (e.g. its job was killed). Returns the flow if present.
+    /// Order-preserving, so the id-sorted invariant survives.
     pub fn remove_flow(&mut self, id: FlowId) -> Option<Flow> {
-        let f = self.flows.remove(&id);
-        if f.is_some() {
-            self.rates_dirty = true;
-        }
-        f
+        let i = self.index_of(id)?;
+        self.rates_dirty = true;
+        Some(self.flows.remove(i))
     }
 
     /// Advance the fluid state to absolute time `now`, draining bytes at
-    /// current rates, and return the flows that completed (remaining ~ 0),
-    /// removing them from the network.
-    pub fn advance_to(&mut self, now: Time) -> Vec<Flow> {
+    /// current rates, and move the flows that completed (remaining ~ 0)
+    /// into `done` — cleared first, then filled in ascending id order so
+    /// the caller's completion dispatch is deterministic. The survivors
+    /// keep their order.
+    pub fn advance_into(&mut self, now: Time, done: &mut Vec<Flow>) {
+        done.clear();
         debug_assert!(now >= self.clock, "time went backwards: {now} < {}", self.clock);
         if self.rates_dirty {
             self.recompute_rates();
@@ -95,24 +118,31 @@ impl FlowNetwork {
         let dt = (now - self.clock).as_secs_f64();
         self.clock = now;
         if dt > 0.0 {
-            for f in self.flows.values_mut() {
+            for f in &mut self.flows {
                 f.remaining -= f.rate * dt;
             }
         }
         let eps = self.epsilon;
-        let done_ids: Vec<FlowId> = self
-            .flows
-            .values()
-            .filter(|f| f.remaining <= eps)
-            .map(|f| f.id)
-            .collect();
-        let mut done = Vec::with_capacity(done_ids.len());
-        for id in done_ids {
-            done.push(self.flows.remove(&id).unwrap());
-        }
-        if !done.is_empty() {
+        if self.flows.iter().any(|f| f.remaining <= eps) {
+            // Order-preserving extraction; completions per batch are few,
+            // so the remove-compaction cost stays negligible.
+            let mut i = 0;
+            while i < self.flows.len() {
+                if self.flows[i].remaining <= eps {
+                    done.push(self.flows.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
             self.rates_dirty = true;
         }
+    }
+
+    /// [`FlowNetwork::advance_into`] returning a fresh `Vec` (test and
+    /// one-shot convenience; the simulator recycles a scratch buffer).
+    pub fn advance_to(&mut self, now: Time) -> Vec<Flow> {
+        let mut done = Vec::new();
+        self.advance_into(now, &mut done);
         done
     }
 
@@ -123,7 +153,7 @@ impl FlowNetwork {
             self.recompute_rates();
         }
         self.flows
-            .values()
+            .iter()
             .filter(|f| f.rate > 0.0)
             .map(|f| {
                 let secs = (f.remaining.max(0.0)) / f.rate;
@@ -137,30 +167,36 @@ impl FlowNetwork {
     /// Progressive filling: repeatedly find the bottleneck link (smallest
     /// fair share = remaining capacity / unfrozen flows), freeze its flows
     /// at that share, subtract, and continue. O(L * F) per round, few
-    /// rounds in practice.
+    /// rounds in practice. Flows freeze in ascending id order within a
+    /// round, so the float subtraction order — and with it the exact rate
+    /// values — is deterministic. Allocation-free once the scratch
+    /// buffers are warm.
     pub fn recompute_rates(&mut self) {
         self.rates_dirty = false;
         if self.flows.is_empty() {
             return;
         }
-        let mut remaining_cap = self.capacities.clone();
-        // Per-link unfrozen flow counts.
-        let mut link_count = vec![0u32; self.capacities.len()];
-        let mut unfrozen: HashMap<FlowId, ()> = HashMap::with_capacity(self.flows.len());
-        for f in self.flows.values() {
-            unfrozen.insert(f.id, ());
+        let nf = self.flows.len();
+        self.scratch_cap.clear();
+        self.scratch_cap.extend_from_slice(&self.capacities);
+        self.scratch_count.clear();
+        self.scratch_count.resize(self.capacities.len(), 0);
+        self.scratch_frozen.clear();
+        self.scratch_frozen.resize(nf, false);
+        for f in &self.flows {
             for &l in &f.route {
-                link_count[l] += 1;
+                self.scratch_count[l] += 1;
             }
         }
+        let mut unfrozen = nf;
         // Iterate until all flows frozen.
-        while !unfrozen.is_empty() {
+        while unfrozen > 0 {
             // Find bottleneck share.
             let mut best_share = f64::INFINITY;
             let mut best_link = usize::MAX;
-            for (l, &cnt) in link_count.iter().enumerate() {
+            for (l, &cnt) in self.scratch_count.iter().enumerate() {
                 if cnt > 0 {
-                    let share = remaining_cap[l] / cnt as f64;
+                    let share = self.scratch_cap[l] / cnt as f64;
                     if share < best_share {
                         best_share = share;
                         best_link = l;
@@ -168,29 +204,34 @@ impl FlowNetwork {
                 }
             }
             if best_link == usize::MAX {
-                // No constrained link left: shouldn't happen (every flow
-                // crosses at least one link), but freeze at infinity guard.
-                for (id, _) in unfrozen.drain() {
-                    self.flows.get_mut(&id).unwrap().rate = f64::MAX;
+                // No constrained link left (only reachable via flows with
+                // an empty route): freeze the rest at infinity so
+                // `next_completion` resolves them on the next microsecond.
+                for (i, f) in self.flows.iter_mut().enumerate() {
+                    if !self.scratch_frozen[i] {
+                        f.rate = f64::MAX;
+                    }
                 }
                 break;
             }
-            // Freeze every unfrozen flow crossing the bottleneck.
-            let frozen: Vec<FlowId> = unfrozen
-                .keys()
-                .copied()
-                .filter(|id| self.flows[id].route.contains(&best_link))
-                .collect();
-            debug_assert!(!frozen.is_empty());
-            for id in frozen {
-                unfrozen.remove(&id);
-                let route = self.flows[&id].route.clone();
-                self.flows.get_mut(&id).unwrap().rate = best_share;
-                for l in route {
-                    link_count[l] -= 1;
-                    remaining_cap[l] = (remaining_cap[l] - best_share).max(0.0);
+            // Freeze every unfrozen flow crossing the bottleneck, in id
+            // order.
+            let mut frozen_now = 0usize;
+            for i in 0..nf {
+                if self.scratch_frozen[i] || !self.flows[i].route.contains(&best_link) {
+                    continue;
+                }
+                self.scratch_frozen[i] = true;
+                self.flows[i].rate = best_share;
+                frozen_now += 1;
+                for j in 0..self.flows[i].route.len() {
+                    let l = self.flows[i].route[j];
+                    self.scratch_count[l] -= 1;
+                    self.scratch_cap[l] = (self.scratch_cap[l] - best_share).max(0.0);
                 }
             }
+            debug_assert!(frozen_now > 0);
+            unfrozen -= frozen_now;
         }
     }
 
@@ -198,7 +239,7 @@ impl FlowNetwork {
     /// never exceeds capacity).
     pub fn link_loads(&self) -> Vec<f64> {
         let mut loads = vec![0.0; self.capacities.len()];
-        for f in self.flows.values() {
+        for f in &self.flows {
             for &l in &f.route {
                 loads[l] += f.rate;
             }
@@ -301,6 +342,49 @@ mod tests {
     }
 
     #[test]
+    fn simultaneous_completions_dispatch_in_id_order() {
+        // Five identical flows on one link finish at the same instant;
+        // the completion batch must come back in ascending id order —
+        // the property the simulator's byte-identity contract leans on
+        // (the old HashMap storage returned them in hasher order).
+        let mut n = net(&[10.0]);
+        let ids: Vec<FlowId> = (0..5).map(|i| n.add_flow(vec![0], 20.0, i)).collect();
+        let t = n.next_completion().unwrap();
+        let done = n.advance_to(t);
+        assert_eq!(done.len(), 5);
+        let done_ids: Vec<FlowId> = done.iter().map(|f| f.id).collect();
+        assert_eq!(done_ids, ids);
+        let tags: Vec<u64> = done.iter().map(|f| f.tag).collect();
+        assert_eq!(tags, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_route_flow_freezes_at_infinity_and_completes() {
+        // A flow crossing no link (src == dst routing degeneracy) hits
+        // the freeze-at-infinity branch: rate f64::MAX, and
+        // `next_completion` resolves it on the next microsecond instead
+        // of spinning at "now" forever.
+        let mut n = net(&[4.0]);
+        let f = n.add_flow(Vec::new(), 5.0, 9);
+        n.recompute_rates();
+        assert_eq!(n.flow(f).unwrap().rate, f64::MAX);
+        let t = n.next_completion().unwrap();
+        assert_eq!(t, n.clock() + Duration(1));
+        let done = n.advance_to(t);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tag, 9);
+        assert!(n.next_completion().is_none());
+        // Mixed with a real flow, the constrained one still gets the
+        // whole link and a finite completion.
+        let real = n.add_flow(vec![0], 8.0, 1);
+        n.add_flow(Vec::new(), 1.0, 2);
+        n.recompute_rates();
+        assert_eq!(n.flow(real).unwrap().rate, 4.0);
+        let loads = n.link_loads();
+        assert!(loads[0] <= 4.0 + 1e-9, "infinite-rate flows cross no link");
+    }
+
+    #[test]
     fn never_exceeds_capacity_random_stress() {
         use crate::stats::rng::Pcg32;
         let mut rng = Pcg32::seeded(99);
@@ -321,6 +405,55 @@ mod tests {
         for f in (1..=200).filter_map(|i| n.flow(i)) {
             let saturated = f.route.iter().any(|&l| loads[l] >= caps[l] - 1e-6);
             assert!(saturated, "flow {} not bottlenecked", f.id);
+        }
+    }
+
+    #[test]
+    fn link_loads_bounded_under_mixed_add_remove_advance() {
+        // Proptest-style stress: interleave adds, removes and advances
+        // and assert after every mutation that the allocation is
+        // feasible (no link over capacity) — the progressive-filling
+        // invariant must survive arbitrary churn, not just fresh flow
+        // sets.
+        use crate::stats::rng::Pcg32;
+        let mut rng = Pcg32::seeded(7);
+        let caps: Vec<f64> = (0..12).map(|_| rng.range_f64(2.0, 8.0)).collect();
+        let mut n = net(&caps);
+        let mut live: Vec<FlowId> = Vec::new();
+        let mut now = Time::ZERO;
+        for _ in 0..400 {
+            match rng.below(4) {
+                0 | 1 => {
+                    let len = rng.range_u32(1, 4) as usize;
+                    let route: Vec<usize> =
+                        (0..len).map(|_| rng.below(12) as usize).collect();
+                    live.push(n.add_flow(route, rng.range_f64(1.0, 50.0), 0));
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u32) as usize;
+                        let id = live.swap_remove(i);
+                        // May already have completed via an advance.
+                        n.remove_flow(id);
+                    }
+                }
+                _ => {
+                    now = now + Duration::from_secs_f64(rng.range_f64(0.1, 5.0));
+                    let done = n.advance_to(now);
+                    for f in &done {
+                        live.retain(|&id| id != f.id);
+                    }
+                }
+            }
+            n.recompute_rates();
+            let loads = n.link_loads();
+            for (l, &load) in loads.iter().enumerate() {
+                assert!(
+                    load <= caps[l] * (1.0 + 1e-9),
+                    "link {l}: {load} > {} after mixed ops",
+                    caps[l]
+                );
+            }
         }
     }
 }

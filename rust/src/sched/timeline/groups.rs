@@ -113,12 +113,12 @@ impl GroupBbTimelines {
     }
 
     fn profile_mut(&mut self, group: usize) -> &mut Profile {
-        &mut self
+        // Entries are sorted by group id (constructor invariant).
+        let i = self
             .entries
-            .iter_mut()
-            .find(|(g, _)| *g == group)
-            .unwrap_or_else(|| panic!("unknown storage group {group}"))
-            .1
+            .binary_search_by_key(&group, |&(g, _)| g)
+            .unwrap_or_else(|_| panic!("unknown storage group {group}"));
+        &mut self.entries[i].1
     }
 
     /// Is there a single group whose free bytes stay `>= bb` throughout
@@ -133,9 +133,8 @@ impl GroupBbTimelines {
     pub fn fits_shares(&self, shares: &[(usize, u64)], from: Time, to: Time) -> bool {
         shares.iter().all(|&(g, bb)| {
             self.entries
-                .iter()
-                .find(|&&(eg, _)| eg == g)
-                .is_some_and(|(_, p)| p.min_free(from, to).bb >= bb)
+                .binary_search_by_key(&g, |&(eg, _)| eg)
+                .is_ok_and(|i| self.entries[i].1.min_free(from, to).bb >= bb)
         })
     }
 

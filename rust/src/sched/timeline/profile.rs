@@ -94,7 +94,23 @@ impl Profile {
                 .checked_apply(delta)
                 .unwrap_or_else(|| panic!("profile over-subscription at {}", self.points[i].0));
         }
-        self.coalesce();
+        self.coalesce_seams(i0, i1);
+    }
+
+    /// Restore the canonical form (no equal-value neighbours) after a
+    /// uniform delta over segments `[i0, i1)`. Interior neighbours moved
+    /// by the same delta, so only the two boundary seams can newly merge
+    /// — O(1), unlike a full `dedup_by` sweep, which made every
+    /// reservation O(n) in breakpoints even when nothing merged. The
+    /// `i1` seam goes first so `i0` stays a valid index.
+    fn coalesce_seams(&mut self, i0: usize, i1: usize) {
+        if i1 < self.points.len() && self.points[i1].1 == self.points[i1 - 1].1 {
+            self.points.remove(i1);
+        }
+        if i0 > 0 && self.points[i0].1 == self.points[i0 - 1].1 {
+            self.points.remove(i0);
+        }
+        debug_assert!(self.points.windows(2).all(|w| w[0].1 != w[1].1), "profile not canonical");
     }
 
     /// Subtract `req` over `[from, to)` (tentative or durable reservation).
@@ -123,10 +139,6 @@ impl Profile {
             self.points.drain(..i);
         }
         self.points[0].0 = now;
-    }
-
-    fn coalesce(&mut self) {
-        self.points.dedup_by(|next, prev| next.1 == prev.1);
     }
 
     /// Earliest `t >= not_before` such that free >= `req` throughout
@@ -349,6 +361,26 @@ mod tests {
         p.add(t(0), t(50), res(1, 1));
         assert_eq!(p.len(), 1);
         assert_eq!(p.free_at(t(100)), res(4, 10));
+    }
+
+    #[test]
+    fn seam_coalescing_keeps_the_profile_canonical() {
+        // Releases that exactly undo earlier reservations must merge
+        // segments back at both seams (and only there — the O(1)
+        // coalesce checks just the boundary pairs).
+        let mut p = Profile::flat(t(0), res(8, 80));
+        p.subtract(t(10), t(20), res(2, 5));
+        p.subtract(t(20), t(30), res(2, 5));
+        // Equal neighbours merged across the shared breakpoint at 20.
+        assert_eq!(p.len(), 3, "{:?}", p.breakpoints());
+        // Undo the middle: both seams of [10, 30) merge, back to flat.
+        p.add(t(10), t(30), res(2, 5));
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.free_at(t(15)), res(8, 80));
+        // A delta reaching the open end coalesces the left seam only.
+        p.subtract(t(40), Time::MAX, res(1, 1));
+        p.add(t(40), Time::MAX, res(1, 1));
+        assert_eq!(p.len(), 1);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! job stages its results out (burst buffer -> PFS) and completes once
 //! stage-out *and* all pending drains finish.
 
-use crate::core::job::{Job, JobState};
+use crate::core::job::{Job, JobId, JobState};
 use crate::core::time::{Duration, Time};
 use crate::platform::cluster::Allocation;
 use crate::platform::flows::FlowId;
@@ -25,6 +25,42 @@ pub enum FlowKind {
     Drain,
     /// Burst buffer -> PFS, final data staging.
     StageOut,
+}
+
+impl FlowKind {
+    /// Two-bit wire code for the flow-tag encoding (see
+    /// [`flow_tag`]/[`decode_flow_tag`]).
+    pub fn code(self) -> u64 {
+        match self {
+            FlowKind::StageIn => 0,
+            FlowKind::Checkpoint => 1,
+            FlowKind::Drain => 2,
+            FlowKind::StageOut => 3,
+        }
+    }
+
+    pub fn from_code(code: u64) -> FlowKind {
+        match code {
+            0 => FlowKind::StageIn,
+            1 => FlowKind::Checkpoint,
+            2 => FlowKind::Drain,
+            3 => FlowKind::StageOut,
+            other => unreachable!("invalid flow-kind code {other}"),
+        }
+    }
+}
+
+/// Pack a flow's owner and purpose into the network layer's opaque tag:
+/// `(job id << 2) | kind`. The simulator dispatches completions straight
+/// from the tag instead of keeping a side `FlowId -> (JobId, FlowKind)`
+/// map in lock-step with the flow set.
+pub fn flow_tag(job: JobId, kind: FlowKind) -> u64 {
+    ((job.0 as u64) << 2) | kind.code()
+}
+
+/// Inverse of [`flow_tag`].
+pub fn decode_flow_tag(tag: u64) -> (JobId, FlowKind) {
+    (JobId((tag >> 2) as u32), FlowKind::from_code(tag & 0b11))
 }
 
 /// Execution state of one running job.
@@ -196,6 +232,17 @@ mod tests {
         // Zero-byte slices are skipped.
         let z = stage_transfers(FlowKind::Drain, &nodes, &[(50, 0)], 99);
         assert!(z.is_empty());
+    }
+
+    #[test]
+    fn flow_tag_round_trips_every_kind() {
+        for kind in [FlowKind::StageIn, FlowKind::Checkpoint, FlowKind::Drain, FlowKind::StageOut]
+        {
+            for id in [0u32, 1, 7, u32::MAX] {
+                let tag = flow_tag(JobId(id), kind);
+                assert_eq!(decode_flow_tag(tag), (JobId(id), kind));
+            }
+        }
     }
 
     #[test]

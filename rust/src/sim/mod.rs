@@ -3,8 +3,10 @@
 
 pub mod events;
 pub mod jobexec;
+pub mod running;
 pub mod simulator;
 
 pub use events::{Event, EventQueue};
 pub use jobexec::{FlowKind, RunningJob};
+pub use running::RunningSet;
 pub use simulator::{GanttEntry, SimConfig, SimResult, Simulator};

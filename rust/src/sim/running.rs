@@ -1,0 +1,163 @@
+//! Dense storage for the simulator's running set.
+//!
+//! Job ids are dense (`JobId(i)` is position `i` in submission order),
+//! so "which jobs are running" needs no hash map: a slab of
+//! [`RunningJob`] values plus a `JobId -> slot` index vector gives O(1)
+//! insert/lookup/remove with zero hashing, cache-friendly iteration, and
+//! — unlike `std::collections::HashMap` — a *deterministic* iteration
+//! order (a pure function of the insert/remove history, independent of
+//! any per-process hasher seed).
+//!
+//! Removal is `swap_remove` on the slab with an index fix-up, so slots
+//! stay contiguous; consumers that need id order (the scheduler view,
+//! horizon kills) sort explicitly.
+
+use crate::core::job::JobId;
+use crate::sim::jobexec::RunningJob;
+
+const VACANT: u32 = u32::MAX;
+
+/// The simulator's running set: a contiguous slab indexed by a dense
+/// `JobId -> slot` map.
+#[derive(Debug, Default)]
+pub struct RunningSet {
+    slots: Vec<RunningJob>,
+    /// `slot_of[id] == VACANT` when the job is not running. Grows with
+    /// the job-id space; entries are recycled as jobs come and go.
+    slot_of: Vec<u32>,
+}
+
+impl RunningSet {
+    pub fn new() -> RunningSet {
+        RunningSet::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    fn slot(&self, id: JobId) -> Option<usize> {
+        match self.slot_of.get(id.0 as usize) {
+            Some(&s) if s != VACANT => Some(s as usize),
+            _ => None,
+        }
+    }
+
+    pub fn contains(&self, id: JobId) -> bool {
+        self.slot(id).is_some()
+    }
+
+    pub fn get(&self, id: JobId) -> Option<&RunningJob> {
+        self.slot(id).map(|s| &self.slots[s])
+    }
+
+    pub fn get_mut(&mut self, id: JobId) -> Option<&mut RunningJob> {
+        let s = self.slot(id)?;
+        Some(&mut self.slots[s])
+    }
+
+    /// Insert a running job (keyed by `rj.job.id`). Panics if the job is
+    /// already running — the simulator launches every job exactly once.
+    pub fn insert(&mut self, rj: RunningJob) {
+        let idx = rj.job.id.0 as usize;
+        if idx >= self.slot_of.len() {
+            self.slot_of.resize(idx + 1, VACANT);
+        }
+        assert_eq!(self.slot_of[idx], VACANT, "job {} already running", rj.job.id);
+        self.slot_of[idx] = self.slots.len() as u32;
+        self.slots.push(rj);
+    }
+
+    /// Remove and return a job's execution state. `swap_remove` keeps the
+    /// slab contiguous; the displaced tail job's index entry is fixed up.
+    pub fn remove(&mut self, id: JobId) -> Option<RunningJob> {
+        let s = self.slot(id)?;
+        self.slot_of[id.0 as usize] = VACANT;
+        let rj = self.slots.swap_remove(s);
+        if let Some(moved) = self.slots.get(s) {
+            self.slot_of[moved.job.id.0 as usize] = s as u32;
+        }
+        Some(rj)
+    }
+
+    /// Iterate the slab in slot order — deterministic, but NOT id order;
+    /// sort downstream where order is contractual.
+    pub fn iter(&self) -> std::slice::Iter<'_, RunningJob> {
+        self.slots.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::Job;
+    use crate::core::time::{Duration, Time};
+    use crate::platform::cluster::Allocation;
+
+    fn rj(id: u32) -> RunningJob {
+        let job = Job {
+            id: JobId(id),
+            submit: Time::ZERO,
+            walltime: Duration::from_secs(100),
+            compute_time: Duration::from_secs(10),
+            procs: 1,
+            bb: 0,
+            phases: 1,
+        };
+        let alloc = Allocation { job: job.id, compute_nodes: vec![0], bb_slices: vec![] };
+        RunningJob::new(job, alloc, Time::ZERO, 1)
+    }
+
+    #[test]
+    fn insert_get_remove_round_trip() {
+        let mut set = RunningSet::new();
+        assert!(set.is_empty());
+        for id in [3u32, 0, 7] {
+            set.insert(rj(id));
+        }
+        assert_eq!(set.len(), 3);
+        assert!(set.contains(JobId(0)));
+        assert!(!set.contains(JobId(1)));
+        assert_eq!(set.get(JobId(7)).unwrap().job.id, JobId(7));
+        set.get_mut(JobId(3)).unwrap().stage_out_done = true;
+        assert!(set.get(JobId(3)).unwrap().stage_out_done);
+        let out = set.remove(JobId(3)).unwrap();
+        assert!(out.stage_out_done);
+        assert!(set.remove(JobId(3)).is_none());
+        assert_eq!(set.len(), 2);
+        // The swap-removed tail (id 7) must still resolve.
+        assert_eq!(set.get(JobId(7)).unwrap().job.id, JobId(7));
+        assert_eq!(set.get(JobId(0)).unwrap().job.id, JobId(0));
+    }
+
+    #[test]
+    fn swap_remove_fixes_up_every_survivor() {
+        let mut set = RunningSet::new();
+        for id in 0..16u32 {
+            set.insert(rj(id));
+        }
+        // Remove evens in an order that exercises head/middle/tail swaps.
+        for id in [0u32, 14, 6, 2, 10, 4, 12, 8] {
+            assert_eq!(set.remove(JobId(id)).unwrap().job.id, JobId(id));
+        }
+        assert_eq!(set.len(), 8);
+        for id in (1..16u32).step_by(2) {
+            assert_eq!(set.get(JobId(id)).unwrap().job.id, JobId(id), "survivor {id}");
+        }
+        let mut ids: Vec<u32> = set.iter().map(|r| r.job.id.0).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (1..16u32).step_by(2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "already running")]
+    fn double_insert_panics() {
+        let mut set = RunningSet::new();
+        set.insert(rj(5));
+        set.insert(rj(5));
+    }
+}

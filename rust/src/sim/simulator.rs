@@ -7,14 +7,24 @@
 //!
 //! Determinism: given (workload, config, scheduler), a run is bit-for-bit
 //! reproducible — events at equal timestamps are processed FIFO and all
-//! state updates are ordered.
+//! state updates are ordered. No simulator state lives in a hash map:
+//! the running set is a dense [`RunningSet`] slab, flow completions
+//! dispatch in flow-id order, and flow ownership is encoded in each
+//! flow's tag ([`crate::sim::jobexec::flow_tag`]) instead of a side map.
+//!
+//! Memory discipline: the event loop recycles its per-batch scratch
+//! (the same-timestamp event batch, the completed-flow buffer, the
+//! scheduler-view vectors), so a steady-state batch — network drain,
+//! event dispatch, a no-launch scheduler pass — performs zero heap
+//! allocations once warm (pinned by the counting-allocator tier in
+//! `tests/alloc.rs`).
 
 use crate::core::cancel::CancelToken;
 use crate::core::job::{Job, JobId, JobRecord, JobRequest, JobState};
 
 use crate::core::time::{Duration, Time};
 use crate::platform::cluster::Cluster;
-use crate::platform::flows::FlowNetwork;
+use crate::platform::flows::{Flow, FlowNetwork};
 use crate::platform::placement::Placement;
 use crate::platform::PlaceProbe;
 use crate::platform::routing::Router;
@@ -22,8 +32,8 @@ use crate::platform::topology::{Topology, TopologyConfig};
 use crate::sched::timeline::ResourceTimeline;
 use crate::sched::{queue_index_map, QueueIndex, RunningInfo, SchedCtx, SchedView, Scheduler};
 use crate::sim::events::{Event, EventQueue};
-use crate::sim::jobexec::{stage_transfers, FlowKind, RunningJob};
-use std::collections::{HashMap, HashSet};
+use crate::sim::jobexec::{decode_flow_tag, flow_tag, stage_transfers, FlowKind, RunningJob};
+use crate::sim::running::RunningSet;
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -211,8 +221,8 @@ pub struct Simulator {
     queue: EventQueue,
     /// Pending queue in arrival order (scheduler sees this).
     pending: Vec<JobId>,
-    running: HashMap<JobId, RunningJob>,
-    flow_owner: HashMap<u64, (JobId, FlowKind)>,
+    /// Dense slab of running jobs — hash-free, deterministic iteration.
+    running: RunningSet,
     records: Vec<JobRecord>,
     gantt: Vec<GanttEntry>,
     /// `Send` so whole sessions can migrate across the serve layer's
@@ -236,6 +246,14 @@ pub struct Simulator {
     /// cluster (the live probe reflects current occupancy, not
     /// schedulability — an unplaceable job would pend forever).
     empty_probe: Option<PlaceProbe>,
+    // --- recycled event-loop scratch (steady state allocates nothing) ---
+    /// Same-timestamp event batch, taken/returned around dispatch.
+    batch: Vec<Event>,
+    /// Completed flows returned by [`FlowNetwork::advance_into`].
+    done_flows: Vec<Flow>,
+    /// Scheduler-view snapshot buffers rebuilt per invocation.
+    view_queue: Vec<JobRequest>,
+    view_running: Vec<RunningInfo>,
 }
 
 impl Simulator {
@@ -305,8 +323,7 @@ impl Simulator {
             clock: Time::ZERO,
             queue,
             pending: Vec::new(),
-            running: HashMap::new(),
-            flow_owner: HashMap::new(),
+            running: RunningSet::new(),
             records: Vec::new(),
             gantt: Vec::new(),
             scheduler,
@@ -321,6 +338,10 @@ impl Simulator {
             online: false,
             decisions: Vec::new(),
             empty_probe: None,
+            batch: Vec::new(),
+            done_flows: Vec::new(),
+            view_queue: Vec::new(),
+            view_running: Vec::new(),
         }
     }
 
@@ -363,18 +384,29 @@ impl Simulator {
             // of this batch.
             let mut trigger = self.drain_network();
             // Process every event scheduled for this exact timestamp as
-            // one batch, then invoke the scheduler at most once.
-            let mut batch = Vec::new();
+            // one batch, then invoke the scheduler at most once. The
+            // batch buffer is recycled across batches (handle() needs
+            // &mut self, so it is taken out for the dispatch loop).
+            let mut batch = std::mem::take(&mut self.batch);
+            batch.clear();
             while self.queue.peek_time() == Some(t) {
                 batch.push(self.queue.pop().unwrap().1);
             }
-            for ev in batch {
+            let mut horizon = false;
+            for &ev in &batch {
                 match ev {
                     // Like the pre-extraction `break 'main`, the rest of
                     // the batch is abandoned with the horizon.
-                    Event::Horizon => return PumpStop::Horizon,
+                    Event::Horizon => {
+                        horizon = true;
+                        break;
+                    }
                     other => trigger |= self.handle(other),
                 }
+            }
+            self.batch = batch;
+            if horizon {
+                return PumpStop::Horizon;
             }
             if trigger && !self.pending.is_empty() {
                 self.invoke_scheduler();
@@ -399,8 +431,11 @@ impl Simulator {
         let stop = self.pump(None);
         let cancelled = matches!(stop, PumpStop::Cancelled);
         if matches!(stop, PumpStop::Horizon) {
-            // Kill whatever is still running so records are complete.
-            let ids: Vec<JobId> = self.running.keys().copied().collect();
+            // Kill whatever is still running so records are complete —
+            // in id order, so the horizon records (and the fingerprint)
+            // are a pure function of the schedule, not of slab layout.
+            let mut ids: Vec<JobId> = self.running.iter().map(|rj| rj.job.id).collect();
+            ids.sort_unstable();
             for id in ids {
                 self.kill_job(id);
             }
@@ -560,16 +595,20 @@ impl Simulator {
                 true
             }
             Event::NetworkWake { gen } => {
-                // Stale wakes are ignored; fresh ones only matter because
-                // drain_network ran at the top of the batch.
-                let _ = gen == self.net_wake_gen;
-                self.cfg.event_triggers // completions may have freed resources
+                // Only a *fresh* wake is a trigger: completions at this
+                // timestamp were already dispatched by drain_network at
+                // the top of the batch. A stale wake (the flow set
+                // changed after it was armed — e.g. a kill removed the
+                // flows it announced) must not cause a scheduling pass:
+                // nothing completed, and with event-driven policies an
+                // extra pass at a phantom time changes launch decisions.
+                gen == self.net_wake_gen && self.cfg.event_triggers
             }
             Event::ComputePhaseEnd { job, phase, gen } => self.on_phase_end(job, phase, gen),
             Event::WalltimeKill { job, gen } => {
                 let valid = self
                     .running
-                    .get(&job)
+                    .get(job)
                     .map(|rj| rj.gen == gen)
                     .unwrap_or(false);
                 if valid {
@@ -586,13 +625,20 @@ impl Simulator {
     // ----- network ------------------------------------------------------
 
     fn drain_network(&mut self) -> bool {
-        let done = self.net.advance_to(self.clock);
+        // advance_into hands back completions in ascending flow-id order
+        // (creation order), so on_flow_done dispatch — and therefore
+        // every downstream state change — is deterministic. Ownership is
+        // decoded from the flow's tag; there is no side map to keep in
+        // lock-step. The buffer is recycled across batches.
+        let mut done = std::mem::take(&mut self.done_flows);
+        self.net.advance_into(self.clock, &mut done);
         let mut trigger = false;
-        for flow in done {
-            if let Some((job, kind)) = self.flow_owner.remove(&flow.id) {
-                trigger |= self.on_flow_done(job, kind, flow.id);
-            }
+        for flow in &done {
+            let (job, kind) = decode_flow_tag(flow.tag);
+            trigger |= self.on_flow_done(job, kind, flow.id);
         }
+        done.clear();
+        self.done_flows = done;
         trigger
     }
 
@@ -610,7 +656,7 @@ impl Simulator {
     /// empty when the job has no burst-buffer request (zero-byte stages
     /// complete instantly).
     fn start_stage_flows(&mut self, id: JobId, kind: FlowKind) -> Vec<u64> {
-        let rj = &self.running[&id];
+        let rj = self.running.get(id).expect("staging flows for a job that is not running");
         let slices: Vec<(usize, u64)> = rj
             .alloc
             .bb_slices
@@ -619,11 +665,11 @@ impl Simulator {
             .collect();
         let transfers =
             stage_transfers(kind, &rj.alloc.compute_nodes, &slices, self.topo.pfs_node);
+        let tag = flow_tag(id, kind);
         let mut ids = Vec::with_capacity(transfers.len());
         for (src, dst, bytes) in transfers {
             let route = self.router.route(&self.topo, src, dst);
-            let fid = self.net.add_flow(route, bytes as f64, id.0 as u64);
-            self.flow_owner.insert(fid, (id, kind));
+            let fid = self.net.add_flow(route, bytes as f64, tag);
             ids.push(fid);
         }
         if !ids.is_empty() {
@@ -649,9 +695,7 @@ impl Simulator {
         // timeline: the job holds its resources until (at most) its
         // walltime bound. Hard asserts — a stale or wrong-job delta
         // would silently corrupt every later scheduling decision.
-        let mut deltas = self.cluster.drain_deltas();
-        assert_eq!(deltas.len(), 1, "exactly one delta per allocation");
-        let delta = deltas.pop().unwrap();
+        let delta = self.cluster.take_delta();
         assert_eq!(delta.job, id);
         self.timeline.job_started_placed(
             id,
@@ -665,7 +709,7 @@ impl Simulator {
         // the kill event would otherwise win the FIFO tie.
         self.queue
             .push(rj.kill_time() + Duration(1), Event::WalltimeKill { job: id, gen });
-        self.running.insert(id, rj);
+        self.running.insert(rj);
         if self.online {
             self.decisions.push(Decision::Started { job: id, t: self.clock });
         }
@@ -673,7 +717,7 @@ impl Simulator {
         if self.cfg.io_enabled && job.bb > 0 {
             let flows = self.start_stage_flows(id, FlowKind::StageIn);
             debug_assert!(!flows.is_empty());
-            let rj = self.running.get_mut(&id).unwrap();
+            let rj = self.running.get_mut(id).unwrap();
             rj.state = JobState::StageIn;
             rj.gating_flows = flows;
         } else if self.cfg.io_enabled {
@@ -682,7 +726,7 @@ impl Simulator {
         } else {
             // I/O disabled: one lumped compute interval.
             let end = self.clock + job.compute_time;
-            let rj = self.running.get_mut(&id).unwrap();
+            let rj = self.running.get_mut(id).unwrap();
             rj.state = JobState::Compute { phase: job.phases - 1 };
             self.queue.push(end, Event::ComputePhaseEnd {
                 job: id,
@@ -693,7 +737,7 @@ impl Simulator {
     }
 
     fn begin_compute_phase(&mut self, id: JobId, phase: u32) {
-        let rj = self.running.get_mut(&id).unwrap();
+        let rj = self.running.get_mut(id).unwrap();
         rj.state = JobState::Compute { phase };
         let end = self.clock + rj.phase_duration(phase);
         let gen = rj.gen;
@@ -701,7 +745,7 @@ impl Simulator {
     }
 
     fn on_phase_end(&mut self, id: JobId, phase: u32, gen: u64) -> bool {
-        let Some(rj) = self.running.get(&id) else { return false };
+        let Some(rj) = self.running.get(id) else { return false };
         if rj.gen != gen || rj.state != (JobState::Compute { phase }) {
             return false; // stale
         }
@@ -710,7 +754,7 @@ impl Simulator {
         if last {
             if has_bb {
                 let flows = self.start_stage_flows(id, FlowKind::StageOut);
-                let rj = self.running.get_mut(&id).unwrap();
+                let rj = self.running.get_mut(id).unwrap();
                 rj.state = JobState::StageOut;
                 if flows.is_empty() {
                     rj.stage_out_done = true;
@@ -727,7 +771,7 @@ impl Simulator {
         } else if has_bb {
             // Checkpoint: computation suspends until it completes.
             let flows = self.start_stage_flows(id, FlowKind::Checkpoint);
-            let rj = self.running.get_mut(&id).unwrap();
+            let rj = self.running.get_mut(id).unwrap();
             rj.state = JobState::Checkpoint { phase };
             if flows.is_empty() {
                 self.begin_compute_phase(id, phase + 1);
@@ -742,7 +786,7 @@ impl Simulator {
     }
 
     fn on_flow_done(&mut self, id: JobId, kind: FlowKind, flow: u64) -> bool {
-        let Some(rj) = self.running.get_mut(&id) else { return false };
+        let Some(rj) = self.running.get_mut(id) else { return false };
         match kind {
             FlowKind::StageIn => {
                 if rj.gating_flow_done(flow) {
@@ -758,7 +802,7 @@ impl Simulator {
                     // Async drain starts now; next compute phase runs
                     // concurrently with it (Fig 4).
                     let drains = self.start_stage_flows(id, FlowKind::Drain);
-                    let rj = self.running.get_mut(&id).unwrap();
+                    let rj = self.running.get_mut(id).unwrap();
                     rj.drain_flows.extend(drains);
                     self.begin_compute_phase(id, phase + 1);
                 }
@@ -784,13 +828,13 @@ impl Simulator {
     }
 
     fn complete_job(&mut self, id: JobId) -> bool {
-        let rj = self.running.remove(&id).unwrap();
-        debug_assert!(rj.all_flow_ids().is_empty());
+        let rj = self.running.remove(id).unwrap();
+        debug_assert!(rj.gating_flows.is_empty() && rj.drain_flows.is_empty());
         self.record(&rj, false);
         self.cluster.release(id);
         // The release delta only bounds the buffer here: job_finished
         // already knows the held amount from its own running map.
-        self.cluster.drain_deltas();
+        self.cluster.discard_deltas();
         // Early completion returns the walltime-bound tail to the
         // timeline.
         self.timeline.job_finished(id, self.clock);
@@ -798,15 +842,14 @@ impl Simulator {
     }
 
     fn kill_job(&mut self, id: JobId) {
-        let rj = self.running.remove(&id).unwrap();
-        for fid in rj.all_flow_ids() {
+        let rj = self.running.remove(id).unwrap();
+        for &fid in rj.gating_flows.iter().chain(rj.drain_flows.iter()) {
             self.net.remove_flow(fid);
-            self.flow_owner.remove(&fid);
             self.flows_dirty = true;
         }
         self.record(&rj, true);
         self.cluster.release(id);
-        self.cluster.drain_deltas();
+        self.cluster.discard_deltas();
         self.timeline.job_finished(id, self.clock);
         self.killed += 1;
     }
@@ -844,27 +887,27 @@ impl Simulator {
     // ----- scheduling ----------------------------------------------------
 
     fn invoke_scheduler(&mut self) {
-        let queue: Vec<JobRequest> = self
-            .pending
-            .iter()
-            .map(|&id| self.jobs[id.0 as usize].as_request())
-            .collect();
-        let mut running: Vec<RunningInfo> = self
-            .running
-            .values()
-            .map(|rj| RunningInfo {
-                id: rj.job.id,
-                req: rj.job.request(),
-                expected_end: rj.kill_time(),
-            })
-            .collect();
-        running.sort_by_key(|r| r.id);
+        // The view snapshot buffers are recycled across invocations: a
+        // steady-state no-launch pass refills warm capacity and
+        // allocates nothing.
+        self.view_queue.clear();
+        self.view_queue
+            .extend(self.pending.iter().map(|&id| self.jobs[id.0 as usize].as_request()));
+        self.view_running.clear();
+        self.view_running.extend(self.running.iter().map(|rj| RunningInfo {
+            id: rj.job.id,
+            req: rj.job.request(),
+            expected_end: rj.kill_time(),
+        }));
+        // Slab order is deterministic but not id order; the view's order
+        // is contractual for policies, so sort.
+        self.view_running.sort_unstable_by_key(|r| r.id);
         let view = SchedView {
             now: self.clock,
             capacity: self.cluster.capacity(),
             free: self.cluster.free(),
-            queue: &queue,
-            running: &running,
+            queue: &self.view_queue,
+            running: &self.view_running,
         };
         if self.cfg.validate_timeline && !self.cfg.rebuild_timeline {
             // Paranoia mode, outside the timing window: the incremental
@@ -893,14 +936,16 @@ impl Simulator {
         if launches.is_empty() {
             return;
         }
-        let qmap = qindex.get_or_init(|| queue_index_map(&queue));
-        let mut launched: HashSet<JobId> = HashSet::with_capacity(launches.len());
+        let qmap = qindex.get_or_init(|| queue_index_map(&self.view_queue));
+        // Launch batches are tiny; a linear dup-scan beats hashing.
+        let mut launched: Vec<JobId> = Vec::with_capacity(launches.len());
         for &id in &launches {
             assert!(
                 qmap.contains_key(&id),
                 "scheduler launched non-pending {id}"
             );
-            assert!(launched.insert(id), "scheduler launched {id} twice");
+            assert!(!launched.contains(&id), "scheduler launched {id} twice");
+            launched.push(id);
             let req = self.jobs[id.0 as usize].request();
             assert!(
                 self.cluster.fits_now(&req),
@@ -1311,5 +1356,69 @@ mod tests {
         assert_eq!(res.records.len(), 1);
         assert!(res.records[0].killed);
         assert!(res.makespan <= Time::from_secs(500));
+    }
+
+    /// Forwards to FCFS while recording the time of every scheduling
+    /// pass — the stale-wake regression below asserts on *when* the
+    /// scheduler ran, not just on what it decided.
+    struct InvocationLog {
+        inner: Fcfs,
+        calls: std::sync::Arc<std::sync::Mutex<Vec<Time>>>,
+    }
+
+    impl Scheduler for InvocationLog {
+        fn name(&self) -> &'static str {
+            "fcfs"
+        }
+        fn schedule(&mut self, ctx: &mut SchedCtx<'_, '_>) -> Vec<JobId> {
+            self.calls.lock().unwrap().push(ctx.now());
+            self.inner.schedule(ctx)
+        }
+    }
+
+    #[test]
+    fn stale_network_wake_does_not_trigger_a_scheduling_pass() {
+        // Job 0 pins 90 cpus for a long time; job 1 starts a ~100 GiB
+        // stage-in and is walltime-killed 1 s in, which removes its
+        // flows and leaves the network empty — but the NetworkWake
+        // armed at launch for the stage-in's completion (tens of
+        // seconds out) is still queued. That wake is stale (its gen
+        // predates the kill's bump) and must NOT count as a scheduler
+        // trigger: nothing completed at that time, and a phantom pass
+        // could change event-triggered policies' decisions. Job 2 can
+        // only launch once job 0 completes.
+        let gib = 1u64 << 30;
+        let long = mk_job(0, 0, 100_000, 90, 0);
+        let mut io = mk_job(1, 0, 600, 4, 100 * gib);
+        io.walltime = Duration::from_secs(1);
+        let blocked = mk_job(2, 0, 100, 10, 0);
+        let calls = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sched = InvocationLog { inner: Fcfs::new(), calls: calls.clone() };
+        let mut c = cfg(400 * gib);
+        // Push the periodic tick out of the way: every pass inside the
+        // run is then attributable to a specific event trigger.
+        c.tick = Duration::from_secs(1_000_000);
+        let res = Simulator::new(vec![long, io, blocked], Box::new(sched), c).run();
+
+        assert_eq!(res.records.len(), 3);
+        assert_eq!(res.killed_jobs, 1);
+        let kill_t = Time::from_secs(1) + Duration(1);
+        let rec = |id: u32| *res.records.iter().find(|r| r.id == JobId(id)).unwrap();
+        assert_eq!(rec(1).finish, kill_t, "job 1 dies at walltime + grace");
+        assert_eq!(rec(2).start, rec(0).finish, "job 2 waits for job 0");
+
+        let calls = calls.lock().unwrap();
+        assert!(calls.contains(&Time::ZERO), "initial tick pass");
+        assert!(calls.contains(&kill_t), "kill is a fresh trigger");
+        assert!(calls.contains(&rec(0).finish), "completion is a fresh trigger");
+        // The interval between the kill and job 0's completion contains
+        // no fresh trigger — only the stale wake. Before the fix it
+        // caused a pass ~80 s in (the dead stage-in's completion time).
+        let phantom: Vec<Time> = calls
+            .iter()
+            .copied()
+            .filter(|&t| t > kill_t && t < rec(0).finish)
+            .collect();
+        assert!(phantom.is_empty(), "stale NetworkWake triggered passes at {phantom:?}");
     }
 }

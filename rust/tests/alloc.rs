@@ -16,14 +16,16 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use bbsched::core::job::{JobId, JobRequest};
+use bbsched::core::job::{Job, JobId, JobRequest};
 use bbsched::core::resources::Resources;
 use bbsched::core::time::{Duration, Time};
+use bbsched::sched::fcfs::Fcfs;
 use bbsched::sched::plan::annealing::PermScorer;
 use bbsched::sched::plan::builder::PlanJob;
 use bbsched::sched::plan::scorer::ExactScorer;
 use bbsched::sched::plan::window::{append_tail_into, select_into};
 use bbsched::sched::timeline::{GroupBbTimelines, Profile};
+use bbsched::sim::{SimConfig, Simulator};
 use bbsched::stats::rng::Pcg32;
 
 struct CountingAlloc;
@@ -210,4 +212,34 @@ fn warm_scorer_performs_zero_heap_allocations_per_proposal() {
     let delta = allocations() - before;
     assert_eq!(delta, 0, "warm window pass performed {delta} heap allocations");
     assert_eq!(warm, measured, "window passes diverged");
+
+    // Steady-state simulator event loop: once the recycled scratch (the
+    // same-timestamp batch, the flow buffer, the scheduler-view vectors)
+    // and the event heap are warm, a tick batch — network drain, event
+    // dispatch, timeline advance, a no-launch FCFS pass — allocates
+    // nothing. One saturated job plus a pending queue that cannot fit
+    // keeps every tick on the common no-launch path.
+    let mut sim = Simulator::online(Box::new(Fcfs::new()), SimConfig::default());
+    let mk = |procs: u32, compute_s: u64| Job {
+        id: JobId(0), // reassigned by submit()
+        submit: Time::ZERO,
+        walltime: Duration::from_secs(200_000),
+        compute_time: Duration::from_secs(compute_s),
+        procs,
+        bb: 0,
+        phases: 1,
+    };
+    sim.submit(mk(96, 100_000)).unwrap(); // pins the whole machine
+    for _ in 0..4 {
+        sim.submit(mk(96, 600)).unwrap(); // can never co-run: pends
+    }
+    // Warm-up: launch the pinning job, grow scratch/heap capacity over a
+    // few tick batches.
+    assert!(!sim.advance_to(Time::from_secs(600)));
+    let before = allocations();
+    assert!(!sim.advance_to(Time::from_secs(3600)));
+    let delta = allocations() - before;
+    assert_eq!(delta, 0, "warm simulator event loop performed {delta} heap allocations");
+    assert_eq!(sim.stats().running, 1);
+    assert_eq!(sim.stats().pending, 4);
 }
